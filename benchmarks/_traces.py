@@ -1,0 +1,179 @@
+"""Shared trace generation for the predictor benchmarks (Tables 4-6, 10-11).
+
+Builds a REAL draft/target pair on CPU: the target is a reduced random-init
+transformer; the draft is the same architecture *distilled* onto the
+target's greedy outputs for a configurable number of steps (more distillation
+-> better aligned draft -> higher acceptance — standing in for the paper's
+Qwen3-0.6B..8B ladder).  Speculative traces then log the controller's
+logit features against true verification outcomes, with the paper's App.-B
+labeling (tokens after the first rejection are excluded).
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.data.synthetic import SyntheticLMConfig, SyntheticStream
+from repro.models import build
+from repro.serving.client import EdgeDevice
+from repro.serving.engine import VerificationEngine, VerifyItem
+
+CACHE_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
+
+
+def _make_teacher_fn(bundle):
+    @jax.jit
+    def teacher(params, toks):
+        logits, _ = bundle.forward_train(params, {"tokens": toks})
+        return logits
+
+    return teacher
+
+
+_PAIR_CACHE: dict = {}
+
+
+def distill_draft(steps: int = 300, *, seed: int = 0, lr: float = 2e-3):
+    """Returns (cfg, target_params, draft_params) with the draft trained to
+    imitate the target for ``steps`` steps.  Cached in-process: several
+    tables reuse the same pair."""
+    key = (steps, seed, lr)
+    if key in _PAIR_CACHE:
+        return _PAIR_CACHE[key]
+    out = _distill_draft(steps, seed=seed, lr=lr)
+    _PAIR_CACHE[key] = out
+    return out
+
+
+def _train_teacher(bundle, cfg, *, steps: int, seed: int, lr: float = 2e-3):
+    """Train the target LM on the synthetic bigram corpus so that token
+    difficulty is REAL: bigram-structured positions become predictable,
+    noise positions stay hard — the signal the rejection predictor's
+    confidence/entropy features key on (paper §3.3)."""
+    from repro.train.optimizer import OptConfig, opt_init, opt_update
+
+    params = bundle.init(jax.random.PRNGKey(seed), dtype=jnp.float32)
+    stream = SyntheticStream(SyntheticLMConfig(vocab=cfg.vocab, seq_len=48,
+                                               seed=seed + 31))
+    opt_cfg = OptConfig(name="adamw", lr=lr, warmup_steps=20)
+    state = opt_init("adamw")(params)
+    update = opt_update("adamw")
+
+    @jax.jit
+    def step_fn(params, state, toks, targets):
+        def loss_fn(p):
+            loss, _ = bundle.forward_train(
+                p, {"tokens": toks, "targets": targets}
+            )
+            return loss
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, state, _ = update(params, grads, state, opt_cfg)
+        return params, state, loss
+
+    B, S = 8, 48
+    for step in range(steps):
+        seqs = stream.sequences(np.arange(B) + step * B)[:, : S + 1]
+        params, state, _ = step_fn(
+            params, state,
+            jnp.asarray(seqs[:, :-1], jnp.int32),
+            jnp.asarray(seqs[:, 1:], jnp.int32),
+        )
+    return params
+
+
+def _distill_draft(steps: int, *, seed: int, lr: float):
+    from repro.train.optimizer import OptConfig, opt_init, opt_update
+
+    cfg = get_config("qwen2-7b").reduced()
+    bundle = build(cfg)
+    tparams = _train_teacher(bundle, cfg, steps=500, seed=seed)
+    dparams = bundle.init(jax.random.PRNGKey(seed + 1), dtype=jnp.float32)
+    stream = SyntheticStream(SyntheticLMConfig(vocab=cfg.vocab, seq_len=48,
+                                               seed=seed))
+    opt_cfg = OptConfig(name="adamw", lr=lr, warmup_steps=20)
+    state = opt_init("adamw")(dparams)
+    update = opt_update("adamw")
+
+    @jax.jit
+    def step_fn(params, state, toks, teacher_logits):
+        def loss_fn(p):
+            # soft distillation: KL(teacher || draft) — acceptance in
+            # speculative decoding is the distribution overlap E[min(1,p/q)],
+            # so matching full distributions (not argmax) is what raises it
+            logits, _ = bundle.forward_train(p, {"tokens": toks})
+            logq = jax.nn.log_softmax(logits, axis=-1)
+            pt = jax.nn.softmax(teacher_logits, axis=-1)
+            return -jnp.mean(jnp.sum(pt * logq, axis=-1))
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, state, _ = update(params, grads, state, opt_cfg)
+        return params, state, loss
+
+    B, S = 8, 48
+    teacher = _make_teacher_fn(bundle)
+    for step in range(steps):
+        ids = np.arange(B) + step * B
+        toks = jnp.asarray(stream.sequences(ids)[:, :S], jnp.int32)
+        t_logits = teacher(tparams, toks)
+        dparams, state, loss = step_fn(dparams, state, toks, t_logits)
+    return cfg, tparams, dparams
+
+
+def gen_trace(cfg, tparams, dparams, *, rounds: int = 120, k_max: int = 8,
+              seed: int = 0):
+    """Run real speculative rounds; returns (features (N,5), labels (N,),
+    per_round list of (n_sent, accept_len))."""
+    engine = VerificationEngine(cfg, tparams, max_slots=2, max_len=1024,
+                                cache_dtype=jnp.float32)
+    dev = EdgeDevice(cfg, dparams, k_max=k_max, max_len=1024, seed=seed + 5)
+    rng = np.random.default_rng(seed)
+    prompt = rng.integers(2, cfg.vocab, size=12).tolist()
+    slot, first = engine.new_session(prompt)
+    dev.start_session(0, prompt, first)
+
+    feats, labels, per_round = [], [], []
+    for r in range(rounds):
+        res = dev.draft_round()
+        if res.n_sent == 0:
+            continue
+        (out,) = engine.verify(
+            [VerifyItem(slot=slot, draft_tokens=res.tokens,
+                        q_logits=res.q_logits)]
+        )
+        L = out.accept_len
+        # paper App. B: label accepted prefix 1, the FIRST rejected token 0,
+        # drop positions after the first rejection
+        for i in range(min(L, res.n_sent)):
+            feats.append(res.features[i])
+            labels.append(1)
+        if L < res.n_sent:
+            feats.append(res.features[L])
+            labels.append(0)
+        per_round.append((res.n_sent, L))
+        dev.apply_verdict(L, out.token, res.tokens)
+        if engine.fed[slot] > 900:      # restart session before overflow
+            engine.close_session(slot)
+            dev_prompt = rng.integers(2, cfg.vocab, size=12).tolist()
+            slot, first = engine.new_session(dev_prompt)
+            dev.start_session(0, dev_prompt, first)
+    return np.asarray(feats, np.float32), np.asarray(labels, np.int32), per_round
+
+
+def cached_trace(tag: str, distill_steps: int, rounds: int, seed: int = 0):
+    """Distill + trace with an npz cache (traces feed several tables)."""
+    os.makedirs(CACHE_DIR, exist_ok=True)
+    path = os.path.join(CACHE_DIR, f"trace_{tag}_{distill_steps}_{rounds}.npz")
+    if os.path.exists(path):
+        z = np.load(path)
+        return z["feats"], z["labels"], list(map(tuple, z["rounds"]))
+    cfg, tp, dp = distill_draft(distill_steps, seed=seed)
+    feats, labels, per_round = gen_trace(cfg, tp, dp, rounds=rounds, seed=seed)
+    np.savez(path, feats=feats, labels=labels,
+             rounds=np.asarray(per_round, np.int32))
+    return feats, labels, per_round

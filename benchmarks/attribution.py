@@ -1,0 +1,40 @@
+"""Paper Fig. 8: violation attribution in the (t_queue, t_verify) plane —
+compute-dominant (verify-time spike, Eq. 21 rho > 1.5) vs queue-dominant."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.sim import simulate, wisp
+
+
+def run(quick: bool = True) -> list[dict]:
+    sim_time = 40.0 if quick else 150.0
+    N = 224
+    r = simulate(wisp(N, sim_time=sim_time))
+    att = r.attribution(window=32, rho=1.5)
+    viol = [a for a in att if a["violated"]]
+    n_comp = sum(a["kind"] == "compute" for a in viol)
+    n_queue = sum(a["kind"] == "queue" for a in viol)
+    tq = np.array([a["t_queue"] for a in att])
+    tv = np.array([a["t_verify"] for a in att])
+    return [
+        {
+            "table": "attribution(F8)",
+            "n_devices": N,
+            "events": len(att),
+            "violations": len(viol),
+            "compute_dominant": n_comp,
+            "queue_dominant": n_queue,
+            "compute_share": round(n_comp / max(len(viol), 1), 3),
+            "mean_t_queue_ms": round(float(tq.mean()) * 1e3, 2),
+            "p99_t_queue_ms": round(float(np.percentile(tq, 99)) * 1e3, 2),
+            "mean_t_verify_ms": round(float(tv.mean()) * 1e3, 2),
+            "p99_t_verify_ms": round(float(np.percentile(tv, 99)) * 1e3, 2),
+        }
+    ]
+
+
+if __name__ == "__main__":
+    from benchmarks.common import print_rows
+
+    print_rows(run())

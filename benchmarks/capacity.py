@@ -1,0 +1,44 @@
+"""Paper Table 2: system capacity (max devices) per token-speed SLO class,
+for WISP / SLED / centralized serving on the A100+Qwen3-32B profile."""
+from __future__ import annotations
+
+from repro.sim import capacity_search, centralized, sled, wisp
+from repro.sim.config import SLO_SPEEDS
+
+
+def run(quick: bool = True) -> list[dict]:
+    sim_time = 30.0 if quick else 120.0
+    n_hi = 1024 if quick else 2048
+    systems = {"wisp": wisp, "sled": sled, "centralized": centralized}
+    caps: dict[str, dict[float, int]] = {s: {} for s in systems}
+    rows = []
+    for speed in SLO_SPEEDS:
+        for sys_name, mk in systems.items():
+            cap = capacity_search(
+                lambda n, mk=mk, s=speed: mk(
+                    n, homogeneous_slo=s, sim_time=sim_time
+                ),
+                eps=0.10,
+                n_hi_cap=n_hi,
+            )
+            caps[sys_name][speed] = cap
+    for speed in SLO_SPEEDS:
+        w, s, c = (caps[k][speed] for k in ("wisp", "sled", "centralized"))
+        rows.append(
+            {
+                "table": "capacity(T2)",
+                "slo_tok_s": speed,
+                "wisp": w,
+                "sled": s,
+                "centralized": c,
+                "speedup_vs_sled": round(w / max(s, 1), 2),
+                "speedup_vs_central": round(w / max(c, 1), 2),
+            }
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import print_rows
+
+    print_rows(run())

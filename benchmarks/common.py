@@ -1,0 +1,30 @@
+"""Benchmark harness plumbing: every table module exposes
+``run(quick=True) -> list[dict]``; rows carry a ``table`` key."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
+
+
+def save_rows(name: str, rows: list[dict]):
+    os.makedirs(ARTIFACTS, exist_ok=True)
+    with open(os.path.join(ARTIFACTS, f"{name}.json"), "w") as f:
+        json.dump(rows, f, indent=1, default=str)
+
+
+def print_rows(rows: list[dict]):
+    for r in rows:
+        parts = [f"{k}={v}" for k, v in r.items()]
+        print(",".join(parts), flush=True)
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.dt = time.perf_counter() - self.t0

@@ -1,0 +1,114 @@
+"""Paper Tables 7/12 + App. C: verification-time estimator profiling.
+
+The paper profiles vLLM micro-batches on A100; here the measured target is
+the functional verification engine on CPU (reduced config) — the point of
+the table is the *pipeline*: design a stratified config set (compute-bound /
+memory-bound / mixed), measure, fit OLS with bootstrap CIs, validate on
+held-out configs."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.estimator import batch_features, evaluate, fit_ols
+from repro.core.estimator import BatchShape
+
+
+def _measure_engine_dataset(n_train=60, n_test=25, seed=0):
+    """Profile the real (CPU, reduced-config) verification engine across
+    stratified batch shapes, mirroring App. C's five categories."""
+    import jax
+    from repro.configs import get_config
+    from repro.models import build
+    from repro.serving.engine import VerificationEngine, VerifyItem
+
+    cfg = get_config("qwen2-7b").reduced()
+    bundle = build(cfg)
+    params = bundle.init(jax.random.PRNGKey(0))
+    eng = VerificationEngine(cfg, params, max_slots=8, max_len=512)
+    rng = np.random.default_rng(seed)
+    slots = []
+    for i in range(8):
+        s, _ = eng.new_session(rng.integers(2, cfg.vocab, size=24).tolist())
+        slots.append(s)
+
+    def one_config(kind):
+        nb = int(rng.integers(1, 5))
+        items, shapes = [], []
+        for _ in range(nb):
+            slot = slots[int(rng.integers(0, len(slots)))]
+            if kind == "compute":
+                k = int(rng.integers(8, 16))
+            elif kind == "memory":
+                k = int(rng.integers(1, 4))
+            else:
+                k = int(rng.integers(1, 16))
+            toks = rng.integers(0, cfg.vocab, size=k).astype(np.int32)
+            items.append(VerifyItem(slot=slot, draft_tokens=toks,
+                                    q_logits=np.zeros((k, cfg.vocab),
+                                                      np.float32)))
+            shapes.append(BatchShape(new_tokens=k + 1,
+                                     cached_tokens=int(eng.fed[slot])))
+        feats = batch_features(shapes)
+        # warm the jit cache shape buckets first
+        t0 = time.perf_counter()
+        eng.verify(items)
+        dt = time.perf_counter() - t0
+        return feats, dt
+
+    kinds = ["compute", "memory", "mixed"]
+    # warmup (compile per bucket)
+    for kind in kinds:
+        one_config(kind)
+    data = []
+    for i in range(n_train + n_test):
+        data.append(one_config(kinds[i % 3]))
+    X = np.stack([d[0] for d in data])
+    y = np.array([d[1] for d in data])
+    return (X[:n_train], y[:n_train]), (X[n_train:], y[n_train:])
+
+
+def run(quick: bool = True) -> list[dict]:
+    (Xtr, ytr), (Xte, yte) = _measure_engine_dataset(
+        n_train=40 if quick else 123, n_test=16 if quick else 50
+    )
+    fit = fit_ols(Xtr, ytr, bootstrap=200)
+    test = evaluate(fit.coeffs, Xte, yte)
+    rows = [
+        {
+            "table": "estimator(T7/T12)",
+            "split": "train",
+            "samples": len(ytr),
+            "r2": round(fit.r2, 4),
+            "rmse_ms": round(fit.rmse * 1e3, 2),
+            "mae_ms": round(fit.mae * 1e3, 2),
+            "mape_pct": round(fit.mape, 2),
+            "max_err_ms": round(fit.max_err * 1e3, 2),
+        },
+        {
+            "table": "estimator(T7/T12)",
+            "split": "test",
+            "samples": len(yte),
+            "r2": round(test["r2"], 4),
+            "rmse_ms": round(test["rmse"] * 1e3, 2),
+            "mae_ms": round(test["mae"] * 1e3, 2),
+            "mape_pct": round(test["mape"], 2),
+            "max_err_ms": round(test["max_err"] * 1e3, 2),
+        },
+        {
+            "table": "estimator_coeffs(T12)",
+            "a_us_per_token": round(fit.coeffs.a * 1e6, 3),
+            "b_compute_ns_per_inter": round(fit.coeffs.b_compute * 1e9, 4),
+            "b_read_us_per_cached": round(fit.coeffs.b_read * 1e6, 4),
+            "c_ms": round(fit.coeffs.c * 1e3, 3),
+            "ci95_a": fit.ci95["a"] if fit.ci95 else None,
+        },
+    ]
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import print_rows
+
+    print_rows(run())

@@ -1,0 +1,80 @@
+"""Kernel microbenchmarks: analytic FLOPs/bytes + arithmetic intensity per
+Pallas kernel across serving-relevant shapes, and interpret-mode correctness
+deltas vs the jnp oracle.  (Wall-clock on this CPU container is meaningless
+for TPU kernels — the roofline terms are the performance artifact; see
+benchmarks/roofline.py for the compiled-HLO numbers.)"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.kernels.verify_attention.ops import (
+    verify_attention_op,
+    verify_attention_ref,
+)
+
+V5E_FLOPS = 197e12
+V5E_HBM = 819e9
+
+
+def _verify_attention_cost(B, Hq, Hkv, K, S, D, dtype_bytes=2):
+    flops = 2 * 2 * B * Hq * K * S * D            # qk + av
+    bytes_rw = (
+        B * S * Hkv * D * 2 * dtype_bytes         # stream K and V once
+        + B * K * Hq * D * 2 * dtype_bytes        # read Q, write O
+    )
+    return flops, bytes_rw
+
+
+def run(quick: bool = True) -> list[dict]:
+    rows = []
+    shapes = [
+        ("decode_1", 8, 32, 8, 1, 4096, 128),
+        ("verify_k8", 8, 32, 8, 9, 4096, 128),
+        ("verify_k8_32k", 4, 32, 8, 9, 32768, 128),
+        ("prefill_tail", 1, 32, 8, 512, 32768, 128),
+    ]
+    for name, B, Hq, Hkv, K, S, D in shapes:
+        flops, byts = _verify_attention_cost(B, Hq, Hkv, K, S, D)
+        ai = flops / byts
+        ridge = V5E_FLOPS / V5E_HBM
+        rows.append(
+            {
+                "table": "kernels",
+                "kernel": "verify_attention",
+                "shape": name,
+                "gflops": round(flops / 1e9, 2),
+                "mbytes": round(byts / 1e6, 2),
+                "arith_intensity": round(ai, 2),
+                "v5e_ridge_point": round(ridge, 1),
+                "bound": "compute" if ai > ridge else "memory",
+                "t_roofline_us": round(
+                    max(flops / V5E_FLOPS, byts / V5E_HBM) * 1e6, 2
+                ),
+            }
+        )
+    # correctness deltas on a reduced shape (interpret mode, this container)
+    rng = np.random.default_rng(0)
+    B, Hq, Hkv, K, S, D = 2, 4, 2, 8, 512, 64
+    q = jnp.asarray(rng.normal(size=(B, K, Hq, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, Hkv, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, Hkv, D)), jnp.float32)
+    lengths = jnp.asarray([500, 384], jnp.int32)
+    out = verify_attention_op(q, k, v, lengths)
+    ref = verify_attention_ref(q, k, v, lengths)
+    rows.append(
+        {
+            "table": "kernels",
+            "kernel": "verify_attention",
+            "shape": "correctness",
+            "max_abs_err": float(jnp.max(jnp.abs(out - ref))),
+        }
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import print_rows
+
+    print_rows(run())

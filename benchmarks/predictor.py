@@ -1,0 +1,92 @@
+"""Paper Tables 4 + 10 + 11: rejection-predictor operating points (MLP vs
+tree-family baseline) on REAL speculative traces, + single-sample inference
+latency on this host (stands in for the RPi measurements)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks._traces import cached_trace
+from repro.core.predictor import (
+    MLPConfig,
+    auc_score,
+    operating_point,
+    train_mlp,
+    train_stumps,
+)
+
+
+def _latency_stats(fn, x, n=300):
+    ts = []
+    fn(x)  # warm
+    for _ in range(n):
+        t0 = time.perf_counter()
+        fn(x)
+        ts.append((time.perf_counter() - t0) * 1e3)
+    a = np.asarray(ts)
+    return {
+        "mean_ms": round(a.mean(), 4),
+        "median_ms": round(np.median(a), 4),
+        "std_ms": round(a.std(), 4),
+        "p95_ms": round(np.percentile(a, 95), 4),
+        "p99_ms": round(np.percentile(a, 99), 4),
+    }
+
+
+def run(quick: bool = True) -> list[dict]:
+    feats, labels, _ = cached_trace("mid", distill_steps=100,
+                                    rounds=400 if quick else 800)
+    n = len(labels)
+    split = int(n * 0.75)
+    Xtr, ytr, Xte, yte = feats[:split], labels[:split], feats[split:], labels[split:]
+
+    rows = []
+    # Fig. 2/3: per-feature Pearson correlation with acceptance
+    from repro.core.features import FEATURE_NAMES
+
+    corr = {
+        name: round(float(np.corrcoef(feats[:, i], labels)[0, 1]), 4)
+        for i, name in enumerate(FEATURE_NAMES)
+    }
+    rows.append({"table": "feature_correlation(F2/F3)", **corr})
+
+    mlp = train_mlp(Xtr, ytr, MLPConfig(epochs=25, neg_weight=2.5))
+    stump = train_stumps(Xtr, ytr, n_rounds=60)
+    models = {
+        "mlp": (lambda X: np.asarray(mlp.predict_accept(X)),
+                lambda X: np.asarray(mlp.proba(X))),
+        "stumps(tree)": (stump.predict_accept, stump.proba),
+    }
+    for name, (pred, proba) in models.items():
+        m = operating_point(pred(Xte), yte)
+        rows.append(
+            {
+                "table": "predictor(T4)",
+                "model": name,
+                "n_train": len(ytr),
+                "n_test": len(yte),
+                "acc": round(m["acc"], 4),
+                "auc": round(auc_score(proba(Xte), yte), 4),
+                "rec1": round(m["rec1"], 4),
+                "spec": round(m["spec"], 4),
+                "fpr": round(m["fpr"], 4),
+                "bal_acc": round(m["bal_acc"], 4),
+            }
+        )
+        c = m["confusion"]
+        rows.append({"table": "predictor_confusion(T10)", "model": name, **c})
+
+    # Table 11: single-sample latency on this host CPU
+    one = Xte[:1]
+    rows.append({"table": "predictor_latency(T11)", "model": "mlp",
+                 **_latency_stats(lambda x: np.asarray(mlp.proba(x)), one)})
+    rows.append({"table": "predictor_latency(T11)", "model": "stumps(tree)",
+                 **_latency_stats(stump.proba, one)})
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import print_rows
+
+    print_rows(run())

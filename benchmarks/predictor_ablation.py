@@ -1,0 +1,132 @@
+"""Paper Tables 5 + 6: predictor ON/OFF ablations.
+
+Table 5 — draft-token acceptance rate with/without the predictor, across a
+ladder of draft models (distillation depth stands in for the Qwen3 size
+ladder), measured on REAL speculative rounds with the trained MLP inside
+the drafting controller.
+
+Table 6 — end-to-end system goodput with/without the predictor at several
+device counts (simulator, MLP operating point measured from Table 4)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks._traces import cached_trace, distill_draft, gen_trace
+from repro.core.predictor import MLPConfig, operating_point, train_mlp
+from repro.sim import simulate, wisp
+from repro.sim.acceptance import PredictorOperatingPoint
+from repro.sim.systems import variant
+
+#: distillation depth stands in for the Qwen3-0.6B..8B size ladder —
+#: chosen so block acceptance spans the paper's Table-5 band (~0.29-0.55)
+#: while the draft remains imperfect enough that logit features carry signal
+LADDER = {"small": 100, "mid": 150, "large": 250}
+
+
+def run(quick: bool = True) -> list[dict]:
+    rows = []
+    # ---- Table 5: acceptance of SENT tokens, predictor OFF vs ON --------
+    measured_op = None
+    for tag, steps in LADDER.items():
+        feats, labels, rounds_off = cached_trace(
+            tag, distill_steps=steps, rounds=120 if quick else 300
+        )
+        pred = train_mlp(feats, labels, MLPConfig(epochs=25, neg_weight=2.5))
+        # ON: re-run the same pair with the predictor in the controller
+        cfg, tp, dp = distill_draft(steps)
+        from repro.serving.client import EdgeDevice  # noqa: F401 (doc link)
+
+        _, _, rounds_on = _trace_with_predictor(
+            cfg, tp, dp, pred, rounds=80 if quick else 200
+        )
+        off_sent = sum(r[0] for r in rounds_off)
+        off_acc = sum(r[1] for r in rounds_off)
+        on_sent = sum(r[0] for r in rounds_on)
+        on_acc = sum(r[1] for r in rounds_on)
+        acc_off = off_acc / max(off_sent, 1)
+        acc_on = on_acc / max(on_sent, 1)
+        rows.append(
+            {
+                "table": "acceptance_ablation(T5)",
+                "draft": f"{tag}(distill={steps})",
+                "predictor_off": round(acc_off, 3),
+                "predictor_on": round(acc_on, 3),
+                "improvement_pct": round(100 * (acc_on - acc_off) / max(acc_off, 1e-9), 1),
+            }
+        )
+        m = operating_point(np.asarray(pred.predict_accept(feats)), labels)
+        if tag == "mid":
+            measured_op = PredictorOperatingPoint(fpr=m["fpr"], fnr=1 - m["rec1"])
+
+    # ---- Table 6: system goodput, predictor OFF vs ON --------------------
+    # The predictor's goodput win comes from saved verifier-side work, so it
+    # appears in the contended regime (paper: "the relative gain increases
+    # with N ... primarily helps by reducing verifier-side load"); at low N
+    # the shorter blocks merely add round-trips.  Our A100-profile verifier
+    # saturates near N~100, hence the larger sweep than the paper's 2..16.
+    op = measured_op or PredictorOperatingPoint.mlp()
+    for n in (16, 48, 96, 160) if quick else (16, 48, 96, 160, 224):
+        off = simulate(variant(wisp(n, sim_time=40.0), predictor=None))
+        on = simulate(variant(wisp(n, sim_time=40.0), predictor=op))
+        g_off, g_on = off.goodput(), on.goodput()
+        rows.append(
+            {
+                "table": "goodput_ablation(T6)",
+                "n_devices": n,
+                "predictor_off": round(g_off, 2),
+                "predictor_on": round(g_on, 2),
+                "improvement_pct": round(100 * (g_on - g_off) / max(g_off, 1e-9), 2),
+            }
+        )
+    return rows
+
+
+def _trace_with_predictor(cfg, tparams, dparams, predictor, *, rounds):
+    from benchmarks._traces import gen_trace as _gen
+
+    # gen_trace with a predictor-equipped device
+    import numpy as np
+    import jax.numpy as jnp
+
+    from repro.serving.client import EdgeDevice
+    from repro.serving.engine import VerificationEngine, VerifyItem
+
+    engine = VerificationEngine(cfg, tparams, max_slots=2, max_len=1024,
+                                cache_dtype=jnp.float32)
+    dev = EdgeDevice(cfg, dparams, predictor=predictor, k_max=8, max_len=1024,
+                     seed=77)
+    rng = np.random.default_rng(7)
+    prompt = rng.integers(2, cfg.vocab, size=12).tolist()
+    slot, first = engine.new_session(prompt)
+    dev.start_session(0, prompt, first)
+    per_round = []
+    for _ in range(rounds):
+        res = dev.draft_round()
+        if res.n_sent == 0:
+            # predictor rejected immediately: nothing to verify, but the
+            # device must still advance via the target (count as 0/0 round)
+            (out,) = engine.verify(
+                [VerifyItem(slot=slot,
+                            draft_tokens=np.zeros((0,), np.int32),
+                            q_logits=np.zeros((0, cfg.vocab), np.float32))]
+            )
+            dev.apply_verdict(0, out.token, [])
+            continue
+        (out,) = engine.verify(
+            [VerifyItem(slot=slot, draft_tokens=res.tokens,
+                        q_logits=res.q_logits)]
+        )
+        per_round.append((res.n_sent, out.accept_len))
+        dev.apply_verdict(out.accept_len, out.token, res.tokens)
+        if engine.fed[slot] > 900:
+            engine.close_session(slot)
+            prompt = rng.integers(2, cfg.vocab, size=12).tolist()
+            slot, first = engine.new_session(prompt)
+            dev.start_session(0, prompt, first)
+    return None, None, per_round
+
+
+if __name__ == "__main__":
+    from benchmarks.common import print_rows
+
+    print_rows(run())

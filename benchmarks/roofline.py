@@ -1,0 +1,81 @@
+"""Roofline table: reads the dry-run artifacts (artifacts/dryrun/*.json)
+and prints the per-(arch x shape x mesh) three-term roofline — the §Roofline
+deliverable.  Run ``python -m repro.launch.dryrun --all --mesh both`` first
+(or let benchmarks.run skip gracefully)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load_artifacts(mesh: str | None = None) -> list[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if mesh and rec.get("mesh") != mesh:
+            continue
+        rows.append(rec)
+    return rows
+
+
+def run(quick: bool = True) -> list[dict]:
+    rows = []
+    for rec in load_artifacts():
+        if rec.get("status") == "skipped":
+            rows.append(
+                {
+                    "table": "roofline",
+                    "arch": rec["arch"],
+                    "shape": rec["shape"],
+                    "mesh": rec.get("mesh", "-"),
+                    "status": "skipped",
+                    "why": rec.get("why", ""),
+                }
+            )
+            continue
+        if rec.get("status") != "ok":
+            rows.append(
+                {
+                    "table": "roofline",
+                    "arch": rec["arch"],
+                    "shape": rec["shape"],
+                    "mesh": rec.get("mesh", "-"),
+                    "status": rec.get("status", "?"),
+                }
+            )
+            continue
+        r = rec["roofline"]
+        rows.append(
+            {
+                "table": "roofline",
+                "arch": rec["arch"],
+                "shape": rec["shape"],
+                "mesh": rec["mesh"],
+                "status": "ok",
+                "t_compute_ms": round(r["t_compute"] * 1e3, 2),
+                "t_memory_ms": round(r["t_memory"] * 1e3, 2),
+                "t_collective_ms": round(r["t_collective"] * 1e3, 2),
+                "dominant": r["dominant"],
+                "roofline_fraction": round(r["roofline_fraction"], 3),
+                "useful_fraction": round(r["useful_fraction"], 3),
+                "hbm_args_gib": round(
+                    r["memory_per_device"]["args_bytes"] / 2**30, 2
+                ),
+                "hbm_temp_gib": round(
+                    r["memory_per_device"]["temp_bytes"] / 2**30, 2
+                ),
+            }
+        )
+    if not rows:
+        rows.append({"table": "roofline", "status": "no dry-run artifacts"})
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import print_rows
+
+    print_rows(run())

@@ -1,0 +1,61 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # quick mode
+    PYTHONPATH=src python -m benchmarks.run --full     # paper-scale sweeps
+    PYTHONPATH=src python -m benchmarks.run --only capacity goodput
+
+Prints ``key=value`` CSV rows per table and writes JSON artifacts under
+``artifacts/bench/``.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import time
+import traceback
+
+from benchmarks.common import print_rows, save_rows
+
+#: module -> paper reference
+TABLES = {
+    "kernels": "kernel microbench (roofline terms per kernel)",
+    "roofline": "dry-run roofline, all (arch x shape x mesh) cells",
+    "estimator": "Tables 7/12 + App. C (verification-time estimator)",
+    "wdt": "Fig. 1 (WDT vs device goodput)",
+    "slo_violations": "Table 1 + Fig. 7 (violation rates / knee)",
+    "attribution": "Fig. 8 (queue-vs-compute violation attribution)",
+    "goodput": "Table 3 (system goodput)",
+    "predictor": "Tables 4/10/11 + Figs. 2-3 (rejection predictor)",
+    "predictor_ablation": "Tables 5/6 (predictor ON/OFF ablations)",
+    "capacity": "Table 2 (system capacity per SLO class)",
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-scale sweeps")
+    ap.add_argument("--only", nargs="*", default=None)
+    args = ap.parse_args()
+
+    names = args.only or list(TABLES)
+    failures = []
+    for name in names:
+        mod = importlib.import_module(f"benchmarks.{name}")
+        print(f"# === {name}: {TABLES.get(name, '')} ===", flush=True)
+        t0 = time.time()
+        try:
+            rows = mod.run(quick=not args.full)
+        except Exception as e:
+            traceback.print_exc()
+            failures.append(name)
+            print(f"# {name} FAILED: {e!r}", flush=True)
+            continue
+        print_rows(rows)
+        save_rows(name, rows)
+        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+    if failures:
+        raise SystemExit(f"benchmarks failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Paper Table 1 + Fig. 7: per-class SLO violation rates, WISP vs FCFS
+verification, swept over device count (the violation 'knee')."""
+from __future__ import annotations
+
+from repro.sim import simulate, wisp
+from repro.sim.config import SLO_SPEEDS
+from repro.sim.systems import fcfs_cached
+
+
+def run(quick: bool = True) -> list[dict]:
+    sim_time = 60.0 if quick else 180.0
+    sweep = (32, 96, 160, 224, 288) if quick else (32, 64, 96, 128, 160, 192, 224, 288)
+    rows = []
+    for N in sweep:
+        w = simulate(wisp(N, sim_time=sim_time))
+        f = simulate(fcfs_cached(N, sim_time=sim_time))
+        for speed in SLO_SPEEDS:
+            rows.append(
+                {
+                    "table": "slo_violations(T1/F7)",
+                    "n_devices": N,
+                    "slo_tok_s": speed,
+                    "wisp_violation": round(w.violation_rate(speed), 4),
+                    "fcfs_violation": round(f.violation_rate(speed), 4),
+                }
+            )
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import print_rows
+
+    print_rows(run())

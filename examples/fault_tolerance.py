@@ -1,0 +1,84 @@
+"""Fault tolerance walkthrough: the three mechanisms a 1000-node
+deployment leans on, exercised end-to-end on CPU.
+
+  1. heartbeat failure detection (verifier replicas + edge devices),
+  2. hedged verification dispatch with idempotent commits (stragglers
+     and dead replicas),
+  3. checkpoint / elastic restore (train state survives restarts and
+     mesh-shape changes).
+
+    PYTHONPATH=src python examples/fault_tolerance.py
+"""
+import tempfile
+
+import numpy as np
+
+from repro.core.estimator import EstimatorCoeffs
+from repro.runtime.checkpoint import CheckpointManager
+from repro.runtime.failure import HeartbeatMonitor
+from repro.runtime.straggler import HedgedDispatcher
+
+
+def heartbeat_demo():
+    print("=== 1. heartbeat failure detection ===")
+    mon = HeartbeatMonitor(timeout=2.0,
+                           on_death=lambda p, t: print(f"  t={t:4.1f}s  {p} declared DEAD"))
+    for r in ("verifier-0", "verifier-1", "verifier-2"):
+        mon.register(r, now=0.0)
+    # verifier-1 stops beating at t=1
+    for t in (1.0, 2.0, 3.0, 4.0):
+        for r in ("verifier-0", "verifier-2"):
+            mon.beat(r, t)
+        if t <= 1.0:
+            mon.beat("verifier-1", t)
+        mon.sweep(t)
+    print(f"  alive: {mon.alive_peers()}")
+    mon.beat("verifier-1", 5.0)      # node restarts and rejoins
+    print(f"  after rejoin: {mon.alive_peers()}\n")
+
+
+def hedging_demo():
+    print("=== 2. hedged dispatch (stragglers + replica failure) ===")
+    hd = HedgedDispatcher(["verifier-0", "verifier-1"], guard=0.01,
+                          hedge_factor=2.0,
+                          on_hedge=lambda k, a, b, t: print(
+                              f"  t={t:4.2f}s  batch {k} hedged {a} -> {b}"))
+    # dispatch three verification batches with 50 ms ETAs
+    for s in range(3):
+        hd.dispatch((s, 0), eta=0.05, now=0.0)
+    # batch (0,0)'s replica wedges; at t=0.2 the sweep hedges it
+    hd.sweep(0.2)
+    # both the wedged primary AND the backup eventually answer:
+    print(f"  first commit wins: {hd.commit((0, 0))}")
+    print(f"  duplicate dropped: {hd.commit((0, 0))}")
+    # a replica dies outright: its in-flight work re-dispatches
+    hd.remove_replica("verifier-1")
+    print(f"  stats: {hd.stats}\n")
+
+
+def checkpoint_demo():
+    print("=== 3. checkpoint / elastic restore ===")
+    from repro.launch.train import train
+
+    with tempfile.TemporaryDirectory() as ck:
+        out1 = train("qwen2-7b", reduced=True, steps=6, batch=4, seq=32,
+                     ckpt_dir=ck, ckpt_every=3, log_every=0)
+        print("  trained 6 steps, checkpoints written")
+        # "crash" + restart: resumes from step 6 and continues to 10
+        out2 = train("qwen2-7b", reduced=True, steps=10, batch=4, seq=32,
+                     ckpt_dir=ck, ckpt_every=5, log_every=0)
+        print("  restart resumed automatically and reached step 10")
+        # elastic: the same checkpoint restores onto a different mesh shape
+        # (restore re-shards host-side; device counts may differ entirely)
+        from repro.runtime.checkpoint import restore_checkpoint
+
+        state, meta = restore_checkpoint(ck)
+        n = sum(np.asarray(x).size for x in
+                __import__("jax").tree.leaves(state["params"]))
+        print(f"  elastic restore: step={meta['step']} params={n:,}")
+
+
+if __name__ == "__main__":
+    heartbeat_demo()
+    hedging_demo()
+    checkpoint_demo()

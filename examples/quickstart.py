@@ -1,0 +1,68 @@
+"""Quickstart: one speculative decoding round through WISP's public API.
+
+Builds a reduced draft/target pair on CPU, drafts a block with the
+intelligent drafting controller, verifies it losslessly on the server
+engine, and prints every quantity the paper defines (K, L, W, WDT).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.estimator import analytic_tpu_coeffs
+from repro.core.wdt import IterationLog
+from repro.models import build
+from repro.serving.client import EdgeDevice
+from repro.serving.engine import VerificationEngine
+from repro.serving.server import WISPServer
+
+
+def main():
+    # 1. models — the paper's Qwen3 pair, reduced to CPU scale
+    target_cfg = get_config("qwen2-7b").reduced()
+    draft_cfg = target_cfg
+    bundle = build(target_cfg)
+    target_params = bundle.init(jax.random.PRNGKey(0))
+    draft_params = bundle.init(jax.random.PRNGKey(1))
+
+    # 2. verification server: engine + SLO-aware scheduler + estimator
+    engine = VerificationEngine(target_cfg, target_params, max_slots=4,
+                                max_len=512)
+    server = WISPServer(engine, analytic_tpu_coeffs(target_cfg))
+
+    # 3. edge device: draft model + drafting controller
+    device = EdgeDevice(draft_cfg, draft_params, k_max=6, draft_speed=50.0)
+
+    # 4. open a session (server prefills the prompt, returns token 0)
+    prompt = [11, 24, 35, 46, 57]
+    first = server.open_session(0, prompt, slo_class=3)
+    device.start_session(0, prompt, first)
+    print(f"prompt={prompt}  first committed token={first}")
+
+    # 5. speculate -> verify rounds
+    for rnd in range(5):
+        res = device.draft_round()
+        server.submit(0, res.tokens, res.q_logits, now=rnd * 0.1,
+                      t_draft=res.draft_time, t_network=0.012)
+        (v,) = server.step(rnd * 0.1)
+        device.apply_verdict(v.accept_len, v.token, res.tokens)
+        it = IterationLog(
+            session_id=0, round_index=rnd,
+            n_drafted=res.n_drafted, n_sent=res.n_sent,
+            n_accepted=v.accept_len, n_committed=v.emitted,
+            t_draft=res.draft_time, t_network=0.012,
+            t_queue=v.t_queue, t_verify=v.t_verify,
+        )
+        print(
+            f"round {rnd}: drafted K={it.n_drafted} accepted L={it.n_accepted} "
+            f"wasted W={it.wasted} committed +{it.n_committed} "
+            f"WDT={it.wdt(1 / 50.0) * 1e3:.1f}ms speed={it.token_speed:.1f} tok/s"
+        )
+
+    print("response tokens:", device.response_tokens)
+    print("engine stats:", engine.stats)
+
+
+if __name__ == "__main__":
+    main()

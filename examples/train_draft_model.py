@@ -1,0 +1,55 @@
+"""Train a draft model on the synthetic corpus with the full training
+substrate: sharded data pipeline, FSDP/TP shardings, AdamW, remat,
+checkpoint/restart.
+
+Default runs a CPU-sized model for a quick demonstration; ``--full`` trains
+a ~100M-parameter xLSTM-350M-family config for a few hundred steps (slow on
+CPU — the same flags drive the production mesh on real hardware).
+
+    PYTHONPATH=src python examples/train_draft_model.py
+    PYTHONPATH=src python examples/train_draft_model.py --full --steps 300
+"""
+import argparse
+
+from repro.launch.train import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="~100M-param config, few hundred steps")
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--ckpt-dir", default="/tmp/wisp_draft_ckpt")
+    args = ap.parse_args()
+
+    if args.full:
+        out = train(
+            "xlstm-350m",          # smallest assigned arch (~350M at paper
+            reduced=False,         # scale; ~100M active in this shape)
+            steps=args.steps or 300,
+            batch=8,
+            seq=512,
+            remat=True,
+            ckpt_dir=args.ckpt_dir,
+            ckpt_every=50,
+            log_every=10,
+        )
+    else:
+        out = train(
+            "qwen2-7b",
+            reduced=True,
+            steps=args.steps or 120,
+            batch=16,
+            seq=128,
+            ckpt_dir=args.ckpt_dir,
+            ckpt_every=40,
+            log_every=10,
+        )
+    losses = out["losses"]
+    print(f"loss: {losses[0]:.3f} -> {losses[-1]:.3f} "
+          f"({(1 - losses[-1] / losses[0]) * 100:.1f}% reduction)")
+    print(f"checkpoints in {args.ckpt_dir} (restart resumes automatically)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Common substrate: dtype policy, logical-axis sharding, pytree helpers."""
+from repro.common.sharding import (
+    AxisRules,
+    TRAIN_RULES,
+    SERVE_RULES,
+    ShardCtx,
+    NULL_CTX,
+    logical_to_spec,
+    logical_constraint,
+    make_param_shardings,
+)
+from repro.common.dtypes import DTypePolicy, DEFAULT_POLICY
+
+__all__ = [
+    "AxisRules",
+    "TRAIN_RULES",
+    "SERVE_RULES",
+    "ShardCtx",
+    "NULL_CTX",
+    "logical_to_spec",
+    "logical_constraint",
+    "make_param_shardings",
+    "DTypePolicy",
+    "DEFAULT_POLICY",
+]

@@ -1,0 +1,32 @@
+"""Dtype policy: parameter, compute, and accumulation dtypes.
+
+Production TPU training keeps a bf16 copy of parameters for compute with an
+f32 optimizer master (see `repro.train.optimizer`); serving is pure bf16.
+The policy object is threaded through model code so tests can force f32 for
+tight numerical comparisons against oracles.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class DTypePolicy:
+    param_dtype: jnp.dtype = jnp.bfloat16
+    compute_dtype: jnp.dtype = jnp.bfloat16
+    # Softmax / norm / router statistics always accumulate in f32.
+    accum_dtype: jnp.dtype = jnp.float32
+
+    def cast_compute(self, x):
+        return x.astype(self.compute_dtype)
+
+    def cast_accum(self, x):
+        return x.astype(self.accum_dtype)
+
+
+DEFAULT_POLICY = DTypePolicy()
+F32_POLICY = DTypePolicy(
+    param_dtype=jnp.float32, compute_dtype=jnp.float32, accum_dtype=jnp.float32
+)

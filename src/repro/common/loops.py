@@ -1,0 +1,72 @@
+"""Switchable scan: ``lax.scan`` in production, python-unrolled for the
+dry-run's cost accounting.
+
+XLA's ``HloCostAnalysis`` visits a while-loop body ONCE — it does not
+multiply by the trip count — so FLOPs/bytes/collective-bytes of a scanned
+layer stack are undercounted by ~n_layers.  The dry-run therefore lowers
+with ``cost_unroll`` enabled: every layer/chunk scan becomes straight-line
+HLO and the roofline terms are exact.  Production code paths keep
+``lax.scan`` (O(1) HLO in depth, fast compiles).
+
+Numerics are identical either way (same math, same order).
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+import jax.numpy as jnp
+
+_UNROLL = False
+
+#: only loops with at most this many iterations unroll (layer stacks and
+#: short chunk scans).  Longer loops — per-token recurrences (seq_len
+#: trips) and the 128-trip SSD chunk scans of the 32k-prefill cells — stay
+#: rolled: unrolling them is compile-intractable.  Their cost-analysis
+#: shortfall is corrected analytically by the dry-run (see
+#: uncounted_sequential_flops and run_cell's chunk-trip scaling).
+UNROLL_LIMIT = 32
+
+
+def cost_unroll_enabled() -> bool:
+    return _UNROLL
+
+
+def set_cost_unroll(value: bool) -> None:
+    global _UNROLL
+    _UNROLL = bool(value)
+
+
+@contextlib.contextmanager
+def cost_unroll(value: bool = True):
+    prev = _UNROLL
+    set_cost_unroll(value)
+    try:
+        yield
+    finally:
+        set_cost_unroll(prev)
+
+
+def _index(xs, i):
+    return jax.tree.map(lambda a: a[i], xs, is_leaf=lambda x: x is None)
+
+
+def scan(f, init, xs, length: int | None = None):
+    """Drop-in for ``jax.lax.scan(f, init, xs)`` honoring the unroll flag."""
+    if length is None and xs is not None:
+        length = jax.tree.leaves(xs)[0].shape[0]
+    if not _UNROLL or (length is not None and length > UNROLL_LIMIT):
+        return jax.lax.scan(f, init, xs, length=length)
+    carry = init
+    ys = []
+    for i in range(length):
+        carry, y = f(carry, _index(xs, i) if xs is not None else None)
+        ys.append(y)
+    if not ys or all(y is None for y in jax.tree.leaves(ys[0], is_leaf=lambda x: x is None)) and ys[0] is None:
+        return carry, None
+    stacked = jax.tree.map(
+        lambda *zs: None if zs[0] is None else jnp.stack(zs),
+        *ys,
+        is_leaf=lambda x: x is None,
+    )
+    return carry, stacked

@@ -1,0 +1,199 @@
+"""Logical-axis sharding rules (T5X/MaxText style).
+
+Every parameter and major activation in the model zoo is annotated with a
+tuple of *logical* axis names (e.g. ``("embed", "mlp")``).  A rule table maps
+logical names to mesh axis names.  ``logical_to_spec`` resolves a logical
+annotation into a concrete ``PartitionSpec`` against a given mesh, with two
+safety properties that make one rule table serve every architecture:
+
+  * **divisibility guard** — a logical axis is only mapped onto a mesh axis
+    if the dimension size divides evenly by the mesh axis size (e.g. grok's
+    8 KV heads are replicated rather than 16-way sharded);
+  * **uniqueness guard** — a mesh axis is consumed at most once per tensor
+    (first logical axis in the annotation wins).
+
+Rules may map one logical axis to a *tuple* of mesh axes (e.g. batch over
+``("pod", "data")``).
+"""
+from __future__ import annotations
+
+from typing import Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisRules = Mapping[str, tuple[str, ...] | str | None]
+
+
+def _as_tuple(v) -> tuple[str, ...]:
+    if v is None:
+        return ()
+    if isinstance(v, str):
+        return (v,)
+    return tuple(v)
+
+
+# ---------------------------------------------------------------------------
+# Canonical rule tables.
+#
+# Parameter logical axes:
+#   layers    scan-stacked layer dim                  -> never sharded
+#   vocab     embedding / logits vocabulary           -> tensor parallel
+#   embed     d_model                                 -> FSDP over data
+#   heads     query heads                             -> tensor parallel
+#   kv_heads  key/value heads                         -> tensor parallel
+#   head_dim  per-head feature                        -> never sharded
+#   mlp       FFN hidden                              -> tensor parallel
+#   expert    MoE expert count                        -> expert parallel
+#   state     SSM/xLSTM recurrent state feature       -> never sharded
+#   conv      conv channel (frontends)                -> never sharded
+#
+# Activation logical axes:
+#   act_batch   global batch
+#   act_seq     sequence (sequence parallel in train)
+#   act_embed   residual stream feature
+#   act_heads   attention heads during attention
+#   act_kv      kv heads in the cache
+#   act_expert  expert dim of dispatched MoE buffers
+# ---------------------------------------------------------------------------
+
+TRAIN_RULES: AxisRules = {
+    "layers": None,
+    "vocab": "model",
+    "embed": "data",
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "expert": "model",
+    "state": None,
+    "conv": None,
+    "act_batch": ("pod", "data"),
+    "act_seq": "model",
+    "act_embed": None,
+    "act_heads": "model",
+    "act_kv": "model",
+    "act_cache": None,           # no KV cache in training steps
+    "act_expert": "model",
+}
+
+# Serving: params keep the same 2D layout (embed over data amortizes HBM for
+# very large targets — the all-gather shows up in the roofline and is
+# attacked in §Perf).  The KV cache length axis shards over `model`
+# (flash-decoding style: partial softmax per shard + small all-reduce) —
+# GQA targets have too few KV heads to shard, and the cache dominates HBM
+# at decode_32k/long_500k batch sizes.  Prefill keeps sequence parallelism.
+SERVE_RULES: AxisRules = {
+    **TRAIN_RULES,
+    "act_seq": "model",
+    "act_cache": "model",
+}
+
+# §Perf variant (beyond-paper): parameters replicated across `data`, tensor
+# parallel over `model` only.  The FSDP layout above re-all-gathers every
+# parameter on EVERY serve step (decode reuses nothing across steps) — the
+# dominant collective term in the serve baselines.  Replication trades
+# params-HBM (x data) for zero parameter collectives; viable whenever
+# params/model_parallel fits HBM (all assigned targets at 16-way TP).
+SERVE_RULES_REPLICATED: AxisRules = {
+    **SERVE_RULES,
+    "embed": None,
+}
+
+
+def logical_to_spec(
+    logical_axes: Sequence[str | None],
+    shape: Sequence[int],
+    mesh: Mesh,
+    rules: AxisRules,
+) -> P:
+    """Resolve logical axis names into a PartitionSpec for ``shape``."""
+    if len(logical_axes) != len(shape):
+        raise ValueError(
+            f"logical axes {logical_axes} rank != shape {tuple(shape)} rank"
+        )
+    used: set[str] = set()
+    out = []
+    for name, dim in zip(logical_axes, shape):
+        assigned: tuple[str, ...] = ()
+        if name is not None:
+            candidates = _as_tuple(rules.get(name))
+            picked = []
+            prod = 1
+            for ax in candidates:
+                if ax in used or ax not in mesh.shape:
+                    continue
+                nxt = prod * mesh.shape[ax]
+                if dim % nxt == 0:
+                    picked.append(ax)
+                    prod = nxt
+            assigned = tuple(picked)
+            used.update(assigned)
+        if len(assigned) == 0:
+            out.append(None)
+        elif len(assigned) == 1:
+            out.append(assigned[0])
+        else:
+            out.append(assigned)
+    # Trim trailing Nones (cosmetic, matches PartitionSpec conventions).
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+class ShardCtx:
+    """Mesh + rule table threaded through model apply functions.
+
+    ``ShardCtx(None)`` (the default everywhere) makes every constraint a
+    no-op, so unit tests and single-device paths never touch mesh state.
+    """
+
+    def __init__(self, mesh: Mesh | None = None, rules: AxisRules = TRAIN_RULES):
+        self.mesh = mesh
+        self.rules = rules
+
+    def cs(self, x, logical_axes):
+        if self.mesh is None:
+            return x
+        spec = logical_to_spec(logical_axes, x.shape, self.mesh, self.rules)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(self.mesh, spec))
+
+
+NULL_CTX = ShardCtx(None)
+
+
+def logical_constraint(x, logical_axes, rules: AxisRules, mesh: Mesh | None = None):
+    """``with_sharding_constraint`` via logical axes; no-op off-mesh."""
+    if mesh is None:
+        mesh = _current_mesh()
+    if mesh is None or mesh.empty:
+        return x
+    spec = logical_to_spec(logical_axes, x.shape, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def _current_mesh() -> Mesh | None:
+    env_mesh = jax.sharding.get_abstract_mesh()
+    try:
+        from jax._src import mesh as mesh_lib
+
+        m = mesh_lib.thread_resources.env.physical_mesh
+        if m is not None and not m.empty:
+            return m
+    except Exception:
+        pass
+    if env_mesh is not None and not env_mesh.empty:  # pragma: no cover
+        return None
+    return None
+
+
+def make_param_shardings(param_axes, param_shapes, mesh: Mesh, rules: AxisRules):
+    """Map pytrees of logical-axis tuples + shapes -> NamedShardings."""
+
+    def one(axes, shape_like):
+        shape = getattr(shape_like, "shape", shape_like)
+        return NamedSharding(mesh, logical_to_spec(axes, shape, mesh, rules))
+
+    return jax.tree.map(
+        one, param_axes, param_shapes, is_leaf=lambda x: isinstance(x, tuple)
+    )

@@ -1,0 +1,49 @@
+"""Architecture configs (one module per assigned arch) + paper's own pair.
+
+``get_config(name)`` resolves any of the 10 assigned architectures plus the
+paper's Qwen3-style draft/target pair used in end-to-end WISP examples.
+"""
+from repro.configs.base import ArchConfig, MoEConfig, SSMConfig, get_config, list_archs, register
+from repro.configs.shapes import SHAPES, ShapeConfig, cell_status, cells
+
+# Assigned pool — importing registers each config.
+from repro.configs import xlstm_350m          # noqa: F401
+from repro.configs import llama_32_vision_90b  # noqa: F401
+from repro.configs import gemma2_9b           # noqa: F401
+from repro.configs import starcoder2_15b      # noqa: F401
+from repro.configs import stablelm_12b        # noqa: F401
+from repro.configs import qwen2_7b            # noqa: F401
+from repro.configs import grok_1_314b         # noqa: F401
+from repro.configs import deepseek_moe_16b    # noqa: F401
+from repro.configs import whisper_tiny        # noqa: F401
+from repro.configs import zamba2_1p2b         # noqa: F401
+
+# Paper's own serving pair (Qwen3-32B target / Qwen3-0.6B..8B drafts).
+from repro.configs import qwen3_wisp          # noqa: F401
+
+#: The 10 assigned architectures (dry-run / roofline cell enumeration).
+ASSIGNED = [
+    "xlstm-350m",
+    "llama-3.2-vision-90b",
+    "gemma2-9b",
+    "starcoder2-15b",
+    "stablelm-12b",
+    "qwen2-7b",
+    "grok-1-314b",
+    "deepseek-moe-16b",
+    "whisper-tiny",
+    "zamba2-1.2b",
+]
+
+__all__ = [
+    "ArchConfig",
+    "MoEConfig",
+    "SSMConfig",
+    "get_config",
+    "list_archs",
+    "register",
+    "SHAPES",
+    "ShapeConfig",
+    "cell_status",
+    "cells",
+]

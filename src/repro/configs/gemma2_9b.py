@@ -1,0 +1,25 @@
+"""Gemma2-9B [arXiv:2408.00118]: local/global alternating attention
+(window 4096 on local layers), attn-logit softcap 50, final-logit softcap 30,
+head_dim 256 (query dim != d_model), tied embeddings."""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(
+    ArchConfig(
+        name="gemma2-9b",
+        family="dense",
+        n_layers=42,
+        d_model=3584,
+        n_heads=16,
+        n_kv_heads=8,
+        d_ff=14_336,
+        vocab=256_000,
+        head_dim=256,
+        attn_softcap=50.0,
+        final_softcap=30.0,
+        sliding_window=4096,
+        local_global_alternate=True,
+        tie_embeddings=True,
+        sandwich_norm=True,
+        scale_embed=True,
+    )
+)

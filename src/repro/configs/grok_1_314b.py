@@ -1,0 +1,18 @@
+"""Grok-1 314B [hf:xai-org/grok-1]: MoE 8 experts top-2, GQA kv=8."""
+from repro.configs.base import ArchConfig, MoEConfig, register
+
+CONFIG = register(
+    ArchConfig(
+        name="grok-1-314b",
+        family="moe",
+        n_layers=64,
+        d_model=6144,
+        n_heads=48,
+        n_kv_heads=8,
+        d_ff=32_768,
+        vocab=131_072,
+        head_dim=128,
+        attn_softcap=30.0,
+        moe=MoEConfig(num_experts=8, top_k=2, parallelism="tp"),
+    )
+)

@@ -1,0 +1,22 @@
+"""Llama-3.2-Vision-90B backbone [hf:meta-llama/Llama-3.2-90B-Vision]:
+100 layers with a cross-attention (image) layer every 5 self layers.
+Vision frontend is a STUB: ``input_specs()`` supplies precomputed patch
+embeddings of length ``num_image_tokens``."""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(
+    ArchConfig(
+        name="llama-3.2-vision-90b",
+        family="vlm",
+        n_layers=100,
+        d_model=8192,
+        n_heads=64,
+        n_kv_heads=8,
+        d_ff=28_672,
+        vocab=128_256,
+        head_dim=128,
+        rope_theta=500_000.0,
+        cross_attn_every=5,
+        num_image_tokens=4096,
+    )
+)

@@ -1,0 +1,104 @@
+"""The paper's own model pair: Qwen3-32B verification target and the
+Qwen3-{0.6B,1.7B,4B,8B} draft ladder (§5.1).  Configs follow the published
+Qwen3 geometry; used by the WISP serving examples and benchmarks."""
+from repro.configs.base import ArchConfig, register
+
+TARGET_32B = register(
+    ArchConfig(
+        name="qwen3-32b",
+        family="dense",
+        n_layers=64,
+        d_model=5120,
+        n_heads=64,
+        n_kv_heads=8,
+        d_ff=25_600,
+        vocab=151_936,
+        head_dim=128,
+        rope_theta=1_000_000.0,
+    )
+)
+
+TARGET_14B = register(
+    ArchConfig(
+        name="qwen3-14b",
+        family="dense",
+        n_layers=40,
+        d_model=5120,
+        n_heads=40,
+        n_kv_heads=8,
+        d_ff=17_408,
+        vocab=151_936,
+        head_dim=128,
+        rope_theta=1_000_000.0,
+    )
+)
+
+DRAFT_0p6B = register(
+    ArchConfig(
+        name="qwen3-0.6b",
+        family="dense",
+        n_layers=28,
+        d_model=1024,
+        n_heads=16,
+        n_kv_heads=8,
+        d_ff=3072,
+        vocab=151_936,
+        head_dim=128,
+        rope_theta=1_000_000.0,
+        tie_embeddings=True,
+    )
+)
+
+DRAFT_1p7B = register(
+    ArchConfig(
+        name="qwen3-1.7b",
+        family="dense",
+        n_layers=28,
+        d_model=2048,
+        n_heads=16,
+        n_kv_heads=8,
+        d_ff=6144,
+        vocab=151_936,
+        head_dim=128,
+        rope_theta=1_000_000.0,
+        tie_embeddings=True,
+    )
+)
+
+DRAFT_4B = register(
+    ArchConfig(
+        name="qwen3-4b",
+        family="dense",
+        n_layers=36,
+        d_model=2560,
+        n_heads=32,
+        n_kv_heads=8,
+        d_ff=9728,
+        vocab=151_936,
+        head_dim=128,
+        rope_theta=1_000_000.0,
+        tie_embeddings=True,
+    )
+)
+
+DRAFT_8B = register(
+    ArchConfig(
+        name="qwen3-8b",
+        family="dense",
+        n_layers=36,
+        d_model=4096,
+        n_heads=32,
+        n_kv_heads=8,
+        d_ff=12_288,
+        vocab=151_936,
+        head_dim=128,
+        rope_theta=1_000_000.0,
+    )
+)
+
+DRAFTS = {
+    "qwen3-0.6b": DRAFT_0p6B,
+    "qwen3-1.7b": DRAFT_1p7B,
+    "qwen3-4b": DRAFT_4B,
+    "qwen3-8b": DRAFT_8B,
+}

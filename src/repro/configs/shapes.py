@@ -1,0 +1,38 @@
+"""Assigned input shapes and the (arch x shape) cell enumeration."""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    kind: str          # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeConfig("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeConfig("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeConfig("long_500k", "decode", 524_288, 1),
+}
+
+
+def cell_status(cfg, shape: ShapeConfig) -> tuple[bool, str]:
+    """(runnable, reason).  long_500k only for sub-quadratic archs."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "long_500k skipped: full softmax attention is quadratic"
+    return True, ""
+
+
+def cells(archs=None):
+    """Yield (arch_name, shape_name, runnable, reason) for all 40 cells."""
+    from repro.configs import ASSIGNED, get_config
+
+    for a in archs or ASSIGNED:
+        cfg = get_config(a)
+        for s in SHAPES.values():
+            ok, why = cell_status(cfg, s)
+            yield a, s.name, ok, why

@@ -1,0 +1,16 @@
+"""StableLM-2-12B [hf:stabilityai/stablelm-2-12b family]: GQA kv=8."""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(
+    ArchConfig(
+        name="stablelm-12b",
+        family="dense",
+        n_layers=40,
+        d_model=5120,
+        n_heads=32,
+        n_kv_heads=8,
+        d_ff=13_824,
+        vocab=100_352,
+        head_dim=160,
+    )
+)

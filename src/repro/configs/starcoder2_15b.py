@@ -1,0 +1,19 @@
+"""StarCoder2-15B [arXiv:2402.19173]: GQA kv=4, RoPE."""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(
+    ArchConfig(
+        name="starcoder2-15b",
+        family="dense",
+        n_layers=40,
+        d_model=6144,
+        n_heads=48,
+        n_kv_heads=4,
+        d_ff=24_576,
+        vocab=49_152,
+        head_dim=128,
+        rope_theta=100_000.0,
+        qkv_bias=True,
+        gated_mlp=False,
+    )
+)

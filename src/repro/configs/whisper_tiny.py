@@ -1,0 +1,21 @@
+"""Whisper-tiny [arXiv:2212.04356]: encoder-decoder; conv frontend is a STUB
+(``input_specs()`` supplies precomputed frame embeddings)."""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(
+    ArchConfig(
+        name="whisper-tiny",
+        family="audio",
+        n_layers=4,              # decoder layers
+        d_model=384,
+        n_heads=6,
+        n_kv_heads=6,
+        d_ff=1536,
+        vocab=51_865,
+        head_dim=64,
+        encoder_layers=4,
+        encoder_frames=1500,
+        gated_mlp=False,
+        tie_embeddings=True,
+    )
+)

@@ -1,0 +1,18 @@
+"""xLSTM-350M [arXiv:2405.04517]: sLSTM + mLSTM blocks, d_ff=0 (blocks carry
+their own up/down projections).  1 sLSTM per 4 layers, rest mLSTM."""
+from repro.configs.base import ArchConfig, SSMConfig, register
+
+CONFIG = register(
+    ArchConfig(
+        name="xlstm-350m",
+        family="ssm",
+        n_layers=24,
+        d_model=1024,
+        n_heads=4,
+        n_kv_heads=4,
+        d_ff=0,
+        vocab=50_304,
+        head_dim=256,
+        ssm=SSMConfig(state_dim=256, chunk=256, slstm_every=4),
+    )
+)

@@ -1,0 +1,18 @@
+"""Zamba2-1.2B [arXiv:2411.15242]: Mamba2 backbone with a SHARED attention
+block applied every 6 layers (shared = same params each application)."""
+from repro.configs.base import ArchConfig, SSMConfig, register
+
+CONFIG = register(
+    ArchConfig(
+        name="zamba2-1.2b",
+        family="hybrid",
+        n_layers=38,
+        d_model=2048,
+        n_heads=32,
+        n_kv_heads=32,
+        d_ff=8192,
+        vocab=32_000,
+        head_dim=64,
+        ssm=SSMConfig(state_dim=64, conv_kernel=4, expand=2, chunk=256, attn_every=6),
+    )
+)

@@ -1,0 +1,76 @@
+"""WISP core: the paper's primary contribution.
+
+  speculative — lossless accept/reject rule (Eq. 1-3)
+  features    — draft-logit summary statistics (§3.3)
+  predictor   — rejection predictor: MLP + stump-ensemble baseline (§4.1)
+  controller  — stop-at-first-predicted-rejection drafting (§4.1, Thm. 1)
+  estimator   — verification-time estimator, OLS-fit (§4.4, App. C)
+  scheduler   — SLO-aware batch scheduling, Algorithm 1 (§4.2-4.3)
+  wdt         — Wasted-Drafting-Time accounting (§3.2)
+"""
+from repro.core.speculative import speculative_verify, committed_tokens, wasted_tokens
+from repro.core.features import logit_features, NUM_FEATURES, FEATURE_NAMES
+from repro.core.predictor import (
+    MLPConfig,
+    RejectionPredictor,
+    StumpEnsemble,
+    train_mlp,
+    train_stumps,
+    operating_point,
+    auc_score,
+)
+from repro.core.controller import DraftingController, DraftResult, draft_block_scan
+from repro.core.estimator import (
+    BatchShape,
+    EstimatorCoeffs,
+    FitResult,
+    analytic_tpu_coeffs,
+    batch_features,
+    evaluate,
+    fit_ols,
+    load_coeffs,
+    save_coeffs,
+)
+from repro.core.scheduler import (
+    FCFSScheduler,
+    ScheduleDecision,
+    SchedulerConfig,
+    SLOScheduler,
+    VerifyRequest,
+)
+from repro.core.wdt import IterationLog, WDTStats
+
+__all__ = [
+    "speculative_verify",
+    "committed_tokens",
+    "wasted_tokens",
+    "logit_features",
+    "NUM_FEATURES",
+    "FEATURE_NAMES",
+    "MLPConfig",
+    "RejectionPredictor",
+    "StumpEnsemble",
+    "train_mlp",
+    "train_stumps",
+    "operating_point",
+    "auc_score",
+    "DraftingController",
+    "DraftResult",
+    "draft_block_scan",
+    "BatchShape",
+    "EstimatorCoeffs",
+    "FitResult",
+    "analytic_tpu_coeffs",
+    "batch_features",
+    "evaluate",
+    "fit_ols",
+    "load_coeffs",
+    "save_coeffs",
+    "FCFSScheduler",
+    "ScheduleDecision",
+    "SchedulerConfig",
+    "SLOScheduler",
+    "VerifyRequest",
+    "IterationLog",
+    "WDTStats",
+]

@@ -1,0 +1,181 @@
+"""Intelligent drafting controller (paper §4.1).
+
+Runs the draft model autoregressively on the edge device; after each drafted
+token it computes logit features and queries the rejection predictor.
+Drafting stops at the first predicted rejection (stop-at-first-predicted-
+rejection) or at ``k_max``.
+
+Paper-faithful semantics (Thm. 1): the token that triggered the stop is NOT
+included in the draft block (K_theta counts consecutive predicted-accepts).
+``include_flagged_token=True`` is a beyond-paper variant evaluated in the
+ablations: the flagged token rides along for free since verifying K+1 vs K
+tokens costs the same batch slot.
+
+Two implementations:
+  * ``draft_block``      — Python loop (edge devices are sequential anyway;
+                           easiest to instrument);
+  * ``draft_block_scan`` — jit-friendly fixed-K lax.scan with halt masking
+                           (device-efficient batched drafting; cache updates
+                           are masked after the stop so state stays exact).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.features import logit_features
+
+
+@dataclasses.dataclass
+class DraftResult:
+    tokens: np.ndarray        # (K_drafted,) int32
+    q_logits: np.ndarray      # (K_drafted, V) float32
+    features: np.ndarray      # (K_drafted, 5)
+    n_drafted: int            # tokens physically drafted (incl. flagged one)
+    n_sent: int               # tokens sent for verification
+    stopped_by: str           # "predictor" | "max"
+    draft_time: float         # simulated edge time = n_drafted / draft_speed
+
+
+class DraftingController:
+    """Edge-side controller bound to one draft model instance."""
+
+    def __init__(
+        self,
+        bundle,
+        params,
+        *,
+        predictor=None,
+        k_max: int = 8,
+        temperature: float = 1.0,
+        greedy: bool = False,
+        include_flagged_token: bool = False,
+        draft_speed: float = 50.0,     # tokens/s on this device (paper Fig. 1)
+    ):
+        self.bundle = bundle
+        self.params = params
+        self.predictor = predictor
+        self.k_max = k_max
+        self.temperature = temperature
+        self.greedy = greedy
+        self.include_flagged = include_flagged_token
+        self.draft_speed = draft_speed
+        self._decode = jax.jit(bundle.decode)
+
+    def draft(self, rng, last_token, cache, pos):
+        """Draft a block starting after ``last_token`` at position ``pos``.
+
+        last_token: (B=1,) int32.  Returns (DraftResult, cache, rng).
+        The cache is advanced by n_drafted tokens; the server's verdict
+        decides the committed prefix (edge rolls forward from there).
+        """
+        toks, qls, feats = [], [], []
+        tok = jnp.asarray(last_token).reshape(1, 1)
+        stopped_by = "max"
+        n_drafted = 0
+        n_sent = 0
+        for i in range(self.k_max):
+            logits, cache = self._decode(self.params, tok, cache, jnp.int32(pos + i))
+            lg = logits[:, -1]                               # (1, V)
+            if self.greedy:
+                nxt = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+            else:
+                rng, k = jax.random.split(rng)
+                nxt = jax.random.categorical(
+                    k, lg / max(self.temperature, 1e-6)
+                ).astype(jnp.int32)
+            f = logit_features(lg)[0]                        # (5,)
+            n_drafted += 1
+            pred_accept = True
+            if self.predictor is not None:
+                pred_accept = bool(self.predictor.predict_accept(f[None])[0])
+            if pred_accept or self.include_flagged:
+                toks.append(int(nxt[0]))
+                qls.append(np.asarray(lg[0], np.float32))
+                feats.append(np.asarray(f, np.float32))
+                n_sent += 1
+            if not pred_accept:
+                stopped_by = "predictor"
+                break
+            tok = nxt.reshape(1, 1)
+        return (
+            DraftResult(
+                tokens=np.asarray(toks, np.int32),
+                q_logits=np.stack(qls) if qls else np.zeros((0, 0), np.float32),
+                features=np.stack(feats) if feats else np.zeros((0, 5), np.float32),
+                n_drafted=n_drafted,
+                n_sent=n_sent,
+                stopped_by=stopped_by,
+                draft_time=n_drafted / self.draft_speed,
+            ),
+            cache,
+            rng,
+        )
+
+
+# ---------------------------------------------------------------------------
+# jit-friendly masked-scan variant (batched drafting on accelerators)
+# ---------------------------------------------------------------------------
+
+
+def draft_block_scan(
+    decode_fn,
+    params,
+    last_token,          # (B,) int32
+    cache,
+    pos,                 # scalar int32
+    rng,
+    *,
+    k_max: int,
+    predictor_fn=None,   # features (B,5) -> accept bool (B,)
+    greedy: bool = True,
+    temperature: float = 1.0,
+):
+    """Fixed-K scan with halt masking.
+
+    Restricted to attention-cache draft models (the serving stack's drafts
+    are dense transformers): rows that halt keep decoding into their KV
+    cache, which is harmless — entries past the committed length are never
+    attended to once the next round restarts at the committed position
+    (caches are length-capped, hence self-healing).  Recurrent-state drafts
+    must use the Python-loop controller.
+
+    Returns dict(tokens (B,K), q_logits (B,K,V), features (B,K,5),
+    draft_len (B,), cache).
+    """
+    B = last_token.shape[0]
+
+    def body(carry, i):
+        tok, cache, halted, rng = carry
+        logits, cache = decode_fn(params, tok[:, None], cache, pos + i)
+        lg = logits[:, -1]
+        if greedy:
+            nxt = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+        else:
+            rng, k = jax.random.split(rng)
+            nxt = jax.random.categorical(k, lg / temperature).astype(jnp.int32)
+        feats = logit_features(lg)
+        if predictor_fn is not None:
+            acc = predictor_fn(feats)
+        else:
+            acc = jnp.ones((B,), bool)
+        emitted = jnp.logical_not(halted)                  # this token counts?
+        halted_next = jnp.logical_or(halted, jnp.logical_not(acc))
+        return (nxt, cache, halted_next, rng), (nxt, lg, feats, emitted)
+
+    init = (last_token, cache, jnp.zeros((B,), bool), rng)
+    (tok, cache, halted, rng), (toks, qls, feats, emitted) = jax.lax.scan(
+        body, init, jnp.arange(k_max, dtype=jnp.int32)
+    )
+    draft_len = emitted.sum(axis=0).astype(jnp.int32)       # (B,)
+    return {
+        "tokens": jnp.moveaxis(toks, 0, 1),
+        "q_logits": jnp.moveaxis(qls, 0, 1),
+        "features": jnp.moveaxis(feats, 0, 1),
+        "draft_len": draft_len,
+        "cache": cache,
+    }

@@ -1,0 +1,161 @@
+"""Verification-time estimator (paper §4.4, Appendix C).
+
+    T_batch = a * N_linear + b_compute * N_interactions + b_read * N_cached + c
+
+  N_linear       = sum_i L_new_i          (tokens entering the model)
+  N_interactions = sum_i L_total_i * L_new_i   (query-key dot products)
+  N_cached       = sum_i L_cached_i       (KV tokens read from HBM)
+
+Fit by OLS (numpy lstsq) with bootstrap confidence intervals — the same
+pipeline as the paper's App. C, refit for the deployment hardware.  The
+module also provides analytic TPU-v5e coefficients derived from the machine
+model (197 TFLOP/s bf16, 819 GB/s HBM) for simulator use before any
+profiling data exists.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class BatchShape:
+    """One request's contribution to a verification batch."""
+
+    new_tokens: int          # L_new
+    cached_tokens: int       # L_cached
+
+    @property
+    def total(self):
+        return self.new_tokens + self.cached_tokens
+
+
+def batch_features(reqs) -> np.ndarray:
+    """[N_linear, N_interactions, N_cached] for a batch of BatchShape."""
+    n_lin = sum(r.new_tokens for r in reqs)
+    n_int = sum(r.total * r.new_tokens for r in reqs)
+    n_cache = sum(r.cached_tokens for r in reqs)
+    return np.array([n_lin, n_int, n_cache], np.float64)
+
+
+@dataclasses.dataclass
+class EstimatorCoeffs:
+    a: float                 # sec / new token        (linear ops)
+    b_compute: float         # sec / qk interaction   (attention compute)
+    b_read: float            # sec / cached token     (HBM reads)
+    c: float                 # sec                    (constant overhead)
+
+    def predict(self, reqs) -> float:
+        f = batch_features(reqs)
+        return float(self.a * f[0] + self.b_compute * f[1] + self.b_read * f[2] + self.c)
+
+    def predict_features(self, f) -> float:
+        return float(self.a * f[0] + self.b_compute * f[1] + self.b_read * f[2] + self.c)
+
+
+def analytic_tpu_coeffs(
+    cfg,
+    *,
+    chips: int = 1,
+    peak_flops: float = 197e12,
+    hbm_bw: float = 819e9,
+    mfu: float = 0.5,
+    hbm_eff: float = 0.8,
+    overhead_s: float = 0.002,
+) -> EstimatorCoeffs:
+    """Machine-model coefficients for a target config on TPU v5e.
+
+    a          ~ 2 * n_params_active / (chips * peak * mfu)  per token
+    b_compute  ~ qk+av flops per interaction / peak
+    b_read     ~ kv bytes per cached token / hbm_bw
+    """
+    from repro.roofline.model_flops import active_param_count
+
+    n_active = active_param_count(cfg)
+    flops_per_tok = 2.0 * n_active
+    a = flops_per_tok / (chips * peak_flops * mfu)
+    hd = cfg.resolved_head_dim
+    flops_per_inter = 2 * 2 * cfg.n_heads * hd  # qk + av per layer-pair token
+    b_compute = cfg.n_layers * flops_per_inter / (chips * peak_flops * mfu)
+    kv_bytes = cfg.n_layers * 2 * cfg.n_kv_heads * hd * 2  # bf16
+    b_read = kv_bytes / (chips * hbm_bw * hbm_eff)
+    return EstimatorCoeffs(a=a, b_compute=b_compute, b_read=b_read, c=overhead_s)
+
+
+@dataclasses.dataclass
+class FitResult:
+    coeffs: EstimatorCoeffs
+    r2: float
+    rmse: float
+    mae: float
+    mape: float
+    max_err: float
+    ci95: dict | None = None
+
+    def metrics(self):
+        return {
+            "r2": self.r2,
+            "rmse": self.rmse,
+            "mae": self.mae,
+            "mape": self.mape,
+            "max_err": self.max_err,
+        }
+
+
+def _metrics(y, yhat):
+    resid = y - yhat
+    ss_res = float(np.sum(resid**2))
+    ss_tot = float(np.sum((y - y.mean()) ** 2)) or 1e-12
+    return dict(
+        r2=1 - ss_res / ss_tot,
+        rmse=float(np.sqrt(np.mean(resid**2))),
+        mae=float(np.mean(np.abs(resid))),
+        mape=float(np.mean(np.abs(resid) / np.maximum(np.abs(y), 1e-9)) * 100),
+        max_err=float(np.max(np.abs(resid))),
+    )
+
+
+def fit_ols(features, latencies, *, bootstrap: int = 0, seed: int = 0) -> FitResult:
+    """features: (n, 3) [N_linear, N_interactions, N_cached]; latencies (n,) sec."""
+    X = np.asarray(features, np.float64)
+    y = np.asarray(latencies, np.float64)
+    A = np.concatenate([X, np.ones((len(X), 1))], axis=1)
+    # column scaling for conditioning (N_interactions is ~1e6x N_linear)
+    scale = np.maximum(np.abs(A).max(axis=0), 1e-12)
+    theta_s, *_ = np.linalg.lstsq(A / scale, y, rcond=None)
+    theta = theta_s / scale
+    coeffs = EstimatorCoeffs(*theta)
+    m = _metrics(y, A @ theta)
+
+    ci = None
+    if bootstrap:
+        rng = np.random.default_rng(seed)
+        samples = []
+        for _ in range(bootstrap):
+            idx = rng.integers(0, len(X), len(X))
+            th_s, *_ = np.linalg.lstsq(A[idx] / scale, y[idx], rcond=None)
+            samples.append(th_s / scale)
+        S = np.stack(samples)
+        lo, hi = np.percentile(S, [2.5, 97.5], axis=0)
+        names = ["a", "b_compute", "b_read", "c"]
+        ci = {n: (float(l), float(h)) for n, l, h in zip(names, lo, hi)}
+    return FitResult(coeffs=coeffs, ci95=ci, **m)
+
+
+def evaluate(coeffs: EstimatorCoeffs, features, latencies) -> dict:
+    X = np.asarray(features, np.float64)
+    y = np.asarray(latencies, np.float64)
+    yhat = X @ np.array([coeffs.a, coeffs.b_compute, coeffs.b_read]) + coeffs.c
+    return _metrics(y, yhat)
+
+
+def save_coeffs(coeffs: EstimatorCoeffs, path):
+    with open(path, "w") as f:
+        json.dump(dataclasses.asdict(coeffs), f)
+
+
+def load_coeffs(path) -> EstimatorCoeffs:
+    with open(path) as f:
+        return EstimatorCoeffs(**json.load(f))

@@ -1,0 +1,44 @@
+"""Draft-logit summary features for the rejection predictor (paper §3.3).
+
+Five features per drafted token, all computable in one pass over the vocab
+(the Pallas kernel `kernels/logit_features` fuses this pass; this module is
+its jnp oracle and the default CPU path):
+
+  0. confidence  — max softmax probability
+  1. entropy     — softmax entropy, normalized by log(V)
+  2. margin      — top-1 minus top-2 softmax probability
+  3. logit_std   — standard deviation of the raw logits
+  4. top8_mass   — total probability of the 8 most likely tokens
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NUM_FEATURES = 5
+FEATURE_NAMES = ("confidence", "entropy", "margin", "logit_std", "top8_mass")
+
+
+def logit_features(logits):
+    """logits: (..., V) -> features (..., 5), float32."""
+    x = logits.astype(jnp.float32)
+    V = x.shape[-1]
+    logp = jax.nn.log_softmax(x, axis=-1)
+    p = jnp.exp(logp)
+    top8, _ = jax.lax.top_k(p, 8)
+    conf = top8[..., 0]
+    margin = top8[..., 0] - top8[..., 1]
+    entropy = -jnp.sum(p * logp, axis=-1) / jnp.log(V)
+    std = jnp.std(x, axis=-1)
+    mass8 = top8.sum(axis=-1)
+    return jnp.stack([conf, entropy, margin, std, mass8], axis=-1)
+
+
+def normalize_features(feats, stats=None):
+    """Standardize features; returns (normed, stats).  ``stats`` from the
+    training set is reused at inference."""
+    if stats is None:
+        mu = feats.mean(axis=0)
+        sd = feats.std(axis=0) + 1e-6
+        stats = {"mu": mu, "sd": sd}
+    return (feats - stats["mu"]) / stats["sd"], stats

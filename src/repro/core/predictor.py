@@ -1,0 +1,259 @@
+"""Rejection predictor (paper §4.1, Appendix B).
+
+The deployed model is a compact MLP trained with class-weighted BCE; the
+operating point (decision threshold) is tuned for LOW false-positive rate on
+the Rejected class, because a false "accept" lets the device draft past the
+true first rejection — the direct cause of WDT (Theorem 1).
+
+A gradient-boosted decision-stump ensemble over the same 5 features is
+included as the tree-family baseline of Table 4 (pure numpy, edge-friendly;
+stands in for XGBoost/LightGBM which are unavailable offline).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.features import NUM_FEATURES
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class MLPConfig:
+    hidden: tuple[int, ...] = (64, 32)
+    lr: float = 3e-3
+    epochs: int = 30
+    batch_size: int = 256
+    pos_weight: float = 1.0      # weight on the Accepted(1) class
+    neg_weight: float = 2.5      # weight on the Rejected(0) class
+    threshold: float = 0.5       # P(accept) >= threshold -> predict accept
+    seed: int = 0
+
+
+def mlp_init(rng, cfg: MLPConfig, n_features=NUM_FEATURES):
+    sizes = (n_features, *cfg.hidden, 1)
+    params = []
+    for i, (a, b) in enumerate(zip(sizes[:-1], sizes[1:])):
+        rng, k = jax.random.split(rng)
+        params.append(
+            {
+                "w": jax.random.normal(k, (a, b)) * (2.0 / a) ** 0.5,
+                "b": jnp.zeros((b,)),
+            }
+        )
+    return params
+
+
+def mlp_apply(params, x):
+    """x: (..., F) -> logit (...,)"""
+    h = x
+    for layer in params[:-1]:
+        h = jax.nn.relu(h @ layer["w"] + layer["b"])
+    out = h @ params[-1]["w"] + params[-1]["b"]
+    return out[..., 0]
+
+
+def _bce_loss(params, x, y, wpos, wneg):
+    logit = mlp_apply(params, x)
+    logp1 = jax.nn.log_sigmoid(logit)
+    logp0 = jax.nn.log_sigmoid(-logit)
+    w = jnp.where(y > 0.5, wpos, wneg)
+    return -jnp.mean(w * (y * logp1 + (1 - y) * logp0))
+
+
+@dataclasses.dataclass
+class RejectionPredictor:
+    """Stateful wrapper: features -> P(accept); stop when P(accept) < thr."""
+
+    params: list
+    stats: dict                  # feature normalization
+    threshold: float
+
+    def proba(self, feats):
+        x = (feats - self.stats["mu"]) / self.stats["sd"]
+        return jax.nn.sigmoid(mlp_apply(self.params, x))
+
+    def predict_accept(self, feats):
+        return self.proba(feats) >= self.threshold
+
+    def save(self, path):
+        blob = {
+            "params": [
+                {"w": np.asarray(l["w"]).tolist(), "b": np.asarray(l["b"]).tolist()}
+                for l in self.params
+            ],
+            "stats": {k: np.asarray(v).tolist() for k, v in self.stats.items()},
+            "threshold": self.threshold,
+        }
+        with open(path, "w") as f:
+            json.dump(blob, f)
+
+    @classmethod
+    def load(cls, path):
+        with open(path) as f:
+            blob = json.load(f)
+        params = [
+            {"w": jnp.asarray(l["w"]), "b": jnp.asarray(l["b"])}
+            for l in blob["params"]
+        ]
+        stats = {k: jnp.asarray(v) for k, v in blob["stats"].items()}
+        return cls(params, stats, blob["threshold"])
+
+
+def train_mlp(feats, labels, cfg: MLPConfig = MLPConfig()) -> RejectionPredictor:
+    """feats: (N, F) float; labels: (N,) {0 rejected, 1 accepted}."""
+    feats = jnp.asarray(feats, jnp.float32)
+    labels = jnp.asarray(labels, jnp.float32)
+    mu = feats.mean(axis=0)
+    sd = feats.std(axis=0) + 1e-6
+    x = (feats - mu) / sd
+
+    rng = jax.random.PRNGKey(cfg.seed)
+    params = mlp_init(rng, cfg, feats.shape[-1])
+    # Adam
+    m = jax.tree.map(jnp.zeros_like, params)
+    v = jax.tree.map(jnp.zeros_like, params)
+    grad_fn = jax.jit(jax.grad(_bce_loss), static_argnums=())
+
+    @jax.jit
+    def step(params, m, v, x, y, t):
+        g = jax.grad(_bce_loss)(params, x, y, cfg.pos_weight, cfg.neg_weight)
+        m = jax.tree.map(lambda a, b: 0.9 * a + 0.1 * b, m, g)
+        v = jax.tree.map(lambda a, b: 0.999 * a + 0.001 * b * b, v, g)
+        mh = jax.tree.map(lambda a: a / (1 - 0.9**t), m)
+        vh = jax.tree.map(lambda a: a / (1 - 0.999**t), v)
+        params = jax.tree.map(
+            lambda p, a, b: p - cfg.lr * a / (jnp.sqrt(b) + 1e-8), params, mh, vh
+        )
+        return params, m, v
+
+    N = x.shape[0]
+    rng_np = np.random.default_rng(cfg.seed)
+    t = 0
+    for _ in range(cfg.epochs):
+        order = rng_np.permutation(N)
+        for s in range(0, N, cfg.batch_size):
+            sel = order[s : s + cfg.batch_size]
+            t += 1
+            params, m, v = step(params, m, v, x[sel], labels[sel], t)
+    return RejectionPredictor(params, {"mu": mu, "sd": sd}, cfg.threshold)
+
+
+# ---------------------------------------------------------------------------
+# gradient-boosted stumps (tree-family baseline, numpy)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class StumpEnsemble:
+    stumps: list      # (feature, threshold, left_value, right_value)
+    base: float
+    threshold: float = 0.5
+
+    def raw(self, X):
+        X = np.asarray(X)
+        out = np.full(X.shape[0], self.base)
+        for f, thr, lv, rv in self.stumps:
+            out += np.where(X[:, f] <= thr, lv, rv)
+        return out
+
+    def proba(self, X):
+        return 1.0 / (1.0 + np.exp(-self.raw(X)))
+
+    def predict_accept(self, X):
+        return self.proba(X) >= self.threshold
+
+
+def train_stumps(
+    feats, labels, *, n_rounds=60, lr=0.3, n_bins=32, seed=0
+) -> StumpEnsemble:
+    """Gradient boosting with depth-1 trees on binned features (LightGBM-style
+    histogram splits), logistic loss."""
+    X = np.asarray(feats, np.float64)
+    y = np.asarray(labels, np.float64)
+    N, F = X.shape
+    base = float(np.log(max(y.mean(), 1e-6) / max(1 - y.mean(), 1e-6)))
+    raw = np.full(N, base)
+    # candidate thresholds per feature (quantile bins)
+    qs = np.linspace(0.02, 0.98, n_bins)
+    cand = [np.unique(np.quantile(X[:, f], qs)) for f in range(F)]
+    stumps = []
+    for _ in range(n_rounds):
+        p = 1.0 / (1.0 + np.exp(-raw))
+        g = p - y                      # gradient
+        h = p * (1 - p) + 1e-6         # hessian
+        best = None
+        for f in range(F):
+            xf = X[:, f]
+            for thr in cand[f]:
+                mask = xf <= thr
+                gl, hl = g[mask].sum(), h[mask].sum()
+                gr, hr = g.sum() - gl, h.sum() - hl
+                gain = gl * gl / (hl + 1.0) + gr * gr / (hr + 1.0)
+                if best is None or gain > best[0]:
+                    best = (gain, f, thr, -gl / (hl + 1.0), -gr / (hr + 1.0))
+        _, f, thr, lv, rv = best
+        lv *= lr
+        rv *= lr
+        stumps.append((f, thr, lv, rv))
+        raw += np.where(X[:, f] <= thr, lv, rv)
+    return StumpEnsemble(stumps, base)
+
+
+# ---------------------------------------------------------------------------
+# evaluation (Table 4 metrics)
+# ---------------------------------------------------------------------------
+
+
+def operating_point(pred_accept, labels):
+    """Returns the paper's Table-4 metrics.  labels: 1=accepted, 0=rejected;
+    pred_accept: predicted accept booleans."""
+    y = np.asarray(labels).astype(bool)
+    p = np.asarray(pred_accept).astype(bool)
+    tp = int(np.sum(p & y))          # predicted accept, truly accepted
+    fn = int(np.sum(~p & y))
+    fp = int(np.sum(p & ~y))         # predicted accept, truly REJECTED
+    tn = int(np.sum(~p & ~y))
+    rec1 = tp / max(tp + fn, 1)      # Accepted-class recall (coverage)
+    spec = tn / max(tn + fp, 1)      # Rejected-class specificity
+    fpr = fp / max(tn + fp, 1)       # waste driver
+    acc = (tp + tn) / max(len(y), 1)
+    return {
+        "acc": acc,
+        "rec1": rec1,
+        "spec": spec,
+        "fpr": fpr,
+        "bal_acc": 0.5 * (rec1 + spec),
+        "confusion": {"tp": tp, "fn": fn, "fp": fp, "tn": tn},
+    }
+
+
+def auc_score(proba, labels):
+    """ROC AUC via rank statistic (no sklearn)."""
+    p = np.asarray(proba, np.float64)
+    y = np.asarray(labels).astype(bool)
+    order = np.argsort(p, kind="mergesort")
+    ranks = np.empty(len(p), np.float64)
+    # average ranks for ties
+    sorted_p = p[order]
+    i = 0
+    r = np.arange(1, len(p) + 1, dtype=np.float64)
+    while i < len(p):
+        j = i
+        while j + 1 < len(p) and sorted_p[j + 1] == sorted_p[i]:
+            j += 1
+        r[i : j + 1] = 0.5 * (i + 1 + j + 1)
+        i = j + 1
+    ranks[order] = r
+    n1 = int(y.sum())
+    n0 = len(y) - n1
+    if n0 == 0 or n1 == 0:
+        return 0.5
+    return (ranks[y].sum() - n1 * (n1 + 1) / 2) / (n0 * n1)

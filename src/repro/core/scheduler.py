@@ -1,0 +1,205 @@
+"""SLO-aware verification batch scheduler (paper §4.2-4.3, Algorithm 1).
+
+Per dispatch epoch t_k, select a batch B_k maximizing goodput density
+under (i) a GPU/TPU memory budget and (ii) per-request deadlines checked
+against the verification-time estimator:
+
+  * critical fast path: requests past their Latest Start Time
+    (LST_i = d_i - v_hat_i - delta) are admitted first in EDF order;
+  * best-effort fill: remaining capacity is filled by decreasing utility
+    density U_i = g_hat_i / v_hat_i;
+  * every tentative admission is validated by FeasibleAdd (memory + the
+    earliest deadline in the batch vs estimated batch completion).
+
+This is host-side control logic (pure Python, no jax) — it runs on the
+serving coordinator between device steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Iterable, Optional
+
+from repro.core.estimator import BatchShape, EstimatorCoeffs, batch_features
+
+
+@dataclasses.dataclass
+class VerifyRequest:
+    """A pending verification request on the server."""
+
+    req_id: int
+    session_id: int
+    slo_class: int               # index into class table
+    arrival: float               # a_i (s)
+    deadline: float              # d_i = a_i + tau_c (s)
+    draft_len: int               # N_d
+    cached_len: int              # committed prefix length with valid KV
+    alpha: float                 # expected acceptance rate of this session
+    payload: object = None       # draft tokens + q stats (opaque here)
+    #: prefix tokens that must be re-prefilled because no KV is cached
+    #: (cold start / cache eviction / SLED's no-cache baseline)
+    prefill_tokens: int = 0
+    # bookkeeping
+    enqueued_at: float = 0.0
+    round_index: int = 0
+
+    @property
+    def new_tokens(self) -> int:
+        # + the re-fed last committed token + any uncached prefix
+        return self.draft_len + 1 + self.prefill_tokens
+
+    @property
+    def goodput_value(self) -> float:
+        """g_hat: expected committed tokens (paper Eq. 5, + bonus token)."""
+        return self.alpha * self.draft_len + 1.0
+
+    def batch_shape(self) -> BatchShape:
+        return BatchShape(new_tokens=self.new_tokens, cached_tokens=self.cached_len)
+
+
+@dataclasses.dataclass
+class SchedulerConfig:
+    memory_budget_tokens: int = 1 << 20   # KV-token budget M(t_k)
+    guard_time: float = 0.005             # delta (s)
+    #: how long before LST a request enters the critical fast path.  The
+    #: paper's "t >= LST_i" alone leaves a zero-width window between
+    #: "critical" and "already hopeless"; opening the window eta early is
+    #: what makes the EDF fast path actually fire.
+    criticality_window: float = 0.020
+    max_batch_requests: int = 64
+    kv_bytes_per_token: int = 0           # informational
+
+
+@dataclasses.dataclass
+class ScheduleDecision:
+    batch: list        # [VerifyRequest]
+    est_time: float    # T_hat(B_k)
+    critical: int      # how many came from the critical fast path
+    skipped_infeasible: int
+    epoch: float
+
+
+class SLOScheduler:
+    """Algorithm 1.  ``estimator`` maps a list of BatchShape -> seconds."""
+
+    def __init__(self, cfg: SchedulerConfig, coeffs: EstimatorCoeffs):
+        self.cfg = cfg
+        self.coeffs = coeffs
+
+    # -- per-request estimates -------------------------------------------
+    def v_hat(self, r: VerifyRequest) -> float:
+        """Marginal verification cost of r alone (used for U_i and LST_i)."""
+        return self.coeffs.predict([r.batch_shape()])
+
+    def utility(self, r: VerifyRequest) -> float:
+        return r.goodput_value / max(self.v_hat(r), 1e-9)
+
+    def lst(self, r: VerifyRequest) -> float:
+        return r.deadline - self.v_hat(r) - self.cfg.guard_time
+
+    # -- batch feasibility (FeasibleAdd) ----------------------------------
+    def batch_time(self, batch: Iterable[VerifyRequest]) -> float:
+        shapes = [r.batch_shape() for r in batch]
+        if not shapes:
+            return 0.0
+        return self.coeffs.predict(shapes)
+
+    def memory_tokens(self, batch: Iterable[VerifyRequest]) -> int:
+        return sum(r.cached_len + r.new_tokens for r in batch)
+
+    def feasible_add(self, batch, r, t_k, doomed: set | None = None) -> bool:
+        """FeasibleAdd (Alg. 1): memory + earliest *winnable* deadline vs
+        estimated batch completion.  Requests in ``doomed`` have already
+        missed their deadline — Eq. 15 cannot bind for them (they violate
+        regardless), so they do not constrain d_min; excluding them avoids
+        the one-request death-spiral a literal reading would cause."""
+        nb = batch + [r]
+        if len(nb) > self.cfg.max_batch_requests:
+            return False
+        if self.memory_tokens(nb) > self.cfg.memory_budget_tokens:
+            return False
+        doomed = doomed or set()
+        winnable = [x.deadline for x in nb if x.req_id not in doomed]
+        if not winnable:
+            return True
+        return t_k + self.batch_time(nb) + self.cfg.guard_time <= min(winnable)
+
+    # -- Algorithm 1 -------------------------------------------------------
+    def schedule(self, pending: list, t_k: float) -> ScheduleDecision:
+        # Requests that cannot meet their deadline even alone are "doomed":
+        # they violate regardless of what we do, so they must not block the
+        # critical fast path (a literal Alg. 1 would dispatch them one at a
+        # time and death-spiral the verifier).  They join the best-effort
+        # fill — served promptly, batched efficiently, violation recorded.
+        v_hats = {r.req_id: self.v_hat(r) for r in pending}
+        doomed = {
+            r.req_id
+            for r in pending
+            if t_k + v_hats[r.req_id] > r.deadline      # missed even solo
+        }
+        crit = [
+            r for r in pending
+            if r.req_id not in doomed
+            and t_k >= (r.deadline - v_hats[r.req_id] - self.cfg.guard_time
+                        - self.cfg.criticality_window)
+        ]
+        non = [r for r in pending if r not in crit]
+        crit.sort(key=lambda r: r.deadline)                 # EDF
+        non.sort(key=lambda r: -self.utility(r))            # utility density
+
+        batch: list = []
+        skipped = 0
+        stop = False
+        for r in crit:
+            if self.feasible_add(batch, r, t_k, doomed):
+                batch.append(r)
+            else:
+                stop = True
+                skipped += 1
+                break
+        n_crit = len(batch)
+        if not stop:
+            for r in non:
+                if self.feasible_add(batch, r, t_k, doomed):
+                    batch.append(r)
+                else:
+                    skipped += 1
+                    break
+        return ScheduleDecision(
+            batch=batch,
+            est_time=self.batch_time(batch),
+            critical=n_crit,
+            skipped_infeasible=skipped,
+            epoch=t_k,
+        )
+
+
+class FCFSScheduler:
+    """SLED-style baseline: first-come-first-served, fill to limits, no
+    deadline awareness."""
+
+    def __init__(self, cfg: SchedulerConfig, coeffs: EstimatorCoeffs):
+        self.cfg = cfg
+        self.coeffs = coeffs
+
+    def batch_time(self, batch) -> float:
+        shapes = [r.batch_shape() for r in batch]
+        return self.coeffs.predict(shapes) if shapes else 0.0
+
+    def memory_tokens(self, batch) -> int:
+        return sum(r.cached_len + r.new_tokens for r in batch)
+
+    def schedule(self, pending: list, t_k: float) -> ScheduleDecision:
+        batch: list = []
+        for r in sorted(pending, key=lambda x: x.arrival):
+            if len(batch) >= self.cfg.max_batch_requests:
+                break
+            if self.memory_tokens(batch + [r]) > self.cfg.memory_budget_tokens:
+                break
+            batch.append(r)
+        return ScheduleDecision(
+            batch=batch,
+            est_time=self.batch_time(batch),
+            critical=0,
+            skipped_infeasible=0,
+            epoch=t_k,
+        )

@@ -1,0 +1,122 @@
+"""Speculative decoding: the lossless accept/reject rule (paper Eq. 1-3).
+
+Batched, ragged (per-row draft lengths), jit-friendly.
+
+Two correction modes:
+  * ``residual`` (default) — Leviathan et al.'s exact rule: on rejection at
+    position R the replacement token is sampled from norm(max(p - q, 0)).
+    This preserves the target distribution exactly (property-tested).
+  * ``target`` — the paper's Eq. (3) as literally written (sample from p
+    directly).  Kept for paper-faithful ablations; slightly over-weights
+    high-q tokens.
+  * ``greedy`` — deterministic: accept iff draft token == argmax(p);
+    replacement = argmax.  Used by deterministic tests and greedy serving.
+
+Convention: a verification forward feeds tokens ``[x_last, y_1 .. y_K]``
+(K+1 tokens); its output ``p_logits[:, i]`` is the target distribution for
+the token at draft index i (0-based), and ``p_logits[:, K]`` is the bonus
+distribution after a fully accepted block.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def _log_softmax(logits, temperature):
+    return jax.nn.log_softmax(logits / jnp.maximum(temperature, 1e-6), axis=-1)
+
+
+@partial(jax.jit, static_argnames=("method",))
+def speculative_verify(
+    rng,
+    draft_tokens,        # (B, K) int32
+    draft_len,           # (B,)   int32, number of valid draft tokens (<= K)
+    q_logits,            # (B, K, V) draft-model logits at each draft position
+    p_logits,            # (B, K+1, V) target logits (see module docstring)
+    *,
+    method: str = "residual",
+    temperature: float = 1.0,
+):
+    """Returns dict with:
+      accept_len   (B,)  L = number of accepted draft tokens
+      token        (B,)  the correction/bonus token appended after y_{1:L}
+      accept_mask  (B,K) which draft positions were accepted
+      num_emitted  (B,)  L + 1 (tokens committed this round)
+    """
+    B, K = draft_tokens.shape
+    logq = _log_softmax(q_logits, temperature)                   # (B,K,V)
+    logp = _log_softmax(p_logits[:, :K], temperature)            # (B,K,V)
+    idx = draft_tokens[..., None]
+    logq_tok = jnp.take_along_axis(logq, idx, axis=-1)[..., 0]   # (B,K)
+    logp_tok = jnp.take_along_axis(logp, idx, axis=-1)[..., 0]
+
+    pos = jnp.arange(K)[None, :]
+    valid = pos < draft_len[:, None]                             # (B,K)
+
+    if method == "greedy":
+        accept = draft_tokens == jnp.argmax(p_logits[:, :K], axis=-1)
+    else:
+        k_unif, rng = jax.random.split(rng)
+        u = jax.random.uniform(k_unif, (B, K))
+        accept = jnp.log(u) <= (logp_tok - logq_tok)             # u <= p/q
+
+    accept = jnp.logical_and(accept, valid)
+    # first rejection among valid positions
+    rejected = jnp.logical_and(jnp.logical_not(accept), valid)
+    any_rej = rejected.any(axis=-1)
+    first_rej = jnp.argmax(rejected, axis=-1)                    # (B,)
+    L = jnp.where(any_rej, first_rej, draft_len)                 # accept len
+    # mask acceptances after the first rejection (verification stops there)
+    accept_mask = jnp.logical_and(accept, pos < L[:, None])
+
+    # distribution for the correction token at position L (0..K)
+    p_at = jnp.take_along_axis(
+        p_logits, L[:, None, None], axis=1
+    )[:, 0]                                                      # (B, V)
+    logp_at = _log_softmax(p_at, temperature)
+
+    if method == "greedy":
+        token = jnp.argmax(p_at, axis=-1).astype(jnp.int32)
+    elif method == "target":
+        k_s, rng = jax.random.split(rng)
+        token = jax.random.categorical(k_s, logp_at).astype(jnp.int32)
+    else:  # residual
+        q_at = jnp.take_along_axis(
+            jnp.pad(logq, ((0, 0), (0, 1), (0, 0)), constant_values=-jnp.inf),
+            L[:, None, None],
+            axis=1,
+        )[:, 0]                                                  # (B, V)
+        # residual = max(p - q, 0); on bonus rows (L == draft_len) q is -inf
+        # padded -> residual == p, exactly the bonus distribution.
+        resid = jnp.maximum(jnp.exp(logp_at) - jnp.exp(q_at), 0.0)
+        # rows can only be all-zero if p == q elementwise and a rejection
+        # happened (prob-0 event up to fp error); fall back to p.
+        fallback = resid.sum(-1, keepdims=True) <= 1e-12
+        resid = jnp.where(fallback, jnp.exp(logp_at), resid)
+        logresid = jnp.log(jnp.maximum(resid, 1e-38))
+        k_s, rng = jax.random.split(rng)
+        token = jax.random.categorical(k_s, logresid).astype(jnp.int32)
+
+    return {
+        "accept_len": L.astype(jnp.int32),
+        "token": token,
+        "accept_mask": accept_mask,
+        "num_emitted": (L + 1).astype(jnp.int32),
+    }
+
+
+def committed_tokens(draft_tokens, accept_len, token):
+    """Assemble the committed block y_{1:L} + correction as a padded (B, K+1)
+    array with length accept_len+1 (host-side convenience)."""
+    B, K = draft_tokens.shape
+    out = jnp.concatenate([draft_tokens, jnp.zeros((B, 1), jnp.int32)], axis=1)
+    out = jax.vmap(lambda row, l, t: row.at[l].set(t))(out, accept_len, token)
+    return out
+
+
+def wasted_tokens(draft_len, accept_len):
+    """Paper Eq. (7): W = (K - L)^+ per request."""
+    return jnp.maximum(draft_len - accept_len, 0)

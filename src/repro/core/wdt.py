@@ -1,0 +1,87 @@
+"""Wasted Drafting Time accounting (paper §3.2, Eq. 7-10)."""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class IterationLog:
+    """One speculate-verify iteration of one session."""
+
+    session_id: int
+    round_index: int
+    n_drafted: int           # K: tokens the edge physically drafted
+    n_sent: int              # tokens submitted for verification
+    n_accepted: int          # L
+    n_committed: int         # L + 1 (with correction/bonus token)
+    t_draft: float
+    t_network: float
+    t_queue: float
+    t_verify: float
+    deadline: float = 0.0
+    slo_class: int = 0
+    violated: bool = False
+
+    @property
+    def wasted(self) -> int:
+        """W = (K - L)^+  (Eq. 7)."""
+        return max(0, self.n_drafted - self.n_accepted)
+
+    @property
+    def t_total(self) -> float:
+        return self.t_draft + self.t_network + self.t_queue + self.t_verify
+
+    @property
+    def token_speed(self) -> float:
+        """Achieved committed tokens/s for this iteration (Eq. 4)."""
+        return self.n_committed / max(self.t_total, 1e-9)
+
+    def wdt(self, tau_d: float) -> float:
+        """T_wdt = tau_d * W  (Eq. 8)."""
+        return tau_d * self.wasted
+
+
+@dataclasses.dataclass
+class WDTStats:
+    iterations: int = 0
+    drafted: int = 0
+    sent: int = 0
+    accepted: int = 0
+    committed: int = 0
+    wasted: int = 0
+    t_draft: float = 0.0
+    t_wdt: float = 0.0
+    t_queue: float = 0.0
+    t_verify: float = 0.0
+    t_network: float = 0.0
+    violations: int = 0
+
+    def add(self, it: IterationLog, tau_d: float):
+        self.iterations += 1
+        self.drafted += it.n_drafted
+        self.sent += it.n_sent
+        self.accepted += it.n_accepted
+        self.committed += it.n_committed
+        self.wasted += it.wasted
+        self.t_draft += it.t_draft
+        self.t_wdt += it.wdt(tau_d)
+        self.t_queue += it.t_queue
+        self.t_verify += it.t_verify
+        self.t_network += it.t_network
+        self.violations += int(it.violated)
+
+    @property
+    def acceptance_rate(self) -> float:
+        return self.accepted / max(self.sent, 1)
+
+    @property
+    def waste_fraction(self) -> float:
+        return self.wasted / max(self.drafted, 1)
+
+    @property
+    def violation_rate(self) -> float:
+        return self.violations / max(self.iterations, 1)
+
+    def goodput(self, wall_time: float) -> float:
+        """Committed tokens per second of wall time."""
+        return self.committed / max(wall_time, 1e-9)

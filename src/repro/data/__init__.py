@@ -1,0 +1,5 @@
+"""Data pipeline: deterministic synthetic corpora + sharded host loading."""
+from repro.data.synthetic import SyntheticLMConfig, synthetic_batch_iter
+from repro.data.pipeline import ShardedLoader
+
+__all__ = ["SyntheticLMConfig", "synthetic_batch_iter", "ShardedLoader"]

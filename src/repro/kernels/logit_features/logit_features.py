@@ -1,0 +1,143 @@
+"""Pallas TPU kernel: fused rejection-predictor features (paper §3.3).
+
+One pass over the vocabulary computes all five features per drafted token
+— confidence, normalized entropy, top-2 margin, logit std, top-8 mass —
+with "negligible overhead" as the paper requires: on the edge accelerator
+this fuses what would otherwise be 4 separate vocab reductions (softmax,
+top-k, entropy, std) into a single HBM sweep of the logits.
+
+grid = (B, V // BLK).  Running state in VMEM scratch:
+  m1/m2          global top-2 logits (pairwise merge per block)
+  s0, s1         sum exp(x - mref), sum exp(x - mref) * x   (entropy)
+  sx, sxx        sum x, sum x^2                             (std)
+  top8           per-block top-8 merged into a running top-8 buffer
+
+Entropy uses the flash-style shifted accumulators: when the running max
+changes, s0/s1 are rescaled — H = logZ - E[x] with Z = s0 * e^{mref},
+E[x] = s1/s0.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(
+    x_ref,        # (1, BLK)
+    o_ref,        # (1, 5)
+    m1_scr,       # (1, 1) running max
+    m2_scr,       # (1, 1) running 2nd max
+    s0_scr,       # (1, 1)
+    s1_scr,       # (1, 1)
+    sx_scr,       # (1, 1)
+    sxx_scr,      # (1, 1)
+    top8_scr,     # (1, 8)
+    *,
+    blk: int,
+    nblk: int,
+    V: int,
+):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m1_scr[...] = jnp.full_like(m1_scr, NEG)
+        m2_scr[...] = jnp.full_like(m2_scr, NEG)
+        s0_scr[...] = jnp.zeros_like(s0_scr)
+        s1_scr[...] = jnp.zeros_like(s1_scr)
+        sx_scr[...] = jnp.zeros_like(sx_scr)
+        sxx_scr[...] = jnp.zeros_like(sxx_scr)
+        top8_scr[...] = jnp.full_like(top8_scr, NEG)
+
+    x = x_ref[0].astype(jnp.float32)                       # (BLK,)
+    # mask tail padding beyond V
+    pos = j * blk + jax.lax.broadcasted_iota(jnp.int32, (blk,), 0)
+    valid = pos < V
+    xm = jnp.where(valid, x, NEG)
+
+    # top-2 merge (duplicated maxima make the 2nd max equal the max)
+    bm1 = jnp.max(xm)
+    bm2 = jnp.max(jnp.where(xm == bm1, NEG, xm))
+    dup = jnp.sum(jnp.where(xm == bm1, 1.0, 0.0)) > 1.5
+    bm2 = jnp.where(dup, bm1, bm2)
+    m1_old = m1_scr[0, 0]
+    m2_old = m2_scr[0, 0]
+    m1_new = jnp.maximum(m1_old, bm1)
+    m2_new = jnp.maximum(
+        m2_old,
+        jnp.where(bm1 > m1_old, jnp.maximum(m1_old, bm2), bm1),
+    )
+    m2_new = jnp.minimum(m2_new, m1_new)
+    m1_scr[0, 0] = m1_new
+    m2_scr[0, 0] = m2_new
+
+    # shifted exp accumulators (reference point = running max)
+    corr = jnp.exp(m1_old - m1_new)
+    e = jnp.where(valid, jnp.exp(xm - m1_new), 0.0)
+    s0_scr[0, 0] = s0_scr[0, 0] * corr + jnp.sum(e)
+    s1_scr[0, 0] = s1_scr[0, 0] * corr + jnp.sum(e * xm)
+
+    # raw moments
+    x0 = jnp.where(valid, x, 0.0)
+    sx_scr[0, 0] = sx_scr[0, 0] + jnp.sum(x0)
+    sxx_scr[0, 0] = sxx_scr[0, 0] + jnp.sum(x0 * x0)
+
+    # running top-8: global top-8 is contained in (running top-8 U block top-8)
+    cat = jnp.concatenate([top8_scr[0], jax.lax.top_k(xm, 8)[0]])
+    top8_scr[0] = jax.lax.top_k(cat, 8)[0]
+
+    @pl.when(j == nblk - 1)
+    def _finish():
+        m1 = m1_scr[0, 0]
+        s0 = s0_scr[0, 0]
+        s1 = s1_scr[0, 0]
+        logz = jnp.log(s0) + m1
+        mean_x = s1 / s0
+        entropy = (logz - mean_x) / jnp.log(jnp.float32(V))
+        conf = jnp.exp(m1 - logz)
+        margin = conf - jnp.exp(m2_scr[0, 0] - logz)
+        mean = sx_scr[0, 0] / V
+        var = jnp.maximum(sxx_scr[0, 0] / V - mean * mean, 0.0)
+        std = jnp.sqrt(var)
+        mass8 = jnp.sum(jnp.exp(top8_scr[0] - logz))
+        o_ref[0, 0] = conf
+        o_ref[0, 1] = entropy
+        o_ref[0, 2] = margin
+        o_ref[0, 3] = std
+        o_ref[0, 4] = mass8
+
+
+@functools.partial(jax.jit, static_argnames=("blk", "interpret"))
+def logit_features(logits, *, blk: int = 2048, interpret: bool = False):
+    """logits: (B, V) -> (B, 5) float32 feature rows."""
+    B, V = logits.shape
+    blk = min(blk, V)
+    nblk = pl.cdiv(V, blk)
+    if V % blk:
+        logits = jnp.pad(logits, ((0, 0), (0, nblk * blk - V)))
+
+    kernel = functools.partial(_kernel, blk=blk, nblk=nblk, V=V)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, nblk),
+        in_specs=[pl.BlockSpec((1, blk), lambda b, j: (b, j))],
+        out_specs=pl.BlockSpec((1, 5), lambda b, j: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, 5), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 8), jnp.float32),
+        ],
+        interpret=interpret,
+    )(logits)
+    return out

@@ -1,0 +1,16 @@
+"""Public entry for fused rejection features: Pallas on TPU, interpret mode
+elsewhere."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.logit_features.logit_features import logit_features as _kernel
+from repro.kernels.logit_features.ref import logit_features_ref
+
+
+def logit_features_op(logits, *, blk=2048):
+    interpret = jax.default_backend() != "tpu"
+    return _kernel(logits, blk=blk, interpret=interpret)
+
+
+__all__ = ["logit_features_op", "logit_features_ref"]

@@ -1,0 +1,3 @@
+"""Oracle for the fused rejection-feature kernel = the predictor's feature
+definition (`repro.core.features.logit_features`)."""
+from repro.core.features import logit_features as logit_features_ref  # noqa: F401

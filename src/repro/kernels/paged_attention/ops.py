@@ -1,0 +1,19 @@
+"""Public entry for paged decode attention: Pallas on TPU, interpret mode
+elsewhere."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.paged_attention.paged_attention import paged_attention as _kernel
+from repro.kernels.paged_attention.ref import paged_attention_ref, gather_pages
+
+
+def paged_attention_op(q, k_pages, v_pages, block_table, lengths, *, softcap=0.0):
+    interpret = jax.default_backend() != "tpu"
+    return _kernel(
+        q, k_pages, v_pages, block_table, lengths,
+        softcap=softcap, interpret=interpret,
+    )
+
+
+__all__ = ["paged_attention_op", "paged_attention_ref", "gather_pages"]

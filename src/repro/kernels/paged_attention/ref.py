@@ -1,0 +1,45 @@
+"""Pure-jnp oracle for paged decode attention.
+
+Gathers pages through the block table into dense KV and runs masked
+attention of the single new token per sequence.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gather_pages(pages, block_table):
+    """pages: (n_pages, P, Hkv, D); block_table: (B, n_max) ->
+    (B, n_max*P, Hkv, D)."""
+    g = pages[block_table]                       # (B, n_max, P, Hkv, D)
+    B, n_max, P = g.shape[:3]
+    return g.reshape(B, n_max * P, *g.shape[3:])
+
+
+def paged_attention_ref(
+    q,                 # (B, H, D) one new token per sequence
+    k_pages,           # (n_pages, P, Hkv, D)
+    v_pages,           # (n_pages, P, Hkv, D)
+    block_table,       # (B, n_max) int32
+    lengths,           # (B,) int32 valid kv tokens (including current)
+    *,
+    softcap: float = 0.0,
+    scale=None,
+):
+    B, H, D = q.shape
+    Hkv = k_pages.shape[2]
+    G = H // Hkv
+    scale = scale if scale is not None else D**-0.5
+    k = gather_pages(k_pages, block_table).astype(jnp.float32)
+    v = gather_pages(v_pages, block_table).astype(jnp.float32)
+    S = k.shape[1]
+    qg = q.reshape(B, Hkv, G, D).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bshd->bhgs", qg, k) * scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    mask = jnp.arange(S)[None, :] < lengths[:, None]      # (B, S)
+    s = jnp.where(mask[:, None, None], s, -1e30)
+    p = jnp.exp(s - s.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    o = jnp.einsum("bhgs,bshd->bhgd", p, v)
+    return o.reshape(B, H, D).astype(q.dtype)

@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for the verification-attention kernel.
+
+Semantics: for each row b, the T query tokens sit at absolute positions
+``lengths[b] - T + t`` (t = 0..T-1); keys/values are valid on
+``[0, lengths[b])``; causal within the block; optional sliding window and
+logit softcap.  GQA via head groups.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def verify_attention_ref(
+    q,                  # (B, T, H, D)
+    k,                  # (B, S, Hkv, D)
+    v,                  # (B, S, Hkv, D)
+    lengths,            # (B,) int32: valid KV length INCLUDING the T new ones
+    *,
+    softcap: float = 0.0,
+    window: int = 0,
+    scale=None,
+):
+    B, T, H, D = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    scale = scale if scale is not None else D**-0.5
+    qg = q.reshape(B, T, Hkv, G, D).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bthgd,bshd->bhgts", qg, kf) * scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    kv_pos = jnp.arange(S)[None, :]                      # (1, S)
+    q_pos = lengths[:, None] - T + jnp.arange(T)[None, :]  # (B, T)
+    mask = kv_pos[:, None, :] <= q_pos[:, :, None]       # (B, T, S) causal+len
+    if window:
+        mask = jnp.logical_and(
+            mask, (q_pos[:, :, None] - kv_pos[:, None, :]) < window
+        )
+    s = jnp.where(mask[:, None, None], s, -1e30)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    o = jnp.einsum("bhgts,bshd->bthgd", p, vf)
+    return o.reshape(B, T, H, D).astype(q.dtype)

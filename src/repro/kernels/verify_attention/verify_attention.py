@@ -1,0 +1,158 @@
+"""Pallas TPU kernel: verification attention (small Q x long KV).
+
+The server-side hot spot of WISP (DESIGN.md §2): each verification step
+attends T = K+1 draft tokens (K <= 16) against a long committed prefix.
+
+TPU mapping:
+  * grid = (B, Hkv, S // BLK_KV) — KV-block loop innermost, so the online
+    softmax state lives in VMEM scratch across grid steps (TPU grids are
+    sequential on the last axis);
+  * the Q tile for one (batch, kv-head) is all G = H/Hkv group heads x T
+    tokens, flattened to (G*T, D) rows — one MXU matmul per KV block of
+    shape (G*T, D) x (D, BLK_KV);
+  * per-row absolute positions implement causal + length + window masking
+    from a scalar-prefetched ``lengths`` vector;
+  * softcap (gemma/grok) is applied pre-mask, matching the reference.
+
+VMEM budget per step: q (G*T, D) + k/v (BLK_KV, D) + acc (G*T, D) + scores
+(G*T, BLK_KV) — with D=128, BLK_KV=512, G*T<=128: ~0.6 MB << 16 MB v5e VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    lengths_ref,          # scalar prefetch: (B,) int32
+    q_ref,                # (1, T, 1, G, D)
+    k_ref,                # (1, BLK, 1, D)
+    v_ref,                # (1, BLK, 1, D)
+    o_ref,                # (1, T, 1, G, D)
+    m_scr,                # (GT, 1) f32
+    l_scr,                # (GT, 1) f32
+    acc_scr,              # (GT, D) f32
+    *,
+    T: int,
+    G: int,
+    blk: int,
+    nblk: int,
+    softcap: float,
+    window: int,
+    scale: float,
+):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    GT = G * T
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = lengths_ref[b]
+    # skip blocks entirely past the valid length
+    @pl.when(j * blk < length)
+    def _compute():
+        q = q_ref[0, :, 0].reshape(GT, -1).astype(jnp.float32)   # (T*G, D)
+        k = k_ref[0, :, 0].astype(jnp.float32)                   # (BLK, D)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                                                # (GT, BLK)
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+        # row r of the (T, G) flattening -> token index t = r // G
+        t_idx = jax.lax.broadcasted_iota(jnp.int32, (GT, blk), 0) // G
+        q_pos = length - T + t_idx
+        kv_pos = j * blk + jax.lax.broadcasted_iota(jnp.int32, (GT, blk), 1)
+        mask = kv_pos <= q_pos
+        if window:
+            mask = jnp.logical_and(mask, (q_pos - kv_pos) < window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]                                      # (GT, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)                           # (GT, 1)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_scr[...] = m_new
+
+    @pl.when(j == nblk - 1)
+    def _finish():
+        out = acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, :, 0] = out.reshape(T, G, -1).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("softcap", "window", "blk_kv", "interpret"),
+)
+def verify_attention(
+    q,                  # (B, T, H, D)
+    k,                  # (B, S, Hkv, D)
+    v,                  # (B, S, Hkv, D)
+    lengths,            # (B,) int32
+    *,
+    softcap: float = 0.0,
+    window: int = 0,
+    blk_kv: int = 512,
+    interpret: bool = False,
+):
+    B, T, H, D = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    blk = min(blk_kv, S)
+    nblk = pl.cdiv(S, blk)
+    if S % blk:
+        pad = nblk * blk - S
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qg = q.reshape(B, T, Hkv, G, D)
+
+    kernel = functools.partial(
+        _kernel,
+        T=T,
+        G=G,
+        blk=blk,
+        nblk=nblk,
+        softcap=softcap,
+        window=window,
+        scale=D**-0.5,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, Hkv, nblk),
+        in_specs=[
+            pl.BlockSpec((1, T, 1, G, D), lambda b, h, j, L: (b, 0, h, 0, 0)),
+            pl.BlockSpec((1, blk, 1, D), lambda b, h, j, L: (b, j, h, 0)),
+            pl.BlockSpec((1, blk, 1, D), lambda b, h, j, L: (b, j, h, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, T, 1, G, D), lambda b, h, j, L: (b, 0, h, 0, 0)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((G * T, 1), jnp.float32),
+            pltpu.VMEM((G * T, 1), jnp.float32),
+            pltpu.VMEM((G * T, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, T, Hkv, G, D), q.dtype),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), qg, k, v)
+    return out.reshape(B, T, H, D)

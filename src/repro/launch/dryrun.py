@@ -1,0 +1,481 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines: jax locks the device count on first init,
+#   and the production-mesh dry-run needs 512 placeholder host devices.
+#   (Set here only — smoke tests and benches must see 1 device.)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each runnable cell this lowers the corresponding jitted step
+(train_step / prefill_step / serve_step) against ShapeDtypeStruct inputs
+(no allocation), compiles it for the production mesh, and records
+
+  * ``compiled.memory_analysis()``  — proves the cell fits per-device HBM,
+  * ``compiled.cost_analysis()``    — FLOPs / bytes for the roofline,
+  * parsed collective traffic      — the third roofline term,
+
+into one JSON artifact per cell under ``artifacts/dryrun/``.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k
+  python -m repro.launch.dryrun --all                     # single-pod, all cells
+  python -m repro.launch.dryrun --all --multipod          # 2x16x16 mesh
+  python -m repro.launch.dryrun --all --mesh both --skip-existing
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.sharding import (
+    SERVE_RULES,
+    SERVE_RULES_REPLICATED,
+    TRAIN_RULES,
+    ShardCtx,
+    logical_to_spec,
+    make_param_shardings,
+)
+
+#: §Perf variants — named sharding/step configurations compared by the
+#: hillclimb.  "baseline" is the paper-faithful layout.
+SERVE_VARIANTS = {
+    "baseline": dict(rules=SERVE_RULES),
+    "replicated": dict(rules=SERVE_RULES_REPLICATED),
+}
+from repro.configs import ASSIGNED, SHAPES, cell_status, get_config
+from repro.launch.mesh import make_production_mesh, mesh_devices
+from repro.roofline.analysis import analyze
+from repro.roofline.model_flops import (
+    attention_flops,
+    decode_attention_flops,
+    model_flops,
+    uncounted_sequential_flops,
+)
+
+#: archs whose optimizer state would not fit HBM under AdamW (f32 m+v);
+#: they train with Adafactor (factored second moments) — see DESIGN.md.
+ADAFACTOR_ABOVE_PARAMS = 20e9
+
+
+# ---------------------------------------------------------------------------
+# step builders — each returns (jitted_fn, input ShapeDtypeStructs w/ shardings)
+# ---------------------------------------------------------------------------
+
+
+def _specs_with_shardings(shapes_tree, shardings_tree):
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        shapes_tree,
+        shardings_tree,
+    )
+
+
+def build_train_cell(cfg, shape, mesh, *, micro_batches=1):
+    from repro.models import batch_axes, batch_specs, build
+    from repro.train.optimizer import OptConfig
+    from repro.train.train_step import make_train_step
+
+    opt_name = "adafactor" if cfg.param_count() > ADAFACTOR_ABOVE_PARAMS else "adamw"
+    step, info = make_train_step(
+        cfg, mesh, opt_cfg=OptConfig(name=opt_name),
+        micro_batches=micro_batches,
+    )
+    p_specs = _specs_with_shardings(info["param_shapes"], info["params"])
+    o_shapes = jax.eval_shape(info["init_opt"], info["param_shapes"])
+    o_specs = _specs_with_shardings(o_shapes, info["opt"])
+    b_axes = batch_axes(cfg, with_targets=True)
+    bs = batch_specs(cfg, shape.global_batch, shape.seq_len, with_targets=True)
+    b_specs = {
+        k: jax.ShapeDtypeStruct(
+            bs[k].shape,
+            bs[k].dtype,
+            sharding=jax.sharding.NamedSharding(
+                mesh, logical_to_spec(b_axes[k], bs[k].shape, mesh, TRAIN_RULES)
+            ),
+        )
+        for k in bs
+    }
+    meta = {"optimizer": opt_name}
+    return step, (p_specs, o_specs, b_specs), meta
+
+
+def _serve_param_specs(cfg, mesh, rules):
+    from repro.models import build
+    from repro.train.train_step import make_param_shardings, param_shapes
+
+    bundle = build(cfg)
+    shapes = param_shapes(cfg)
+    sh = make_param_shardings(bundle.param_axes(), shapes, mesh, rules)
+    return _specs_with_shardings(shapes, sh)
+
+
+def _cache_specs_sharded(cfg, mesh, B, max_len, rules):
+    from repro.models import build
+    from repro.train.train_step import cache_shardings
+
+    bundle = build(cfg)
+    shapes = jax.eval_shape(lambda: bundle.init_cache(B, max_len))
+    shardings = cache_shardings(cfg, mesh, B, max_len, rules=rules)
+    return _specs_with_shardings(shapes, shardings)
+
+
+def _batch_specs_sharded(cfg, mesh, B, S, rules):
+    from repro.models import batch_axes, batch_specs
+
+    axes = batch_axes(cfg, with_targets=False)
+    bs = batch_specs(cfg, B, S, with_targets=False)
+    return {
+        k: jax.ShapeDtypeStruct(
+            bs[k].shape,
+            bs[k].dtype,
+            sharding=jax.sharding.NamedSharding(
+                mesh, logical_to_spec(axes[k], bs[k].shape, mesh, rules)
+            ),
+        )
+        for k in bs
+    }
+
+
+def build_prefill_cell(cfg, shape, mesh, *, rules=SERVE_RULES):
+    from repro.models import build
+
+    bundle = build(cfg)
+    ctx = ShardCtx(mesh, rules)
+    B, S = shape.global_batch, shape.seq_len
+
+    def prefill_step(params, batch, cache):
+        return bundle.prefill(params, batch, cache, ctx=ctx, last_only=True)
+
+    p_specs = _serve_param_specs(cfg, mesh, rules)
+    b_specs = _batch_specs_sharded(cfg, mesh, B, S, rules)
+    c_specs = _cache_specs_sharded(cfg, mesh, B, S, rules)
+    step = jax.jit(prefill_step, donate_argnums=(2,))
+    return step, (p_specs, b_specs, c_specs), {}
+
+
+def build_decode_cell(cfg, shape, mesh, *, k_draft: int = 0,
+                      rules=SERVE_RULES):
+    """serve_step: T new tokens (T=1 decode, T=k+1 speculative verify)
+    against a KV cache of seq_len."""
+    from repro.models import build
+
+    bundle = build(cfg)
+    ctx = ShardCtx(mesh, rules)
+    B, S = shape.global_batch, shape.seq_len
+    T = 1 + k_draft
+
+    def serve_step(params, tokens, cache, pos):
+        return bundle.decode(params, tokens, cache, pos, ctx=ctx)
+
+    p_specs = _serve_param_specs(cfg, mesh, rules)
+    tok_spec = jax.ShapeDtypeStruct(
+        (B, T),
+        jnp.int32,
+        sharding=jax.sharding.NamedSharding(
+            mesh,
+            logical_to_spec(("act_batch", None), (B, T), mesh, rules),
+        ),
+    )
+    c_specs = _cache_specs_sharded(cfg, mesh, B, S, rules)
+    pos_spec = jax.ShapeDtypeStruct((), jnp.int32)
+    step = jax.jit(serve_step, donate_argnums=(2,))
+    return step, (p_specs, tok_spec, c_specs, pos_spec), {"t_new": T}
+
+
+def model_flops_for_cell(cfg, shape, *, k_draft: int = 0) -> float:
+    """MODEL_FLOPS = 6·N_active·D (train) / 2·N_active·D (+attention) for
+    serving cells — the 'useful compute' yardstick of §Roofline."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        return model_flops(cfg, B * S, training=True) + 3 * attention_flops(
+            cfg, S, B
+        )
+    if shape.kind == "prefill":
+        return model_flops(cfg, B * S, training=False) + attention_flops(cfg, S, B)
+    T = 1 + k_draft
+    return model_flops(cfg, B * T, training=False) + decode_attention_flops(
+        cfg, S, B, T
+    )
+
+
+# ---------------------------------------------------------------------------
+# cell runner
+# ---------------------------------------------------------------------------
+
+
+def structural_unit(cfg) -> int:
+    """Smallest depth preserving the arch's layer-group structure."""
+    unit = 1
+    if cfg.local_global_alternate:
+        unit = max(unit, 2)
+    if cfg.cross_attn_every:
+        unit = max(unit, cfg.cross_attn_every)
+    if cfg.ssm is not None:
+        if cfg.ssm.slstm_every:
+            unit = max(unit, cfg.ssm.slstm_every)
+        if cfg.ssm.attn_every:
+            unit = max(unit, cfg.ssm.attn_every)
+    return unit
+
+
+def _compile_cell(cfg, shape, mesh, *, kind, k_draft, variant, micro_batches,
+                  unroll):
+    """Lower+compile one configuration."""
+    from repro.common import loops
+
+    t0 = time.time()
+    v = SERVE_VARIANTS.get(variant, SERVE_VARIANTS["baseline"])
+    builders = {
+        "train": lambda c, s, m: build_train_cell(
+            c, s, m, micro_batches=micro_batches
+        ),
+        "prefill": lambda c, s, m: build_prefill_cell(c, s, m, **v),
+        "decode": lambda c, s, m: build_decode_cell(
+            c, s, m, k_draft=k_draft, **v
+        ),
+    }
+    step, specs, meta = builders[kind](cfg, shape, mesh)
+    with mesh, loops.cost_unroll(unroll):
+        lowered = step.lower(*specs)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        cost = dict(compiled.cost_analysis())
+        memstats = compiled.memory_analysis()
+        hlo = compiled.as_text()
+    return cost, memstats, hlo, meta, (t_lower, t_compile)
+
+
+def _cost_terms(cost, hlo):
+    from repro.roofline.hlo_parse import collective_summary
+
+    coll = collective_summary(hlo)
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll_dev": coll["bytes_per_device"],
+        "coll_global": coll["bytes_global"],
+        "per_kind": coll["per_kind"],
+    }
+
+
+def run_cell(arch, shape_name, *, multi_pod=False, k_draft=0, verbose=True,
+             unroll=True, variant="baseline", micro_batches=1):
+    """Cost accounting: XLA's cost_analysis visits while-loop bodies ONCE,
+    so scanned layer stacks undercount by ~n_layers.  Full unrolling is
+    exact but compiles too slowly for 100-layer stacks, so we exploit that
+    every stack is layer-homogeneous: cost(L) = intercept + slope*L.  Two
+    unrolled compiles at L=unit and L=2*unit identify the line exactly; the
+    roofline evaluates it at the full depth.  Memory fit (and the compile
+    proof) come from the full-depth scanned compile."""
+    import dataclasses as dc
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = cell_status(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "status": "skipped", "why": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    chips = mesh_devices(mesh)
+
+    # --- full-depth scanned compile: fit proof + memory analysis ---------
+    cost_full, memstats, hlo_full, meta, (t_lower, t_compile) = _compile_cell(
+        cfg, shape, mesh, kind=shape.kind, k_draft=k_draft, variant=variant,
+        micro_batches=micro_batches, unroll=False,
+    )
+    meta["variant"] = variant
+    if micro_batches > 1:
+        meta["micro_batches"] = micro_batches
+
+    coll_override = None
+    if unroll:
+        unit = structural_unit(cfg)
+        fits = []
+        for L in (unit, 2 * unit):
+            cfg_L = dc.replace(cfg, n_layers=L, name=f"{cfg.name}@L{L}")
+            c, _, h, _, _ = _compile_cell(
+                cfg_L, shape, mesh, kind=shape.kind, k_draft=k_draft,
+                variant=variant, micro_batches=micro_batches, unroll=True,
+            )
+            fits.append(_cost_terms(c, h))
+        L1, L2, Lf = unit, 2 * unit, cfg.n_layers
+        lin = lambda v1, v2: v1 + (v2 - v1) * (Lf - L1) / (L2 - L1)
+        cost = {
+            "flops": lin(fits[0]["flops"], fits[1]["flops"]),
+            "bytes accessed": lin(fits[0]["bytes"], fits[1]["bytes"]),
+        }
+        kinds = sorted(set(fits[0]["per_kind"]) | set(fits[1]["per_kind"]))
+        zero = {"count": 0, "bytes_per_device": 0.0, "bytes_global": 0.0}
+        per_kind = {
+            k: {
+                f: lin(fits[0]["per_kind"].get(k, zero)[f],
+                       fits[1]["per_kind"].get(k, zero)[f])
+                for f in zero
+            }
+            for k in kinds
+        }
+        coll_override = {
+            "per_kind": per_kind,
+            "bytes_per_device": lin(fits[0]["coll_dev"], fits[1]["coll_dev"]),
+            "bytes_global": lin(fits[0]["coll_global"], fits[1]["coll_global"]),
+        }
+        # per-token recurrence loops stay rolled even in unroll mode
+        # (trip > UNROLL_LIMIT): analytic FLOPs shortfall (grad ~2x fwd)
+        t_new = shape.seq_len if shape.kind in ("train", "prefill") else 1
+        corr = uncounted_sequential_flops(cfg, t_new, shape.global_batch)
+        if shape.kind == "train":
+            corr *= 3.0
+        cost["flops"] += corr / chips
+        cost_mode = f"unroll-extrapolated(L={L1},{L2}->{Lf})"
+        # SSD chunk scans beyond UNROLL_LIMIT trips also stay rolled (the
+        # 32k-prefill ssm/hybrid cells): their bodies dominate the layer,
+        # so scale the measured terms by the trip count (slight upper
+        # bound — out-of-loop work is scaled along).
+        if cfg.ssm is not None and shape.kind in ("train", "prefill"):
+            from repro.common.loops import UNROLL_LIMIT
+
+            trips = shape.seq_len // max(cfg.ssm.chunk, 1)
+            if trips > UNROLL_LIMIT:
+                cost["flops"] *= trips
+                cost["bytes accessed"] *= trips
+                for k in coll_override["per_kind"].values():
+                    for f in k:
+                        k[f] *= trips
+                coll_override["bytes_per_device"] *= trips
+                coll_override["bytes_global"] *= trips
+                cost_mode += f"+chunk-scaled(x{trips})"
+    else:
+        cost = cost_full
+        cost_mode = "scanned(loop bodies counted once)"
+
+    mf = model_flops_for_cell(cfg, shape, k_draft=k_draft)
+    roof = analyze(
+        arch=arch,
+        shape=shape_name,
+        mesh_name=mesh_name,
+        chips=chips,
+        cost=cost,
+        hlo_text=hlo_full,
+        memory_stats=memstats,
+        model_flops=mf,
+        collectives_override=coll_override,
+    )
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "chips": chips,
+        "status": "ok",
+        "kind": shape.kind,
+        "cost_mode": cost_mode,
+        "t_lower_s": round(t_lower, 2),
+        "t_compile_s": round(t_compile, 2),
+        "hlo_instructions": hlo_full.count("\n"),
+        **meta,
+        "roofline": roof.to_dict(),
+    }
+    if verbose:
+        mem_gb = roof.memory_per_device
+        print(
+            f"[dryrun] {arch:22s} {shape_name:12s} {mesh_name:11s} OK "
+            f"compile={t_compile:6.1f}s "
+            f"args={mem_gb['args_bytes']/2**30:7.2f}GiB "
+            f"temp={mem_gb['temp_bytes']/2**30:7.2f}GiB "
+            f"dom={roof.dominant:10s} "
+            f"tc={roof.t_compute*1e3:8.2f}ms tm={roof.t_memory*1e3:8.2f}ms "
+            f"tcoll={roof.t_collective*1e3:8.2f}ms",
+            flush=True,
+        )
+    return rec
+
+
+def artifact_path(out_dir, arch, shape_name, mesh_name, variant="baseline"):
+    suffix = "" if variant == "baseline" else f"__{variant}"
+    return os.path.join(
+        out_dir, f"{arch}__{shape_name}__{mesh_name}{suffix}.json"
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="one architecture (default: all)")
+    ap.add_argument("--shape", default=None, help="one shape (default: all)")
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--mesh", choices=("pod", "multipod", "both"), default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--k-draft", type=int, default=0,
+                    help="speculative draft length for decode serve_step (T=k+1)")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--no-unroll", action="store_true",
+                    help="keep lax.scan stacks (fast compile, cost_analysis "
+                         "undercounts loop bodies)")
+    ap.add_argument("--variant", default="baseline",
+                    choices=sorted(SERVE_VARIANTS))
+    ap.add_argument("--micro-batches", type=int, default=1)
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(ASSIGNED)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    if args.mesh == "both":
+        meshes = [False, True]
+    elif args.mesh == "multipod" or args.multipod:
+        meshes = [True]
+    else:
+        meshes = [False]
+
+    os.makedirs(args.out, exist_ok=True)
+    n_ok = n_skip = n_fail = 0
+    for multi in meshes:
+        mesh_name = "pod2x16x16" if multi else "pod16x16"
+        for arch in archs:
+            for shape_name in shapes:
+                path = artifact_path(args.out, arch, shape_name, mesh_name,
+                                     args.variant)
+                if args.skip_existing and os.path.exists(path):
+                    with open(path) as f:
+                        prev = json.load(f)
+                    if prev.get("status") in ("ok", "skipped"):
+                        n_ok += prev["status"] == "ok"
+                        n_skip += prev["status"] == "skipped"
+                        continue
+                try:
+                    rec = run_cell(
+                        arch, shape_name, multi_pod=multi,
+                        k_draft=args.k_draft, unroll=not args.no_unroll,
+                        variant=args.variant,
+                        micro_batches=args.micro_batches,
+                    )
+                except Exception as e:  # record the failure, keep going
+                    rec = {
+                        "arch": arch,
+                        "shape": shape_name,
+                        "mesh": mesh_name,
+                        "status": "failed",
+                        "error": repr(e),
+                        "traceback": traceback.format_exc(),
+                    }
+                    print(f"[dryrun] {arch} {shape_name} {mesh_name} FAILED: {e!r}",
+                          flush=True)
+                if rec["status"] == "ok":
+                    n_ok += 1
+                elif rec["status"] == "skipped":
+                    n_skip += 1
+                    print(f"[dryrun] {arch:22s} {shape_name:12s} {mesh_name:11s} "
+                          f"SKIP ({rec['why']})", flush=True)
+                else:
+                    n_fail += 1
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+    print(f"[dryrun] done: {n_ok} ok, {n_skip} skipped, {n_fail} failed", flush=True)
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""Model zoo: layer library + architecture families + unified bundle API."""
+from repro.models.zoo import ModelBundle, build, input_specs, batch_specs, batch_axes
+
+__all__ = ["ModelBundle", "build", "input_specs", "batch_specs", "batch_axes"]

@@ -1,0 +1,460 @@
+"""Core layer library: norms, RoPE, GQA attention (chunked/flash in jnp),
+gated MLP, embeddings.
+
+Conventions
+-----------
+* Pure functional: ``init_*`` builds a param pytree, ``*_apply`` consumes it.
+* Every param pytree has a parallel *logical axes* pytree (same structure,
+  leaves are tuples of logical axis names) used by the sharding resolver.
+* Layer stacks are scanned: per-layer params carry a leading ``layers`` dim.
+* Attention over long sequences is computed with an online-softmax chunked
+  scan over KV blocks (bounded memory — the pure-jnp analogue of flash
+  attention, and the oracle for the Pallas kernels).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import loops
+
+from repro.common.dtypes import DTypePolicy, DEFAULT_POLICY
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def _dense_init(rng, shape, in_axis_size, dtype):
+    scale = in_axis_size**-0.5
+    return (jax.random.normal(rng, shape, jnp.float32) * scale).astype(dtype)
+
+
+def dense_param(rng, in_dim, out_shape, dtype):
+    """Weight of shape (in_dim, *out_shape) with fan-in init."""
+    return _dense_init(rng, (in_dim, *out_shape), in_dim, dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(d, dtype):
+    return jnp.ones((d,), dtype)
+
+
+def rmsnorm(x, w, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32)).astype(dt)
+
+
+def init_layernorm(d, dtype):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(x, p, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope(x, positions, theta: float):
+    """x: (..., S, H, D); positions: (S,) or (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freq  # (..., S, half)
+    # broadcast over head axis: (..., S, 1, half)
+    ang = ang[..., None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (chunked online-softmax; GQA; softcap; sliding window)
+# ---------------------------------------------------------------------------
+
+
+def _softcap(s, cap):
+    if cap and cap > 0.0:
+        return jnp.tanh(s / cap) * cap
+    return s
+
+
+NEG_INF = -1e30
+
+
+def chunked_attention(
+    q,                      # (B, Tq, H, D)
+    k,                      # (B, Tk, Hkv, D)
+    v,                      # (B, Tk, Hkv, D)
+    *,
+    q_start=0,              # absolute position of q[0] (int or scalar array)
+    causal: bool = True,
+    window: int = 0,        # sliding window size (0 = unlimited)
+    local=True,             # bool (may be traced): apply the window mask?
+    softcap: float = 0.0,
+    kv_chunk: int = 1024,
+    kv_len=None,            # (B,) valid KV length per row (ragged batches)
+    scale=None,
+):
+    """Online-softmax attention, scanning KV in chunks.
+
+    Covers training (Tq == Tk, q_start=0), prefill, verification
+    (small Tq, long Tk) and decode (Tq == 1).  Memory is
+    O(B * H * Tq * kv_chunk) regardless of Tk.
+    """
+    B, Tq, H, D = q.shape
+    Tk, Hkv = k.shape[1], k.shape[2]
+    assert H % Hkv == 0, (H, Hkv)
+    G = H // Hkv
+    scale = scale if scale is not None else D**-0.5
+
+    nchunks = max(1, (Tk + kv_chunk - 1) // kv_chunk)
+    pad = nchunks * kv_chunk - Tk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(B, nchunks, kv_chunk, Hkv, D)
+    vc = v.reshape(B, nchunks, kv_chunk, Hkv, D)
+
+    qg = q.reshape(B, Tq, Hkv, G, D)
+    # q_start may be a scalar or per-row (B,) vector (ragged serving batches)
+    q_start = jnp.asarray(q_start)
+    if q_start.ndim == 0:
+        q_pos = jnp.broadcast_to(q_start + jnp.arange(Tq), (B, Tq))
+    else:
+        q_pos = q_start[:, None] + jnp.arange(Tq)[None, :]   # (B, Tq)
+    valid_len = kv_len if kv_len is not None else jnp.full((B,), Tk, jnp.int32)
+
+    def body(carry, inputs):
+        m, l, acc = carry
+        kj, vj, j = inputs
+        kv_pos = j * kv_chunk + jnp.arange(kv_chunk)  # (chunk,)
+        s = jnp.einsum(
+            "bqhgd,bkhd->bhgqk", qg, kj, preferred_element_type=jnp.float32
+        ) * scale
+        s = _softcap(s, softcap)
+        mask = kv_pos[None, None, :] < valid_len[:, None, None]  # (B,1,chunk)
+        if causal:
+            cm = q_pos[:, :, None] >= kv_pos[None, None, :]      # (B,Tq,chunk)
+            mask = jnp.logical_and(mask, cm)
+        if window and window > 0:
+            wm = (q_pos[:, :, None] - kv_pos[None, None, :]) < window
+            # `local` may be a traced per-layer flag (scanned layer stacks):
+            # when False the window mask is disabled.
+            wm = jnp.logical_or(wm, jnp.logical_not(local))
+            mask = jnp.logical_and(mask, wm)
+        mask = mask[:, None, None, :, :]                         # (B,1,1,Tq,ck)
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p, vj, preferred_element_type=jnp.float32
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Hkv, G, Tq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, Tq), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, G, Tq, D), jnp.float32)
+    if nchunks == 1:
+        (m, l, acc), _ = body((m0, l0, a0), (kc[:, 0], vc[:, 0], jnp.int32(0)))
+    else:
+        (m, l, acc), _ = loops.scan(
+            body,
+            (m0, l0, a0),
+            (
+                jnp.moveaxis(kc, 1, 0),
+                jnp.moveaxis(vc, 1, 0),
+                jnp.arange(nchunks, dtype=jnp.int32),
+            ),
+        )
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    out = jnp.moveaxis(out, 3, 1).reshape(B, Tq, H, D)  # (B,Tq,Hkv,G,D)->(B,Tq,H,D)
+    return out.astype(q.dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnSpec:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    rope_theta: float = 10_000.0
+    qkv_bias: bool = False
+    softcap: float = 0.0
+    window: int = 0          # applied when layer is "local"
+    use_rope: bool = True
+
+
+def init_attention(rng, spec: AttnSpec, dtype):
+    ks = jax.random.split(rng, 4)
+    D, H, Hkv, hd = spec.d_model, spec.n_heads, spec.n_kv_heads, spec.head_dim
+    p = {
+        "wq": dense_param(ks[0], D, (H, hd), dtype),
+        "wk": dense_param(ks[1], D, (Hkv, hd), dtype),
+        "wv": dense_param(ks[2], D, (Hkv, hd), dtype),
+        "wo": _dense_init(ks[3], (H, hd, D), H * hd, dtype),
+    }
+    if spec.qkv_bias:
+        p["bq"] = jnp.zeros((H, hd), dtype)
+        p["bk"] = jnp.zeros((Hkv, hd), dtype)
+        p["bv"] = jnp.zeros((Hkv, hd), dtype)
+    return p
+
+
+def attention_axes(spec: AttnSpec):
+    a = {
+        "wq": ("embed", "heads", "head_dim"),
+        "wk": ("embed", "kv_heads", "head_dim"),
+        "wv": ("embed", "kv_heads", "head_dim"),
+        "wo": ("heads", "head_dim", "embed"),
+    }
+    if spec.qkv_bias:
+        a["bq"] = ("heads", "head_dim")
+        a["bk"] = ("kv_heads", "head_dim")
+        a["bv"] = ("kv_heads", "head_dim")
+    return a
+
+
+def qkv_proj(p, x, spec: AttnSpec, positions):
+    """x: (B,S,D) -> q (B,S,H,hd), k/v (B,S,Hkv,hd), RoPE applied."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if spec.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    if spec.use_rope:
+        q = rope(q, positions, spec.rope_theta)
+        k = rope(k, positions, spec.rope_theta)
+    return q, k, v
+
+
+def attn_out(p, o):
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
+def self_attention(
+    p,
+    x,
+    spec: AttnSpec,
+    *,
+    q_start=0,
+    positions=None,
+    causal=True,
+    local=False,
+    kv_chunk=1024,
+    ctx=None,
+):
+    """Full self-attention over x (train/prefill, no external cache)."""
+    B, S, _ = x.shape
+    positions = positions if positions is not None else q_start + jnp.arange(S)
+    q, k, v = qkv_proj(p, x, spec, positions)
+    if ctx is not None:
+        q = ctx.cs(q, ("act_batch", "act_seq", "act_heads", None))
+        k = ctx.cs(k, ("act_batch", "act_seq", "act_kv", None))
+        v = ctx.cs(v, ("act_batch", "act_seq", "act_kv", None))
+    o = chunked_attention(
+        q, k, v,
+        q_start=q_start,
+        causal=causal,
+        window=spec.window,
+        local=local,
+        softcap=spec.softcap,
+        kv_chunk=kv_chunk,
+    )
+    return attn_out(p, o), (k, v)
+
+
+def cached_attention(
+    p,
+    x,                      # (B, T, D) new tokens (decode T=1, verify T=K+1)
+    spec: AttnSpec,
+    k_cache,                # (B, S_max, Hkv, hd)
+    v_cache,
+    pos,                    # scalar: current committed length
+    *,
+    local=False,
+    kv_chunk=1024,
+    ctx=None,
+):
+    """Attention of new tokens against cache + themselves; returns updated
+    caches (new K/V written at [pos : pos+T]).  ``pos`` may be a scalar or a
+    per-row (B,) vector (ragged serving batches)."""
+    B, T, _ = x.shape
+    # Serving path (decode/verify, T small): do NOT chunk the KV loop.  A
+    # scan over KV chunks defeats GSPMD's sequence sharding of the cache —
+    # each device would redundantly compute every chunk (measured 16x
+    # per-device FLOPs/bytes inflation at decode_32k; EXPERIMENTS.md §Perf
+    # cell A).  One full-length masked einsum keeps the seq axis sharded
+    # and lowers to flash-decoding-style partial softmax + a small reduce.
+    if T <= 32:
+        kv_chunk = k_cache.shape[1]
+    pos = jnp.asarray(pos)
+    if pos.ndim == 0:
+        positions = pos + jnp.arange(T)
+    else:
+        positions = pos[:, None] + jnp.arange(T)[None, :]    # (B, T)
+    q, k, v = qkv_proj(p, x, spec, positions)
+    if pos.ndim == 0:
+        k_cache = jax.lax.dynamic_update_slice(
+            k_cache, k.astype(k_cache.dtype), (0, pos, 0, 0)
+        )
+        v_cache = jax.lax.dynamic_update_slice(
+            v_cache, v.astype(v_cache.dtype), (0, pos, 0, 0)
+        )
+    else:
+        upd = jax.vmap(
+            lambda c, n, p0: jax.lax.dynamic_update_slice(c, n, (p0, 0, 0))
+        )
+        k_cache = upd(k_cache, k.astype(k_cache.dtype), pos)
+        v_cache = upd(v_cache, v.astype(v_cache.dtype), pos)
+    kv_len = (pos + T).astype(jnp.int32)
+    kv_len = jnp.broadcast_to(kv_len, (B,))
+    o = chunked_attention(
+        q,
+        k_cache,
+        v_cache,
+        q_start=pos,
+        causal=True,
+        window=spec.window,
+        local=local,
+        softcap=spec.softcap,
+        kv_chunk=kv_chunk,
+        kv_len=kv_len,
+    )
+    return attn_out(p, o), (k_cache, v_cache)
+
+
+def cross_attention(p, x, spec: AttnSpec, k_mem, v_mem, *, kv_chunk=1024):
+    """Non-causal attention of x over a fixed memory (encoder / image)."""
+    B, T, _ = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    if spec.qkv_bias:
+        q = q + p["bq"]
+    o = chunked_attention(
+        q, k_mem, v_mem, causal=False, softcap=spec.softcap, kv_chunk=kv_chunk
+    )
+    return attn_out(p, o)
+
+
+def cross_kv(p, mem, spec: AttnSpec):
+    k = jnp.einsum("bsd,dhk->bshk", mem, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", mem, p["wv"])
+    if spec.qkv_bias:
+        k = k + p["bk"]
+        v = v + p["bv"]
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(rng, d, f, dtype, gated=True):
+    ks = jax.random.split(rng, 3)
+    if gated:
+        return {
+            "gate": dense_param(ks[0], d, (f,), dtype),
+            "up": dense_param(ks[1], d, (f,), dtype),
+            "down": _dense_init(ks[2], (f, d), f, dtype),
+        }
+    return {
+        "up": dense_param(ks[1], d, (f,), dtype),
+        "down": _dense_init(ks[2], (f, d), f, dtype),
+    }
+
+
+def mlp_axes(gated=True):
+    a = {"up": ("embed", "mlp"), "down": ("mlp", "embed")}
+    if gated:
+        a["gate"] = ("embed", "mlp")
+    return a
+
+
+def mlp_apply(p, x, gated=True, ctx=None):
+    u = jnp.einsum("bsd,df->bsf", x, p["up"])
+    if gated:
+        g = jnp.einsum("bsd,df->bsf", x, p["gate"])
+        h = jax.nn.silu(g) * u
+    else:
+        h = jax.nn.gelu(u)
+    if ctx is not None:
+        h = ctx.cs(h, ("act_batch", "act_seq", "mlp"))
+    return jnp.einsum("bsf,fd->bsd", h, p["down"])
+
+
+# ---------------------------------------------------------------------------
+# embeddings / logits
+# ---------------------------------------------------------------------------
+
+
+def init_embedding(rng, vocab, d, dtype):
+    return (jax.random.normal(rng, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+def embed(table, tokens):
+    return jnp.take(table, tokens, axis=0)
+
+
+def logits_out(x, table_or_unembed, *, tied: bool, softcap: float = 0.0):
+    if tied:
+        lg = jnp.einsum(
+            "bsd,vd->bsv", x, table_or_unembed, preferred_element_type=jnp.float32
+        )
+    else:
+        lg = jnp.einsum(
+            "bsd,dv->bsv", x, table_or_unembed, preferred_element_type=jnp.float32
+        )
+    return _softcap(lg, softcap)
+
+
+__all__ = [
+    "AttnSpec",
+    "DTypePolicy",
+    "DEFAULT_POLICY",
+    "attention_axes",
+    "attn_out",
+    "cached_attention",
+    "chunked_attention",
+    "cross_attention",
+    "cross_kv",
+    "dense_param",
+    "embed",
+    "init_attention",
+    "init_embedding",
+    "init_layernorm",
+    "init_mlp",
+    "init_rmsnorm",
+    "layernorm",
+    "logits_out",
+    "mlp_apply",
+    "mlp_axes",
+    "qkv_proj",
+    "rmsnorm",
+    "rope",
+    "self_attention",
+]

@@ -1,0 +1,151 @@
+"""Mixture-of-Experts layer: top-k routing with GShard-style group-wise
+capacity-bounded dispatch (TPU-idiomatic: one batched matmul per expert
+weight, no per-token gather loops, no cross-shard sequential scans).
+
+Dispatch (per group = per sequence, so ranking parallelizes over the
+data-sharded batch axis):
+  1. router logits -> top-k (expert_id, weight) per token;
+  2. rank of each (token, k) assignment within its expert via a cumulative
+     count over the group's token axis;
+  3. scatter token activations into a dense (B, E, C, D) buffer (assignments
+     whose rank exceeds capacity C are dropped — their weight is zeroed so
+     the residual path carries those tokens, standard capacity semantics);
+  4. batched expert FFN on the buffer;
+  5. gather back + combine with routing weights.
+
+Parallelism:
+  * "tp": expert FFN hidden dim sharded on `model` (dense-MLP-like comms);
+  * "ep": expert dim sharded on `model` — GSPMD materializes the token
+    all-to-all when resharding the dispatch buffer batch->expert.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.models.layers import dense_param, _dense_init
+
+
+def init_moe(rng, d_model, d_ff, cfg: MoEConfig, dtype):
+    fe = cfg.d_expert or d_ff
+    ks = jax.random.split(rng, 7)
+    p = {
+        "router": dense_param(ks[0], d_model, (cfg.num_experts,), jnp.float32),
+        "w_gate": _dense_init(
+            ks[1], (cfg.num_experts, d_model, fe), d_model, dtype
+        ),
+        "w_up": _dense_init(ks[2], (cfg.num_experts, d_model, fe), d_model, dtype),
+        "w_down": _dense_init(ks[3], (cfg.num_experts, fe, d_model), fe, dtype),
+    }
+    if cfg.num_shared_experts:
+        fs = fe * cfg.num_shared_experts
+        p["shared"] = {
+            "gate": dense_param(ks[4], d_model, (fs,), dtype),
+            "up": dense_param(ks[5], d_model, (fs,), dtype),
+            "down": _dense_init(ks[6], (fs, d_model), fs, dtype),
+        }
+    return p
+
+
+def moe_axes(cfg: MoEConfig):
+    if cfg.parallelism == "ep":
+        w = ("expert", "embed", None)
+        wd = ("expert", None, "embed")
+    else:  # tp: shard the expert hidden dim like a dense MLP
+        w = (None, "embed", "mlp")
+        wd = (None, "mlp", "embed")
+    a = {
+        "router": ("embed", None),
+        "w_gate": w,
+        "w_up": w,
+        "w_down": wd,
+    }
+    if cfg.num_shared_experts:
+        a["shared"] = {
+            "gate": ("embed", "mlp"),
+            "up": ("embed", "mlp"),
+            "down": ("mlp", "embed"),
+        }
+    return a
+
+
+def expert_capacity(cfg: MoEConfig, tokens_per_group: int) -> int:
+    C = int(round(tokens_per_group * cfg.top_k / cfg.num_experts * cfg.capacity_factor))
+    return max(cfg.top_k, min(C, tokens_per_group))
+
+
+def moe_apply(p, x, cfg: MoEConfig, *, ctx=None, rng=None, dropless=False):
+    """x: (B, S, D) -> ((B, S, D), aux losses).  Groups = batch rows.
+
+    ``dropless=True`` (decode/verify paths) sets capacity = S so no
+    assignment is ever dropped: speculative verification must be a
+    deterministic function of the context, independent of how many draft
+    tokens share the microbatch.  Training keeps GShard capacity semantics.
+    """
+    B, S, D = x.shape
+    E, K = cfg.num_experts, cfg.top_k
+
+    logits = jnp.einsum(
+        "bsd,de->bse", x.astype(jnp.float32), p["router"]
+    )  # (B, S, E) f32
+    if cfg.router_jitter and rng is not None:
+        logits = logits + cfg.router_jitter * jax.random.normal(rng, logits.shape)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, K)                      # (B, S, K)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    C = S if dropless else expert_capacity(cfg, S)
+
+    # rank within (group, expert): cumulative count along the S*K axis
+    flat_e = top_e.reshape(B, S * K)                            # (B, S*K)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)         # (B, S*K, E)
+    ranks = (jnp.cumsum(onehot, axis=1) - onehot) * onehot
+    rank = ranks.sum(-1)                                        # (B, S*K)
+    keep = rank < C
+    slot = flat_e * C + jnp.minimum(rank, C - 1)                # (B, S*K)
+    oob = E * C                                                  # drop sentinel
+
+    # scatter tokens into (B, E*C, D)
+    src = jnp.repeat(x, K, axis=1)                              # (B, S*K, D)
+    buf = jnp.zeros((B, E * C, D), x.dtype)
+    scatter_idx = jnp.where(keep, slot, oob)[..., None]         # (B, S*K, 1)
+    buf = jax.vmap(
+        lambda b, i, s: b.at[i[..., 0]].add(s, mode="drop")
+    )(buf, scatter_idx, src)
+    buf = buf.reshape(B, E, C, D)
+    if ctx is not None:
+        buf = ctx.cs(buf, ("act_batch", "act_expert", None, None))
+
+    # expert FFN (batched over E; groups stay data-sharded)
+    g = jnp.einsum("becd,edf->becf", buf, p["w_gate"])
+    u = jnp.einsum("becd,edf->becf", buf, p["w_up"])
+    h = jax.nn.silu(g) * u
+    if ctx is not None and cfg.parallelism == "tp":
+        h = ctx.cs(h, ("act_batch", None, None, "mlp"))
+    out_buf = jnp.einsum("becf,efd->becd", h, p["w_down"])
+    if ctx is not None:
+        out_buf = ctx.cs(out_buf, ("act_batch", "act_expert", None, None))
+    out_buf = out_buf.reshape(B, E * C, D)
+
+    # gather back, apply routing weights (dropped tokens contribute 0)
+    gathered = jnp.take_along_axis(
+        out_buf, jnp.minimum(slot, E * C - 1)[..., None], axis=1
+    )                                                           # (B, S*K, D)
+    w = (top_w.reshape(B, S * K) * keep.astype(jnp.float32)).astype(x.dtype)
+    y = (gathered * w[..., None]).reshape(B, S, K, D).sum(axis=2)
+
+    if cfg.num_shared_experts:
+        sg = jnp.einsum("bsd,df->bsf", x, p["shared"]["gate"])
+        su = jnp.einsum("bsd,df->bsf", x, p["shared"]["up"])
+        y = y + jnp.einsum(
+            "bsf,fd->bsd", jax.nn.silu(sg) * su, p["shared"]["down"]
+        )
+
+    # load-balance aux loss (Switch-style)
+    me = probs.reshape(-1, E).mean(axis=0)
+    fe_frac = jax.nn.one_hot(
+        top_e[..., 0].reshape(-1), E, dtype=jnp.float32
+    ).mean(axis=0)
+    aux = {"load_balance": E * jnp.sum(me * fe_frac)}
+    return y, aux

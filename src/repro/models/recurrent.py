@@ -1,0 +1,315 @@
+"""Recurrent-family LMs: xLSTM (mLSTM+sLSTM) and Zamba2 (Mamba2 + shared
+attention block).
+
+xLSTM (cfg.family == "ssm"): layers grouped as (slstm_every-1) mLSTM blocks
+followed by 1 sLSTM block; outer scan over groups, inner scan over the mLSTM
+stack.
+
+Zamba2 (cfg.family == "hybrid"): flat scan over Mamba2 layers; every
+``ssm.attn_every`` layers a SHARED full-attention block (same params each
+application) runs first — its KV cache has one entry per application.
+
+Decode caches are recurrent states (O(1) per token) — this is why these two
+archs run the long_500k cell.  Speculative rollback uses state snapshots
+(see DESIGN.md §5): `decode` with T>1 uses the exact sequential recurrence.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import loops
+
+from repro.common.sharding import NULL_CTX
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models.transformer import (
+    attn_spec,
+    _init_block,
+    _block_axes,
+    _apply_block_full,
+    _apply_block_cached,
+    _stack_init,
+    _stack_axes,
+    _logits,
+    chunked_ce_loss,
+)
+
+# ---------------------------------------------------------------------------
+# xLSTM
+# ---------------------------------------------------------------------------
+
+
+def _xlstm_group_sizes(cfg: ArchConfig):
+    per = cfg.ssm.slstm_every
+    assert cfg.n_layers % per == 0, "n_layers must divide by slstm_every"
+    return cfg.n_layers // per, per - 1  # (n_groups, mlstm per group)
+
+
+def xlstm_init(cfg: ArchConfig, rng, dtype=jnp.bfloat16):
+    n_groups, per_m = _xlstm_group_sizes(cfg)
+    ke, kl, ku = jax.random.split(rng, 3)
+
+    def group_init(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "mlstm": _stack_init(
+                lambda kk: S.init_mlstm(kk, cfg.d_model, cfg.n_heads, dtype), k1, per_m
+            ),
+            "slstm": S.init_slstm(k2, cfg.d_model, cfg.n_heads, dtype),
+        }
+
+    return {
+        "embed": L.init_embedding(ke, cfg.vocab, cfg.d_model, dtype),
+        "groups": _stack_init(group_init, kl, n_groups),
+        "final_norm": L.init_rmsnorm(cfg.d_model, dtype),
+        "unembed": L.dense_param(ku, cfg.d_model, (cfg.vocab,), dtype),
+    }
+
+
+def xlstm_axes(cfg: ArchConfig):
+    return {
+        "embed": ("vocab", "embed"),
+        "groups": {
+            "mlstm": _stack_axes(S.mlstm_axes(), ("layers", "layers_inner")),
+            "slstm": _stack_axes(S.slstm_axes(), ("layers",)),
+        },
+        "final_norm": ("embed",),
+        "unembed": ("embed", "vocab"),
+    }
+
+
+def xlstm_init_cache(cfg: ArchConfig, B, max_len=0, dtype=jnp.bfloat16):
+    n_groups, per_m = _xlstm_group_sizes(cfg)
+    m1 = S.mlstm_init_state(B, cfg.d_model, cfg.n_heads)
+    stack = lambda tree, n: jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (n, *x.shape)), tree
+    )
+    return {
+        "mlstm": stack(stack(m1, per_m), n_groups),
+        "slstm": stack(S.slstm_init_state(B, cfg.d_model), n_groups),
+    }
+
+
+def xlstm_cache_axes(cfg: ArchConfig):
+    m = {
+        "conv": ("layers", "layers_inner", "act_batch", None, "mlp"),
+        "gla": {
+            "S": ("layers", "layers_inner", "act_batch", "act_heads", None, None),
+            "n": ("layers", "layers_inner", "act_batch", "act_heads", None),
+            "m": ("layers", "layers_inner", "act_batch", "act_heads"),
+        },
+    }
+    s = {k: ("layers", "act_batch", "act_embed") for k in ("h", "c", "n", "m")}
+    return {"mlstm": m, "slstm": s}
+
+
+def _xlstm_run(cfg, params, x, state, *, chunked, remat=False):
+    chunk = cfg.ssm.chunk
+    ckpt = (
+        (lambda f: jax.checkpoint(f, policy=jax.checkpoint_policies.nothing_saveable))
+        if remat
+        else (lambda f: f)
+    )
+
+    @ckpt
+    def group_body(x, inp):
+        gp, gstate = inp
+
+        def m_body(xc, inner):
+            mp, mstate = inner
+            xo, new_state = S.mlstm_forward(
+                mp, xc, cfg.n_heads, mstate, chunk=chunk, chunked=chunked
+            )
+            return xo, new_state
+
+        x, new_m = loops.scan(m_body, x, (gp["mlstm"], gstate["mlstm"]))
+        x, new_s = S.slstm_forward(gp["slstm"], x, cfg.n_heads, gstate["slstm"])
+        return x, {"mlstm": new_m, "slstm": new_s}
+
+    x, new_state = loops.scan(
+        group_body, x, (params["groups"], state)
+    )
+    return x, new_state
+
+
+def xlstm_forward_train(cfg, params, batch, *, ctx=NULL_CTX, remat=False):
+    tokens = batch["tokens"]
+    x = L.embed(params["embed"], tokens)
+    x = ctx.cs(x, ("act_batch", "act_seq", "act_embed"))
+    state = xlstm_init_cache(cfg, tokens.shape[0])
+    x, _ = _xlstm_run(cfg, params, x, state, chunked=True, remat=remat)
+    if "targets" in batch:
+        loss_sum, n = chunked_ce_loss(cfg, params, x, batch["targets"], ctx=ctx)
+        return loss_sum / n.astype(jnp.float32), {}
+    return _logits(cfg, params, x), {}
+
+
+def xlstm_prefill(cfg, params, batch, cache, *, ctx=NULL_CTX,
+                  last_only: bool = False):
+    tokens = batch["tokens"]
+    x = L.embed(params["embed"], tokens)
+    x = ctx.cs(x, ("act_batch", "act_seq", "act_embed"))
+    x, cache = _xlstm_run(cfg, params, x, cache, chunked=True)
+    if last_only:
+        x = x[:, -1:]
+    return _logits(cfg, params, x), cache
+
+
+def xlstm_decode(cfg, params, tokens, cache, pos, *, ctx=NULL_CTX):
+    x = L.embed(params["embed"], tokens)
+    x, cache = _xlstm_run(cfg, params, x, cache, chunked=False)
+    return _logits(cfg, params, x), cache
+
+
+# ---------------------------------------------------------------------------
+# Zamba2 hybrid
+# ---------------------------------------------------------------------------
+
+
+def _n_attn_apps(cfg: ArchConfig):
+    k = cfg.ssm.attn_every
+    return (cfg.n_layers + k - 1) // k
+
+
+def zamba_init(cfg: ArchConfig, rng, dtype=jnp.bfloat16):
+    ke, kl, ka, ku = jax.random.split(rng, 4)
+    return {
+        "embed": L.init_embedding(ke, cfg.vocab, cfg.d_model, dtype),
+        "mamba": _stack_init(
+            lambda kk: S.init_mamba2(kk, cfg.d_model, cfg.ssm, cfg.n_heads, dtype),
+            kl,
+            cfg.n_layers,
+        ),
+        "shared_attn": _init_block(cfg, ka, dtype),
+        "final_norm": L.init_rmsnorm(cfg.d_model, dtype),
+        "unembed": L.dense_param(ku, cfg.d_model, (cfg.vocab,), dtype),
+    }
+
+
+def zamba_axes(cfg: ArchConfig):
+    return {
+        "embed": ("vocab", "embed"),
+        "mamba": _stack_axes(S.mamba2_axes()),
+        "shared_attn": _block_axes(cfg),
+        "final_norm": ("embed",),
+        "unembed": ("embed", "vocab"),
+    }
+
+
+def zamba_init_cache(cfg: ArchConfig, B, max_len, dtype=jnp.bfloat16):
+    n_apps = _n_attn_apps(cfg)
+    hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    m1 = S.mamba2_init_state(B, cfg.d_model, cfg.ssm, cfg.n_heads)
+    mamba = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (cfg.n_layers, *x.shape)), m1
+    )
+    return {
+        "mamba": mamba,
+        "k": jnp.zeros((n_apps, B, max_len, hkv, hd), dtype),
+        "v": jnp.zeros((n_apps, B, max_len, hkv, hd), dtype),
+    }
+
+
+def zamba_cache_axes(cfg: ArchConfig):
+    return {
+        "mamba": {
+            "conv": ("layers", "act_batch", None, "mlp"),
+            "ssm": {"S": ("layers", "act_batch", "act_heads", None, None)},
+        },
+        "k": ("layers", "act_batch", "act_cache", "act_kv", None),
+        "v": ("layers", "act_batch", "act_cache", "act_kv", None),
+    }
+
+
+def _zamba_run(cfg, params, x, cache, pos, *, chunked, use_cache, ctx, remat=False):
+    """Flat scan over mamba layers; shared attn every attn_every layers."""
+    spec = attn_spec(cfg)
+    k_every = cfg.ssm.attn_every
+    flags = (jnp.arange(cfg.n_layers) % k_every) == 0
+    sp = params["shared_attn"]
+    ckpt = (
+        (lambda f: jax.checkpoint(f, policy=jax.checkpoint_policies.nothing_saveable))
+        if remat
+        else (lambda f: f)
+    )
+
+    @ckpt
+    def body(carry, inp):
+        x, app_idx, kc_all, vc_all = carry
+        mp, mstate, flag = inp
+
+        def with_attn(x, kc_all, vc_all):
+            if use_cache:
+                kc = kc_all[app_idx]
+                vc = vc_all[app_idx]
+                xo, kc, vc = _apply_block_cached(
+                    cfg, spec, sp, x, kc, vc, pos, local=False, ctx=ctx
+                )
+                kc_all = kc_all.at[app_idx].set(kc)
+                vc_all = vc_all.at[app_idx].set(vc)
+            else:
+                xo, _, _ = _apply_block_full(cfg, spec, sp, x, local=False, ctx=ctx)
+            return xo, kc_all, vc_all
+
+        x, kc_all, vc_all = jax.lax.cond(
+            flag,
+            with_attn,
+            lambda x, k, v: (x, k, v),
+            x, kc_all, vc_all,
+        )
+        app_idx = app_idx + flag.astype(jnp.int32)
+        x, new_mstate = S.mamba2_forward(
+            mp, x, cfg.d_model, cfg.ssm, cfg.n_heads, mstate, chunked=chunked
+        )
+        x = ctx.cs(x, ("act_batch", "act_seq" if not use_cache else None, "act_embed"))
+        return (x, app_idx, kc_all, vc_all), new_mstate
+
+    kc_all = cache["k"] if use_cache else jnp.zeros((1, 1, 1, 1, 1), jnp.bfloat16)
+    vc_all = cache["v"] if use_cache else jnp.zeros((1, 1, 1, 1, 1), jnp.bfloat16)
+    (x, _, kc_all, vc_all), new_mamba = loops.scan(
+        body, (x, jnp.int32(0), kc_all, vc_all), (params["mamba"], cache["mamba"], flags)
+    )
+    new_cache = {"mamba": new_mamba, "k": kc_all, "v": vc_all}
+    return x, new_cache
+
+
+def zamba_forward_train(cfg, params, batch, *, ctx=NULL_CTX, remat=False):
+    tokens = batch["tokens"]
+    x = L.embed(params["embed"], tokens)
+    x = ctx.cs(x, ("act_batch", "act_seq", "act_embed"))
+    cache = {
+        "mamba": zamba_init_cache(cfg, tokens.shape[0], 1)["mamba"],
+        "k": None,
+        "v": None,
+    }
+    x, _ = _zamba_run(
+        cfg, params, x, cache, 0, chunked=True, use_cache=False, ctx=ctx,
+        remat=remat,
+    )
+    if "targets" in batch:
+        loss_sum, n = chunked_ce_loss(cfg, params, x, batch["targets"], ctx=ctx)
+        return loss_sum / n.astype(jnp.float32), {}
+    return _logits(cfg, params, x), {}
+
+
+def zamba_prefill(cfg, params, batch, cache, *, ctx=NULL_CTX,
+                  last_only: bool = False):
+    tokens = batch["tokens"]
+    x = L.embed(params["embed"], tokens)
+    x = ctx.cs(x, ("act_batch", "act_seq", "act_embed"))
+    x, cache = _zamba_run(
+        cfg, params, x, cache, 0, chunked=True, use_cache=True, ctx=ctx
+    )
+    if last_only:
+        x = x[:, -1:]
+    return _logits(cfg, params, x), cache
+
+
+def zamba_decode(cfg, params, tokens, cache, pos, *, ctx=NULL_CTX):
+    x = L.embed(params["embed"], tokens)
+    x, cache = _zamba_run(
+        cfg, params, x, cache, pos, chunked=False, use_cache=True, ctx=ctx
+    )
+    return _logits(cfg, params, x), cache

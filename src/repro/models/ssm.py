@@ -1,0 +1,491 @@
+"""Recurrent sequence mixers: Mamba2 (SSD) and xLSTM (mLSTM + sLSTM).
+
+All three share the matrix-state recurrence
+
+    S_t = a_t * S_{t-1} + i_t * k_t v_t^T          (per head)
+    y_t = q_t . S_t          (+ optional normalizer n_t = a n + i k)
+
+computed two ways:
+
+* ``chunked_gla`` — chunk-parallel form used for train/prefill: intra-chunk
+  attention-like matmul (MXU-friendly) + inter-chunk state carry.  This is
+  the TPU adaptation of the SSD algorithm: the quadratic intra-chunk block
+  maps to the MXU; the O(T/chunk) sequential part is a tiny lax.scan.
+* ``step_gla`` — exact single-token recurrence for decode, and the oracle
+  the chunked form is tested against.
+
+mLSTM uses exponential input gates and therefore carries a running
+log-stabilizer ``m`` (states are stored as S * exp(-m)).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import loops
+
+from repro.configs.base import SSMConfig
+from repro.models.layers import dense_param, _dense_init, init_rmsnorm, rmsnorm
+
+# ---------------------------------------------------------------------------
+# gated linear attention core
+# ---------------------------------------------------------------------------
+
+
+def gla_init_state(B, H, dk, dv, normalize: bool):
+    s = {
+        "S": jnp.zeros((B, H, dk, dv), jnp.float32),
+    }
+    if normalize:
+        s["n"] = jnp.zeros((B, H, dk), jnp.float32)
+        s["m"] = jnp.zeros((B, H), jnp.float32)
+    return s
+
+
+def step_gla(q, k, v, g, gi, state, *, normalize: bool, eps=1e-6):
+    """One recurrence step.
+
+    q,k: (B,H,dk); v: (B,H,dv); g: (B,H) log-decay; gi: (B,H) log-input-gate
+    (None -> 0).  Returns y (B,H,dv), new state.
+    """
+    S = state["S"]
+    gi = jnp.zeros_like(g) if gi is None else gi
+    if normalize:
+        n, m = state["n"], state["m"]
+        m_new = jnp.maximum(g + m, gi)
+        a = jnp.exp(g + m - m_new)[..., None, None]
+        b = jnp.exp(gi - m_new)[..., None, None]
+        S = a * S + b * (k[..., :, None] * v[..., None, :])
+        n = a[..., 0] * n + b[..., 0] * k
+        num = jnp.einsum("bhk,bhkv->bhv", q, S)
+        den = jnp.einsum("bhk,bhk->bh", q, n)
+        den = jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+        y = num / (den + eps)
+        return y, {"S": S, "n": n, "m": m_new}
+    a = jnp.exp(g)[..., None, None]
+    b = jnp.exp(gi)[..., None, None]
+    S = a * S + b * (k[..., :, None] * v[..., None, :])
+    y = jnp.einsum("bhk,bhkv->bhv", q, S)
+    return y, {"S": S}
+
+
+def sequential_gla(q, k, v, g, gi=None, state=None, *, normalize=False, eps=1e-6):
+    """Exact step-by-step scan over time — the oracle + verify path.
+
+    q,k: (B,T,H,dk); v: (B,T,H,dv); g/gi: (B,T,H).
+    Returns y (B,T,H,dv), final state, and (optionally) all intermediate
+    states stacked on a leading T axis when ``return_states=True`` via
+    ``sequential_gla_states``.
+    """
+    B, T, H, dk = q.shape
+    dv = v.shape[-1]
+    state = state or gla_init_state(B, H, dk, dv, normalize)
+
+    def body(st, xs):
+        qt, kt, vt, gt, git = xs
+        y, st = step_gla(qt, kt, vt, gt, git, st, normalize=normalize, eps=eps)
+        return st, y
+
+    gi_seq = jnp.zeros_like(g) if gi is None else gi
+    xs = (
+        jnp.moveaxis(q, 1, 0),
+        jnp.moveaxis(k, 1, 0),
+        jnp.moveaxis(v, 1, 0),
+        jnp.moveaxis(g, 1, 0),
+        jnp.moveaxis(gi_seq, 1, 0),
+    )
+    state, ys = loops.scan(body, state, xs)
+    return jnp.moveaxis(ys, 0, 1), state
+
+
+def sequential_gla_states(q, k, v, g, gi=None, state=None, *, normalize=False, eps=1e-6):
+    """Like sequential_gla but also stacks the state after every step
+    (leading axis T) — used by speculative verify for rollback."""
+    B, T, H, dk = q.shape
+    dv = v.shape[-1]
+    state = state or gla_init_state(B, H, dk, dv, normalize)
+
+    def body(st, xs):
+        qt, kt, vt, gt, git = xs
+        y, st = step_gla(qt, kt, vt, gt, git, st, normalize=normalize, eps=eps)
+        return st, (y, st)
+
+    gi_seq = jnp.zeros_like(g) if gi is None else gi
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (q, k, v, g, gi_seq))
+    _, (ys, states) = loops.scan(body, state, xs)
+    return jnp.moveaxis(ys, 0, 1), states  # states leaves: (T, B, ...)
+
+
+def chunked_gla(
+    q, k, v, g, gi=None, state=None, *, normalize=False, chunk=256, eps=1e-6
+):
+    """Chunk-parallel gated linear attention (SSD-style).
+
+    Equivalent to ``sequential_gla`` (up to fp error); quadratic only within
+    ``chunk``-sized blocks.
+    """
+    B, T, H, dk = q.shape
+    dv = v.shape[-1]
+    state = state or gla_init_state(B, H, dk, dv, normalize)
+    Lc = min(chunk, T)
+    pad = (-T) % Lc
+    if pad:
+        z4 = lambda x: jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        z3 = lambda x: jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        q, k, v = z4(q), z4(k), z4(v)
+        g = z3(g)  # pad with 0 = no decay
+        if gi is not None:
+            # padded positions must contribute no input: log-gate -> -inf
+            gi = jnp.pad(
+                gi, ((0, 0), (0, pad), (0, 0)), constant_values=-1e30
+            )
+    NC = (T + pad) // Lc
+
+    def split(x):
+        return jnp.moveaxis(x.reshape(B, NC, Lc, *x.shape[2:]), 1, 0)
+
+    qs, ks, vs, gs = split(q), split(k), split(v), split(g)
+    gis = split(gi) if gi is not None else jnp.zeros_like(gs)
+
+    tri = jnp.tril(jnp.ones((Lc, Lc), bool))            # j <= i
+    tri_strict = jnp.tril(jnp.ones((Lc, Lc), bool), -1)
+
+    def body(st, xs):
+        qc, kc, vc, gc, gic = xs                        # (B, Lc, H, ·)
+        qc32 = qc.astype(jnp.float32)
+        kc32 = kc.astype(jnp.float32)
+        vc32 = vc.astype(jnp.float32)
+        G = jnp.cumsum(gc, axis=1)                      # (B, Lc, H)
+        GL = G[:, -1]                                   # (B, H)
+        # intra log-weights  s_ij = G_i - G_j + gi_j   (j <= i)
+        s = G[:, :, None, :] - G[:, None, :, :] + gic[:, None, :, :]
+        s = jnp.where(tri[None, :, :, None], s, -jnp.inf)
+        # state-update log-weights  u_j = GL - G_j + gi_j
+        u = GL[:, None, :] - G + gic                    # (B, Lc, H)
+        qk = jnp.einsum("bihk,bjhk->bijh", qc32, kc32)  # (B, Lc, Lc, H)
+
+        if normalize:
+            m_prev = st["m"]                            # (B, H)
+            row_max = jnp.max(s, axis=2)                # (B, Lc, H)
+            m_i = jnp.maximum(row_max, G + m_prev[:, None, :])
+            A = jnp.exp(s - m_i[:, :, None, :])         # masked rows -> 0
+            A = jnp.where(tri[None, :, :, None], A, 0.0)
+            inter_w = jnp.exp(G + m_prev[:, None, :] - m_i)  # (B, Lc, H)
+            num = jnp.einsum("bijh,bjhv->bihv", A * qk, vc32)
+            num += inter_w[..., None] * jnp.einsum("bihk,bhkv->bihv", qc32, st["S"])
+            den = jnp.einsum("bijh,bijh->bih", A, qk)
+            den += inter_w * jnp.einsum("bihk,bhk->bih", qc32, st["n"])
+            den = jnp.maximum(jnp.abs(den), jnp.exp(-m_i))
+            y = num / (den[..., None] + eps)
+            # state update
+            m_new = jnp.maximum(GL + m_prev, jnp.max(u, axis=1))  # (B, H)
+            w_u = jnp.exp(u - m_new[:, None, :])        # (B, Lc, H)
+            carry = jnp.exp(GL + m_prev - m_new)
+            S = carry[..., None, None] * st["S"] + jnp.einsum(
+                "bjh,bjhk,bjhv->bhkv", w_u, kc32, vc32
+            )
+            n = carry[..., None] * st["n"] + jnp.einsum("bjh,bjhk->bhk", w_u, kc32)
+            return {"S": S, "n": n, "m": m_new}, y
+
+        A = jnp.where(tri[None, :, :, None], jnp.exp(s), 0.0)
+        y = jnp.einsum("bijh,bjhv->bihv", A * qk, vc32)
+        y += jnp.exp(G)[..., None] * jnp.einsum("bihk,bhkv->bihv", qc32, st["S"])
+        w_u = jnp.exp(u)
+        S = jnp.exp(GL)[..., None, None] * st["S"] + jnp.einsum(
+            "bjh,bjhk,bjhv->bhkv", w_u, kc32, vc32
+        )
+        return {"S": S}, y
+
+    state, ys = loops.scan(body, state, (qs, ks, vs, gs, gis))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, T + pad, H, dv)[:, :T]
+    return y.astype(v.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv (Mamba / xLSTM frontends)
+# ---------------------------------------------------------------------------
+
+
+def causal_conv1d(x, w, conv_state=None):
+    """Depthwise causal conv.  x: (B, T, C); w: (K, C).
+
+    With ``conv_state`` (B, K-1, C) uses it as left context and returns the
+    new state (last K-1 inputs).
+    """
+    B, T, C = x.shape
+    K = w.shape[0]
+    if conv_state is None:
+        ctxt = jnp.zeros((B, K - 1, C), x.dtype)
+    else:
+        ctxt = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([ctxt, x], axis=1)            # (B, T+K-1, C)
+    out = jnp.zeros((B, T, C), jnp.float32)
+    for i in range(K):  # K is tiny (4): unrolled taps, no gather
+        out = out + xp[:, i : i + T].astype(jnp.float32) * w[i].astype(jnp.float32)
+    new_state = xp[:, T:]                               # (B, K-1, C)
+    return out.astype(x.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+
+
+def mamba2_dims(d_model, ssm: SSMConfig, n_heads):
+    d_inner = ssm.expand * d_model
+    head_p = d_inner // n_heads
+    return d_inner, head_p
+
+
+def init_mamba2(rng, d_model, ssm: SSMConfig, n_heads, dtype):
+    d_inner, head_p = mamba2_dims(d_model, ssm, n_heads)
+    N = ssm.state_dim
+    conv_dim = d_inner + 2 * N
+    ks = jax.random.split(rng, 5)
+    return {
+        "norm": init_rmsnorm(d_model, dtype),
+        "in_proj": dense_param(
+            ks[0], d_model, (2 * d_inner + 2 * N + n_heads,), dtype
+        ),
+        "conv_w": (jax.random.normal(ks[1], (ssm.conv_kernel, conv_dim)) * 0.1).astype(dtype),
+        "A_log": jnp.zeros((n_heads,), jnp.float32),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "gnorm": init_rmsnorm(d_inner, dtype),
+        "out_proj": dense_param(ks[2], d_inner, (d_model,), dtype),
+    }
+
+
+def mamba2_axes():
+    return {
+        "norm": ("embed",),
+        "in_proj": ("embed", "mlp"),
+        "conv_w": ("conv", "mlp"),
+        "A_log": (None,),
+        "D": (None,),
+        "dt_bias": (None,),
+        "gnorm": ("mlp",),
+        "out_proj": ("mlp", "embed"),
+    }
+
+
+def _mamba2_pre(p, x, d_model, ssm: SSMConfig, n_heads, conv_state):
+    """Shared projection+conv path.  Returns q,k,v,g,(z),new conv state."""
+    B, T, _ = x.shape
+    d_inner, head_p = mamba2_dims(d_model, ssm, n_heads)
+    N = ssm.state_dim
+    h = rmsnorm(x, p["norm"])
+    proj = jnp.einsum("btd,de->bte", h, p["in_proj"])
+    z, xBC, dt_raw = jnp.split(proj, [d_inner, 2 * d_inner + 2 * N], axis=-1)
+    xBC, new_conv = causal_conv1d(xBC, p["conv_w"], conv_state)
+    xBC = jax.nn.silu(xBC)
+    xin, Bmat, Cmat = jnp.split(xBC, [d_inner, d_inner + N], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,T,H)
+    A = -jnp.exp(p["A_log"])                                         # (H,)
+    g = dt * A                                                        # log-decay
+    xh = xin.reshape(B, T, n_heads, head_p)
+    v = xh * dt[..., None]                     # fold dt into the input term
+    k = jnp.broadcast_to(Bmat[:, :, None, :], (B, T, n_heads, N))
+    q = jnp.broadcast_to(Cmat[:, :, None, :], (B, T, n_heads, N))
+    return q, k, v, g, z, xh, new_conv
+
+
+def _mamba2_post(p, y, xh, z, d_model, n_heads):
+    B, T = y.shape[:2]
+    y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, T, -1).astype(z.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["gnorm"])
+    return jnp.einsum("bte,ed->btd", y, p["out_proj"])
+
+
+def mamba2_forward(p, x, d_model, ssm: SSMConfig, n_heads, state=None, *, chunked=True):
+    """x: (B,T,D) -> (y, new_state).  state = {'conv': .., 'ssm': gla state}."""
+    conv_state = state["conv"] if state else None
+    gla_state = state["ssm"] if state else None
+    q, k, v, g, z, xh, new_conv = _mamba2_pre(p, x, d_model, ssm, n_heads, conv_state)
+    if chunked:
+        y, new_gla = chunked_gla(q, k, v, g, state=gla_state, chunk=ssm.chunk)
+    else:
+        y, new_gla = sequential_gla(q, k, v, g, state=gla_state)
+    out = _mamba2_post(p, y.astype(jnp.float32), xh, z, d_model, n_heads)
+    return x + out, {"conv": new_conv, "ssm": new_gla}
+
+
+def mamba2_init_state(B, d_model, ssm: SSMConfig, n_heads):
+    d_inner, head_p = mamba2_dims(d_model, ssm, n_heads)
+    N = ssm.state_dim
+    return {
+        "conv": jnp.zeros((B, ssm.conv_kernel - 1, d_inner + 2 * N), jnp.bfloat16),
+        "ssm": gla_init_state(B, n_heads, N, head_p, normalize=False),
+    }
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block (xLSTM)
+# ---------------------------------------------------------------------------
+
+
+def mlstm_dims(d_model):
+    return 2 * d_model  # pf = 2
+
+
+def init_mlstm(rng, d_model, n_heads, dtype, conv_kernel=4):
+    di = mlstm_dims(d_model)
+    ks = jax.random.split(rng, 8)
+    return {
+        "norm": init_rmsnorm(d_model, dtype),
+        "up": dense_param(ks[0], d_model, (2 * di,), dtype),   # [u, z]
+        "conv_w": (jax.random.normal(ks[1], (conv_kernel, di)) * 0.1).astype(dtype),
+        "wq": dense_param(ks[2], di, (di,), dtype),
+        "wk": dense_param(ks[3], di, (di,), dtype),
+        "wv": dense_param(ks[4], di, (di,), dtype),
+        "w_if": dense_param(ks[5], di, (2 * n_heads,), jnp.float32),
+        "b_if": jnp.concatenate(
+            [jnp.zeros((n_heads,)), 3.0 * jnp.ones((n_heads,))]
+        ).astype(jnp.float32),
+        "gnorm": init_rmsnorm(di, dtype),
+        "skip": jnp.ones((di,), dtype),
+        "down": dense_param(ks[6], di, (d_model,), dtype),
+    }
+
+
+def mlstm_axes():
+    return {
+        "norm": ("embed",),
+        "up": ("embed", "mlp"),
+        "conv_w": ("conv", "mlp"),
+        "wq": ("mlp", "heads"),
+        "wk": ("mlp", "heads"),
+        "wv": ("mlp", "heads"),
+        "w_if": ("mlp", None),
+        "b_if": (None,),
+        "gnorm": ("mlp",),
+        "skip": ("mlp",),
+        "down": ("mlp", "embed"),
+    }
+
+
+def _mlstm_pre(p, x, n_heads, conv_state):
+    B, T, D = x.shape
+    di = mlstm_dims(D)
+    hd = di // n_heads
+    h = rmsnorm(x, p["norm"])
+    u, z = jnp.split(jnp.einsum("btd,de->bte", h, p["up"]), 2, axis=-1)
+    c, new_conv = causal_conv1d(u, p["conv_w"], conv_state)
+    c = jax.nn.silu(c)
+    q = jnp.einsum("bte,ef->btf", c, p["wq"]).reshape(B, T, n_heads, hd)
+    k = jnp.einsum("bte,ef->btf", c, p["wk"]).reshape(B, T, n_heads, hd)
+    k = k * hd**-0.5
+    v = jnp.einsum("bte,ef->btf", u, p["wv"]).reshape(B, T, n_heads, hd)
+    gates = jnp.einsum("bte,eg->btg", c.astype(jnp.float32), p["w_if"]) + p["b_if"]
+    i_raw, f_raw = jnp.split(gates, 2, axis=-1)           # (B,T,H)
+    log_f = -jax.nn.softplus(-f_raw)                       # log sigmoid(f)
+    log_i = i_raw                                          # exponential gate
+    return q, k, v, log_f, log_i, z, c, new_conv
+
+
+def _mlstm_post(p, y, c, z, n_heads):
+    B, T = y.shape[:2]
+    y = y.reshape(B, T, -1).astype(z.dtype)
+    y = rmsnorm(y, p["gnorm"]) + p["skip"] * c
+    y = y * jax.nn.silu(z)
+    return jnp.einsum("bte,ed->btd", y, p["down"])
+
+
+def mlstm_forward(p, x, n_heads, state=None, *, chunk=256, chunked=True):
+    conv_state = state["conv"] if state else None
+    gla_state = state["gla"] if state else None
+    q, k, v, log_f, log_i, z, c, new_conv = _mlstm_pre(p, x, n_heads, conv_state)
+    fn = chunked_gla if chunked else sequential_gla
+    kw = {"chunk": chunk} if chunked else {}
+    y, new_gla = fn(q, k, v, log_f, log_i, state=gla_state, normalize=True, **kw)
+    out = _mlstm_post(p, y.astype(jnp.float32), c, z, n_heads)
+    return x + out, {"conv": new_conv, "gla": new_gla}
+
+
+def mlstm_init_state(B, d_model, n_heads, conv_kernel=4):
+    di = mlstm_dims(d_model)
+    hd = di // n_heads
+    return {
+        "conv": jnp.zeros((B, conv_kernel - 1, di), jnp.bfloat16),
+        "gla": gla_init_state(B, n_heads, hd, hd, normalize=True),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block (xLSTM) — strictly sequential scalar-memory recurrence
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(rng, d_model, n_heads, dtype):
+    hd = d_model // n_heads
+    ks = jax.random.split(rng, 6)
+    f_mlp = int(d_model * 4 / 3)
+    return {
+        "norm": init_rmsnorm(d_model, dtype),
+        "w_gates": dense_param(ks[0], d_model, (4 * d_model,), dtype),
+        # block-diagonal recurrent weights: (4, H, hd, hd)
+        "r_gates": (jax.random.normal(ks[1], (4, n_heads, hd, hd)) * hd**-0.5).astype(dtype),
+        "b_gates": jnp.concatenate(
+            [
+                jnp.zeros((2 * d_model,)),
+                jnp.ones((d_model,)),     # forget bias
+                jnp.zeros((d_model,)),
+            ]
+        ).astype(jnp.float32),
+        "gnorm": init_rmsnorm(d_model, dtype),
+        "mlp_up": dense_param(ks[2], d_model, (2 * f_mlp,), dtype),
+        "mlp_down": dense_param(ks[3], f_mlp, (d_model,), dtype),
+    }
+
+
+def slstm_axes():
+    return {
+        "norm": ("embed",),
+        "w_gates": ("embed", "mlp"),
+        "r_gates": (None, "heads", "head_dim", None),
+        "b_gates": (None,),
+        "gnorm": ("embed",),
+        "mlp_up": ("embed", "mlp"),
+        "mlp_down": ("mlp", "embed"),
+    }
+
+
+def slstm_init_state(B, d_model):
+    z = jnp.zeros((B, d_model), jnp.float32)
+    return {"h": z, "c": z, "n": z, "m": z}
+
+
+def slstm_forward(p, x, n_heads, state=None):
+    """Sequential sLSTM.  x: (B,T,D)."""
+    B, T, D = x.shape
+    hd = D // n_heads
+    state = state or slstm_init_state(B, D)
+    xin = rmsnorm(x, p["norm"])
+    wx = jnp.einsum("btd,de->bte", xin, p["w_gates"]).astype(jnp.float32)
+
+    def step(st, wx_t):
+        h, c, n, m = st["h"], st["c"], st["n"], st["m"]
+        hh = h.reshape(B, n_heads, hd)
+        rec = jnp.einsum(
+            "bhk,ghkl->bghl", hh.astype(p["r_gates"].dtype), p["r_gates"]
+        ).astype(jnp.float32).reshape(B, 4 * D)
+        pre = wx_t + rec + p["b_gates"]
+        zt, it, ft, ot = jnp.split(pre, 4, axis=-1)
+        zt = jnp.tanh(zt)
+        ot = jax.nn.sigmoid(ot)
+        log_f = -jax.nn.softplus(-ft)
+        m_new = jnp.maximum(log_f + m, it)
+        ip = jnp.exp(it - m_new)
+        fp = jnp.exp(log_f + m - m_new)
+        c_new = fp * c + ip * zt
+        n_new = fp * n + ip
+        h_new = ot * c_new / jnp.maximum(n_new, 1e-6)
+        return {"h": h_new, "c": c_new, "n": n_new, "m": m_new}, h_new
+
+    state, hs = loops.scan(step, state, jnp.moveaxis(wx, 1, 0))
+    hs = jnp.moveaxis(hs, 0, 1).astype(x.dtype)         # (B,T,D)
+    y = rmsnorm(hs, p["gnorm"])
+    u, g = jnp.split(jnp.einsum("btd,df->btf", y, p["mlp_up"]), 2, axis=-1)
+    y = jnp.einsum("btf,fd->btd", jax.nn.gelu(u) * jax.nn.sigmoid(g), p["mlp_down"])
+    return x + y, state

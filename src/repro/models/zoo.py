@@ -1,0 +1,146 @@
+"""Unified model API: every architecture exposes the same bundle of
+functions, keyed by config family.
+
+    bundle = build(cfg)
+    params  = bundle.init(rng)
+    logits, aux = bundle.forward_train(params, batch)
+    cache   = bundle.init_cache(B, max_len)
+    logits, cache = bundle.prefill(params, batch, cache)
+    logits, cache = bundle.decode(params, tokens, cache, pos)   # T >= 1
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+input of the corresponding jitted step (dry-run: no allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.sharding import NULL_CTX
+from repro.configs.base import ArchConfig
+from repro.configs.shapes import ShapeConfig
+from repro.models import encdec, recurrent, transformer
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelBundle:
+    cfg: ArchConfig
+    init: Callable
+    forward_train: Callable
+    prefill: Callable
+    decode: Callable
+    init_cache: Callable
+    param_axes: Callable
+    cache_axes: Callable
+
+
+def build(cfg: ArchConfig) -> ModelBundle:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        return ModelBundle(
+            cfg=cfg,
+            init=partial(transformer.init_params, cfg),
+            forward_train=partial(transformer.forward_train, cfg),
+            prefill=partial(transformer.prefill, cfg),
+            decode=partial(transformer.decode, cfg),
+            init_cache=partial(transformer.init_cache, cfg),
+            param_axes=partial(transformer.param_axes, cfg),
+            cache_axes=partial(transformer.cache_axes, cfg),
+        )
+    if fam == "ssm":
+        return ModelBundle(
+            cfg=cfg,
+            init=partial(recurrent.xlstm_init, cfg),
+            forward_train=partial(recurrent.xlstm_forward_train, cfg),
+            prefill=partial(recurrent.xlstm_prefill, cfg),
+            decode=partial(recurrent.xlstm_decode, cfg),
+            init_cache=partial(recurrent.xlstm_init_cache, cfg),
+            param_axes=partial(recurrent.xlstm_axes, cfg),
+            cache_axes=partial(recurrent.xlstm_cache_axes, cfg),
+        )
+    if fam == "hybrid":
+        return ModelBundle(
+            cfg=cfg,
+            init=partial(recurrent.zamba_init, cfg),
+            forward_train=partial(recurrent.zamba_forward_train, cfg),
+            prefill=partial(recurrent.zamba_prefill, cfg),
+            decode=partial(recurrent.zamba_decode, cfg),
+            init_cache=partial(recurrent.zamba_init_cache, cfg),
+            param_axes=partial(recurrent.zamba_axes, cfg),
+            cache_axes=partial(recurrent.zamba_cache_axes, cfg),
+        )
+    if fam == "audio":
+        return ModelBundle(
+            cfg=cfg,
+            init=partial(encdec.encdec_init, cfg),
+            forward_train=partial(encdec.encdec_forward_train, cfg),
+            prefill=partial(encdec.encdec_prefill, cfg),
+            decode=partial(encdec.encdec_decode, cfg),
+            init_cache=partial(encdec.encdec_init_cache, cfg),
+            param_axes=partial(encdec.encdec_axes, cfg),
+            cache_axes=partial(encdec.encdec_cache_axes, cfg),
+        )
+    raise ValueError(f"unknown family {fam!r}")
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStructs, dry-run safe)
+# ---------------------------------------------------------------------------
+
+
+def batch_specs(cfg: ArchConfig, B: int, S: int, with_targets: bool):
+    """Model input batch for a full-sequence step (train/prefill)."""
+    sd = jax.ShapeDtypeStruct
+    specs: dict[str, Any] = {"tokens": sd((B, S), jnp.int32)}
+    if with_targets:
+        specs["targets"] = sd((B, S), jnp.int32)
+    if cfg.family == "vlm":
+        specs["image_embeds"] = sd((B, cfg.num_image_tokens, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "audio":
+        specs["frames"] = sd((B, cfg.encoder_frames, cfg.d_model), jnp.bfloat16)
+    return specs
+
+
+def batch_axes(cfg: ArchConfig, with_targets: bool):
+    axes: dict[str, tuple] = {"tokens": ("act_batch", "act_seq")}
+    if with_targets:
+        axes["targets"] = ("act_batch", "act_seq")
+    if cfg.family == "vlm":
+        axes["image_embeds"] = ("act_batch", None, "act_embed")
+    if cfg.family == "audio":
+        axes["frames"] = ("act_batch", None, "act_embed")
+    return axes
+
+
+def cache_specs(cfg: ArchConfig, B: int, max_len: int):
+    bundle = build(cfg)
+    return jax.eval_shape(lambda: bundle.init_cache(B, max_len))
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig):
+    """Inputs of the jitted step for this (arch, shape) cell.
+
+    train   -> {'batch': {...}}                         for train_step
+    prefill -> {'batch': {...}, 'cache': ...}           for prefill_step
+    decode  -> {'tokens': (B,1), 'cache': ..., 'pos'}   for serve_step
+    """
+    sd = jax.ShapeDtypeStruct
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        return {"batch": batch_specs(cfg, B, S, with_targets=True)}
+    if shape.kind == "prefill":
+        return {
+            "batch": batch_specs(cfg, B, S, with_targets=False),
+            "cache": cache_specs(cfg, B, S),
+        }
+    if shape.kind == "decode":
+        return {
+            "tokens": sd((B, 1), jnp.int32),
+            "cache": cache_specs(cfg, B, S),
+            "pos": sd((), jnp.int32),
+        }
+    raise ValueError(shape.kind)

@@ -1,0 +1,107 @@
+"""Three-term roofline from a compiled dry-run artifact (TPU v5e targets).
+
+    compute    = HLO_FLOPs_global   / (chips * PEAK_FLOPS)
+    memory     = HLO_bytes_global   / (chips * HBM_BW)
+    collective = collective_bytes   / (chips * LINK_BW)
+
+cost_analysis() reports the per-device partitioned program; global terms are
+per-device * chips.  collective_bytes comes from the HLO parser.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.roofline.hlo_parse import collective_summary
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+LINK_BW = 50e9             # bytes/s / link (ICI)
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_global: float
+    bytes_global: float
+    collective_bytes_global: float
+    model_flops: float
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    collectives: dict
+    memory_per_device: dict
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_time(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_fraction(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — remat/redundancy waste detector."""
+        return self.model_flops / max(self.flops_global, 1.0)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Achievable fraction of compute roofline: time the chip must spend
+        anyway (compute) / the binding term."""
+        return self.t_compute / max(self.bound_time, 1e-30)
+
+    def to_dict(self):
+        d = dataclasses.asdict(self)
+        d.update(
+            dominant=self.dominant,
+            bound_time=self.bound_time,
+            useful_fraction=self.useful_fraction,
+            roofline_fraction=self.roofline_fraction,
+        )
+        return d
+
+
+def analyze(
+    *,
+    arch: str,
+    shape: str,
+    mesh_name: str,
+    chips: int,
+    cost: dict,
+    hlo_text: str,
+    memory_stats,
+    model_flops: float,
+    collectives_override: dict | None = None,
+) -> Roofline:
+    flops_dev = float(cost.get("flops", 0.0))
+    bytes_dev = float(cost.get("bytes accessed", 0.0))
+    coll = collectives_override or collective_summary(hlo_text)
+    mem = {
+        "args_bytes": getattr(memory_stats, "argument_size_in_bytes", 0),
+        "output_bytes": getattr(memory_stats, "output_size_in_bytes", 0),
+        "temp_bytes": getattr(memory_stats, "temp_size_in_bytes", 0),
+        "code_bytes": getattr(memory_stats, "generated_code_size_in_bytes", 0),
+    }
+    return Roofline(
+        arch=arch,
+        shape=shape,
+        mesh=mesh_name,
+        chips=chips,
+        flops_global=flops_dev * chips,
+        bytes_global=bytes_dev * chips,
+        collective_bytes_global=coll["bytes_global"],
+        model_flops=model_flops,
+        t_compute=flops_dev / PEAK_FLOPS,
+        t_memory=bytes_dev / HBM_BW,
+        t_collective=coll["bytes_per_device"] / LINK_BW,
+        collectives=coll["per_kind"],
+        memory_per_device=mem,
+    )

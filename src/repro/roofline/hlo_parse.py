@@ -1,0 +1,114 @@
+"""Parse collective traffic out of compiled (SPMD-partitioned) HLO text.
+
+Shapes in the partitioned module are PER-DEVICE.  For each collective we
+estimate the per-device link traffic from the printed result shape and the
+replica-group size n (ring algorithms):
+
+    all-gather         out = full tensor     -> bytes * (n-1)/n
+    all-reduce         out = full tensor     -> 2 * bytes * (n-1)/n
+    reduce-scatter     out = 1/n shard       -> bytes * (n-1)
+    all-to-all         out                   -> bytes * (n-1)/n
+    collective-permute out                   -> bytes
+
+``collective_bytes_global`` multiplies per-device traffic by the number of
+participating devices, matching the roofline's
+``collective_bytes / (chips * link_bw)`` convention.
+"""
+from __future__ import annotations
+
+import re
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# e.g.  %all-gather.3 = f32[256,512]{0,1} all-gather(%x), channel_id=1,
+#       replica_groups={{0,1,2,3},{4,5,6,7}}, ...
+_INSTR = re.compile(
+    r"=\s*(?:\(?)([a-z0-9]+)\[([0-9,]*)\][^ ]*\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+_GROUPS = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_collectives(hlo_text: str):
+    """Yield dicts {kind, bytes_per_device_result, group_size} per op."""
+    out = []
+    for line in hlo_text.splitlines():
+        m = _INSTR.search(line)
+        if not m:
+            continue
+        if "-done(" in line:
+            continue  # paired with -start; avoid double counting
+        dtype, dims, kind = m.groups()
+        size = _shape_bytes(dtype, dims)
+        # handle tuple results of async collectives crudely: count once
+        g = _GROUPS.search(line)
+        if g:
+            group = len(g.group(1).split(","))
+        else:
+            gi = _GROUPS_IOTA.search(line)
+            group = int(gi.group(2)) if gi else 1
+        out.append({"kind": kind, "bytes": size, "group": group})
+    return out
+
+
+def _per_device_traffic(kind: str, nbytes: int, n: int) -> float:
+    if n <= 1:
+        return 0.0
+    if kind == "all-gather":
+        return nbytes * (n - 1) / n
+    if kind == "all-reduce":
+        return 2.0 * nbytes * (n - 1) / n
+    if kind == "reduce-scatter":
+        return nbytes * (n - 1)
+    if kind == "all-to-all":
+        return nbytes * (n - 1) / n
+    if kind == "collective-permute":
+        return float(nbytes)
+    return float(nbytes)
+
+
+def collective_summary(hlo_text: str) -> dict:
+    """Aggregate: per-kind counts, per-device traffic bytes, and global
+    collective_bytes (per-device traffic x participants)."""
+    ops = parse_collectives(hlo_text)
+    per_kind: dict[str, dict] = {}
+    total_dev = 0.0
+    total_global = 0.0
+    for op in ops:
+        t = _per_device_traffic(op["kind"], op["bytes"], op["group"])
+        e = per_kind.setdefault(
+            op["kind"], {"count": 0, "bytes_per_device": 0.0, "bytes_global": 0.0}
+        )
+        e["count"] += 1
+        e["bytes_per_device"] += t
+        e["bytes_global"] += t * op["group"]
+        total_dev += t
+        total_global += t * op["group"]
+    return {
+        "per_kind": per_kind,
+        "bytes_per_device": total_dev,
+        "bytes_global": total_global,
+        "n_collectives": len(ops),
+    }

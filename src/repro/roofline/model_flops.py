@@ -1,0 +1,158 @@
+"""Analytic parameter / FLOP counting for the roofline's MODEL_FLOPS term.
+
+MODEL_FLOPS per token = 6 * N (dense train) or 6 * N_active (MoE),
+2 * N[_active] for inference; attention FLOPs added separately where the
+context length matters.
+"""
+from __future__ import annotations
+
+from repro.configs.base import ArchConfig
+
+
+def _attn_params(cfg: ArchConfig) -> int:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    qkv = d * (cfg.n_heads + 2 * cfg.n_kv_heads) * hd
+    out = cfg.n_heads * hd * d
+    return qkv + out
+
+
+def _dense_mlp_params(cfg: ArchConfig) -> int:
+    mult = 3 if cfg.gated_mlp else 2
+    return mult * cfg.d_model * cfg.d_ff
+
+
+def _moe_params(cfg: ArchConfig, active: bool) -> int:
+    m = cfg.moe
+    fe = m.d_expert or cfg.d_ff
+    per_expert = 3 * cfg.d_model * fe
+    routed = (m.top_k if active else m.num_experts) * per_expert
+    shared = m.num_shared_experts * per_expert
+    router = cfg.d_model * m.num_experts
+    return routed + shared + router
+
+
+def _mamba2_params(cfg: ArchConfig) -> int:
+    d = cfg.d_model
+    ssm = cfg.ssm
+    di = ssm.expand * d
+    n = ssm.state_dim
+    return d * (2 * di + 2 * n + cfg.n_heads) + di * d + ssm.conv_kernel * (di + 2 * n)
+
+
+def _mlstm_params(cfg: ArchConfig) -> int:
+    d = cfg.d_model
+    di = 2 * d
+    return d * 2 * di + 3 * di * di + di * 2 * cfg.n_heads + di * d
+
+
+def _slstm_params(cfg: ArchConfig) -> int:
+    d = cfg.d_model
+    hd = d // cfg.n_heads
+    f = int(d * 4 / 3)
+    return d * 4 * d + 4 * cfg.n_heads * hd * hd + d * 2 * f + f * d
+
+
+def _layer_params(cfg: ArchConfig) -> tuple[int, int]:
+    """(total_per_layer_sum, active_per_layer_sum) over all layers."""
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        per = _attn_params(cfg) + _dense_mlp_params(cfg)
+        total = cfg.n_layers * per
+        if fam == "vlm":
+            n_cross = cfg.n_layers // cfg.cross_attn_every
+            total += n_cross * (_attn_params(cfg) + _dense_mlp_params(cfg))
+        return total, total
+    if fam == "moe":
+        attn = _attn_params(cfg)
+        tot = cfg.n_layers * (attn + _moe_params(cfg, active=False))
+        act = cfg.n_layers * (attn + _moe_params(cfg, active=True))
+        return tot, act
+    if fam == "ssm":
+        per = cfg.ssm.slstm_every
+        n_groups = cfg.n_layers // per
+        tot = n_groups * ((per - 1) * _mlstm_params(cfg) + _slstm_params(cfg))
+        return tot, tot
+    if fam == "hybrid":
+        n_apps = (cfg.n_layers + cfg.ssm.attn_every - 1) // cfg.ssm.attn_every
+        shared = _attn_params(cfg) + _dense_mlp_params(cfg)
+        tot = cfg.n_layers * _mamba2_params(cfg) + shared
+        act = cfg.n_layers * _mamba2_params(cfg) + n_apps * shared
+        return tot, act
+    if fam == "audio":
+        enc = cfg.encoder_layers * (_attn_params(cfg) + _dense_mlp_params(cfg))
+        dec = cfg.n_layers * (2 * _attn_params(cfg) + _dense_mlp_params(cfg))
+        t = enc + dec
+        return t, t
+    raise ValueError(fam)
+
+
+def param_count(cfg: ArchConfig) -> int:
+    body, _ = _layer_params(cfg)
+    emb = cfg.vocab * cfg.d_model
+    unemb = 0 if cfg.tie_embeddings else cfg.vocab * cfg.d_model
+    return body + emb + unemb
+
+
+def active_param_count(cfg: ArchConfig) -> int:
+    """Per-token-active params (MoE counts only routed top-k + shared)."""
+    _, act = _layer_params(cfg)
+    emb = cfg.vocab * cfg.d_model  # unembed matmul is per-token active
+    return act + emb
+
+
+def uncounted_sequential_flops(cfg: ArchConfig, seq: int, batch: int) -> float:
+    """FLOPs inside per-token recurrence loops that stay rolled even in the
+    dry-run's cost-unroll mode (trip count seq > loops.UNROLL_LIMIT), so
+    ``cost_analysis`` counts their body once.  Only the xLSTM family has
+    such a loop (the sLSTM recurrent gate matmul); everything else is
+    chunk-parallel.  Returns the *global* FLOPs shortfall."""
+    if cfg.family != "ssm" or not cfg.ssm or not cfg.ssm.slstm_every:
+        return 0.0
+    n_groups = cfg.n_layers // cfg.ssm.slstm_every
+    d = cfg.d_model
+    hd = d // cfg.n_heads
+    per_token = 2 * batch * 4 * d * hd + 40.0 * batch * d   # rec matmul + gates
+    return n_groups * (seq - 1) * per_token   # body counted once already
+
+
+def model_flops(cfg: ArchConfig, n_tokens: int, *, training: bool) -> float:
+    """6*N*D (train) or 2*N*D (inference) with N = active params."""
+    n = active_param_count(cfg)
+    mult = 6.0 if training else 2.0
+    return mult * n * n_tokens
+
+
+def decode_attention_flops(
+    cfg: ArchConfig, kv_len: int, batch: int, t_new: int = 1
+) -> float:
+    """QK+AV FLOPs for t_new query tokens against a kv_len cache."""
+    if cfg.family == "ssm":
+        return 0.0
+    hd = cfg.resolved_head_dim
+    if cfg.family == "hybrid":
+        n_attn = (cfg.n_layers + cfg.ssm.attn_every - 1) // cfg.ssm.attn_every
+    elif cfg.family == "audio":
+        # decoder self-attn over kv_len + cross-attn over encoder frames
+        n_attn = cfg.n_layers
+        cross = 2 * 2 * batch * cfg.n_heads * t_new * cfg.encoder_frames * hd
+        return n_attn * (2 * 2 * batch * cfg.n_heads * t_new * kv_len * hd + cross)
+    else:
+        n_attn = cfg.n_layers
+    return n_attn * 2 * 2 * batch * cfg.n_heads * t_new * kv_len * hd
+
+
+def attention_flops(cfg: ArchConfig, seq: int, batch: int, *, causal=True) -> float:
+    """Quadratic attention term for full-sequence passes (per forward)."""
+    if cfg.family == "ssm":
+        return 0.0
+    hd = cfg.resolved_head_dim
+    if cfg.family == "hybrid":
+        n_attn = (cfg.n_layers + cfg.ssm.attn_every - 1) // cfg.ssm.attn_every
+    elif cfg.family == "audio":
+        n_attn = cfg.encoder_layers + 2 * cfg.n_layers
+    else:
+        n_attn = cfg.n_layers
+    per_layer = 2 * 2 * batch * cfg.n_heads * seq * seq * hd
+    if causal:
+        per_layer /= 2
+    return n_attn * per_layer

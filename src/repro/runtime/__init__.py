@@ -1,0 +1,19 @@
+"""Distributed runtime: checkpoint/restore (elastic), failure detection,
+straggler mitigation."""
+from repro.runtime.checkpoint import (
+    CheckpointManager,
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
+from repro.runtime.failure import HeartbeatMonitor
+from repro.runtime.straggler import HedgedDispatcher
+
+__all__ = [
+    "CheckpointManager",
+    "save_checkpoint",
+    "restore_checkpoint",
+    "latest_step",
+    "HeartbeatMonitor",
+    "HedgedDispatcher",
+]

@@ -1,0 +1,79 @@
+"""Failure detection: heartbeat monitor + failure-injection hooks.
+
+At production scale the serving coordinator tracks liveness of (a) edge
+devices and (b) verifier replicas.  Both are host-side concerns — no jax
+state — so the monitor is a plain event-time bookkeeping structure that the
+simulator and the serving server share.
+
+Sessions owned by a dead device are reaped (slots freed); verification
+batches in flight on a dead replica are re-dispatched by the
+``HedgedDispatcher`` (idempotent by (session, round) key).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class PeerState:
+    peer_id: str
+    last_beat: float
+    alive: bool = True
+    missed: int = 0
+
+
+class HeartbeatMonitor:
+    """Declares a peer dead after ``timeout`` without a heartbeat."""
+
+    def __init__(self, *, timeout: float = 5.0, on_death=None):
+        self.timeout = timeout
+        self.on_death = on_death
+        self.peers: dict[str, PeerState] = {}
+        self.deaths: list[tuple[str, float]] = []
+
+    def register(self, peer_id: str, now: float):
+        self.peers[peer_id] = PeerState(peer_id, last_beat=now)
+
+    def beat(self, peer_id: str, now: float):
+        p = self.peers.get(peer_id)
+        if p is None:
+            self.register(peer_id, now)
+            return
+        p.last_beat = now
+        p.missed = 0
+        if not p.alive:  # peer rejoined (elastic scale-up path)
+            p.alive = True
+
+    def sweep(self, now: float) -> list[str]:
+        """Returns peers newly declared dead at ``now``."""
+        newly_dead = []
+        for p in self.peers.values():
+            if p.alive and now - p.last_beat > self.timeout:
+                p.alive = False
+                p.missed += 1
+                newly_dead.append(p.peer_id)
+                self.deaths.append((p.peer_id, now))
+                if self.on_death:
+                    self.on_death(p.peer_id, now)
+        return newly_dead
+
+    def alive_peers(self) -> list[str]:
+        return [p.peer_id for p in self.peers.values() if p.alive]
+
+    @property
+    def n_alive(self) -> int:
+        return sum(p.alive for p in self.peers.values())
+
+
+@dataclasses.dataclass
+class FailurePlan:
+    """Deterministic failure injection for tests/simulations:
+    [(peer_id, t_fail, t_recover_or_None), ...]."""
+
+    events: list
+
+    def is_up(self, peer_id: str, now: float) -> bool:
+        for pid, t_fail, t_rec in self.events:
+            if pid == peer_id and now >= t_fail and (t_rec is None or now < t_rec):
+                return False
+        return True

@@ -1,0 +1,105 @@
+"""Straggler mitigation: hedged verification dispatch.
+
+The scheduler predicts every batch's completion time (estimator).  If a
+dispatched batch exceeds its ETA by more than ``hedge_factor`` x guard, the
+dispatcher re-enqueues the batch's requests to a backup replica.  Commits
+are idempotent by (session_id, round_index): whichever replica answers
+first wins; the late answer is dropped.
+
+This is the TPU-cluster adaptation of request hedging (tail-at-scale):
+verification requests are stateless *given the KV prefix*, and prefix KV is
+reconstructable from the committed tokens, so hedging is safe — the backup
+replica cold-starts the prefix (cost modeled by the estimator's N_linear
+term) and still beats a wedged primary.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+
+@dataclasses.dataclass
+class InFlight:
+    key: tuple                 # (session_id, round_index)
+    replica: str
+    dispatched_at: float
+    eta: float                 # estimator prediction (s)
+    hedged: bool = False
+
+
+class HedgedDispatcher:
+    def __init__(
+        self,
+        replicas: list[str],
+        *,
+        guard: float = 0.005,
+        hedge_factor: float = 3.0,
+        on_hedge: Optional[Callable] = None,
+    ):
+        if not replicas:
+            raise ValueError("need at least one replica")
+        self.replicas = list(replicas)
+        self.guard = guard
+        self.hedge_factor = hedge_factor
+        self.on_hedge = on_hedge
+        self.inflight: dict[tuple, InFlight] = {}
+        self.committed: set[tuple] = set()
+        self.stats = {"dispatched": 0, "hedged": 0, "dup_commits_dropped": 0}
+        self._rr = 0
+
+    # -- replica selection ---------------------------------------------------
+    def pick_replica(self, exclude: str | None = None) -> str:
+        for _ in range(len(self.replicas)):
+            r = self.replicas[self._rr % len(self.replicas)]
+            self._rr += 1
+            if r != exclude:
+                return r
+        return self.replicas[0]
+
+    def remove_replica(self, replica: str):
+        """Failure path: drop the replica, re-dispatch its inflight work."""
+        if replica in self.replicas and len(self.replicas) > 1:
+            self.replicas.remove(replica)
+        for f in list(self.inflight.values()):
+            if f.replica == replica:
+                f.replica = self.pick_replica(exclude=replica)
+                f.hedged = True
+                self.stats["hedged"] += 1
+
+    def add_replica(self, replica: str):
+        if replica not in self.replicas:
+            self.replicas.append(replica)
+
+    # -- dispatch / commit -----------------------------------------------------
+    def dispatch(self, key: tuple, eta: float, now: float) -> str:
+        replica = self.pick_replica()
+        self.inflight[key] = InFlight(
+            key=key, replica=replica, dispatched_at=now, eta=eta
+        )
+        self.stats["dispatched"] += 1
+        return replica
+
+    def sweep(self, now: float) -> list[tuple]:
+        """Hedge everything whose ETA has been exceeded by hedge_factor x
+        (eta + guard).  Returns the hedged keys (caller re-enqueues them on
+        the returned backup replica)."""
+        hedged = []
+        for f in self.inflight.values():
+            deadline = f.dispatched_at + self.hedge_factor * (f.eta + self.guard)
+            if not f.hedged and now > deadline:
+                f.hedged = True
+                backup = self.pick_replica(exclude=f.replica)
+                self.stats["hedged"] += 1
+                hedged.append((f.key, backup))
+                if self.on_hedge:
+                    self.on_hedge(f.key, f.replica, backup, now)
+        return hedged
+
+    def commit(self, key: tuple) -> bool:
+        """True if this is the first (winning) commit for the key."""
+        if key in self.committed:
+            self.stats["dup_commits_dropped"] += 1
+            return False
+        self.committed.add(key)
+        self.inflight.pop(key, None)
+        return True

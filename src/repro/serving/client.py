@@ -1,0 +1,126 @@
+"""Edge device client: draft model + intelligent drafting controller +
+session bookkeeping (mirrors the server's committed-prefix invariant).
+
+Invariant shared with the server: ``fed`` = number of tokens whose state is
+in the local draft cache = len(committed) - 1.  The last committed token is
+the first input of the next draft round; rejected draft tokens are rolled
+back by the position pointer (attention caches are length-capped).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.controller import DraftingController
+from repro.models import build
+
+
+@dataclasses.dataclass
+class EdgeSession:
+    session_id: int
+    committed: list            # committed token ids (full response prefix)
+    prompt_len: int
+    fed: int                   # draft-cache valid length
+    rounds: int = 0
+    drafted: int = 0
+    accepted: int = 0
+
+
+class EdgeDevice:
+    """One edge device running a draft model for a single session stream."""
+
+    def __init__(
+        self,
+        draft_cfg,
+        draft_params,
+        *,
+        predictor=None,
+        k_max: int = 8,
+        draft_speed: float = 50.0,
+        greedy: bool = False,
+        max_len: int = 4096,
+        seed: int = 0,
+    ):
+        self.cfg = draft_cfg
+        self.bundle = build(draft_cfg)
+        self.params = draft_params
+        self.controller = DraftingController(
+            self.bundle,
+            draft_params,
+            predictor=predictor,
+            k_max=k_max,
+            greedy=greedy,
+            draft_speed=draft_speed,
+        )
+        self.max_len = max_len
+        self.cache = None
+        self.session: EdgeSession | None = None
+        self.rng = jax.random.PRNGKey(seed)
+        self._prefill = jax.jit(self.bundle.prefill)
+        self._decode = jax.jit(self.bundle.decode)
+
+    def start_session(self, session_id: int, prompt_tokens, first_token: int):
+        """Prefill the local draft cache with the prompt; the server supplies
+        the first committed token (sampled from the target at prefill)."""
+        toks = np.asarray(prompt_tokens, np.int32)
+        self.cache = self.bundle.init_cache(1, self.max_len, dtype=jnp.float32) \
+            if self.cfg.family != "ssm" else self.bundle.init_cache(1, self.max_len)
+        _, self.cache = self._prefill(
+            self.params, {"tokens": jnp.asarray(toks[None])}, self.cache
+        )
+        self.session = EdgeSession(
+            session_id=session_id,
+            committed=list(toks) + [int(first_token)],
+            prompt_len=len(toks),
+            fed=len(toks),
+        )
+
+    def draft_round(self):
+        """Draft a block; returns DraftResult.  Feeds any committed tokens
+        the local cache is missing first (catch-up: after a fully-accepted
+        block the last draft token was produced but never fed)."""
+        s = self.session
+        catch = s.committed[s.fed :]
+        assert catch, "invariant: committed always leads fed by >= 1"
+        if len(catch) > 1:
+            pre = jnp.asarray(np.asarray(catch[:-1], np.int32)[None])
+            _, self.cache = self._decode(
+                self.params, pre, self.cache, jnp.int32(s.fed)
+            )
+            s.fed += len(catch) - 1
+        last = np.asarray([catch[-1]], np.int32)
+        res, self.cache, self.rng = self.controller.draft(
+            self.rng, last, self.cache, s.fed
+        )
+        self._last_n_drafted = res.n_drafted
+        s.rounds += 1
+        s.drafted += res.n_drafted
+        return res
+
+    def apply_verdict(self, accept_len: int, token: int, draft_tokens):
+        """Commit the accepted prefix + correction token; roll the cache
+        position back over rejected drafts (pointer-only for attention:
+        entries past ``fed`` are stale-but-masked)."""
+        s = self.session
+        s.committed.extend(int(t) for t in draft_tokens[:accept_len])
+        s.committed.append(int(token))
+        s.accepted += accept_len
+        # the draft loop fed [x_last, y_1 .. y_{n_drafted-1}]: the cache is
+        # valid exactly up to the accepted prefix (or all fed tokens if the
+        # whole block was accepted — the final draft token is caught up at
+        # the next round).
+        s.fed = s.fed + min(accept_len + 1, self._last_n_drafted)
+        # Recurrent drafts cannot roll back by pointer; the serving stack
+        # uses attention-family drafts (paper: Qwen3 ladder).  Guarded:
+        if self.cfg.family in ("ssm", "hybrid") and accept_len < len(draft_tokens):
+            raise NotImplementedError(
+                "recurrent draft models need snapshot re-sync on rollback"
+            )
+
+    @property
+    def response_tokens(self):
+        s = self.session
+        return s.committed[s.prompt_len:]

@@ -1,0 +1,253 @@
+"""Verification engine (paper §4.5): batched one-step verification.
+
+Slot model: the engine owns a fixed-capacity cache with ``max_slots`` rows;
+sessions map to slots.  A verification batch gathers the selected slots'
+cache rows, runs the target model once over ``[x_last, y_1..y_K]`` with
+per-row positions (ragged), applies the lossless accept/reject rule, and
+scatters the updated rows back.
+
+Two advance strategies, auto-selected per family:
+  * attention-family targets (dense/moe/vlm/audio): single ragged pass —
+    KV entries past a row's committed length are stale-but-masked, so
+    rollback is just the per-slot length pointer;
+  * recurrent targets (ssm/hybrid): stepwise verify — per-step states are
+    stacked and the state at the accepted length is selected per row
+    (recurrent state cannot be truncated; DESIGN.md §5).
+
+Batch shapes are padded to fixed buckets (draft length to k_max, batch to
+powers of two) so jit compiles a bounded set of programs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.speculative import speculative_verify
+from repro.models import build
+
+
+def _batch_axis_tree(cache_axes_tree):
+    """Map each cache leaf's logical axes -> index of 'act_batch'."""
+    return jax.tree.map(
+        lambda axes: axes.index("act_batch"),
+        cache_axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple),
+    )
+
+
+def _bucket(n: int, lo: int = 1) -> int:
+    b = lo
+    while b < n:
+        b *= 2
+    return b
+
+
+@dataclasses.dataclass
+class VerifyItem:
+    slot: int
+    draft_tokens: np.ndarray     # (k,) int32
+    q_logits: np.ndarray         # (k, V) float32
+
+
+@dataclasses.dataclass
+class VerifyOutcome:
+    slot: int
+    accept_len: int
+    token: int                   # correction / bonus token
+    emitted: int                 # accept_len + 1
+    t_verify: float              # engine wall time attributed to the batch
+
+
+class VerificationEngine:
+    def __init__(
+        self,
+        cfg,
+        params,
+        *,
+        max_slots: int,
+        max_len: int,
+        method: str = "residual",
+        seed: int = 0,
+        cache_dtype=jnp.float32,
+    ):
+        self.cfg = cfg
+        self.bundle = build(cfg)
+        self.params = params
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.method = method
+        self.cache = self.bundle.init_cache(max_slots, max_len, dtype=cache_dtype) \
+            if cfg.family != "ssm" else self.bundle.init_cache(max_slots, max_len)
+        self._bax = _batch_axis_tree(self.bundle.cache_axes())
+        self.fed = np.zeros(max_slots, np.int64)        # KV-valid tokens/slot
+        self.last_token = np.zeros(max_slots, np.int64) # committed[-1]/slot
+        self.free_slots = list(range(max_slots - 1, -1, -1))
+        self.rng = jax.random.PRNGKey(seed)
+        self.recurrent = cfg.family in ("ssm", "hybrid")
+        self._decode = jax.jit(self.bundle.decode)
+        self._prefill = jax.jit(self.bundle.prefill)
+        self.stats = {"batches": 0, "tokens_verified": 0, "tokens_committed": 0}
+
+    # -- slot/cache plumbing -------------------------------------------------
+    def _gather(self, slots):
+        idx = jnp.asarray(slots, jnp.int32)
+        return jax.tree.map(
+            lambda leaf, ax: jnp.take(leaf, idx, axis=ax), self.cache, self._bax
+        )
+
+    def _scatter(self, slots, sub, valid_n):
+        idx = np.asarray(slots[:valid_n], np.int32)
+
+        def put(leaf, new, ax):
+            sl = (slice(None),) * ax
+            return leaf.at[sl + (idx,)].set(
+                jax.lax.slice_in_dim(new, 0, valid_n, axis=ax).astype(leaf.dtype)
+            )
+
+        self.cache = jax.tree.map(put, self.cache, sub, self._bax)
+
+    # -- session lifecycle -----------------------------------------------------
+    def new_session(self, prompt_tokens, extras=None) -> tuple[int, int]:
+        """Prefill a prompt into a fresh slot.  Returns (slot, first_token).
+
+        The first committed token is sampled from the target's own prefill
+        logits (the response's token 0 always comes from the target)."""
+        if not self.free_slots:
+            raise RuntimeError("no free verification slots")
+        slot = self.free_slots.pop()
+        toks = np.asarray(prompt_tokens, np.int32)
+        P = len(toks)
+        # Attention targets: bucket the prompt so jit compiles a bounded
+        # set of programs — padded positions are stale-but-masked by the
+        # length pointer.  Recurrent targets: padding would ADVANCE the
+        # stored state through garbage tokens; run the exact length.
+        Pb = P if self.recurrent else _bucket(P, 16)
+        padded = np.zeros((1, Pb), np.int32)
+        padded[0, :P] = toks
+        batch = {"tokens": jnp.asarray(padded)}
+        if extras:
+            batch.update(extras)
+        sub = self._gather([slot])
+        logits, sub = self._prefill(self.params, batch, sub)
+        self._scatter([slot], sub, 1)
+        lg = logits[0, P - 1]
+        first = int(jnp.argmax(lg))
+        self.fed[slot] = P
+        self.last_token[slot] = first
+        return slot, first
+
+    def close_session(self, slot: int):
+        self.fed[slot] = 0
+        self.free_slots.append(slot)
+
+    # -- batched verification ---------------------------------------------------
+    def verify(self, items: list[VerifyItem]) -> list[VerifyOutcome]:
+        if not items:
+            return []
+        t0 = time.perf_counter()
+        n = len(items)
+        K = max(len(it.draft_tokens) for it in items)
+        K = _bucket(max(K, 1), 2)
+        nb = _bucket(n, 1)
+        V = self.cfg.vocab
+
+        draft = np.zeros((nb, K), np.int32)
+        qlog = np.full((nb, K, V), -30.0, np.float32)
+        dlen = np.zeros(nb, np.int32)
+        feed = np.zeros((nb, K + 1), np.int32)
+        pos = np.zeros(nb, np.int32)
+        slots = [0] * nb
+        for i, it in enumerate(items):
+            k = len(it.draft_tokens)
+            draft[i, :k] = it.draft_tokens
+            if it.q_logits.size:
+                qlog[i, :k] = it.q_logits
+            dlen[i] = k
+            feed[i, 0] = self.last_token[it.slot]
+            feed[i, 1 : 1 + k] = it.draft_tokens
+            pos[i] = self.fed[it.slot]
+            slots[i] = it.slot
+        # pad rows reuse slot of item 0 read-only (their updates are dropped)
+        for i in range(n, nb):
+            slots[i] = items[0].slot
+            pos[i] = self.fed[items[0].slot]
+
+        sub = self._gather(slots)
+        if self.recurrent:
+            p_logits, sub = self._verify_stepwise(feed, sub, pos, dlen)
+        else:
+            p_logits, sub = self._decode(
+                self.params, jnp.asarray(feed), sub, jnp.asarray(pos)
+            )
+        self.rng, kv = jax.random.split(self.rng)
+        out = speculative_verify(
+            kv,
+            jnp.asarray(draft),
+            jnp.asarray(dlen),
+            jnp.asarray(qlog),
+            p_logits,
+            method=self.method,
+        )
+        acc = np.asarray(out["accept_len"])
+        tok = np.asarray(out["token"])
+        if self.recurrent:
+            sub = self._select_states(sub, acc + 1)
+        self._scatter(slots, sub, n)
+        jax.block_until_ready(self.cache)
+        dt = time.perf_counter() - t0
+
+        results = []
+        for i, it in enumerate(items):
+            L = int(acc[i])
+            self.fed[it.slot] += L + 1
+            self.last_token[it.slot] = int(tok[i])
+            results.append(
+                VerifyOutcome(
+                    slot=it.slot,
+                    accept_len=L,
+                    token=int(tok[i]),
+                    emitted=L + 1,
+                    t_verify=dt,
+                )
+            )
+        self.stats["batches"] += 1
+        self.stats["tokens_verified"] += int(dlen[:n].sum())
+        self.stats["tokens_committed"] += int(acc[:n].sum()) + n
+        return results
+
+    # -- recurrent-target support -------------------------------------------------
+    def _verify_stepwise(self, feed, sub, pos, dlen):
+        """Step the target one token at a time, stacking per-step states."""
+        T = feed.shape[1]
+        logits_steps = []
+        states = [sub]
+        cur = sub
+        for t in range(T):
+            lg, cur = self._decode(
+                self.params, jnp.asarray(feed[:, t : t + 1]), cur,
+                jnp.asarray(pos + t),
+            )
+            logits_steps.append(lg[:, 0])
+            states.append(cur)
+        p_logits = jnp.stack(logits_steps, axis=1)          # (nb, T, V)
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs, 0), *states)
+        return p_logits, stacked
+
+    def _select_states(self, stacked, n_steps):
+        """Pick state after step n_steps[b] per row (0 = before any step)."""
+        sel = jnp.asarray(n_steps, jnp.int32)
+
+        def pick(leaf, ax):
+            # leaf: (T+1, ...) with batch at ax+1
+            m = jnp.moveaxis(leaf, ax + 1, 0)               # (B, T+1, ...)
+            picked = jnp.take_along_axis(
+                m, sel.reshape(-1, *([1] * (m.ndim - 1))), axis=1
+            )[:, 0]
+            return picked if ax == 0 else jnp.moveaxis(picked, 0, ax)
+
+        return jax.tree.map(pick, stacked, self._bax)

@@ -1,0 +1,229 @@
+"""Paged KV cache + prefix cache (paper §4.5, TPU adaptation).
+
+TPU adaptation of PagedAttention (DESIGN.md §2): pages are 256 tokens (vs
+vLLM's 16) so each page maps to one DMA-efficient VMEM tile; the paged
+attention kernel consumes the block table as a scalar-prefetch operand.
+
+Host-side allocator state (free list, block tables, refcounts, prefix hash
+index) is plain Python — it runs on the serving coordinator.  Device arrays
+hold the actual pages:
+
+    k_pages, v_pages : (L, n_pages, page_size, Hkv, hd)
+
+The prefix cache is content-addressed at page granularity: a full page of
+committed tokens hashes (chained) to a page id; sessions sharing a prompt
+prefix map their leading block-table entries to the same pages (copy-on-
+write never needed — committed prefixes are immutable).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+
+import jax.numpy as jnp
+import numpy as np
+
+PAGE_SIZE = 256
+
+
+class OutOfPages(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class SeqPages:
+    """Block table for one sequence: page ids covering positions
+    [0, num_tokens)."""
+
+    pages: list          # [page_id]
+    num_tokens: int = 0  # valid tokens
+
+    def capacity(self, page_size=PAGE_SIZE):
+        return len(self.pages) * page_size
+
+
+class PageAllocator:
+    """Reference-counted page allocator with a content-addressed prefix
+    index (chained page hashes)."""
+
+    def __init__(self, n_pages: int, page_size: int = PAGE_SIZE):
+        self.n_pages = n_pages
+        self.page_size = page_size
+        self.free: list[int] = list(range(n_pages - 1, -1, -1))
+        self.refcount = np.zeros(n_pages, np.int32)
+        # prefix cache: chain_hash -> page_id ; page_id -> chain_hash
+        self.prefix_index: dict[bytes, int] = {}
+        self.page_hash: dict[int, bytes] = {}
+        self.hits = 0
+        self.misses = 0
+
+    # -- raw alloc ---------------------------------------------------------
+    def alloc(self) -> int:
+        # evict unreferenced prefix-cached pages lazily when exhausted
+        if not self.free:
+            self._evict_unreferenced()
+        if not self.free:
+            raise OutOfPages(f"all {self.n_pages} pages referenced")
+        pid = self.free.pop()
+        self.refcount[pid] = 1
+        return pid
+
+    def retain(self, pid: int):
+        self.refcount[pid] += 1
+
+    def release(self, pid: int):
+        self.refcount[pid] -= 1
+        if self.refcount[pid] <= 0 and pid not in self.page_hash:
+            self.refcount[pid] = 0
+            self.free.append(pid)
+        # hashed pages stay resident (refcount 0) until evicted
+
+    def _evict_unreferenced(self):
+        stale = [pid for pid, h in list(self.page_hash.items()) if self.refcount[pid] <= 0]
+        for pid in stale:
+            h = self.page_hash.pop(pid)
+            self.prefix_index.pop(h, None)
+            self.refcount[pid] = 0
+            self.free.append(pid)
+
+    @property
+    def in_use(self) -> int:
+        return self.n_pages - len(self.free)
+
+    # -- prefix cache ------------------------------------------------------
+    @staticmethod
+    def chain_hash(prev: bytes, tokens) -> bytes:
+        h = hashlib.blake2b(digest_size=16)
+        h.update(prev)
+        h.update(np.asarray(tokens, np.int32).tobytes())
+        return h.digest()
+
+    def lookup_prefix(self, tokens) -> tuple[list[int], int]:
+        """Longest page-aligned cached prefix of ``tokens``.
+        Returns (page_ids, n_cached_tokens); retains the returned pages."""
+        pages: list[int] = []
+        h = b"root"
+        n = 0
+        for s in range(0, len(tokens) - self.page_size + 1, self.page_size):
+            h = self.chain_hash(h, tokens[s : s + self.page_size])
+            pid = self.prefix_index.get(h)
+            if pid is None:
+                break
+            pages.append(pid)
+            n += self.page_size
+        for pid in pages:
+            self.retain(pid)
+        if pages:
+            self.hits += 1
+        else:
+            self.misses += 1
+        return pages, n
+
+    def publish_prefix(self, tokens, page_ids):
+        """Register fully-filled pages of a committed prefix in the index."""
+        h = b"root"
+        for i, pid in enumerate(page_ids):
+            s = i * self.page_size
+            if s + self.page_size > len(tokens):
+                break
+            h = self.chain_hash(h, tokens[s : s + self.page_size])
+            if h not in self.prefix_index:
+                self.prefix_index[h] = pid
+                self.page_hash[pid] = h
+
+
+class PagedKV:
+    """Device-side paged KV arrays + per-sequence block tables."""
+
+    def __init__(
+        self,
+        n_layers: int,
+        n_pages: int,
+        n_kv_heads: int,
+        head_dim: int,
+        *,
+        page_size: int = PAGE_SIZE,
+        dtype=jnp.bfloat16,
+    ):
+        self.page_size = page_size
+        self.allocator = PageAllocator(n_pages, page_size)
+        shape = (n_layers, n_pages, page_size, n_kv_heads, head_dim)
+        self.k_pages = jnp.zeros(shape, dtype)
+        self.v_pages = jnp.zeros(shape, dtype)
+        self.tables: dict[int, SeqPages] = {}
+
+    # -- sequence lifecycle -------------------------------------------------
+    def open_seq(self, seq_id: int, prompt_tokens) -> int:
+        """Allocate a block table; reuse prefix pages.  Returns number of
+        tokens already covered by the prefix cache."""
+        pages, n_cached = self.allocator.lookup_prefix(prompt_tokens)
+        self.tables[seq_id] = SeqPages(pages=pages, num_tokens=n_cached)
+        return n_cached
+
+    def ensure_capacity(self, seq_id: int, n_tokens: int):
+        t = self.tables[seq_id]
+        while t.capacity(self.page_size) < n_tokens:
+            t.pages.append(self.allocator.alloc())
+
+    def close_seq(self, seq_id: int, committed_tokens=None):
+        t = self.tables.pop(seq_id)
+        if committed_tokens is not None:
+            self.allocator.publish_prefix(committed_tokens, t.pages)
+        for pid in t.pages:
+            self.allocator.release(pid)
+
+    def set_len(self, seq_id: int, n: int):
+        self.tables[seq_id].num_tokens = n
+
+    # -- device I/O ----------------------------------------------------------
+    def block_table(self, seq_ids, max_pages: int) -> np.ndarray:
+        """(B, max_pages) int32 page ids, padded with 0 (masked by lengths)."""
+        bt = np.zeros((len(seq_ids), max_pages), np.int32)
+        for i, sid in enumerate(seq_ids):
+            pg = self.tables[sid].pages[:max_pages]
+            bt[i, : len(pg)] = pg
+        return bt
+
+    def lengths(self, seq_ids) -> np.ndarray:
+        return np.array([self.tables[s].num_tokens for s in seq_ids], np.int32)
+
+    def write_tokens(self, seq_id: int, start: int, k_new, v_new):
+        """Write K/V for [start, start+T) of one sequence.
+
+        k_new/v_new: (L, T, Hkv, hd).  Functional-update of the page arrays
+        (on TPU this is the fused scatter inside the verify kernel; the
+        host path keeps semantics identical).
+        """
+        t = self.tables[seq_id]
+        T = k_new.shape[1]
+        self.ensure_capacity(seq_id, start + T)
+        ps = self.page_size
+        o = 0
+        while o < T:
+            pos = start + o
+            pid = t.pages[pos // ps]
+            off = pos % ps
+            n = min(ps - off, T - o)
+            self.k_pages = self.k_pages.at[:, pid, off : off + n].set(
+                k_new[:, o : o + n].astype(self.k_pages.dtype)
+            )
+            self.v_pages = self.v_pages.at[:, pid, off : off + n].set(
+                v_new[:, o : o + n].astype(self.v_pages.dtype)
+            )
+            o += n
+
+    def gather_dense(self, seq_id: int, max_len: int):
+        """Materialize (L, max_len, Hkv, hd) dense K/V for one sequence —
+        reference/debug path."""
+        t = self.tables[seq_id]
+        ps = self.page_size
+        n_pages_needed = (max_len + ps - 1) // ps
+        pads = t.pages[:n_pages_needed] + [0] * (n_pages_needed - len(t.pages))
+        idx = np.asarray(pads, np.int32)
+        k = self.k_pages[:, idx].reshape(
+            self.k_pages.shape[0], -1, *self.k_pages.shape[3:]
+        )[:, :max_len]
+        v = self.v_pages[:, idx].reshape(
+            self.v_pages.shape[0], -1, *self.v_pages.shape[3:]
+        )[:, :max_len]
+        return k, v

@@ -1,0 +1,182 @@
+"""WISP verification server: queues + SLO-aware scheduler + engine.
+
+The coordinator keeps per-session state (slot, committed tokens, EWMA
+acceptance estimate), maintains the pending-request pool, and at each
+dispatch epoch runs Algorithm 1 to build a batch, executes it on the
+verification engine, and returns verdicts.
+
+This is the *functional* server used by examples and integration tests
+(driven synchronously, CPU).  Paper-scale capacity/goodput numbers come
+from `repro.sim`, which replays the same scheduler against the analytic
+latency model at thousands of devices.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core.estimator import EstimatorCoeffs
+from repro.core.scheduler import (
+    FCFSScheduler,
+    SchedulerConfig,
+    SLOScheduler,
+    VerifyRequest,
+)
+from repro.serving.engine import VerificationEngine, VerifyItem
+from repro.serving.transport import NetworkModel
+
+#: paper §5.1: four token-speed SLO classes (tokens/s)
+DEFAULT_SLO_CLASSES = {1: 8.0, 2: 6.0, 3: 4.0, 4: 2.0}
+
+
+@dataclasses.dataclass
+class ServerSession:
+    session_id: int
+    slot: int
+    slo_class: int
+    committed_len: int
+    alpha: float = 0.6           # EWMA acceptance-rate estimate
+    rounds: int = 0
+    draft_speed: float = 50.0
+    t_draft_last: float = 0.0
+    t_net_last: float = 0.0
+
+
+@dataclasses.dataclass
+class Verdict:
+    session_id: int
+    accept_len: int
+    token: int
+    emitted: int
+    t_queue: float
+    t_verify: float
+    deadline: float
+    violated: bool
+
+
+class WISPServer:
+    def __init__(
+        self,
+        engine: VerificationEngine,
+        coeffs: EstimatorCoeffs,
+        *,
+        scheduler: str = "slo",          # "slo" | "fcfs"
+        sched_cfg: SchedulerConfig | None = None,
+        slo_classes: dict | None = None,
+        network: NetworkModel | None = None,
+    ):
+        self.engine = engine
+        self.coeffs = coeffs
+        self.sched_cfg = sched_cfg or SchedulerConfig()
+        cls = SLOScheduler if scheduler == "slo" else FCFSScheduler
+        self.scheduler = cls(self.sched_cfg, coeffs)
+        self.slo_classes = slo_classes or dict(DEFAULT_SLO_CLASSES)
+        self.network = network or NetworkModel()
+        self.sessions: dict[int, ServerSession] = {}
+        self.pending: list[VerifyRequest] = []
+        self._rid = 0
+        self.log: list[Verdict] = []
+
+    # -- sessions -----------------------------------------------------------
+    def open_session(
+        self, session_id: int, prompt_tokens, slo_class: int = 3,
+        draft_speed: float = 50.0, extras=None,
+    ) -> int:
+        slot, first = self.engine.new_session(prompt_tokens, extras=extras)
+        self.sessions[session_id] = ServerSession(
+            session_id=session_id,
+            slot=slot,
+            slo_class=slo_class,
+            committed_len=len(prompt_tokens) + 1,
+            draft_speed=draft_speed,
+        )
+        return first
+
+    def close_session(self, session_id: int):
+        s = self.sessions.pop(session_id)
+        self.engine.close_session(s.slot)
+
+    # -- request intake (paper Eq. 6/12: server-side budget -> deadline) ----
+    def submit(
+        self,
+        session_id: int,
+        draft_tokens,
+        q_logits,
+        *,
+        now: float,
+        t_draft: float,
+        t_network: float,
+    ) -> int:
+        s = self.sessions[session_id]
+        s.t_draft_last = t_draft
+        s.t_net_last = t_network
+        target_speed = self.slo_classes[s.slo_class]
+        nd = len(draft_tokens)
+        expected_tokens = s.alpha * nd + 1.0
+        budget = expected_tokens / target_speed - t_draft - t_network
+        budget = max(budget, 1e-3)
+        self._rid += 1
+        req = VerifyRequest(
+            req_id=self._rid,
+            session_id=session_id,
+            slo_class=s.slo_class,
+            arrival=now,
+            deadline=now + budget,
+            draft_len=nd,
+            cached_len=int(self.engine.fed[s.slot]),
+            alpha=s.alpha,
+            payload=(np.asarray(draft_tokens, np.int32), np.asarray(q_logits)),
+            enqueued_at=now,
+            round_index=s.rounds,
+        )
+        self.pending.append(req)
+        return self._rid
+
+    # -- dispatch epoch -------------------------------------------------------
+    def step(self, now: float) -> list[Verdict]:
+        """One dispatch epoch at time ``now``; returns verdicts of the batch."""
+        if not self.pending:
+            return []
+        decision = self.scheduler.schedule(self.pending, now)
+        if not decision.batch:
+            return []
+        chosen = {r.req_id for r in decision.batch}
+        self.pending = [r for r in self.pending if r.req_id not in chosen]
+
+        items = []
+        for r in decision.batch:
+            s = self.sessions[r.session_id]
+            toks, qlog = r.payload
+            items.append(VerifyItem(slot=s.slot, draft_tokens=toks, q_logits=qlog))
+        outcomes = self.engine.verify(items)
+
+        verdicts = []
+        done = time.perf_counter()
+        for r, o in zip(decision.batch, outcomes):
+            s = self.sessions[r.session_id]
+            # EWMA acceptance update
+            if r.draft_len > 0:
+                s.alpha = 0.8 * s.alpha + 0.2 * (o.accept_len / r.draft_len)
+            s.rounds += 1
+            s.committed_len += o.emitted
+            t_queue = max(0.0, now - r.enqueued_at)
+            complete = now + o.t_verify
+            v = Verdict(
+                session_id=r.session_id,
+                accept_len=o.accept_len,
+                token=o.token,
+                emitted=o.emitted,
+                t_queue=t_queue,
+                t_verify=o.t_verify,
+                deadline=r.deadline,
+                violated=complete > r.deadline,
+            )
+            self.log.append(v)
+            verdicts.append(v)
+        return verdicts
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self.pending)

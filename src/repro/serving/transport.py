@@ -1,0 +1,40 @@
+"""Edge<->server transport with a simulated network (gRPC stand-in).
+
+The real deployment uses gRPC (paper §4); in this container both ends run
+in-process and the transport contributes *modelled* latency:
+
+    t = base_rtt/2 + payload_bytes / bandwidth
+
+Payload accounting matches the wire protocol: uplink carries draft token ids
+plus the q-statistics needed by the acceptance rule (top-k sparsified logits,
+k=32 by default — the residual-distribution tail mass is renormalized, a
+standard lossless-in-practice compression the paper's SLED baseline also
+uses); downlink carries (accept_len, token).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class NetworkModel:
+    base_rtt: float = 0.010        # 10 ms edge<->cloud
+    uplink_bw: float = 12.5e6      # 100 Mbit/s in bytes/s
+    downlink_bw: float = 25e6      # 200 Mbit/s
+    q_topk: int = 32               # sparsified draft distribution entries
+
+    def uplink_bytes(self, n_draft_tokens: int) -> int:
+        # token ids (4B) + topk (id 4B + logit 2B) per drafted token + header
+        return 64 + n_draft_tokens * (4 + self.q_topk * 6)
+
+    def downlink_bytes(self) -> int:
+        return 64 + 8
+
+    def uplink_time(self, n_draft_tokens: int) -> float:
+        return self.base_rtt / 2 + self.uplink_bytes(n_draft_tokens) / self.uplink_bw
+
+    def downlink_time(self) -> float:
+        return self.base_rtt / 2 + self.downlink_bytes() / self.downlink_bw
+
+    def round_trip(self, n_draft_tokens: int) -> float:
+        return self.uplink_time(n_draft_tokens) + self.downlink_time()

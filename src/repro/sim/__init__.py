@@ -1,0 +1,33 @@
+"""Trace-driven discrete-event simulator for distributed speculative
+serving (paper §5.1: "scalable verification-workload simulator").
+
+Reproduces the paper's end-to-end tables with the *same control code* the
+functional server uses (scheduler, estimator, WDT accounting), driven by an
+analytic latency model instead of real hardware:
+
+  * Table 1 / Fig. 7 — SLO violation rates (FCFS vs WISP) vs device count
+  * Table 2        — system capacity per SLO class (WISP / SLED / central)
+  * Table 3        — system goodput
+  * Fig. 1         — WDT vs device goodput
+  * Fig. 8         — queue-vs-compute violation attribution
+"""
+from repro.sim.config import A100_QWEN32B, SimConfig, DevicePopulation
+from repro.sim.acceptance import AcceptanceModel, PredictorOperatingPoint
+from repro.sim.engine import SimResult, simulate
+from repro.sim.systems import centralized, sled, wisp
+from repro.sim.capacity import capacity_search, violation_rate
+
+__all__ = [
+    "SimConfig",
+    "DevicePopulation",
+    "A100_QWEN32B",
+    "AcceptanceModel",
+    "PredictorOperatingPoint",
+    "simulate",
+    "SimResult",
+    "wisp",
+    "sled",
+    "centralized",
+    "capacity_search",
+    "violation_rate",
+]

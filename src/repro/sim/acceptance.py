@@ -1,0 +1,95 @@
+"""Acceptance + rejection-predictor models for the simulator.
+
+The *true* accept/reject sequence of a draft block is iid Bernoulli(alpha)
+per position (alpha set by the draft/target pair — paper Table 5 baseline).
+Verification stops at the first true rejection.
+
+The predictor is modeled by its measured operating point (paper Table 4):
+at each drafted position it sees the token's truth and errs with
+
+    P(flag reject | truly accepted)  = fnr   (1 - Rec_1: lost coverage)
+    P(pass        | truly rejected)  = fpr   (1 - Spec: waste driver)
+
+Drafting under *stop-at-first-predicted-rejection* stops at the first
+flagged position (that token is not sent), giving exactly the Theorem-1
+waste structure: waste > 0 requires a false pass at the true first
+rejection.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class PredictorOperatingPoint:
+    """Operating point of a rejection predictor (paper Table 4)."""
+
+    fpr: float     # P(predict accept | truly rejected)
+    fnr: float     # P(predict reject | truly accepted)
+    latency: float = 0.46e-3   # per-token inference cost (Tab. 11, RPi5 MLP)
+
+    @classmethod
+    def mlp(cls):
+        return cls(fpr=0.425, fnr=0.199)
+
+    @classmethod
+    def tree(cls):                      # XGBoost row of Table 4
+        return cls(fpr=0.798, fnr=0.068, latency=0.35e-3)
+
+    @classmethod
+    def oracle(cls):
+        return cls(fpr=0.0, fnr=0.0, latency=0.0)
+
+
+@dataclasses.dataclass
+class DraftOutcome:
+    n_drafted: int        # tokens physically drafted (incl. flagged one)
+    n_sent: int           # submitted for verification
+    accept_len: int       # L: verifier-accepted prefix of the sent block
+    wasted: int           # W = (n_drafted - L)^+  (paper Eq. 7)
+
+
+class AcceptanceModel:
+    def __init__(self, alpha: float, rng: np.random.Generator):
+        self.alpha = alpha
+        self.rng = rng
+
+    def draft_block(
+        self,
+        k_max: int,
+        predictor: PredictorOperatingPoint | None,
+        fixed_k: int | None = None,
+    ) -> DraftOutcome:
+        """Simulate one speculate-verify iteration's edge side + truth."""
+        k_cap = fixed_k if fixed_k is not None else k_max
+        truth = self.rng.random(k_cap) < self.alpha      # True = would accept
+        # true first rejection (index of first False), len if none
+        rej = np.nonzero(~truth)[0]
+        first_rej = int(rej[0]) if len(rej) else k_cap
+
+        if predictor is None or fixed_k is not None:
+            n_drafted = k_cap
+            n_sent = k_cap
+            accept_len = first_rej
+            return DraftOutcome(
+                n_drafted, n_sent, accept_len, max(0, n_drafted - accept_len)
+            )
+
+        # stop-at-first-predicted-rejection
+        n_drafted = 0
+        n_sent = 0
+        for i in range(k_cap):
+            n_drafted += 1
+            if truth[i]:
+                flag = self.rng.random() < predictor.fnr
+            else:
+                flag = self.rng.random() >= predictor.fpr
+            if flag:
+                break                  # flagged token is NOT sent
+            n_sent += 1
+        accept_len = min(n_sent, first_rej)
+        return DraftOutcome(
+            n_drafted, n_sent, accept_len, max(0, n_drafted - accept_len)
+        )

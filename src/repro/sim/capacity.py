@@ -1,0 +1,54 @@
+"""System capacity:  Cap(tau) = max N with P[token-speed < tau] <= eps
+(paper Eq. 20), found by exponential bracket + bisection over N."""
+from __future__ import annotations
+
+from typing import Callable
+
+from repro.sim.config import SimConfig
+from repro.sim.engine import simulate
+
+
+def violation_rate(make_cfg: Callable[[int], SimConfig], n: int) -> float:
+    return simulate(make_cfg(n)).violation_rate()
+
+
+def capacity_search(
+    make_cfg: Callable[[int], SimConfig],
+    *,
+    eps: float = 0.10,
+    n_lo: int = 1,
+    n_hi_cap: int = 2048,
+    verbose: bool = False,
+) -> int:
+    """Largest N whose steady-state violation rate stays <= eps.
+
+    Violation rate is monotone-ish in N but noisy; bisection on a single
+    seed is reproducible (the sim is deterministic given (cfg, N)).
+    """
+    if violation_rate(make_cfg, n_lo) > eps:
+        return 0
+    # exponential bracket
+    lo, hi = n_lo, n_lo
+    while hi < n_hi_cap:
+        hi = min(hi * 2, n_hi_cap)
+        v = violation_rate(make_cfg, hi)
+        if verbose:
+            print(f"  bracket N={hi}: violation={v:.3f}")
+        if v > eps:
+            break
+        lo = hi
+    else:
+        return hi
+    if hi >= n_hi_cap and violation_rate(make_cfg, n_hi_cap) <= eps:
+        return n_hi_cap
+    # bisect (lo feasible, hi infeasible)
+    while hi - lo > 1:
+        mid = (lo + hi) // 2
+        v = violation_rate(make_cfg, mid)
+        if verbose:
+            print(f"  bisect  N={mid}: violation={v:.3f}")
+        if v <= eps:
+            lo = mid
+        else:
+            hi = mid
+    return lo

@@ -1,0 +1,450 @@
+"""Discrete-event serving simulator.
+
+One verifier (GPU/TPU slice) + N edge devices.  Every control decision —
+batch selection, deadlines, utility ordering — runs through the *same*
+scheduler/estimator code as the functional server (`repro.core.scheduler`);
+only execution latency is analytic:
+
+    t_true(batch) = estimator(batch) * LogNormal(0, sigma) [* spike]
+
+Devices loop speculate -> submit -> wait verdict -> commit; sessions close
+when the response completes and reopen with a fresh prompt, keeping load
+stationary.  Centralized mode replaces drafting with continuous batched
+decode on the server.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+
+import numpy as np
+
+from repro.core.estimator import BatchShape
+from repro.core.scheduler import (
+    FCFSScheduler,
+    SchedulerConfig,
+    SLOScheduler,
+    VerifyRequest,
+)
+from repro.sim.acceptance import AcceptanceModel
+from repro.sim.config import SimConfig
+
+
+@dataclasses.dataclass
+class IterRecord:
+    device: int
+    t_arrival: float
+    slo_speed: float
+    n_drafted: int
+    n_sent: int
+    n_accepted: int
+    n_committed: int
+    t_draft: float
+    t_network: float
+    t_queue: float
+    t_verify: float
+    context: int
+    violated: bool
+
+    @property
+    def t_total(self) -> float:
+        return self.t_draft + self.t_network + self.t_queue + self.t_verify
+
+    @property
+    def speed(self) -> float:
+        return self.n_committed / max(self.t_total, 1e-9)
+
+    @property
+    def wasted(self) -> int:
+        return max(0, self.n_drafted - self.n_accepted)
+
+
+@dataclasses.dataclass
+class ResponseRecord:
+    """One completed response: the paper's SLO unit — achieved end-to-end
+    token speed over the whole response (per-iteration speed is dominated
+    by the variance of L; a 0-accept round is not an SLO violation if the
+    stream recovers)."""
+
+    device: int
+    slo_speed: float
+    n_tokens: int
+    t_start: float
+    t_end: float
+
+    @property
+    def speed(self) -> float:
+        return self.n_tokens / max(self.t_end - self.t_start, 1e-9)
+
+    @property
+    def violated(self) -> bool:
+        return self.speed < self.slo_speed
+
+
+@dataclasses.dataclass
+class SimResult:
+    records: list
+    sim_time: float
+    cfg: SimConfig
+    responses: list = dataclasses.field(default_factory=list)
+
+    # -- aggregates (post-warmup) -----------------------------------------
+    def _live(self):
+        return [r for r in self.records if r.t_arrival >= self.cfg.warmup]
+
+    def _live_responses(self):
+        return [r for r in self.responses if r.t_start >= self.cfg.warmup]
+
+    def violation_rate(self, slo_speed: float | None = None) -> float:
+        """Fraction of completed responses whose token speed missed the
+        class target (falls back to iteration-level when no response
+        completed in the horizon)."""
+        rs = self._live_responses()
+        if slo_speed is not None:
+            rs = [r for r in rs if abs(r.slo_speed - slo_speed) < 1e-9]
+        if rs:
+            return sum(r.violated for r in rs) / len(rs)
+        its = self._live()
+        if slo_speed is not None:
+            its = [r for r in its if abs(r.slo_speed - slo_speed) < 1e-9]
+        return sum(r.violated for r in its) / max(len(its), 1)
+
+    def goodput(self) -> float:
+        rs = self._live()
+        horizon = self.sim_time - self.cfg.warmup
+        return sum(r.n_committed for r in rs) / max(horizon, 1e-9)
+
+    def device_goodput(self, device: int) -> float:
+        rs = [r for r in self._live() if r.device == device]
+        horizon = self.sim_time - self.cfg.warmup
+        return sum(r.n_committed for r in rs) / max(horizon, 1e-9)
+
+    def waste_fraction(self) -> float:
+        rs = self._live()
+        drafted = sum(r.n_drafted for r in rs)
+        return sum(r.wasted for r in rs) / max(drafted, 1)
+
+    def acceptance_rate(self) -> float:
+        rs = self._live()
+        return sum(r.n_accepted for r in rs) / max(sum(r.n_sent for r in rs), 1)
+
+    def mean_speed(self) -> float:
+        rs = self._live()
+        return float(np.mean([r.speed for r in rs])) if rs else 0.0
+
+    def attribution(self, window: int = 32, rho: float = 1.5):
+        """Fig. 8: classify each violated event in the (t_queue, t_verify)
+        plane as compute-dominant (t_verify spikes vs the sliding mean,
+        paper Eq. 21) or queue-dominant."""
+        rs = sorted(self._live(), key=lambda r: r.t_arrival)
+        out = []
+        hist: list[float] = []
+        for r in rs:
+            ma = float(np.mean(hist[-window:])) if hist else r.t_verify
+            kind = None
+            if r.violated:
+                kind = "compute" if r.t_verify > rho * max(ma, 1e-9) else "queue"
+            out.append(
+                {
+                    "t_queue": r.t_queue,
+                    "t_verify": r.t_verify,
+                    "violated": r.violated,
+                    "kind": kind,
+                }
+            )
+            hist.append(r.t_verify)
+        return out
+
+
+@dataclasses.dataclass
+class _Device:
+    idx: int
+    slo_speed: float
+    draft_speed: float
+    acceptance: AcceptanceModel
+    context: int = 0            # server-side committed tokens (KV length)
+    remaining: int = 0          # response tokens until session end
+    alpha_est: float = 0.6      # server's EWMA acceptance estimate
+    resp_start: float = 0.0     # wall time the current response began
+    resp_tokens: int = 0        # tokens committed to the current response
+
+
+ARRIVAL, GPU_DONE, RETRY = 0, 1, 2
+
+
+def simulate(cfg: SimConfig) -> SimResult:
+    rng = np.random.default_rng(cfg.seed)
+    sched_cfg = SchedulerConfig(
+        memory_budget_tokens=cfg.memory_budget_tokens,
+        guard_time=cfg.guard_time,
+        max_batch_requests=cfg.max_batch_requests,
+    )
+    sched_cls = SLOScheduler if cfg.scheduler == "slo" else FCFSScheduler
+    scheduler = sched_cls(sched_cfg, cfg.coeffs)
+
+    devices = []
+    for i in range(cfg.n_devices):
+        speed, alpha = cfg.population.device(i)
+        d = _Device(
+            idx=i,
+            slo_speed=cfg.slo_for_device(i),
+            draft_speed=speed,
+            acceptance=AcceptanceModel(alpha, np.random.default_rng(cfg.seed * 977 + i)),
+        )
+        _reset_session(d, cfg, rng)
+        devices.append(d)
+
+    if cfg.centralized:
+        return _simulate_centralized(cfg, devices, rng)
+
+    records: list[IterRecord] = []
+    responses: list[ResponseRecord] = []
+    pending: list[VerifyRequest] = []
+    seq = [0]   # heap tiebreaker: payloads are not orderable
+    payloads: dict[int, dict] = {}
+    events: list = []
+    gpu_free_at = 0.0
+    gpu_busy = False
+    rid = 0
+
+    total_ctx = [sum(d.context for d in devices)]   # resident KV tokens
+    evict_rng = np.random.default_rng(cfg.seed + 51_977)
+
+    # initial drafting round for every device
+    for d in devices:
+        _begin_round(d, 0.0, cfg, events, payloads,
+                     total_ctx=total_ctx, evict_rng=evict_rng)
+
+    def dispatch(now):
+        nonlocal gpu_busy, gpu_free_at
+        decision = scheduler.schedule(pending, now)
+        if not decision.batch:
+            return False
+        chosen = {r.req_id for r in decision.batch}
+        pending[:] = [r for r in pending if r.req_id not in chosen]
+        # true latency: estimator x noise (x occasional spike)
+        t_est = scheduler.batch_time(decision.batch)
+        noise = float(np.exp(rng.normal(0.0, cfg.latency_noise_sigma)))
+        spike = cfg.spike_scale if rng.random() < cfg.spike_prob else 1.0
+        t_true = t_est * noise * spike
+        gpu_busy = True
+        gpu_free_at = now + t_true
+        seq[0] += 1
+        heapq.heappush(
+            events,
+            (gpu_free_at, GPU_DONE, seq[0],
+             [r.req_id for r in decision.batch], t_true, now),
+        )
+        return True
+
+    while events:
+        ev = heapq.heappop(events)
+        now = ev[0]
+        if now > cfg.sim_time:
+            break
+        kind = ev[1]
+        if kind == ARRIVAL:
+            req = ev[3]
+            pending.append(req)
+            if not gpu_busy and not dispatch(now):
+                seq[0] += 1
+                heapq.heappush(
+                    events, (now + cfg.dispatch_interval, RETRY, seq[0], None)
+                )
+        elif kind == RETRY:
+            if not gpu_busy and pending and not dispatch(now):
+                seq[0] += 1
+                heapq.heappush(
+                    events, (now + cfg.dispatch_interval, RETRY, seq[0], None)
+                )
+        else:  # GPU_DONE
+            _, _, _, req_ids, t_true, t_started = ev
+            gpu_busy = False
+            done_ids = set(req_ids)
+            for req_id in req_ids:
+                info = payloads.pop(req_id)
+                d: _Device = info["device"]
+                out = info["outcome"]
+                committed = out.accept_len + 1
+                t_queue = t_started - info["arrival"]
+                t_total = info["t_draft"] + info["t_net"] + t_queue + t_true
+                rec = IterRecord(
+                    device=d.idx,
+                    t_arrival=info["arrival"],
+                    slo_speed=d.slo_speed,
+                    n_drafted=out.n_drafted,
+                    n_sent=out.n_sent,
+                    n_accepted=out.accept_len,
+                    n_committed=committed,
+                    t_draft=info["t_draft"],
+                    t_network=info["t_net"],
+                    t_queue=t_queue,
+                    t_verify=t_true,
+                    context=d.context,
+                    violated=(committed / max(t_total, 1e-9)) < d.slo_speed,
+                )
+                records.append(rec)
+                # server EWMA of acceptance (drives deadline budgets)
+                if out.n_sent:
+                    d.alpha_est = 0.8 * d.alpha_est + 0.2 * (
+                        out.accept_len / out.n_sent
+                    )
+                total_ctx[0] += committed
+                d.context += committed
+                d.remaining -= committed
+                d.resp_tokens += committed
+                if d.remaining <= 0:
+                    responses.append(
+                        ResponseRecord(
+                            device=d.idx,
+                            slo_speed=d.slo_speed,
+                            n_tokens=d.resp_tokens,
+                            t_start=d.resp_start,
+                            t_end=now,
+                        )
+                    )
+                    total_ctx[0] -= d.context
+                    _reset_session(d, cfg, rng, now=now)
+                    total_ctx[0] += d.context
+                # next round begins once the verdict reaches the device
+                t_next = now + cfg.network.downlink_time()
+                _begin_round(d, t_next, cfg, events, payloads,
+                             total_ctx=total_ctx, evict_rng=evict_rng)
+            if pending and not gpu_busy and not dispatch(now):
+                seq[0] += 1
+                heapq.heappush(
+                    events, (now + cfg.dispatch_interval, RETRY, seq[0], None)
+                )
+
+        # rid bookkeeping for closures
+        rid += 1
+
+    return SimResult(records=records, sim_time=cfg.sim_time, cfg=cfg,
+                     responses=responses)
+
+
+def _reset_session(d: _Device, cfg: SimConfig, rng, now: float = 0.0):
+    d.context = int(rng.geometric(1.0 / cfg.prompt_len_mean))
+    d.remaining = int(rng.geometric(1.0 / cfg.response_len_mean))
+    d.resp_start = now
+    d.resp_tokens = 0
+
+
+_REQ_ID = [0]
+
+
+def _begin_round(d: _Device, t0: float, cfg: SimConfig, events, payloads,
+                 total_ctx=None, evict_rng=None):
+    out = d.acceptance.draft_block(cfg.k_max, cfg.predictor, cfg.fixed_k)
+    t_draft = out.n_drafted / d.draft_speed
+    if cfg.predictor is not None and cfg.fixed_k is None:
+        t_draft += out.n_drafted * cfg.predictor.latency
+    t_up = cfg.network.uplink_time(out.n_sent)
+    t_net = t_up + cfg.network.downlink_time()
+    arrival = t0 + t_draft + t_up
+    _REQ_ID[0] += 1
+    req_id = _REQ_ID[0]
+
+    if cfg.prefix_cache:
+        prefill, cached = 0, d.context
+        # KV pool thrashing: beyond the resident pool, this round's prefix
+        # was evicted with probability = overflow fraction -> cold start
+        if total_ctx is not None and cfg.kv_pool_tokens > 0:
+            over = max(0.0, 1.0 - cfg.kv_pool_tokens / max(total_ctx[0], 1))
+            if over > 0 and evict_rng.random() < over:
+                prefill, cached = d.context, 0
+    else:  # SLED: re-prefill the whole committed prefix every round
+        prefill, cached = d.context, 0
+
+    expected = d.alpha_est * out.n_sent + 1.0
+    budget = max(expected / d.slo_speed - t_draft - t_net, 1e-3)
+    req = VerifyRequest(
+        req_id=req_id,
+        session_id=d.idx,
+        slo_class=0,
+        arrival=arrival,
+        deadline=arrival + budget,
+        draft_len=out.n_sent,
+        cached_len=cached,
+        alpha=d.alpha_est,
+        prefill_tokens=prefill,
+        enqueued_at=arrival,
+    )
+    payloads[req_id] = {
+        "device": d,
+        "outcome": out,
+        "arrival": arrival,
+        "t_draft": t_draft,
+        "t_net": t_net,
+    }
+    _REQ_ID[0] += 1   # reuse the monotone counter as heap tiebreaker
+    heapq.heappush(events, (arrival, ARRIVAL, _REQ_ID[0], req))
+
+
+def _simulate_centralized(cfg: SimConfig, devices, rng) -> SimResult:
+    """Continuous batched autoregressive decode on the server: every step,
+    up to max_batch sessions decode one token each (FCFS rotation beyond
+    that).  No drafting, no speculative waste."""
+    records: list[IterRecord] = []
+    responses: list[ResponseRecord] = []
+    now = 0.0
+    queue = list(range(len(devices)))          # rotation order
+    wait_since = {d.idx: 0.0 for d in devices}
+    evict_rng = np.random.default_rng(cfg.seed + 51_977)
+    while now < cfg.sim_time:
+        batch = queue[: cfg.max_batch_requests]
+        queue = queue[len(batch):] + batch     # rotate
+        total_ctx = sum(d.context for d in devices)
+        over = (
+            max(0.0, 1.0 - cfg.kv_pool_tokens / max(total_ctx, 1))
+            if cfg.kv_pool_tokens > 0 else 0.0
+        )
+        shapes = [
+            (BatchShape(new_tokens=devices[i].context + 1, cached_tokens=0)
+             if over > 0 and evict_rng.random() < over
+             else BatchShape(new_tokens=1, cached_tokens=devices[i].context))
+            for i in batch
+        ]
+        t_est = cfg.coeffs.predict(shapes)
+        noise = float(np.exp(rng.normal(0.0, cfg.latency_noise_sigma)))
+        spike = cfg.spike_scale if rng.random() < cfg.spike_prob else 1.0
+        t_true = t_est * noise * spike
+        for i in batch:
+            d = devices[i]
+            t_queue = now - wait_since[i]
+            t_total = t_queue + t_true + cfg.network.downlink_time()
+            records.append(
+                IterRecord(
+                    device=i,
+                    t_arrival=now,
+                    slo_speed=d.slo_speed,
+                    n_drafted=0,
+                    n_sent=0,
+                    n_accepted=0,
+                    n_committed=1,
+                    t_draft=0.0,
+                    t_network=cfg.network.downlink_time(),
+                    t_queue=t_queue,
+                    t_verify=t_true,
+                    context=d.context,
+                    violated=(1.0 / max(t_total, 1e-9)) < d.slo_speed,
+                )
+            )
+            d.context += 1
+            d.remaining -= 1
+            d.resp_tokens += 1
+            if d.remaining <= 0:
+                responses.append(
+                    ResponseRecord(
+                        device=i,
+                        slo_speed=d.slo_speed,
+                        n_tokens=d.resp_tokens,
+                        t_start=d.resp_start,
+                        t_end=now + t_true,
+                    )
+                )
+                _reset_session(d, cfg, rng, now=now + t_true)
+            wait_since[i] = now + t_true
+        now += t_true
+    return SimResult(records=records, sim_time=cfg.sim_time, cfg=cfg,
+                     responses=responses)

@@ -1,0 +1,57 @@
+"""System presets: WISP, SLED, centralized (the paper's three columns)."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.sim.acceptance import PredictorOperatingPoint
+from repro.sim.config import SimConfig
+
+
+def wisp(n_devices: int, **kw) -> SimConfig:
+    """Predictor-guided dynamic drafting + SLO-aware batching + prefix cache."""
+    kw.setdefault("predictor", PredictorOperatingPoint.mlp())
+    return SimConfig(
+        n_devices=n_devices,
+        scheduler="slo",
+        prefix_cache=True,
+        **kw,
+    )
+
+
+def sled(n_devices: int, **kw) -> SimConfig:
+    """Fixed-window drafting + FCFS verification, no prefix cache [21]."""
+    kw.setdefault("fixed_k", kw.pop("k", 8))
+    return SimConfig(
+        n_devices=n_devices,
+        scheduler="fcfs",
+        prefix_cache=False,
+        predictor=None,
+        **kw,
+    )
+
+
+def fcfs_cached(n_devices: int, **kw) -> SimConfig:
+    """Ablation: WISP's engine (cache + dynamic drafting) but FCFS batching —
+    isolates the scheduler's contribution (paper Table 1/Fig. 7 baseline)."""
+    kw.setdefault("predictor", PredictorOperatingPoint.mlp())
+    return SimConfig(
+        n_devices=n_devices,
+        scheduler="fcfs",
+        prefix_cache=True,
+        **kw,
+    )
+
+
+def centralized(n_devices: int, **kw) -> SimConfig:
+    """All generation on the server (continuous batched decode)."""
+    return SimConfig(
+        n_devices=n_devices,
+        centralized=True,
+        prefix_cache=True,
+        predictor=None,
+        **kw,
+    )
+
+
+def variant(cfg: SimConfig, **kw) -> SimConfig:
+    return dataclasses.replace(cfg, **kw)

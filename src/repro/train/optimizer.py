@@ -1,0 +1,179 @@
+"""Optimizers: AdamW (f32 states over bf16 params) and Adafactor
+(factored second moments — the memory-feasible choice for the 90B/314B
+training cells; see EXPERIMENTS.md §Dry-run memory notes).
+
+Pure-pytree implementations; optimizer states mirror parameter logical axes
+so FSDP/TP sharding applies to them unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"          # adamw | adafactor
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def lr_schedule(cfg: OptConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.decay_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def global_norm(tree):
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
+    )
+
+
+def clip_by_global_norm(grads, max_norm):
+    g = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(g, 1e-9))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale), grads), g
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(params, grads, state, cfg: OptConfig):
+    step = state["step"] + 1
+    lr = lr_schedule(cfg, step)
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    b1, b2 = cfg.b1, cfg.b2
+    m = jax.tree.map(lambda a, g: b1 * a + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda a, g: b2 * a + (1 - b2) * g * g, state["v"], grads)
+    t = step.astype(jnp.float32)
+    bc1 = 1 - b1**t
+    bc2 = 1 - b2**t
+
+    def upd(p, mi, vi):
+        u = (mi / bc1) / (jnp.sqrt(vi / bc2) + cfg.eps)
+        if p.ndim >= 2:  # decay matrices only (norms/biases exempt)
+            u = u + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+    params = jax.tree.map(upd, params, m, v)
+    return params, {"m": m, "v": v, "step": step}, {"grad_norm": gnorm, "lr": lr}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moments, no first moment)
+# ---------------------------------------------------------------------------
+
+
+def _factored(p):
+    return p.ndim >= 2
+
+
+def adafactor_init(params):
+    def one(p):
+        if _factored(p):
+            return {
+                "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            }
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    return {
+        "v": jax.tree.map(one, params, is_leaf=lambda x: hasattr(x, "shape")),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adafactor_update(params, grads, state, cfg: OptConfig):
+    step = state["step"] + 1
+    lr = lr_schedule(cfg, step)
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    t = step.astype(jnp.float32)
+    beta2 = 1.0 - t ** (-0.8)
+
+    def upd(p, g, v):
+        g2 = g * g + 1e-30
+        if _factored(p):
+            vr = beta2 * v["vr"] + (1 - beta2) * g2.mean(axis=-1)
+            vc = beta2 * v["vc"] + (1 - beta2) * g2.mean(axis=-2)
+            denom = (
+                vr[..., None]
+                * vc[..., None, :]
+                / jnp.maximum(vr.mean(axis=-1)[..., None, None], 1e-30)
+            )
+            u = g * jax.lax.rsqrt(denom + 1e-30)
+            nv = {"vr": vr, "vc": vc}
+        else:
+            nv = {"v": beta2 * v["v"] + (1 - beta2) * g2}
+            u = g * jax.lax.rsqrt(nv["v"] + 1e-30)
+        # update clipping (RMS <= 1)
+        rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+        u = u / jnp.maximum(1.0, rms)
+        if p.ndim >= 2:
+            u = u + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), nv
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_v = tdef.flatten_up_to(state["v"])
+    out = [upd(p, g, v) for p, g, v in zip(flat_p, flat_g, flat_v)]
+    params = tdef.unflatten([o[0] for o in out])
+    v = tdef.unflatten([o[1] for o in out])
+    return params, {"v": v, "step": step}, {"grad_norm": gnorm, "lr": lr}
+
+
+def opt_init(name: str):
+    return {"adamw": adamw_init, "adafactor": adafactor_init}[name]
+
+
+def opt_update(name: str):
+    return {"adamw": adamw_update, "adafactor": adafactor_update}[name]
+
+
+def opt_state_axes(name: str, param_axes):
+    """Logical axes for the optimizer state (mirrors params)."""
+    is_ax = lambda x: isinstance(x, tuple)
+    if name == "adamw":
+        return {
+            "m": param_axes,
+            "v": param_axes,
+            "step": (),
+        }
+    # adafactor: vr drops the last axis, vc drops the second-to-last
+    def one(axes):
+        if len(axes) >= 2:
+            return {"vr": axes[:-1], "vc": axes[:-2] + axes[-1:]}
+        return {"v": axes}
+
+    return {
+        "v": jax.tree.map(one, param_axes, is_leaf=is_ax),
+        "step": (),
+    }

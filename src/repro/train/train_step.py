@@ -1,0 +1,164 @@
+"""pjit train/serve step factories with logical-axis shardings.
+
+``make_train_step(cfg, mesh)`` returns (step_fn, shardings) where step_fn is
+a jit-compiled ``(params, opt_state, batch) -> (params, opt_state, metrics)``
+with FSDP+TP shardings resolved from the config's logical axes, remat over
+layer scans, and the fused chunked loss.
+
+``make_serve_steps(cfg, mesh)`` returns jit-compiled prefill/decode entry
+points with serving shardings (same functions the dry-run lowers).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.common.sharding import (
+    SERVE_RULES,
+    TRAIN_RULES,
+    ShardCtx,
+    logical_to_spec,
+    make_param_shardings,
+)
+from repro.models import batch_axes, batch_specs, build
+from repro.models.zoo import cache_specs
+from repro.train.optimizer import OptConfig, opt_init, opt_state_axes, opt_update
+
+
+def _shardings_for(tree_axes, tree_shapes, mesh, rules):
+    return make_param_shardings(tree_axes, tree_shapes, mesh, rules)
+
+
+def param_shapes(cfg, dtype=jnp.bfloat16):
+    bundle = build(cfg)
+    return jax.eval_shape(lambda: bundle.init(jax.random.PRNGKey(0), dtype=dtype))
+
+
+def make_train_step(
+    cfg,
+    mesh,
+    *,
+    opt_cfg: OptConfig = OptConfig(),
+    remat: bool = True,
+    loss_aux_coeff: float = 0.01,
+    param_dtype=jnp.bfloat16,
+    micro_batches: int = 1,
+):
+    """``micro_batches > 1`` splits the global batch along the batch axis and
+    accumulates gradients sequentially (f32) before one optimizer update —
+    peak activation memory drops ~linearly at no arithmetic cost (§Perf)."""
+    bundle = build(cfg)
+    rules = TRAIN_RULES
+    ctx = ShardCtx(mesh, rules)
+    init_opt = opt_init(opt_cfg.name)
+    update = opt_update(opt_cfg.name)
+
+    def loss_fn(params, batch):
+        loss, aux = bundle.forward_train(params, batch, ctx=ctx, remat=remat)
+        if "load_balance" in aux:
+            loss = loss + loss_aux_coeff * aux["load_balance"]
+        return loss, aux
+
+    def step(params, opt_state, batch):
+        if micro_batches > 1:
+            def split(x):
+                B = x.shape[0]
+                assert B % micro_batches == 0, "batch must divide microbatches"
+                return x.reshape(micro_batches, B // micro_batches, *x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+
+            def acc_body(carry, mb):
+                g_acc, l_acc = carry
+                (loss, _), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True
+                )(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), g_acc, grads
+                )
+                return (g_acc, l_acc + loss), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            from repro.common import loops
+
+            (grads, loss), _ = loops.scan(
+                acc_body, (g0, jnp.zeros((), jnp.float32)), micro
+            )
+            grads = jax.tree.map(lambda g: g / micro_batches, grads)
+            loss = loss / micro_batches
+        else:
+            (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch
+            )
+        params, opt_state, om = update(params, grads, opt_state, opt_cfg)
+        metrics = {"loss": loss, **om}
+        return params, opt_state, metrics
+
+    # shardings
+    p_shapes = param_shapes(cfg, param_dtype)
+    p_axes = bundle.param_axes()
+    p_sh = _shardings_for(p_axes, p_shapes, mesh, rules)
+    o_axes = opt_state_axes(opt_cfg.name, p_axes)
+    o_shapes = jax.eval_shape(init_opt, p_shapes)
+    o_sh = _shardings_for(o_axes, o_shapes, mesh, rules)
+    b_axes = batch_axes(cfg, with_targets=True)
+    bs = batch_specs(cfg, 1, 1, with_targets=True)  # structure only
+    b_sh = {
+        k: NamedSharding(
+            mesh, logical_to_spec(b_axes[k], bs[k].shape, mesh, rules)
+        )
+        for k in bs
+    }
+    # NOTE: batch shardings resolved with dummy shapes can mis-handle the
+    # divisibility guard; resolve against real shapes at lowering instead.
+    step_jit = jax.jit(
+        step,
+        in_shardings=(p_sh, o_sh, None),
+        out_shardings=(p_sh, o_sh, None),
+        donate_argnums=(0, 1),
+    )
+    return step_jit, {
+        "params": p_sh,
+        "opt": o_sh,
+        "param_shapes": p_shapes,
+        "opt_shapes": o_shapes,
+        "init_opt": init_opt,
+    }
+
+
+def batch_shardings(cfg, mesh, shape, with_targets=True, rules=TRAIN_RULES):
+    axes = batch_axes(cfg, with_targets=with_targets)
+    specs = batch_specs(cfg, shape.global_batch, shape.seq_len, with_targets)
+    return {
+        k: NamedSharding(mesh, logical_to_spec(axes[k], specs[k].shape, mesh, rules))
+        for k in specs
+    }
+
+
+def make_serve_steps(cfg, mesh, *, cache_dtype=jnp.bfloat16):
+    """Returns (prefill_fn, decode_fn, shardings dict)."""
+    bundle = build(cfg)
+    rules = SERVE_RULES
+    ctx = ShardCtx(mesh, rules)
+
+    def prefill_fn(params, batch, cache):
+        return bundle.prefill(params, batch, cache, ctx=ctx)
+
+    def decode_fn(params, tokens, cache, pos):
+        return bundle.decode(params, tokens, cache, pos, ctx=ctx)
+
+    p_shapes = param_shapes(cfg)
+    p_sh = _shardings_for(bundle.param_axes(), p_shapes, mesh, rules)
+    return prefill_fn, decode_fn, {"params": p_sh, "param_shapes": p_shapes}
+
+
+def cache_shardings(cfg, mesh, B, max_len, rules=SERVE_RULES):
+    bundle = build(cfg)
+    shapes = cache_specs(cfg, B, max_len)
+    axes = bundle.cache_axes()
+    return make_param_shardings(axes, shapes, mesh, rules)

@@ -1,0 +1,23 @@
+import os
+
+# keep the CPU quiet and deterministic for tests (NOT 512 fake devices —
+# only the dry-run sets xla_force_host_platform_device_count)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running end-to-end test")

@@ -1,0 +1,98 @@
+"""Verification-time estimator: feature math, OLS recovery, persistence."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.estimator import (
+    BatchShape,
+    EstimatorCoeffs,
+    analytic_tpu_coeffs,
+    batch_features,
+    evaluate,
+    fit_ols,
+    load_coeffs,
+    save_coeffs,
+)
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    reqs=st.lists(
+        st.tuples(st.integers(0, 2000), st.integers(0, 50_000)), min_size=0,
+        max_size=16,
+    )
+)
+def test_batch_features_additive(reqs):
+    shapes = [BatchShape(new_tokens=n, cached_tokens=c) for n, c in reqs]
+    f = batch_features(shapes)
+    assert f[0] == sum(n for n, _ in reqs)
+    assert f[1] == sum((n + c) * n for n, c in reqs)
+    assert f[2] == sum(c for _, c in reqs)
+    # additivity: features of a union = sum of features
+    half = len(shapes) // 2
+    np.testing.assert_allclose(
+        f, batch_features(shapes[:half]) + batch_features(shapes[half:])
+    )
+
+
+def _synth_dataset(rng, coeffs, n=200, noise=0.0):
+    feats, lats = [], []
+    for _ in range(n):
+        b = [
+            BatchShape(
+                new_tokens=int(rng.integers(1, 2000)),
+                cached_tokens=int(rng.integers(0, 4000)),
+            )
+            for _ in range(rng.integers(1, 8))
+        ]
+        f = batch_features(b)
+        y = coeffs.predict_features(f) * (1 + noise * rng.normal())
+        feats.append(f)
+        lats.append(y)
+    return np.stack(feats), np.asarray(lats)
+
+
+def test_ols_recovers_ground_truth():
+    rng = np.random.default_rng(0)
+    truth = EstimatorCoeffs(a=3.3e-5, b_compute=3.5e-8, b_read=4.6e-6, c=0.0149)
+    X, y = _synth_dataset(rng, truth, n=300)
+    fit = fit_ols(X, y)
+    assert fit.r2 > 0.999
+    np.testing.assert_allclose(fit.coeffs.a, truth.a, rtol=1e-3)
+    np.testing.assert_allclose(fit.coeffs.b_compute, truth.b_compute, rtol=1e-3)
+    np.testing.assert_allclose(fit.coeffs.b_read, truth.b_read, rtol=1e-3)
+    np.testing.assert_allclose(fit.coeffs.c, truth.c, rtol=1e-3)
+
+
+def test_ols_with_noise_and_bootstrap_ci():
+    rng = np.random.default_rng(1)
+    truth = EstimatorCoeffs(a=3.3e-5, b_compute=3.5e-8, b_read=4.6e-6, c=0.0149)
+    X, y = _synth_dataset(rng, truth, n=400, noise=0.05)
+    fit = fit_ols(X, y, bootstrap=200)
+    assert fit.r2 > 0.95
+    lo, hi = fit.ci95["a"]
+    assert lo <= truth.a <= hi
+    # held-out evaluation consistent
+    X2, y2 = _synth_dataset(np.random.default_rng(2), truth, n=100, noise=0.05)
+    m = evaluate(fit.coeffs, X2, y2)
+    assert m["r2"] > 0.9
+
+
+def test_save_load_roundtrip(tmp_path):
+    c = EstimatorCoeffs(a=1e-5, b_compute=2e-8, b_read=3e-6, c=0.01)
+    p = tmp_path / "coeffs.json"
+    save_coeffs(c, p)
+    c2 = load_coeffs(p)
+    assert c == c2
+
+
+def test_analytic_tpu_coeffs_sane():
+    from repro.configs import get_config
+
+    c = analytic_tpu_coeffs(get_config("qwen2-7b"))
+    assert 0 < c.b_compute < c.b_read < c.a      # per-unit cost ordering
+    assert 0 < c.a < 1e-3                        # < 1 ms/token on a v5e
+    # cold prefill costs more than a cached follow-up
+    cold = c.predict([BatchShape(new_tokens=512, cached_tokens=0)])
+    warm = c.predict([BatchShape(new_tokens=8, cached_tokens=504)])
+    assert cold > warm

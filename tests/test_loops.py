@@ -1,0 +1,77 @@
+"""cost_scan semantics: unrolled == lax.scan, trip-count cap, None ys."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common import loops
+
+
+def _body(c, x):
+    return c + x, c * 2.0
+
+
+def test_unroll_matches_scan():
+    xs = jnp.arange(12.0)
+    c1, y1 = loops.scan(_body, 0.0, xs)
+    with loops.cost_unroll(True):
+        c2, y2 = loops.scan(_body, 0.0, xs)
+    assert float(c1) == float(c2)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2))
+
+
+def test_unroll_none_ys():
+    def body(c, x):
+        return c + x, None
+
+    with loops.cost_unroll(True):
+        c, ys = loops.scan(body, 0.0, jnp.arange(4.0))
+    assert ys is None
+    assert float(c) == 6.0
+
+
+def test_unroll_tree_carry_and_ys():
+    def body(c, x):
+        c = {"a": c["a"] + x["u"], "b": c["b"] * 1.0}
+        return c, {"out": c["a"], "skip": None}
+
+    xs = {"u": jnp.arange(5.0)}
+    init = {"a": jnp.zeros(()), "b": jnp.ones(())}
+    ref_c, ref_y = jax.lax.scan(
+        lambda c, x: body(c, x), init, xs
+    )
+    with loops.cost_unroll(True):
+        c, y = loops.scan(body, init, xs)
+    np.testing.assert_allclose(float(c["a"]), float(ref_c["a"]))
+    np.testing.assert_allclose(np.asarray(y["out"]), np.asarray(ref_y["out"]))
+    assert y["skip"] is None
+
+
+def test_trip_count_cap_keeps_rolled():
+    """Loops longer than UNROLL_LIMIT must stay lax.scan even in cost mode
+    (per-token recurrences would explode the HLO)."""
+    xs = jnp.arange(float(loops.UNROLL_LIMIT + 1))
+
+    def traced_count():
+        n = [0]
+
+        def body(c, x):
+            n[0] += 1
+            return c + x, None
+
+        with loops.cost_unroll(True):
+            jax.make_jaxpr(lambda: loops.scan(body, 0.0, xs))()
+        return n[0]
+
+    # rolled: the body traces once (lax.scan), not len(xs) times
+    assert traced_count() == 1
+
+
+def test_flag_restored_on_exception():
+    try:
+        with loops.cost_unroll(True):
+            assert loops.cost_unroll_enabled()
+            raise RuntimeError("boom")
+    except RuntimeError:
+        pass
+    assert not loops.cost_unroll_enabled()

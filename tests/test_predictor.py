@@ -1,0 +1,94 @@
+"""Rejection predictor: MLP + stump ensemble on synthetic separable data,
+operating-point metrics (paper Table 4), persistence."""
+import numpy as np
+import pytest
+
+from repro.core.features import NUM_FEATURES
+from repro.core.predictor import (
+    MLPConfig,
+    RejectionPredictor,
+    StumpEnsemble,
+    auc_score,
+    operating_point,
+    train_mlp,
+    train_stumps,
+)
+
+
+def _synth(rng, n=3000, sep=2.0, pos_frac=0.73):
+    """Synthetic feature clouds mimicking the paper's: accepted tokens have
+    higher confidence/margin, lower entropy."""
+    n_pos = int(n * pos_frac)
+    n_neg = n - n_pos
+    mu_pos = np.array([0.8, 0.2, 0.5, 3.0, 0.95])
+    mu_neg = mu_pos - sep * np.array([0.25, -0.25, 0.3, 0.5, 0.2])
+    X = np.concatenate(
+        [
+            rng.normal(mu_pos, 0.3, size=(n_pos, NUM_FEATURES)),
+            rng.normal(mu_neg, 0.3, size=(n_neg, NUM_FEATURES)),
+        ]
+    )
+    y = np.concatenate([np.ones(n_pos), np.zeros(n_neg)])
+    idx = rng.permutation(n)
+    return X[idx], y[idx]
+
+
+def test_mlp_learns_and_beats_chance():
+    rng = np.random.default_rng(0)
+    X, y = _synth(rng)
+    Xtr, ytr, Xte, yte = X[:2400], y[:2400], X[2400:], y[2400:]
+    pred = train_mlp(Xtr, ytr, MLPConfig(epochs=12))
+    m = operating_point(np.asarray(pred.predict_accept(Xte)), yte)
+    assert m["acc"] > 0.85
+    assert m["bal_acc"] > 0.85
+    auc = auc_score(np.asarray(pred.proba(Xte)), yte)
+    assert auc > 0.9
+
+
+def test_class_weight_trades_coverage_for_specificity():
+    """Raising the rejected-class weight must reduce FPR (Theorem 1 lever)."""
+    rng = np.random.default_rng(1)
+    X, y = _synth(rng, sep=1.0)
+    light = train_mlp(X, y, MLPConfig(epochs=10, neg_weight=1.0, seed=1))
+    heavy = train_mlp(X, y, MLPConfig(epochs=10, neg_weight=6.0, seed=1))
+    m_light = operating_point(np.asarray(light.predict_accept(X)), y)
+    m_heavy = operating_point(np.asarray(heavy.predict_accept(X)), y)
+    assert m_heavy["fpr"] <= m_light["fpr"] + 1e-9
+    assert m_heavy["rec1"] <= m_light["rec1"] + 1e-9   # the trade-off
+
+
+def test_stump_ensemble_trains():
+    rng = np.random.default_rng(2)
+    X, y = _synth(rng)
+    model = train_stumps(X, y, n_rounds=40)
+    m = operating_point(model.predict_accept(X), y)
+    assert m["acc"] > 0.8
+    assert auc_score(model.proba(X), y) > 0.85
+
+
+def test_operating_point_counts():
+    y = np.array([1, 1, 0, 0, 1])
+    p = np.array([True, False, True, False, True])
+    m = operating_point(p, y)
+    assert m["confusion"] == {"tp": 2, "fn": 1, "fp": 1, "tn": 1}
+    assert abs(m["rec1"] - 2 / 3) < 1e-9
+    assert abs(m["spec"] - 1 / 2) < 1e-9
+    assert abs(m["fpr"] - 1 / 2) < 1e-9
+
+
+def test_auc_degenerate_and_perfect():
+    assert auc_score(np.array([0.9, 0.8, 0.2, 0.1]), np.array([1, 1, 0, 0])) == 1.0
+    assert auc_score(np.array([0.1, 0.2, 0.8, 0.9]), np.array([1, 1, 0, 0])) == 0.0
+    assert auc_score(np.array([0.5, 0.5]), np.array([1, 1])) == 0.5
+
+
+def test_predictor_save_load(tmp_path):
+    rng = np.random.default_rng(3)
+    X, y = _synth(rng, n=500)
+    pred = train_mlp(X, y, MLPConfig(epochs=3))
+    path = tmp_path / "p.json"
+    pred.save(path)
+    pred2 = RejectionPredictor.load(path)
+    np.testing.assert_allclose(
+        np.asarray(pred.proba(X[:16])), np.asarray(pred2.proba(X[:16])), atol=1e-6
+    )

@@ -1,0 +1,104 @@
+"""Serving with RECURRENT targets (xLSTM / Zamba2): the engine's stepwise
+verify + state-snapshot rollback path (DESIGN.md §5 — a recurrent state
+cannot be truncated like a KV prefix, so the engine steps token-by-token
+and selects the state at the accepted length)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build
+from repro.serving.engine import VerificationEngine, VerifyItem
+
+
+@pytest.fixture(scope="module", params=["xlstm-350m", "zamba2-1.2b"])
+def recurrent_target(request):
+    cfg = get_config(request.param).reduced()
+    bundle = build(cfg)
+    params = bundle.init(jax.random.PRNGKey(0), dtype=jnp.float32)
+    return cfg, bundle, params
+
+
+def _autoregressive_greedy(bundle, params, prompt, n_tokens):
+    cfg = bundle.cfg
+    cache = bundle.init_cache(1, 256)
+    toks = jnp.asarray(np.asarray(prompt, np.int32)[None])
+    logits, cache = bundle.prefill(params, {"tokens": toks}, cache)
+    out = [int(jnp.argmax(logits[0, len(prompt) - 1]))]
+    pos = len(prompt)
+    for _ in range(n_tokens - 1):
+        lg, cache = bundle.decode(
+            params, jnp.asarray([[out[-1]]], jnp.int32), cache, jnp.int32(pos)
+        )
+        out.append(int(jnp.argmax(lg[0, -1])))
+        pos += 1
+    return out
+
+
+@pytest.mark.slow
+def test_recurrent_verify_lossless_greedy(recurrent_target):
+    """Stepwise verification against a recurrent target must emit exactly
+    the target's greedy stream, including across rejections (state
+    rollback must not corrupt the recurrence)."""
+    cfg, bundle, params = recurrent_target
+    prompt = [5, 6, 7]
+    want = _autoregressive_greedy(bundle, params, prompt, 8)
+
+    engine = VerificationEngine(cfg, params, max_slots=2, max_len=256,
+                                method="greedy", cache_dtype=jnp.float32)
+    slot, first = engine.new_session(prompt)
+    assert first == want[0]
+    got = [first]
+    rng = np.random.default_rng(0)
+    while len(got) < len(want):
+        # adversarial draft: half-right (forces mid-block rejections)
+        k = 3
+        start = len(got)
+        draft = []
+        for i in range(k):
+            if start + i < len(want) and rng.random() < 0.5:
+                draft.append(want[start + i])       # correct token
+            else:
+                draft.append(int(rng.integers(0, cfg.vocab)))
+        draft = np.asarray(draft, np.int32)
+        (out,) = engine.verify(
+            [VerifyItem(slot=slot, draft_tokens=draft,
+                        q_logits=np.zeros((k, cfg.vocab), np.float32))]
+        )
+        got.extend(int(t) for t in draft[: out.accept_len])
+        got.append(out.token)
+    assert got[: len(want)] == want
+
+
+def test_recurrent_batched_verify_matches_solo(recurrent_target):
+    """Stepwise verify in a batch == verified alone (state selection is
+    per-row)."""
+    cfg, bundle, params = recurrent_target
+    rng = np.random.default_rng(1)
+    prompts = [[2, 3, 4], [9, 8, 7]]
+    drafts = [rng.integers(0, cfg.vocab, size=3).astype(np.int32)
+              for _ in prompts]
+
+    def fresh():
+        return VerificationEngine(cfg, params, max_slots=4, max_len=128,
+                                  method="greedy", cache_dtype=jnp.float32)
+
+    solo = []
+    for p, d in zip(prompts, drafts):
+        eng = fresh()
+        slot, _ = eng.new_session(p)
+        (o,) = eng.verify([VerifyItem(slot=slot, draft_tokens=d,
+                                      q_logits=np.zeros((3, cfg.vocab),
+                                                        np.float32))])
+        solo.append((o.accept_len, o.token))
+
+    eng = fresh()
+    items = []
+    for p, d in zip(prompts, drafts):
+        slot, _ = eng.new_session(p)
+        items.append(VerifyItem(slot=slot, draft_tokens=d,
+                                q_logits=np.zeros((3, cfg.vocab),
+                                                  np.float32)))
+    batched = [(o.accept_len, o.token) for o in eng.verify(items)]
+    assert solo == batched

@@ -1,0 +1,74 @@
+"""Failure detection + straggler hedging."""
+import pytest
+
+from repro.runtime.failure import FailurePlan, HeartbeatMonitor
+from repro.runtime.straggler import HedgedDispatcher
+
+
+def test_heartbeat_declares_death_and_rejoin():
+    deaths = []
+    mon = HeartbeatMonitor(timeout=1.0, on_death=lambda p, t: deaths.append(p))
+    mon.register("a", 0.0)
+    mon.register("b", 0.0)
+    mon.beat("a", 0.9)
+    dead = mon.sweep(1.5)
+    assert dead == ["b"] and deaths == ["b"]
+    assert mon.alive_peers() == ["a"]
+    mon.beat("a", 2.0)
+    mon.beat("b", 2.0)            # elastic rejoin
+    assert mon.n_alive == 2
+    assert mon.sweep(2.1) == []
+
+
+def test_failure_plan_windows():
+    plan = FailurePlan([("r0", 5.0, 10.0), ("r1", 3.0, None)])
+    assert plan.is_up("r0", 4.9) and not plan.is_up("r0", 5.0)
+    assert plan.is_up("r0", 10.0)
+    assert not plan.is_up("r1", 100.0)
+    assert plan.is_up("r2", 0.0)
+
+
+def test_hedged_dispatch_basic_flow():
+    hd = HedgedDispatcher(["r0", "r1"], guard=0.01, hedge_factor=2.0)
+    key = (7, 0)
+    r = hd.dispatch(key, eta=0.1, now=0.0)
+    assert r in ("r0", "r1")
+    # before the hedge deadline nothing happens
+    assert hd.sweep(0.1) == []
+    # past 2 * (eta + guard) the batch is hedged to the other replica
+    hedged = hd.sweep(0.5)
+    assert len(hedged) == 1
+    (k, backup) = hedged[0]
+    assert k == key and backup != r
+    # idempotent commit: first wins, duplicate dropped
+    assert hd.commit(key) is True
+    assert hd.commit(key) is False
+    assert hd.stats["dup_commits_dropped"] == 1
+
+
+def test_hedge_fires_once_per_key():
+    hd = HedgedDispatcher(["r0", "r1"], hedge_factor=1.0, guard=0.0)
+    hd.dispatch((1, 1), eta=0.01, now=0.0)
+    assert len(hd.sweep(1.0)) == 1
+    assert hd.sweep(2.0) == []        # already hedged
+
+
+def test_replica_failure_redispatches_inflight():
+    hd = HedgedDispatcher(["r0", "r1", "r2"])
+    keys = [(i, 0) for i in range(6)]
+    assignments = {k: hd.dispatch(k, eta=0.1, now=0.0) for k in keys}
+    victim = assignments[keys[0]]
+    hd.remove_replica(victim)
+    assert victim not in hd.replicas
+    for k, f in hd.inflight.items():
+        assert f.replica != victim
+    # victims' work counted as hedged
+    n_victim = sum(1 for k, r in assignments.items() if r == victim)
+    assert hd.stats["hedged"] == n_victim
+
+
+def test_add_replica_elastic_scaleup():
+    hd = HedgedDispatcher(["r0"])
+    hd.add_replica("r1")
+    seen = {hd.dispatch((i, 0), 0.1, 0.0) for i in range(4)}
+    assert seen == {"r0", "r1"}

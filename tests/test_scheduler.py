@@ -1,0 +1,123 @@
+"""SLO-aware scheduler (Algorithm 1) invariants + FCFS baseline."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.estimator import EstimatorCoeffs
+from repro.core.scheduler import (
+    FCFSScheduler,
+    SchedulerConfig,
+    SLOScheduler,
+    VerifyRequest,
+)
+
+COEFFS = EstimatorCoeffs(a=3.3e-5, b_compute=3.5e-8, b_read=4.6e-6, c=0.015)
+
+
+def mk_req(i, *, arrival=0.0, deadline=1.0, draft=6, cached=200, alpha=0.8,
+           prefill=0):
+    return VerifyRequest(
+        req_id=i, session_id=i, slo_class=0, arrival=arrival,
+        deadline=deadline, draft_len=draft, cached_len=cached, alpha=alpha,
+        prefill_tokens=prefill, enqueued_at=arrival,
+    )
+
+
+@st.composite
+def request_pool(draw):
+    n = draw(st.integers(1, 24))
+    reqs = []
+    for i in range(n):
+        reqs.append(
+            mk_req(
+                i,
+                arrival=draw(st.floats(0, 1)),
+                deadline=draw(st.floats(0.01, 3.0)),
+                draft=draw(st.integers(1, 16)),
+                cached=draw(st.integers(0, 4000)),
+                alpha=draw(st.floats(0.1, 0.95)),
+            )
+        )
+    return reqs
+
+
+@settings(max_examples=40, deadline=None)
+@given(pool=request_pool(), t_k=st.floats(0, 2.0))
+def test_slo_schedule_respects_constraints(pool, t_k):
+    cfg = SchedulerConfig(memory_budget_tokens=20_000, max_batch_requests=8)
+    s = SLOScheduler(cfg, COEFFS)
+    d = s.schedule(pool, t_k)
+    # batch drawn from pending, no duplicates
+    ids = [r.req_id for r in d.batch]
+    assert len(ids) == len(set(ids))
+    assert set(ids) <= {r.req_id for r in pool}
+    # memory + size constraints
+    assert len(d.batch) <= cfg.max_batch_requests
+    assert s.memory_tokens(d.batch) <= cfg.memory_budget_tokens
+    # every *winnable* admitted request still meets its deadline per the
+    # estimator (doomed requests are exempt — they violate regardless)
+    t_batch = s.batch_time(d.batch)
+    for r in d.batch:
+        doomed = t_k + s.v_hat(r) + cfg.guard_time > r.deadline
+        if not doomed:
+            assert t_k + t_batch + cfg.guard_time <= r.deadline + 1e-9
+
+
+def test_critical_fast_path_prioritizes_edf():
+    """A critical (near-LST) request must preempt higher-utility ones."""
+    cfg = SchedulerConfig(max_batch_requests=1)
+    s = SLOScheduler(cfg, COEFFS)
+    crit = mk_req(1, deadline=0.08, draft=2, cached=100, alpha=0.2)   # low U
+    rich = mk_req(2, deadline=5.0, draft=16, cached=0, alpha=0.95)    # high U
+    d = s.schedule([rich, crit], t_k=0.05)
+    assert [r.req_id for r in d.batch] == [1]
+    assert d.critical == 1
+
+
+def test_best_effort_fill_orders_by_utility():
+    cfg = SchedulerConfig(max_batch_requests=2)
+    s = SLOScheduler(cfg, COEFFS)
+    lo = mk_req(1, deadline=10.0, draft=2, cached=3000, alpha=0.2)
+    hi = mk_req(2, deadline=10.0, draft=12, cached=10, alpha=0.9)
+    mid = mk_req(3, deadline=10.0, draft=8, cached=100, alpha=0.6)
+    d = s.schedule([lo, hi, mid], t_k=0.0)
+    assert [r.req_id for r in d.batch] == [2, 3]
+
+
+def test_doomed_requests_still_get_served():
+    """Requests past their deadline must not starve (they batch with the
+    best-effort fill instead of blocking the critical path)."""
+    cfg = SchedulerConfig()
+    s = SLOScheduler(cfg, COEFFS)
+    dead = mk_req(1, deadline=0.001, draft=4)
+    live = mk_req(2, deadline=5.0, draft=4)
+    d = s.schedule([dead, live], t_k=1.0)
+    assert {r.req_id for r in d.batch} == {1, 2}
+
+
+def test_fcfs_orders_by_arrival():
+    cfg = SchedulerConfig(max_batch_requests=2)
+    s = FCFSScheduler(cfg, COEFFS)
+    a = mk_req(1, arrival=0.3)
+    b = mk_req(2, arrival=0.1)
+    c = mk_req(3, arrival=0.2)
+    d = s.schedule([a, b, c], t_k=1.0)
+    assert [r.req_id for r in d.batch] == [2, 3]
+
+
+def test_memory_budget_blocks_admission():
+    cfg = SchedulerConfig(memory_budget_tokens=500)
+    s = SLOScheduler(cfg, COEFFS)
+    big = mk_req(1, cached=480, draft=4, deadline=10.0)
+    other = mk_req(2, cached=480, draft=4, deadline=10.0)
+    d = s.schedule([big, other], t_k=0.0)
+    assert len(d.batch) == 1
+
+
+def test_sled_uncached_request_costs_prefill():
+    """prefill_tokens inflate new_tokens (SLED semantics) and the estimate."""
+    cached = mk_req(1, cached=1000, draft=6, prefill=0)
+    uncached = mk_req(2, cached=0, draft=6, prefill=1000)
+    assert uncached.new_tokens == 1007 and cached.new_tokens == 7
+    s = SLOScheduler(SchedulerConfig(), COEFFS)
+    assert s.v_hat(uncached) > s.v_hat(cached)

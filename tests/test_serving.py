@@ -1,0 +1,139 @@
+"""End-to-end serving integration: engine slot model, client/server loop,
+greedy losslessness (speculative output == pure target decode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.estimator import EstimatorCoeffs
+from repro.models import build
+from repro.serving.client import EdgeDevice
+from repro.serving.engine import VerificationEngine, VerifyItem
+from repro.serving.server import WISPServer
+
+COEFFS = EstimatorCoeffs(a=1e-4, b_compute=1e-8, b_read=1e-6, c=1e-3)
+
+
+@pytest.fixture(scope="module")
+def dense_pair():
+    cfg = get_config("qwen2-7b").reduced()
+    bundle = build(cfg)
+    tparams = bundle.init(jax.random.PRNGKey(0), dtype=jnp.float32)
+    dparams = bundle.init(jax.random.PRNGKey(1), dtype=jnp.float32)
+    return cfg, bundle, tparams, dparams
+
+
+def _autoregressive_greedy(bundle, params, prompt, n_tokens, max_len=256):
+    cfg = bundle.cfg
+    cache = bundle.init_cache(1, max_len, dtype=jnp.float32)
+    toks = jnp.asarray(np.asarray(prompt, np.int32)[None])
+    logits, cache = bundle.prefill(params, {"tokens": toks}, cache)
+    out = [int(jnp.argmax(logits[0, len(prompt) - 1]))]
+    pos = len(prompt)
+    for _ in range(n_tokens - 1):
+        lg, cache = bundle.decode(
+            params, jnp.asarray([[out[-1]]], jnp.int32), cache, jnp.int32(pos)
+        )
+        out.append(int(jnp.argmax(lg[0, -1])))
+        pos += 1
+    return out
+
+
+@pytest.mark.slow
+def test_greedy_speculative_is_lossless(dense_pair):
+    """The WISP serve loop with greedy accept rule must emit EXACTLY the
+    target model's greedy decode, token for token, regardless of the draft
+    model — the core speculative-decoding guarantee."""
+    cfg, bundle, tparams, dparams = dense_pair
+    prompt = [3, 1, 4, 1, 5, 9]
+    want = _autoregressive_greedy(bundle, tparams, prompt, 12)
+
+    engine = VerificationEngine(
+        cfg, tparams, max_slots=2, max_len=256, method="greedy"
+    )
+    server = WISPServer(engine, COEFFS)
+    dev = EdgeDevice(cfg, dparams, k_max=4, greedy=True, max_len=256)
+    first = server.open_session(0, prompt, slo_class=4)
+    dev.start_session(0, prompt, first)
+    assert first == want[0]
+    while len(dev.response_tokens) < len(want):
+        res = dev.draft_round()
+        server.submit(0, res.tokens, res.q_logits, now=0.0, t_draft=0.0,
+                      t_network=0.0)
+        (v,) = server.step(0.0)
+        dev.apply_verdict(v.accept_len, v.token, res.tokens)
+    assert dev.response_tokens[: len(want)] == want
+
+
+def test_engine_slot_reuse_and_isolation(dense_pair):
+    """Closing a session frees its slot; a new session on the reused slot
+    must not see stale state."""
+    cfg, bundle, tparams, _ = dense_pair
+    engine = VerificationEngine(cfg, tparams, max_slots=1, max_len=128,
+                                method="greedy")
+    s1, t1 = engine.new_session([7, 8, 9])
+    engine.close_session(s1)
+    s2, t2 = engine.new_session([7, 8, 9])
+    assert s1 == s2          # only one slot
+    assert t1 == t2          # same prompt -> same first token (greedy)
+    with pytest.raises(RuntimeError):
+        engine.new_session([1, 2])   # slot exhausted
+
+
+def test_engine_batched_verify_matches_solo(dense_pair):
+    """Verification interference must not change *results*: a request
+    verified in a batch gets the same accept/reject as verified alone."""
+    cfg, bundle, tparams, dparams = dense_pair
+    rng = np.random.default_rng(0)
+
+    def fresh_engine():
+        return VerificationEngine(cfg, tparams, max_slots=4, max_len=128,
+                                  method="greedy")
+
+    prompts = [[2, 3, 4], [9, 8, 7, 6], [5, 5, 5]]
+    drafts = [rng.integers(0, cfg.vocab, size=k).astype(np.int32)
+              for k in (3, 2, 4)]
+
+    # solo
+    solo = []
+    for p, d in zip(prompts, drafts):
+        eng = fresh_engine()
+        slot, _ = eng.new_session(p)
+        (o,) = eng.verify([VerifyItem(slot=slot, draft_tokens=d,
+                                      q_logits=np.zeros((len(d), cfg.vocab),
+                                                        np.float32))])
+        solo.append((o.accept_len, o.token))
+
+    # batched
+    eng = fresh_engine()
+    items = []
+    for p, d in zip(prompts, drafts):
+        slot, _ = eng.new_session(p)
+        items.append(VerifyItem(slot=slot, draft_tokens=d,
+                                q_logits=np.zeros((len(d), cfg.vocab),
+                                                  np.float32)))
+    outs = eng.verify(items)
+    batched = [(o.accept_len, o.token) for o in outs]
+    assert solo == batched
+
+
+def test_server_tracks_committed_and_alpha(dense_pair):
+    cfg, bundle, tparams, dparams = dense_pair
+    engine = VerificationEngine(cfg, tparams, max_slots=2, max_len=128)
+    server = WISPServer(engine, COEFFS)
+    dev = EdgeDevice(cfg, dparams, k_max=3, max_len=128)
+    first = server.open_session(0, [1, 2, 3], slo_class=2)
+    dev.start_session(0, [1, 2, 3], first)
+    a0 = server.sessions[0].alpha
+    for r in range(3):
+        res = dev.draft_round()
+        server.submit(0, res.tokens, res.q_logits, now=float(r),
+                      t_draft=res.draft_time, t_network=0.01)
+        (v,) = server.step(float(r))
+        dev.apply_verdict(v.accept_len, v.token, res.tokens)
+        # client and server agree on the committed stream length
+        assert server.sessions[0].committed_len == len(dev.session.committed)
+    assert server.sessions[0].rounds == 3
+    server.close_session(0)
+    assert 0 not in server.sessions

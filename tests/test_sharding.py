@@ -1,0 +1,103 @@
+"""Logical-axis sharding resolution: divisibility + uniqueness guards."""
+import jax
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.common.sharding import (
+    SERVE_RULES,
+    TRAIN_RULES,
+    logical_to_spec,
+    make_param_shardings,
+)
+from repro.launch.mesh import make_test_mesh
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    # single CPU device: mesh axes of size 1 exercise the rule plumbing
+    return make_test_mesh(1, 1)
+
+
+class FakeMesh:
+    """Shape-only stand-in so guards can be tested against big meshes
+    without 256 devices."""
+
+    def __init__(self, **shape):
+        self.shape = shape
+
+
+def test_divisibility_guard_skips_nondivisible():
+    mesh = FakeMesh(data=16, model=16)
+    # 4 kv heads cannot shard over model=16 -> replicated
+    spec = logical_to_spec(("layers", "act_batch", "act_cache", "act_kv", None),
+                           (28, 128, 32768, 4, 128), mesh, SERVE_RULES)
+    assert spec == P(None, "data", "model")
+    # 64 query heads CAN shard over 16
+    spec = logical_to_spec(("embed", "heads", "head_dim"),
+                           (8192, 64, 128), mesh, TRAIN_RULES)
+    assert spec == P("data", "model")
+
+
+def test_uniqueness_guard_one_axis_per_tensor():
+    mesh = FakeMesh(data=16, model=16)
+    # vocab and mlp both want "model": first one wins
+    spec = logical_to_spec(("vocab", "mlp"), (256000, 14336), mesh, TRAIN_RULES)
+    assert spec == P("model")
+
+
+def test_multi_axis_batch_sharding():
+    mesh = FakeMesh(pod=2, data=16, model=16)
+    spec = logical_to_spec(("act_batch", "act_seq"), (256, 4096), mesh,
+                           TRAIN_RULES)
+    assert spec == P(("pod", "data"), "model")
+    # batch not divisible by pod*data -> falls back to the divisible prefix
+    spec = logical_to_spec(("act_batch", "act_seq"), (2, 4096), mesh,
+                           TRAIN_RULES)
+    assert spec == P(("pod",), "model")
+
+
+def test_rank_mismatch_raises():
+    mesh = FakeMesh(data=2)
+    with pytest.raises(ValueError):
+        logical_to_spec(("embed",), (8, 8), mesh, TRAIN_RULES)
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    dims=st.lists(st.sampled_from([1, 2, 3, 4, 6, 8, 16, 128, 256]), min_size=1,
+                  max_size=4),
+    axes=st.lists(
+        st.sampled_from(["embed", "heads", "mlp", "vocab", "act_batch", None]),
+        min_size=1, max_size=4,
+    ),
+)
+def test_spec_always_valid(dims, axes):
+    n = min(len(dims), len(axes))
+    dims, axes = dims[:n], axes[:n]
+    mesh = FakeMesh(pod=2, data=4, model=4)
+    spec = logical_to_spec(axes, dims, mesh, TRAIN_RULES)
+    used = []
+    for entry, dim in zip(tuple(spec), dims):
+        if entry is None:
+            continue
+        group = entry if isinstance(entry, tuple) else (entry,)
+        prod = 1
+        for ax in group:
+            assert ax in mesh.shape
+            prod *= mesh.shape[ax]
+            used.append(ax)
+        assert dim % prod == 0, "divisibility guard violated"
+    assert len(used) == len(set(used)), "mesh axis reused within one tensor"
+
+
+def test_make_param_shardings_tree(mesh):
+    axes = {"w": ("embed", "mlp"), "b": ("mlp",)}
+    shapes = {
+        "w": jax.ShapeDtypeStruct((8, 16), "float32"),
+        "b": jax.ShapeDtypeStruct((16,), "float32"),
+    }
+    sh = make_param_shardings(axes, shapes, mesh, TRAIN_RULES)
+    assert set(sh) == {"w", "b"}
+    for v in jax.tree.leaves(sh):
+        assert isinstance(v, jax.sharding.NamedSharding)

@@ -1,0 +1,127 @@
+"""Simulator behaviour: system ordering, load monotonicity, attribution,
+capacity search."""
+import numpy as np
+import pytest
+
+from repro.sim import (
+    capacity_search,
+    centralized,
+    simulate,
+    sled,
+    wisp,
+)
+from repro.sim.acceptance import AcceptanceModel, PredictorOperatingPoint
+from repro.sim.systems import fcfs_cached, variant
+
+
+def test_violations_increase_with_load():
+    rates = [simulate(sled(n, sim_time=40.0)).violation_rate()
+             for n in (8, 64, 256)]
+    assert rates[0] <= rates[1] <= rates[2]
+
+
+def test_wisp_beats_sled_and_centralized_under_load():
+    N = 128
+    w = simulate(wisp(N, sim_time=40.0))
+    s = simulate(sled(N, sim_time=40.0))
+    c = simulate(centralized(N, sim_time=40.0))
+    assert w.violation_rate() < s.violation_rate()
+    assert w.violation_rate() < c.violation_rate()
+    assert w.goodput() > s.goodput()
+    assert w.goodput() > c.goodput()
+
+
+def test_slo_scheduler_cuts_violations_vs_fcfs_at_load():
+    N = 160
+    w = simulate(wisp(N, sim_time=40.0))
+    f = simulate(fcfs_cached(N, sim_time=40.0))
+    assert w.violation_rate() < f.violation_rate()
+
+
+def test_predictor_reduces_waste():
+    base = simulate(variant(wisp(32, sim_time=30.0), predictor=None))
+    pred = simulate(wisp(32, sim_time=30.0))
+    assert pred.waste_fraction() < base.waste_fraction()
+    assert pred.acceptance_rate() > base.acceptance_rate()
+
+
+def test_tighter_slo_fails_first():
+    r = simulate(wisp(224, sim_time=40.0))
+    v = [r.violation_rate(s) for s in (2.0, 4.0, 6.0, 8.0)]
+    assert v[0] <= v[-1]
+
+
+def test_attribution_classifies_violations():
+    r = simulate(sled(192, sim_time=30.0))
+    att = r.attribution()
+    kinds = {a["kind"] for a in att if a["violated"]}
+    assert kinds <= {"compute", "queue"}
+    assert any(a["violated"] for a in att)
+    for a in att:
+        assert (a["kind"] is None) == (not a["violated"])
+
+
+def test_capacity_search_monotone_fake():
+    calls = []
+
+    def make_cfg(n):
+        calls.append(n)
+        return n
+
+    import repro.sim.capacity as cap
+
+    def fake_violation(make, n):
+        return 0.0 if n <= 37 else 1.0
+
+    orig = cap.violation_rate
+    cap.violation_rate = fake_violation
+    try:
+        assert cap.capacity_search(make_cfg, eps=0.1, n_hi_cap=256) == 37
+    finally:
+        cap.violation_rate = orig
+
+
+def test_acceptance_model_matches_table5_block_fraction():
+    """Per-token alpha=0.80 with K=8 fixed window must give ~0.42 block
+    acceptance (paper Table 5, predictor OFF): E[L]/K = a(1-a^8)/(8(1-a))."""
+    rng = np.random.default_rng(0)
+    m = AcceptanceModel(0.80, rng)
+    tot_acc = tot_draft = 0
+    for _ in range(4000):
+        o = m.draft_block(8, None, fixed_k=8)
+        tot_acc += o.accept_len
+        tot_draft += o.n_drafted
+    frac = tot_acc / tot_draft
+    assert 0.38 < frac < 0.46
+
+
+def test_predictor_operating_point_improves_sent_acceptance():
+    """With the MLP operating point the acceptance of SENT tokens must rise
+    vs fixed-window (paper Table 5 ON vs OFF)."""
+    rng = np.random.default_rng(1)
+    mk = lambda: AcceptanceModel(0.85, np.random.default_rng(1))
+    m_off, m_on = mk(), mk()
+    off_acc = off_sent = on_acc = on_sent = 0
+    pred = PredictorOperatingPoint.mlp()
+    for _ in range(4000):
+        o = m_off.draft_block(8, None, fixed_k=8)
+        off_acc, off_sent = off_acc + o.accept_len, off_sent + o.n_sent
+        o = m_on.draft_block(8, pred)
+        on_acc, on_sent = on_acc + o.accept_len, on_sent + o.n_sent
+    assert on_acc / on_sent > off_acc / off_sent + 0.1
+
+
+def test_oracle_predictor_eliminates_waste():
+    rng = np.random.default_rng(2)
+    m = AcceptanceModel(0.8, rng)
+    for _ in range(500):
+        o = m.draft_block(8, PredictorOperatingPoint.oracle())
+        assert o.wasted <= 1    # only the flagged-but-undrafted boundary token
+        assert o.accept_len == o.n_sent
+
+
+def test_sim_deterministic_given_seed():
+    a = simulate(wisp(24, sim_time=20.0, seed=7))
+    b = simulate(wisp(24, sim_time=20.0, seed=7))
+    assert a.goodput() == b.goodput()
+    assert a.violation_rate() == b.violation_rate()

@@ -1,0 +1,163 @@
+"""The lossless accept/reject rule (paper Eq. 1-3): semantics + the
+distribution-preservation property that makes speculative decoding exact."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.speculative import (
+    committed_tokens,
+    speculative_verify,
+    wasted_tokens,
+)
+
+
+def _mk_logits(rng, B, K, V, sharp=1.0):
+    return jnp.asarray(rng.normal(size=(B, K, V)) * sharp, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# invariants (hypothesis)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    B=st.integers(1, 4),
+    K=st.integers(1, 8),
+    V=st.integers(2, 32),
+    seed=st.integers(0, 2**31 - 1),
+    method=st.sampled_from(["residual", "target", "greedy"]),
+)
+def test_verify_invariants(B, K, V, seed, method):
+    rng = np.random.default_rng(seed)
+    draft = jnp.asarray(rng.integers(0, V, size=(B, K)), jnp.int32)
+    dlen = jnp.asarray(rng.integers(0, K + 1, size=B), jnp.int32)
+    q = _mk_logits(rng, B, K, V)
+    p = _mk_logits(rng, B, K + 1, V)
+    out = speculative_verify(
+        jax.random.PRNGKey(seed), draft, dlen, q, p, method=method
+    )
+    L = np.asarray(out["accept_len"])
+    tok = np.asarray(out["token"])
+    mask = np.asarray(out["accept_mask"])
+    emitted = np.asarray(out["num_emitted"])
+    dl = np.asarray(dlen)
+    # 0 <= L <= draft_len
+    assert (L >= 0).all() and (L <= dl).all()
+    # emitted = L + 1
+    assert (emitted == L + 1).all()
+    # accepted mask: exactly L leading positions within the valid prefix
+    assert (mask.sum(axis=1) == L).all()
+    for b in range(B):
+        assert mask[b, : L[b]].all()
+        assert not mask[b, L[b]:].any()
+    # token in vocab
+    assert (tok >= 0).all() and (tok < V).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_greedy_accepts_iff_argmax(seed):
+    rng = np.random.default_rng(seed)
+    B, K, V = 3, 6, 17
+    draft = jnp.asarray(rng.integers(0, V, size=(B, K)), jnp.int32)
+    dlen = jnp.full((B,), K, jnp.int32)
+    q = _mk_logits(rng, B, K, V)
+    p = _mk_logits(rng, B, K + 1, V)
+    out = speculative_verify(
+        jax.random.PRNGKey(0), draft, dlen, q, p, method="greedy"
+    )
+    am = np.asarray(jnp.argmax(p[:, :K], axis=-1))
+    L = np.asarray(out["accept_len"])
+    d = np.asarray(draft)
+    for b in range(B):
+        expect = 0
+        while expect < K and d[b, expect] == am[b, expect]:
+            expect += 1
+        assert L[b] == expect
+        # correction token is the target argmax at the stop position
+        assert np.asarray(out["token"])[b] == np.asarray(
+            jnp.argmax(p[b, L[b]])
+        )
+
+
+def test_wasted_and_committed_helpers():
+    draft = jnp.asarray([[5, 6, 7], [8, 9, 10]], jnp.int32)
+    L = jnp.asarray([1, 3], jnp.int32)
+    tok = jnp.asarray([99, 100], jnp.int32)
+    out = np.asarray(committed_tokens(draft, L, tok))
+    assert out[0, :2].tolist() == [5, 99]
+    assert out[1, :4].tolist() == [8, 9, 10, 100]
+    w = np.asarray(wasted_tokens(jnp.asarray([3, 3]), L))
+    assert w.tolist() == [2, 0]
+
+
+# ---------------------------------------------------------------------------
+# losslessness: the committed-token marginal equals the target distribution
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("sharp_q", [0.5, 2.0])
+def test_residual_rule_preserves_target_distribution(sharp_q):
+    """With K=1 the first committed token of each round must be an exact
+    sample from p regardless of q (Leviathan Thm. 1).  Empirical TV distance
+    over many trials must be small."""
+    rng = np.random.default_rng(0)
+    V = 8
+    trials = 4000
+    q_logits = jnp.asarray(rng.normal(size=(1, 1, V)) * sharp_q, jnp.float32)
+    p_logits = jnp.asarray(rng.normal(size=(1, 2, V)), jnp.float32)
+    p = np.asarray(jax.nn.softmax(p_logits[0, 0]))
+    q = np.asarray(jax.nn.softmax(q_logits[0, 0]))
+
+    counts = np.zeros(V)
+    key = jax.random.PRNGKey(0)
+    for t in range(trials):
+        key, kd, kv = jax.random.split(key, 3)
+        # draft token ~ q
+        y = jax.random.categorical(kd, q_logits[0, 0])
+        out = speculative_verify(
+            kv,
+            y.reshape(1, 1).astype(jnp.int32),
+            jnp.asarray([1], jnp.int32),
+            q_logits,
+            p_logits,
+            method="residual",
+        )
+        L = int(out["accept_len"][0])
+        first = int(y) if L >= 1 else int(out["token"][0])
+        counts[first] += 1
+    emp = counts / trials
+    tv = 0.5 * np.abs(emp - p).sum()
+    assert tv < 0.05, f"TV distance {tv:.3f} too large; emp={emp}, p={p}"
+
+
+def test_target_method_biased_but_valid():
+    """The paper's Eq. (3) as written (sample from p at the stop position)
+    still emits valid tokens; kept as an ablation — just check it runs."""
+    rng = np.random.default_rng(1)
+    B, K, V = 2, 4, 11
+    out = speculative_verify(
+        jax.random.PRNGKey(1),
+        jnp.asarray(rng.integers(0, V, (B, K)), jnp.int32),
+        jnp.asarray([4, 2], jnp.int32),
+        _mk_logits(rng, B, K, V),
+        _mk_logits(rng, B, K + 1, V),
+        method="target",
+    )
+    assert out["token"].shape == (B,)
+
+
+def test_full_accept_bonus_token():
+    """If p == q and u ~ U(0,1) <= 1 always accepts, L == draft_len and the
+    bonus token comes from p[:, L]."""
+    B, K, V = 2, 3, 5
+    rng = np.random.default_rng(2)
+    q = _mk_logits(rng, B, K, V)
+    p = jnp.concatenate([q, _mk_logits(rng, B, 1, V)], axis=1)
+    draft = jnp.asarray(rng.integers(0, V, (B, K)), jnp.int32)
+    dlen = jnp.full((B,), K, jnp.int32)
+    out = speculative_verify(jax.random.PRNGKey(3), draft, dlen, q, p)
+    assert (np.asarray(out["accept_len"]) == K).all()
