@@ -28,6 +28,7 @@ TABLES = {
     "predictor": "Tables 4/10/11 + Figs. 2-3 (rejection predictor)",
     "predictor_ablation": "Tables 5/6 (predictor ON/OFF ablations)",
     "capacity": "Table 2 (system capacity per SLO class)",
+    "paged_serving": "§4.5 (dense vs paged engine: throughput + prefix hits)",
 }
 
 

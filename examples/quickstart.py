@@ -26,17 +26,27 @@ def main():
     target_params = bundle.init(jax.random.PRNGKey(0))
     draft_params = bundle.init(jax.random.PRNGKey(1))
 
-    # 2. verification server: engine + SLO-aware scheduler + estimator
+    # 2. verification server: engine + SLO-aware scheduler + estimator.
+    #    Attention-family targets get the paged KV backend automatically:
+    #    sessions draw 16-token pages (256 on TPU) from a shared pool and
+    #    identical prompt prefixes share physical pages.
     engine = VerificationEngine(target_cfg, target_params, max_slots=4,
-                                max_len=512)
+                                max_len=512, page_size=16)
     server = WISPServer(engine, analytic_tpu_coeffs(target_cfg))
+    print(f"engine backend: {'paged' if engine.paged else 'dense'}  "
+          f"KV budget: {engine.memory_budget_tokens()} tokens")
 
     # 3. edge device: draft model + drafting controller
     device = EdgeDevice(draft_cfg, draft_params, k_max=6, draft_speed=50.0)
 
-    # 4. open a session (server prefills the prompt, returns token 0)
-    prompt = [11, 24, 35, 46, 57]
-    first = server.open_session(0, prompt, slo_class=3)
+    # 4. open a session (server prefills the prompt, returns token 0).
+    #    The 16-token "system preamble" fills one full page, so later
+    #    sessions with the same preamble share its physical KV page.
+    preamble = list(range(100, 116))
+    prompt = preamble + [11, 24, 35, 46, 57]
+    # queue_on_full=False: this synchronous demo wants a loud failure,
+    # not a queued admission, if the KV pool is misconfigured
+    first = server.open_session(0, prompt, slo_class=3, queue_on_full=False)
     device.start_session(0, prompt, first)
     print(f"prompt={prompt}  first committed token={first}")
 
@@ -62,6 +72,17 @@ def main():
 
     print("response tokens:", device.response_tokens)
     print("engine stats:", engine.stats)
+
+    # 6. prefix sharing: a second session with the same preamble reuses the
+    #    first session's full prompt pages (content-addressed prefix cache)
+    server.open_session(1, preamble + [86, 75, 30, 9], slo_class=3,
+                        queue_on_full=False)
+    st = engine.prefix_cache_stats()
+    print(
+        f"second session with same prompt: prefix hits={st['hits']} "
+        f"pages in use={st['pages_in_use']} "
+        f"live KV budget={engine.memory_budget_tokens()} tokens"
+    )
 
 
 if __name__ == "__main__":

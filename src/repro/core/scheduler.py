@@ -58,7 +58,12 @@ class VerifyRequest:
 
 @dataclasses.dataclass
 class SchedulerConfig:
-    memory_budget_tokens: int = 1 << 20   # KV-token budget M(t_k)
+    #: KV-token budget M(t_k).  A static default for standalone use; the
+    #: serving coordinator overrides it per dispatch epoch (via
+    #: ``schedule(..., memory_budget_tokens=...)``) from the verification
+    #: engine's live page-allocator state (free + evictable pages), so
+    #: admission tracks real cache pressure, not a constant.
+    memory_budget_tokens: int = 1 << 20
     guard_time: float = 0.005             # delta (s)
     #: how long before LST a request enters the critical fast path.  The
     #: paper's "t >= LST_i" alone leaves a zero-width window between
@@ -76,6 +81,9 @@ class ScheduleDecision:
     critical: int      # how many came from the critical fast path
     skipped_infeasible: int
     epoch: float
+    #: the budget this epoch was admitted against (observability: dynamic
+    #: budgets change per epoch with cache pressure)
+    memory_budget_tokens: int = 0
 
 
 class SLOScheduler:
@@ -106,16 +114,24 @@ class SLOScheduler:
     def memory_tokens(self, batch: Iterable[VerifyRequest]) -> int:
         return sum(r.cached_len + r.new_tokens for r in batch)
 
-    def feasible_add(self, batch, r, t_k, doomed: set | None = None) -> bool:
+    def feasible_add(
+        self, batch, r, t_k, doomed: set | None = None,
+        memory_budget_tokens: int | None = None,
+    ) -> bool:
         """FeasibleAdd (Alg. 1): memory + earliest *winnable* deadline vs
         estimated batch completion.  Requests in ``doomed`` have already
         missed their deadline — Eq. 15 cannot bind for them (they violate
         regardless), so they do not constrain d_min; excluding them avoids
         the one-request death-spiral a literal reading would cause."""
+        budget = (
+            self.cfg.memory_budget_tokens
+            if memory_budget_tokens is None
+            else memory_budget_tokens
+        )
         nb = batch + [r]
         if len(nb) > self.cfg.max_batch_requests:
             return False
-        if self.memory_tokens(nb) > self.cfg.memory_budget_tokens:
+        if self.memory_tokens(nb) > budget:
             return False
         doomed = doomed or set()
         winnable = [x.deadline for x in nb if x.req_id not in doomed]
@@ -124,7 +140,18 @@ class SLOScheduler:
         return t_k + self.batch_time(nb) + self.cfg.guard_time <= min(winnable)
 
     # -- Algorithm 1 -------------------------------------------------------
-    def schedule(self, pending: list, t_k: float) -> ScheduleDecision:
+    def schedule(
+        self, pending: list, t_k: float, *,
+        memory_budget_tokens: int | None = None,
+    ) -> ScheduleDecision:
+        """``memory_budget_tokens`` overrides the static config budget for
+        this epoch (the coordinator passes the engine's live free-page
+        capacity here)."""
+        budget = (
+            self.cfg.memory_budget_tokens
+            if memory_budget_tokens is None
+            else memory_budget_tokens
+        )
         # Requests that cannot meet their deadline even alone are "doomed":
         # they violate regardless of what we do, so they must not block the
         # critical fast path (a literal Alg. 1 would dispatch them one at a
@@ -150,7 +177,8 @@ class SLOScheduler:
         skipped = 0
         stop = False
         for r in crit:
-            if self.feasible_add(batch, r, t_k, doomed):
+            if self.feasible_add(batch, r, t_k, doomed,
+                                 memory_budget_tokens=budget):
                 batch.append(r)
             else:
                 stop = True
@@ -159,7 +187,8 @@ class SLOScheduler:
         n_crit = len(batch)
         if not stop:
             for r in non:
-                if self.feasible_add(batch, r, t_k, doomed):
+                if self.feasible_add(batch, r, t_k, doomed,
+                                     memory_budget_tokens=budget):
                     batch.append(r)
                 else:
                     skipped += 1
@@ -170,6 +199,7 @@ class SLOScheduler:
             critical=n_crit,
             skipped_infeasible=skipped,
             epoch=t_k,
+            memory_budget_tokens=budget,
         )
 
 
@@ -188,12 +218,20 @@ class FCFSScheduler:
     def memory_tokens(self, batch) -> int:
         return sum(r.cached_len + r.new_tokens for r in batch)
 
-    def schedule(self, pending: list, t_k: float) -> ScheduleDecision:
+    def schedule(
+        self, pending: list, t_k: float, *,
+        memory_budget_tokens: int | None = None,
+    ) -> ScheduleDecision:
+        budget = (
+            self.cfg.memory_budget_tokens
+            if memory_budget_tokens is None
+            else memory_budget_tokens
+        )
         batch: list = []
         for r in sorted(pending, key=lambda x: x.arrival):
             if len(batch) >= self.cfg.max_batch_requests:
                 break
-            if self.memory_tokens(batch + [r]) > self.cfg.memory_budget_tokens:
+            if self.memory_tokens(batch + [r]) > budget:
                 break
             batch.append(r)
         return ScheduleDecision(
@@ -202,4 +240,5 @@ class FCFSScheduler:
             critical=0,
             skipped_infeasible=0,
             epoch=t_k,
+            memory_budget_tokens=budget,
         )

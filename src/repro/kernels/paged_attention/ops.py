@@ -1,11 +1,30 @@
 """Public entry for paged decode attention: Pallas on TPU, interpret mode
-elsewhere."""
+elsewhere.
+
+Two consumers:
+  * plain decode — ``paged_attention_op``, one query token per sequence;
+  * speculative verification — ``paged_verify_attention_op``, K+1 query
+    tokens per sequence.  The verify block is flattened to (B*T) single-
+    token rows whose per-row length pointers encode causality (row (b, t)
+    sees base_lens[b] + t + 1 kv tokens), so the same single-query kernel
+    serves both paths and the block table stays the only addressing
+    structure (DESIGN.md §2).
+
+``scatter_kv_pages`` is the functional write path: new K/V land in the
+pages named by the block table; masked/padded positions are redirected to
+the reserved scratch page 0 so they can never clobber live pages.
+"""
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels.paged_attention.paged_attention import paged_attention as _kernel
-from repro.kernels.paged_attention.ref import paged_attention_ref, gather_pages
+from repro.kernels.paged_attention.ref import (
+    gather_pages,
+    paged_attention_ref,
+    paged_verify_attention_ref,
+)
 
 
 def paged_attention_op(q, k_pages, v_pages, block_table, lengths, *, softcap=0.0):
@@ -16,4 +35,66 @@ def paged_attention_op(q, k_pages, v_pages, block_table, lengths, *, softcap=0.0
     )
 
 
-__all__ = ["paged_attention_op", "paged_attention_ref", "gather_pages"]
+def paged_verify_attention_op(
+    q,                 # (B, T, H, D) new tokens at positions base..base+T-1
+    k_pages,           # (n_pages, P, Hkv, D) — new K/V already scattered in
+    v_pages,           # (n_pages, P, Hkv, D)
+    block_table,       # (B, n_max) int32
+    base_lens,         # (B,) int32 committed kv tokens BEFORE the new block
+    *,
+    softcap: float = 0.0,
+):
+    """Batched multi-token verification attention over paged KV.
+
+    Requires the new tokens' K/V to be scattered into the pages first (see
+    ``scatter_kv_pages``); causality within the block then falls out of the
+    per-row length pointer alone."""
+    B, T, H, D = q.shape
+    n_max = block_table.shape[1]
+    qf = q.reshape(B * T, H, D)
+    btf = jnp.repeat(block_table, T, axis=0)                        # (B*T, n_max)
+    lenf = (base_lens[:, None] + jnp.arange(T)[None, :] + 1).reshape(-1)
+    out = paged_attention_op(
+        qf, k_pages, v_pages, btf, lenf.astype(jnp.int32), softcap=softcap
+    )
+    return out.reshape(B, T, H, D)
+
+
+def scatter_kv_pages(
+    k_pages,           # (n_pages, P, Hkv, D) one layer's pages
+    v_pages,
+    k_new,             # (B, T, Hkv, D) K/V of the new tokens
+    v_new,
+    block_table,       # (B, n_max) int32
+    base_lens,         # (B,) int32 write offset (committed kv tokens)
+    t_lens,            # (B,) int32 valid new tokens per row (<= T)
+):
+    """Write new K/V through the block table (functional scatter).
+
+    Row b token t lands at page block_table[b, (base+t)//P], offset
+    (base+t)%P.  Positions past t_lens[b] (draft-length padding, padded
+    batch rows) are redirected to scratch page 0: distinct live rows write
+    disjoint pages, so the only scatter collisions are garbage-on-garbage
+    inside the scratch page."""
+    n_pages, P = k_pages.shape[:2]
+    B, T = k_new.shape[:2]
+    n_max = block_table.shape[1]
+    pos = base_lens[:, None] + jnp.arange(T)[None, :]               # (B, T)
+    valid = jnp.arange(T)[None, :] < t_lens[:, None]                # (B, T)
+    slot = jnp.clip(pos // P, 0, n_max - 1)
+    pid = jnp.take_along_axis(block_table, slot, axis=1)            # (B, T)
+    pid = jnp.where(valid, pid, 0)
+    off = jnp.where(valid, pos % P, 0)
+    k_pages = k_pages.at[pid, off].set(k_new.astype(k_pages.dtype))
+    v_pages = v_pages.at[pid, off].set(v_new.astype(v_pages.dtype))
+    return k_pages, v_pages
+
+
+__all__ = [
+    "paged_attention_op",
+    "paged_attention_ref",
+    "paged_verify_attention_op",
+    "paged_verify_attention_ref",
+    "scatter_kv_pages",
+    "gather_pages",
+]

@@ -16,6 +16,39 @@ def gather_pages(pages, block_table):
     return g.reshape(B, n_max * P, *g.shape[3:])
 
 
+def paged_verify_attention_ref(
+    q,                 # (B, T, H, D) new tokens at positions base..base+T-1
+    k_pages,           # (n_pages, P, Hkv, D) — new K/V already scattered in
+    v_pages,           # (n_pages, P, Hkv, D)
+    block_table,       # (B, n_max) int32
+    base_lens,         # (B,) int32 committed kv tokens BEFORE the new block
+    *,
+    softcap: float = 0.0,
+    scale=None,
+):
+    """Oracle for speculative verification over paged KV: query t of row b
+    attends to kv positions < base_lens[b] + t + 1 (history + the new
+    tokens up to and including itself)."""
+    B, T, H, D = q.shape
+    Hkv = k_pages.shape[2]
+    G = H // Hkv
+    scale = scale if scale is not None else D**-0.5
+    k = gather_pages(k_pages, block_table).astype(jnp.float32)
+    v = gather_pages(v_pages, block_table).astype(jnp.float32)
+    S = k.shape[1]
+    qg = q.reshape(B, T, Hkv, G, D).astype(jnp.float32)
+    s = jnp.einsum("bthgd,bshd->bhgts", qg, k) * scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    lens = base_lens[:, None] + jnp.arange(T)[None, :] + 1          # (B, T)
+    mask = jnp.arange(S)[None, None, :] < lens[:, :, None]          # (B, T, S)
+    s = jnp.where(mask[:, None, None], s, -1e30)
+    p = jnp.exp(s - s.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    o = jnp.einsum("bhgts,bshd->bthgd", p, v)
+    return o.reshape(B, T, H, D).astype(q.dtype)
+
+
 def paged_attention_ref(
     q,                 # (B, H, D) one new token per sequence
     k_pages,           # (n_pages, P, Hkv, D)

@@ -14,19 +14,21 @@ from __future__ import annotations
 import jax
 
 
-def _auto(n):
-    return (jax.sharding.AxisType.Auto,) * n
+def _mesh_kwargs(n):
+    # AxisType landed after jax 0.4; older runtimes default to Auto anyway
+    at = getattr(jax.sharding, "AxisType", None)
+    return {} if at is None else {"axis_types": (at.Auto,) * n}
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return jax.make_mesh(shape, axes, **_mesh_kwargs(len(axes)))
 
 
 def make_test_mesh(data: int = 1, model: int = 1):
     """Tiny mesh over available devices (unit tests / CPU)."""
-    return jax.make_mesh((data, model), ("data", "model"), axis_types=_auto(2))
+    return jax.make_mesh((data, model), ("data", "model"), **_mesh_kwargs(2))
 
 
 def mesh_devices(mesh) -> int:

@@ -71,8 +71,11 @@ def run_serving(
         )
         prompt = rng.integers(2, tcfg.vocab, size=prompt_len).tolist()
         slo_class = int(rng.integers(1, 5))
+        # synchronous driver: every device must be admitted up front, so
+        # fail loudly on capacity exhaustion instead of queueing
         first = server.open_session(i, prompt, slo_class=slo_class,
-                                    draft_speed=dev.controller.draft_speed)
+                                    draft_speed=dev.controller.draft_speed,
+                                    queue_on_full=False)
         dev.start_session(i, prompt, first)
         edges.append(dev)
         stats.append(WDTStats())

@@ -227,6 +227,75 @@ def encdec_prefill(cfg, params, batch, cache, *, ctx=NULL_CTX,
     return L.logits_out(x, params["embed"], tied=True), cache
 
 
+def encdec_cross_kv(cfg, params, frames, *, ctx=NULL_CTX):
+    """Run the encoder and project per-decoder-layer cross-attention K/V —
+    computed once at session open for the paged engine.  Returns (k, v) of
+    shape (n_layers, B, F, Hkv, hd)."""
+    spec = _spec(cfg)
+    mem = encode(cfg, params, frames, ctx=ctx)
+
+    def body(c, bp):
+        return c, L.cross_kv(bp["xattn"], mem, spec)
+
+    _, (k, v) = loops.scan(body, 0, params["dec_blocks"])
+    return k, v
+
+
+def encdec_decode_paged(
+    cfg,
+    params,
+    tokens,            # (B, T) new tokens at positions base_lens[b] + t
+    k_pages,           # (n_layers, n_pages, P, Hkv, hd) decoder self-attn KV
+    v_pages,
+    block_table,       # (B, n_max) int32
+    base_lens,         # (B,) int32
+    t_lens,            # (B,) int32 valid new tokens per row
+    mem_cache,         # {'k_mem','v_mem'}: (n_layers, B, F, Hkv, hd)
+    *,
+    ctx=NULL_CTX,
+):
+    """Paged analogue of ``encdec_decode``: decoder self-attention runs over
+    `PagedKV` pages; cross-attention memory stays dense (bounded by
+    encoder_frames, not part of the growing KV)."""
+    from repro.kernels.paged_attention.ops import (
+        paged_verify_attention_op,
+        scatter_kv_pages,
+    )
+
+    spec = _spec(cfg)
+    base_lens = jnp.asarray(base_lens, jnp.int32)
+    t_lens = jnp.asarray(t_lens, jnp.int32)
+    block_table = jnp.asarray(block_table, jnp.int32)
+    x = _embed_tokens(cfg, params, tokens, base_lens)
+    T = tokens.shape[1]
+
+    def body(x, inp):
+        bp, kpl, vpl, kx, vx = inp
+        h = L.layernorm(x, bp["ln1"], cfg.norm_eps)
+        positions = base_lens[:, None] + jnp.arange(T)[None, :]
+        q, k, v = L.qkv_proj(bp["attn"], h, spec, positions)
+        kpl, vpl = scatter_kv_pages(
+            kpl, vpl, k, v, block_table, base_lens, t_lens
+        )
+        o = paged_verify_attention_op(
+            q, kpl, vpl, block_table, base_lens, softcap=spec.softcap
+        )
+        x = x + L.attn_out(bp["attn"], o)
+        h = L.layernorm(x, bp["lnx"], cfg.norm_eps)
+        x = x + L.cross_attention(bp["xattn"], h, spec, kx, vx)
+        h = L.layernorm(x, bp["ln2"], cfg.norm_eps)
+        x = x + L.mlp_apply(bp["mlp"], h, cfg.gated_mlp, ctx=ctx)
+        return x, (kpl, vpl)
+
+    x, (k_pages, v_pages) = loops.scan(
+        body, x,
+        (params["dec_blocks"], k_pages, v_pages,
+         mem_cache["k_mem"], mem_cache["v_mem"]),
+    )
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return L.logits_out(x, params["embed"], tied=True), (k_pages, v_pages)
+
+
 def encdec_decode(cfg, params, tokens, cache, pos, *, ctx=NULL_CTX):
     spec = _spec(cfg)
     x = _embed_tokens(cfg, params, tokens, pos)

@@ -19,6 +19,10 @@ from repro.common import loops
 
 from repro.common.sharding import NULL_CTX
 from repro.configs.base import ArchConfig
+from repro.kernels.paged_attention.ops import (
+    paged_verify_attention_op,
+    scatter_kv_pages,
+)
 from repro.models import layers as L
 from repro.models.moe import init_moe, moe_apply, moe_axes
 
@@ -411,6 +415,128 @@ def prefill(cfg: ArchConfig, params, batch, cache, *, ctx=NULL_CTX,
     if last_only:
         x = x[:, -1:]
     return _logits(cfg, params, x), cache
+
+
+def _apply_block_paged(
+    cfg, spec, bp, x, kp_l, vp_l, block_table, base_lens, t_lens, *, ctx,
+    dropless=True,
+):
+    """Self-attn + FFN for new tokens against one layer's KV *pages*
+    (paged decode/verify; DESIGN.md §2).  New K/V are scattered through the
+    block table before attention so causality within the new block falls
+    out of the per-row length pointers."""
+    B, T, _ = x.shape
+    h = L.rmsnorm(x, bp["ln1"], cfg.norm_eps)
+    positions = base_lens[:, None] + jnp.arange(T)[None, :]
+    q, k, v = L.qkv_proj(bp["attn"], h, spec, positions)
+    kp_l, vp_l = scatter_kv_pages(
+        kp_l, vp_l, k, v, block_table, base_lens, t_lens
+    )
+    o = paged_verify_attention_op(
+        q, kp_l, vp_l, block_table, base_lens, softcap=spec.softcap
+    )
+    att = L.attn_out(bp["attn"], o)
+    if cfg.sandwich_norm:
+        att = L.rmsnorm(att, bp["ln1_post"], cfg.norm_eps)
+    x = x + att
+    h = L.rmsnorm(x, bp["ln2"], cfg.norm_eps)
+    if cfg.moe is not None:
+        # verify: dropless, so results cannot depend on microbatch
+        # composition; prefill passes dropless=False (GShard capacity,
+        # matching the dense prefill path — see `prefill`'s rationale)
+        f, _ = moe_apply(bp["moe"], h, cfg.moe, ctx=ctx, dropless=dropless)
+    else:
+        f = L.mlp_apply(bp["mlp"], h, cfg.gated_mlp, ctx=ctx)
+    if cfg.sandwich_norm:
+        f = L.rmsnorm(f, bp["ln2_post"], cfg.norm_eps)
+    return x + f, kp_l, vp_l
+
+
+def decode_paged(
+    cfg: ArchConfig,
+    params,
+    tokens,            # (B, T) new tokens at positions base_lens[b] + t
+    k_pages,           # (n_layers, n_pages, P, Hkv, hd)
+    v_pages,
+    block_table,       # (B, n_max) int32 page ids per row
+    base_lens,         # (B,) int32 committed kv tokens per row
+    t_lens,            # (B,) int32 valid new tokens per row (<= T)
+    cross_cache=None,  # vlm: {'k_img','v_img'} (n_groups, B, Ni, Hkv, hd)
+    *,
+    dropless: bool = True,
+    ctx=NULL_CTX,
+):
+    """Paged-cache analogue of ``decode``: serves ragged prefill (T = prompt
+    suffix) and speculative verification (T = K+1) against `PagedKV` storage.
+    Returns (logits, (k_pages, v_pages)) with the new tokens' K/V scattered
+    into the pages.  Requires full (non-windowed) attention — the paged
+    kernel has no sliding-window mask (engine falls back to dense
+    otherwise).  ``dropless`` controls MoE routing: True for verification
+    (composition independence), False for prompt prefill (GShard capacity,
+    matching the dense prefill path)."""
+    spec = attn_spec(cfg)
+    if spec.window:
+        raise ValueError("decode_paged does not support sliding-window attn")
+    base_lens = jnp.asarray(base_lens, jnp.int32)
+    t_lens = jnp.asarray(t_lens, jnp.int32)
+    block_table = jnp.asarray(block_table, jnp.int32)
+    x = _embed_in(cfg, params, tokens)
+    x = ctx.cs(x, ("act_batch", None, "act_embed"))
+
+    if cfg.cross_attn_every:
+        per = cfg.cross_attn_every
+        n_groups = cfg.n_layers // per
+        kp = k_pages.reshape(n_groups, per, *k_pages.shape[1:])
+        vp = v_pages.reshape(n_groups, per, *v_pages.shape[1:])
+
+        def group_body(x, inp):
+            gp, kpg, vpg, kimg, vimg = inp
+
+            def self_body(xc, inner):
+                bp, kpl, vpl = inner
+                xo, kpl, vpl = _apply_block_paged(
+                    cfg, spec, bp, xc, kpl, vpl, block_table, base_lens,
+                    t_lens, ctx=ctx, dropless=dropless,
+                )
+                return xo, (kpl, vpl)
+
+            x, (kpg, vpg) = loops.scan(self_body, x, (gp["self"], kpg, vpg))
+            x = _apply_cross_block(cfg, spec, gp["cross"], x, kimg, vimg, ctx=ctx)
+            return x, (kpg, vpg)
+
+        x, (kp, vp) = loops.scan(
+            group_body, x,
+            (params["groups"], kp, vp,
+             cross_cache["k_img"], cross_cache["v_img"]),
+        )
+        k_pages = kp.reshape(cfg.n_layers, *kp.shape[2:])
+        v_pages = vp.reshape(cfg.n_layers, *vp.shape[2:])
+        return _logits(cfg, params, x), (k_pages, v_pages)
+
+    def body(x, inp):
+        bp, kpl, vpl = inp
+        x, kpl, vpl = _apply_block_paged(
+            cfg, spec, bp, x, kpl, vpl, block_table, base_lens, t_lens,
+            ctx=ctx, dropless=dropless,
+        )
+        return x, (kpl, vpl)
+
+    x, (k_pages, v_pages) = loops.scan(body, x, (params["blocks"], k_pages, v_pages))
+    return _logits(cfg, params, x), (k_pages, v_pages)
+
+
+def vlm_cross_kv(cfg: ArchConfig, params, image_embeds):
+    """Per-group gated-cross-attention K/V over the image embeddings —
+    computed once at session open for the paged engine (the dense path
+    computes these inside ``prefill``).  Returns (k, v) of shape
+    (n_groups, B, Ni, Hkv, hd)."""
+    spec = attn_spec(cfg)
+
+    def body(c, gp):
+        return c, L.cross_kv(gp["cross"]["attn"], image_embeds, spec)
+
+    _, (k, v) = loops.scan(body, 0, params["groups"])
+    return k, v
 
 
 def decode(cfg: ArchConfig, params, tokens, cache, pos, *, ctx=NULL_CTX):

@@ -1,15 +1,23 @@
 """Serving runtime: verification engine, paged KV + prefix cache, server,
 edge client, simulated transport."""
-from repro.serving.engine import VerificationEngine, VerifyItem, VerifyOutcome
+from repro.serving.engine import (
+    NoFreeSlots,
+    VerificationEngine,
+    VerifyItem,
+    VerifyOutcome,
+    supports_paged,
+)
 from repro.serving.kv_cache import PagedKV, PageAllocator, SeqPages, OutOfPages, PAGE_SIZE
 from repro.serving.client import EdgeDevice, EdgeSession
 from repro.serving.server import WISPServer, Verdict, ServerSession, DEFAULT_SLO_CLASSES
 from repro.serving.transport import NetworkModel
 
 __all__ = [
+    "NoFreeSlots",
     "VerificationEngine",
     "VerifyItem",
     "VerifyOutcome",
+    "supports_paged",
     "PagedKV",
     "PageAllocator",
     "SeqPages",

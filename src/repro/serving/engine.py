@@ -1,18 +1,25 @@
 """Verification engine (paper §4.5): batched one-step verification.
 
-Slot model: the engine owns a fixed-capacity cache with ``max_slots`` rows;
-sessions map to slots.  A verification batch gathers the selected slots'
-cache rows, runs the target model once over ``[x_last, y_1..y_K]`` with
-per-row positions (ragged), applies the lossless accept/reject rule, and
-scatters the updated rows back.
+Two cache backends, auto-selected per family (DESIGN.md §4):
 
-Two advance strategies, auto-selected per family:
-  * attention-family targets (dense/moe/vlm/audio): single ragged pass —
-    KV entries past a row's committed length are stale-but-masked, so
-    rollback is just the per-slot length pointer;
-  * recurrent targets (ssm/hybrid): stepwise verify — per-step states are
-    stacked and the state at the accepted length is selected per row
-    (recurrent state cannot be truncated; DESIGN.md §5).
+  * paged (attention families: dense/moe/vlm/audio, full attention) —
+    sessions allocate fixed-size pages from a shared `PagedKV` pool via a
+    block table; prompt prefill fills pages and registers full pages in the
+    content-addressed prefix index so concurrent sessions with a common
+    prompt prefix share pages; batched verification runs the target once
+    over ``[x_last, y_1..y_K]`` through the paged attention kernel with
+    per-row block tables and length pointers.  Accepted-length rollback is
+    the length pointer plus releasing now-unreachable tail pages.
+    Cross-attention K/V (vlm images, audio encoder memory) is bounded and
+    stays in a small dense per-slot side cache; prefix sharing is disabled
+    for those families (their self-attn KV is not a pure function of the
+    token ids).
+
+  * dense slots (recurrent families: ssm/hybrid, plus windowed-attention
+    configs) — the engine owns a fixed-capacity cache with ``max_slots``
+    rows; sessions map to slots.  Recurrent targets verify stepwise —
+    per-step states are stacked and the state at the accepted length is
+    selected per row (recurrent state cannot be truncated; DESIGN.md §5).
 
 Batch shapes are padded to fixed buckets (draft length to k_max, batch to
 powers of two) so jit compiles a bounded set of programs.
@@ -28,7 +35,23 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.speculative import speculative_verify
-from repro.models import build
+from repro.models import build, encdec, transformer
+from repro.serving.kv_cache import PAGE_SIZE, OutOfPages, PagedKV
+
+#: families whose self-attn KV can be paged; recurrent state cannot.
+ATTENTION_FAMILIES = ("dense", "moe", "vlm", "audio")
+
+
+class NoFreeSlots(RuntimeError):
+    """All ``max_slots`` session rows are occupied (admission-control
+    signal, like ``OutOfPages`` for page capacity)."""
+
+
+def supports_paged(cfg) -> bool:
+    """Paged verification needs full (non-windowed) softmax attention —
+    the paged kernel addresses history purely through block table +
+    length pointer; a sliding-window mask would need per-page offsets."""
+    return cfg.family in ATTENTION_FAMILIES and not cfg.sliding_window
 
 
 def _batch_axis_tree(cache_axes_tree):
@@ -74,6 +97,9 @@ class VerificationEngine:
         method: str = "residual",
         seed: int = 0,
         cache_dtype=jnp.float32,
+        paged: bool | None = None,
+        page_size: int = PAGE_SIZE,
+        n_pages: int | None = None,
     ):
         self.cfg = cfg
         self.bundle = build(cfg)
@@ -81,19 +107,87 @@ class VerificationEngine:
         self.max_slots = max_slots
         self.max_len = max_len
         self.method = method
-        self.cache = self.bundle.init_cache(max_slots, max_len, dtype=cache_dtype) \
-            if cfg.family != "ssm" else self.bundle.init_cache(max_slots, max_len)
-        self._bax = _batch_axis_tree(self.bundle.cache_axes())
+        self.recurrent = cfg.family in ("ssm", "hybrid")
+        self.paged = supports_paged(cfg) if paged is None else bool(paged)
+        if self.paged and not supports_paged(cfg):
+            raise ValueError(
+                f"paged verification unsupported for {cfg.name!r} "
+                f"(family={cfg.family}, window={cfg.sliding_window})"
+            )
         self.fed = np.zeros(max_slots, np.int64)        # KV-valid tokens/slot
         self.last_token = np.zeros(max_slots, np.int64) # committed[-1]/slot
         self.free_slots = list(range(max_slots - 1, -1, -1))
         self.rng = jax.random.PRNGKey(seed)
-        self.recurrent = cfg.family in ("ssm", "hybrid")
-        self._decode = jax.jit(self.bundle.decode)
-        self._prefill = jax.jit(self.bundle.prefill)
-        self.stats = {"batches": 0, "tokens_verified": 0, "tokens_committed": 0}
+        self.stats = {
+            "batches": 0,
+            "tokens_verified": 0,
+            "tokens_committed": 0,
+            "prefix_cached_tokens": 0,
+        }
 
-    # -- slot/cache plumbing -------------------------------------------------
+        if self.paged:
+            self._init_paged(cache_dtype, page_size, n_pages)
+        else:
+            self.cache = self.bundle.init_cache(max_slots, max_len, dtype=cache_dtype) \
+                if cfg.family != "ssm" else self.bundle.init_cache(max_slots, max_len)
+            self._bax = _batch_axis_tree(self.bundle.cache_axes())
+            self._decode = jax.jit(self.bundle.decode)
+            self._prefill = jax.jit(self.bundle.prefill)
+
+    # -- paged backend setup --------------------------------------------------
+    def _init_paged(self, cache_dtype, page_size, n_pages):
+        cfg = self.cfg
+        hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+        if n_pages is None:
+            # every slot must be able to reach max_len even with per-slot
+            # page rounding, + the reserved scratch page
+            n_pages = self.max_slots * -(-self.max_len // page_size) + 1
+        self.page_size = page_size
+        self.kv = PagedKV(
+            cfg.n_layers, n_pages, hkv, hd,
+            page_size=page_size, dtype=cache_dtype,
+        )
+        #: prefix sharing is sound only when KV is a pure function of the
+        #: token ids — cross-attention families condition on extras.
+        self.share_prefix = cfg.family in ("dense", "moe")
+        self.tokens: dict[int, list] = {}   # slot -> tokens with KV in pages
+        self.extras_cache = None
+        # donate the page pool (args 2/3 after params, tokens) so XLA
+        # updates pages in place instead of copying the whole pool (and
+        # transiently doubling KV memory) every call; CPU ignores it
+        _jit = partial(jax.jit, donate_argnums=(2, 3))
+        if cfg.family == "vlm":
+            n_groups = cfg.n_layers // cfg.cross_attn_every
+            z = lambda: jnp.zeros(
+                (n_groups, self.max_slots, cfg.num_image_tokens, hkv, hd),
+                cache_dtype,
+            )
+            self.extras_cache = {"k_img": z(), "v_img": z()}
+            self._extras_key = "image_embeds"
+            self._extras_builder = jax.jit(partial(transformer.vlm_cross_kv, cfg))
+            self._decode_paged = _jit(partial(transformer.decode_paged, cfg))
+            self._prefill_paged = _jit(
+                partial(transformer.decode_paged, cfg, dropless=False)
+            )
+        elif cfg.family == "audio":
+            z = lambda: jnp.zeros(
+                (cfg.n_layers, self.max_slots, cfg.encoder_frames, hkv, hd),
+                cache_dtype,
+            )
+            self.extras_cache = {"k_mem": z(), "v_mem": z()}
+            self._extras_key = "frames"
+            self._extras_builder = jax.jit(partial(encdec.encdec_cross_kv, cfg))
+            self._decode_paged = _jit(partial(encdec.encdec_decode_paged, cfg))
+            self._prefill_paged = self._decode_paged     # no MoE routing
+        else:
+            self._decode_paged = _jit(partial(transformer.decode_paged, cfg))
+            # prompt prefill keeps GShard capacity MoE routing, matching
+            # the dense `prefill` path (verify stays dropless)
+            self._prefill_paged = _jit(
+                partial(transformer.decode_paged, cfg, dropless=False)
+            )
+
+    # -- slot/cache plumbing (dense backend) ----------------------------------
     def _gather(self, slots):
         idx = jnp.asarray(slots, jnp.int32)
         return jax.tree.map(
@@ -111,16 +205,56 @@ class VerificationEngine:
 
         self.cache = jax.tree.map(put, self.cache, sub, self._bax)
 
+    # -- extras side cache (paged vlm/audio: batch axis is 1) -----------------
+    def _extras_gather(self, slots):
+        idx = jnp.asarray(slots, jnp.int32)
+        return jax.tree.map(
+            lambda leaf: jnp.take(leaf, idx, axis=1), self.extras_cache
+        )
+
+    def _extras_put(self, slot, sub):
+        self.extras_cache = jax.tree.map(
+            lambda leaf, new: leaf.at[:, slot].set(new[:, 0].astype(leaf.dtype)),
+            self.extras_cache, sub,
+        )
+
+    # -- memory accounting ----------------------------------------------------
+    def memory_budget_tokens(self) -> int:
+        """KV-token capacity the scheduler may admit against this epoch.
+
+        A scheduled request accounts ``cached_len + new_tokens``; its
+        cached tokens are covered by its session's committed (resident)
+        tokens and its new tokens must come out of pages the allocator can
+        still hand out (free + evictable prefix-cached).  So the live
+        budget is ``committed + free`` — it tightens as page slack and
+        rejected-draft garbage accumulate, and widens when sessions close
+        or tail pages are reclaimed.  The dense backend's capacity is
+        static."""
+        if self.paged:
+            return self.kv.free_tokens + self.kv.committed_tokens()
+        return self.max_slots * self.max_len
+
+    def prefix_cache_stats(self) -> dict:
+        if self.paged:
+            a = self.kv.allocator
+            return {"hits": a.hits, "misses": a.misses,
+                    "pages_in_use": a.in_use, "pages_free": len(a.free)}
+        return {"hits": 0, "misses": 0, "pages_in_use": 0, "pages_free": 0}
+
     # -- session lifecycle -----------------------------------------------------
     def new_session(self, prompt_tokens, extras=None) -> tuple[int, int]:
         """Prefill a prompt into a fresh slot.  Returns (slot, first_token).
 
         The first committed token is sampled from the target's own prefill
-        logits (the response's token 0 always comes from the target)."""
+        logits (the response's token 0 always comes from the target).
+        Paged backend: raises ``OutOfPages`` (with the slot returned to the
+        free list) when the pool cannot cover the prompt."""
         if not self.free_slots:
-            raise RuntimeError("no free verification slots")
-        slot = self.free_slots.pop()
+            raise NoFreeSlots("no free verification slots")
         toks = np.asarray(prompt_tokens, np.int32)
+        if self.paged:
+            return self._new_session_paged(toks, extras)
+        slot = self.free_slots.pop()
         P = len(toks)
         # Attention targets: bucket the prompt so jit compiles a bounded
         # set of programs — padded positions are stale-but-masked by the
@@ -141,7 +275,61 @@ class VerificationEngine:
         self.last_token[slot] = first
         return slot, first
 
+    def _new_session_paged(self, toks, extras) -> tuple[int, int]:
+        slot = self.free_slots.pop()
+        P = len(toks)
+        try:
+            n_cached = self.kv.open_seq(slot, toks, share=self.share_prefix)
+            self.kv.ensure_capacity(slot, P)
+        except OutOfPages:
+            if slot in self.kv.tables:
+                self.kv.close_seq(slot)
+            self.free_slots.append(slot)
+            raise
+        if self.extras_cache is not None:
+            k_x, v_x = self._extras_builder(
+                self.params, jnp.asarray(extras[self._extras_key])
+            )
+            keys = sorted(self.extras_cache)          # (k_img, v_img) / (k_mem, v_mem)
+            self._extras_put(slot, {keys[0]: k_x, keys[1]: v_x})
+        suffix = toks[n_cached:]
+        S = len(suffix)
+        Sb = _bucket(S, 16)
+        padded = np.zeros((1, Sb), np.int32)
+        padded[0, :S] = suffix
+        n_max = _bucket(self.kv.seq_pages(slot), 1)
+        bt = self.kv.block_table([slot], n_max)
+        cross = self._extras_gather([slot]) if self.extras_cache is not None else None
+        logits, (kp, vp) = self._prefill_paged(
+            self.params,
+            jnp.asarray(padded),
+            self.kv.k_pages,
+            self.kv.v_pages,
+            jnp.asarray(bt),
+            jnp.asarray([n_cached], jnp.int32),
+            jnp.asarray([S], jnp.int32),
+            cross,
+        )
+        self.kv.k_pages, self.kv.v_pages = kp, vp
+        first = int(jnp.argmax(logits[0, S - 1]))
+        self.kv.set_len(slot, P)
+        if self.share_prefix:
+            # register NOW (not at close) so concurrent same-prompt
+            # sessions share pages
+            self.kv.publish_seq_prefix(slot, toks)
+        self.fed[slot] = P
+        self.last_token[slot] = first
+        self.tokens[slot] = [int(t) for t in toks]
+        self.stats["prefix_cached_tokens"] += int(n_cached)
+        return slot, first
+
     def close_session(self, slot: int):
+        if self.paged:
+            committed = self.tokens.pop(slot, [])
+            n_kv = int(self.fed[slot])
+            self.kv.close_seq(
+                slot, committed[:n_kv] if self.share_prefix else None
+            )
         self.fed[slot] = 0
         self.free_slots.append(slot)
 
@@ -172,18 +360,23 @@ class VerificationEngine:
             feed[i, 1 : 1 + k] = it.draft_tokens
             pos[i] = self.fed[it.slot]
             slots[i] = it.slot
-        # pad rows reuse slot of item 0 read-only (their updates are dropped)
+        # pad rows reuse slot of item 0 read-only (their updates are dropped;
+        # the paged path additionally zeroes their block table + lengths so
+        # their K/V writes land on the scratch page)
         for i in range(n, nb):
             slots[i] = items[0].slot
             pos[i] = self.fed[items[0].slot]
 
-        sub = self._gather(slots)
-        if self.recurrent:
-            p_logits, sub = self._verify_stepwise(feed, sub, pos, dlen)
+        if self.paged:
+            p_logits = self._verify_paged(items, feed, slots, n, nb)
         else:
-            p_logits, sub = self._decode(
-                self.params, jnp.asarray(feed), sub, jnp.asarray(pos)
-            )
+            sub = self._gather(slots)
+            if self.recurrent:
+                p_logits, sub = self._verify_stepwise(feed, sub, pos, dlen)
+            else:
+                p_logits, sub = self._decode(
+                    self.params, jnp.asarray(feed), sub, jnp.asarray(pos)
+                )
         self.rng, kv = jax.random.split(self.rng)
         out = speculative_verify(
             kv,
@@ -195,10 +388,13 @@ class VerificationEngine:
         )
         acc = np.asarray(out["accept_len"])
         tok = np.asarray(out["token"])
-        if self.recurrent:
-            sub = self._select_states(sub, acc + 1)
-        self._scatter(slots, sub, n)
-        jax.block_until_ready(self.cache)
+        if self.paged:
+            jax.block_until_ready(self.kv.k_pages)
+        else:
+            if self.recurrent:
+                sub = self._select_states(sub, acc + 1)
+            self._scatter(slots, sub, n)
+            jax.block_until_ready(self.cache)
         dt = time.perf_counter() - t0
 
         results = []
@@ -206,6 +402,13 @@ class VerificationEngine:
             L = int(acc[i])
             self.fed[it.slot] += L + 1
             self.last_token[it.slot] = int(tok[i])
+            if self.paged:
+                # the accepted prefix (+ re-fed last token) now has live KV;
+                # rejected tail K/V is dead — roll back the length pointer
+                # and release any now-unreachable tail pages
+                self.tokens[it.slot].extend(int(t) for t in feed[i, : L + 1])
+                self.kv.set_len(it.slot, int(self.fed[it.slot]))
+                self.kv.trim_seq(it.slot)
             results.append(
                 VerifyOutcome(
                     slot=it.slot,
@@ -219,6 +422,38 @@ class VerificationEngine:
         self.stats["tokens_verified"] += int(dlen[:n].sum())
         self.stats["tokens_committed"] += int(acc[:n].sum()) + n
         return results
+
+    # -- paged-target verification ---------------------------------------------
+    def _verify_paged(self, items, feed, slots, n, nb):
+        """One ragged pass over ``[x_last, y_1..y_K]`` per row through the
+        paged attention kernel.  May raise ``OutOfPages`` before any device
+        state is touched (the server requeues the batch)."""
+        T = feed.shape[1]
+        base = np.zeros(nb, np.int32)
+        tl = np.zeros(nb, np.int32)
+        for i, it in enumerate(items):
+            k = len(it.draft_tokens)
+            base[i] = self.fed[it.slot]
+            tl[i] = k + 1
+            self.kv.ensure_capacity(it.slot, int(self.fed[it.slot]) + k + 1)
+        n_max = _bucket(max(self.kv.seq_pages(it.slot) for it in items), 1)
+        bt = np.zeros((nb, n_max), np.int32)
+        bt[:n] = self.kv.block_table([it.slot for it in items], n_max)
+        cross = (
+            self._extras_gather(slots) if self.extras_cache is not None else None
+        )
+        logits, (kp, vp) = self._decode_paged(
+            self.params,
+            jnp.asarray(feed),
+            self.kv.k_pages,
+            self.kv.v_pages,
+            jnp.asarray(bt),
+            jnp.asarray(base),
+            jnp.asarray(tl),
+            cross,
+        )
+        self.kv.k_pages, self.kv.v_pages = kp, vp
+        return logits
 
     # -- recurrent-target support -------------------------------------------------
     def _verify_stepwise(self, feed, sub, pos, dlen):

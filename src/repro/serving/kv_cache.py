@@ -90,6 +90,13 @@ class PageAllocator:
     def in_use(self) -> int:
         return self.n_pages - len(self.free)
 
+    @property
+    def available(self) -> int:
+        """Pages obtainable by an ``alloc()`` right now: the free list plus
+        prefix-cached pages no live sequence references (lazily evictable)."""
+        evictable = sum(1 for pid in self.page_hash if self.refcount[pid] <= 0)
+        return len(self.free) + evictable
+
     # -- prefix cache ------------------------------------------------------
     @staticmethod
     def chain_hash(prev: bytes, tokens) -> bytes:
@@ -147,16 +154,38 @@ class PagedKV:
     ):
         self.page_size = page_size
         self.allocator = PageAllocator(n_pages, page_size)
+        # Page 0 is reserved as the scratch/sink page: padded batch rows and
+        # masked positions scatter their (garbage) K/V here, so real pages
+        # are never clobbered by padding.  Block tables also pad with 0, so
+        # reads of pad entries land on scratch and are masked by lengths.
+        self.scratch_page = self.allocator.alloc()
+        assert self.scratch_page == 0, "scratch must be page 0 (pad id)"
         shape = (n_layers, n_pages, page_size, n_kv_heads, head_dim)
         self.k_pages = jnp.zeros(shape, dtype)
         self.v_pages = jnp.zeros(shape, dtype)
         self.tables: dict[int, SeqPages] = {}
 
     # -- sequence lifecycle -------------------------------------------------
-    def open_seq(self, seq_id: int, prompt_tokens) -> int:
+    def open_seq(self, seq_id: int, prompt_tokens, *, share: bool = True) -> int:
         """Allocate a block table; reuse prefix pages.  Returns number of
-        tokens already covered by the prefix cache."""
+        tokens already covered by the prefix cache.
+
+        ``share=False`` skips the prefix lookup entirely — used when KV is
+        not a pure function of the token ids (cross-attention families:
+        the same prompt under different images/audio has different KV).
+
+        Always leaves at least one prompt token uncovered: prefill logits
+        for the final prompt position must be recomputed, and recomputed
+        suffix K/V may only be written to pages this sequence owns — so a
+        fully-cached, page-aligned prompt gives back its last cached page.
+        """
+        if not share:
+            self.tables[seq_id] = SeqPages(pages=[], num_tokens=0)
+            return 0
         pages, n_cached = self.allocator.lookup_prefix(prompt_tokens)
+        if n_cached >= len(prompt_tokens) and pages:
+            self.allocator.release(pages.pop())
+            n_cached -= self.page_size
         self.tables[seq_id] = SeqPages(pages=pages, num_tokens=n_cached)
         return n_cached
 
@@ -164,6 +193,14 @@ class PagedKV:
         t = self.tables[seq_id]
         while t.capacity(self.page_size) < n_tokens:
             t.pages.append(self.allocator.alloc())
+
+    def trim_seq(self, seq_id: int):
+        """Release pages past the last valid token (speculative rollback:
+        K/V written for rejected draft tokens can strand whole tail pages)."""
+        t = self.tables[seq_id]
+        keep = -(-t.num_tokens // self.page_size)          # ceil
+        while len(t.pages) > keep:
+            self.allocator.release(t.pages.pop())
 
     def close_seq(self, seq_id: int, committed_tokens=None):
         t = self.tables.pop(seq_id)
@@ -174,6 +211,39 @@ class PagedKV:
 
     def set_len(self, seq_id: int, n: int):
         self.tables[seq_id].num_tokens = n
+
+    def seq_len(self, seq_id: int) -> int:
+        return self.tables[seq_id].num_tokens
+
+    def seq_pages(self, seq_id: int) -> int:
+        return len(self.tables[seq_id].pages)
+
+    def publish_seq_prefix(self, seq_id: int, tokens):
+        """Register the sequence's full pages covering ``tokens`` in the
+        prefix index (done right after prompt prefill so *concurrent*
+        sessions with the same prompt share pages, not just later ones)."""
+        self.allocator.publish_prefix(tokens, self.tables[seq_id].pages)
+
+    # -- memory accounting ---------------------------------------------------
+    @property
+    def free_tokens(self) -> int:
+        """Token capacity obtainable without evicting any live sequence."""
+        return self.allocator.available * self.page_size
+
+    def resident_tokens(self, seq_ids=None) -> int:
+        """Token capacity already held by the given (default: all) open
+        sequences' block tables.  Shared prefix pages count once per
+        sharing sequence — that is the prefix cache's capacity gain."""
+        tabs = (
+            self.tables.values()
+            if seq_ids is None
+            else [self.tables[s] for s in seq_ids]
+        )
+        return sum(t.capacity(self.page_size) for t in tabs)
+
+    def committed_tokens(self) -> int:
+        """Valid (length-pointer-covered) tokens across open sequences."""
+        return sum(t.num_tokens for t in self.tables.values())
 
     # -- device I/O ----------------------------------------------------------
     def block_table(self, seq_ids, max_pages: int) -> np.ndarray:

@@ -24,7 +24,8 @@ from repro.core.scheduler import (
     SLOScheduler,
     VerifyRequest,
 )
-from repro.serving.engine import VerificationEngine, VerifyItem
+from repro.serving.engine import NoFreeSlots, VerificationEngine, VerifyItem
+from repro.serving.kv_cache import OutOfPages
 from repro.serving.transport import NetworkModel
 
 #: paper §5.1: four token-speed SLO classes (tokens/s)
@@ -66,6 +67,7 @@ class WISPServer:
         sched_cfg: SchedulerConfig | None = None,
         slo_classes: dict | None = None,
         network: NetworkModel | None = None,
+        dynamic_memory_budget: bool = True,
     ):
         self.engine = engine
         self.coeffs = coeffs
@@ -74,29 +76,87 @@ class WISPServer:
         self.scheduler = cls(self.sched_cfg, coeffs)
         self.slo_classes = slo_classes or dict(DEFAULT_SLO_CLASSES)
         self.network = network or NetworkModel()
+        #: refresh the scheduler's memory budget from the engine's live
+        #: free-page capacity every dispatch epoch (paper Eq. 13's M(t_k));
+        #: passed to schedule() as an override — the caller's SchedulerConfig
+        #: is never mutated
+        self.dynamic_memory_budget = dynamic_memory_budget
+        #: the budget the most recent epoch was admitted against
+        self.memory_budget_tokens = self.sched_cfg.memory_budget_tokens
         self.sessions: dict[int, ServerSession] = {}
         self.pending: list[VerifyRequest] = []
+        #: sessions the cache could not admit yet: (session_id, prompt,
+        #: slo_class, draft_speed, extras), retried each dispatch epoch
+        self.admission_queue: list[tuple] = []
+        #: (session_id, first_token) of queued sessions admitted since the
+        #: last ``pop_admissions()``
+        self.admitted: list[tuple[int, int]] = []
         self._rid = 0
         self.log: list[Verdict] = []
 
     # -- sessions -----------------------------------------------------------
-    def open_session(
-        self, session_id: int, prompt_tokens, slo_class: int = 3,
-        draft_speed: float = 50.0, extras=None,
-    ) -> int:
-        slot, first = self.engine.new_session(prompt_tokens, extras=extras)
+    def _register(self, session_id, slot, first, prompt_len, slo_class,
+                  draft_speed) -> int:
         self.sessions[session_id] = ServerSession(
             session_id=session_id,
             slot=slot,
             slo_class=slo_class,
-            committed_len=len(prompt_tokens) + 1,
+            committed_len=prompt_len + 1,
             draft_speed=draft_speed,
         )
         return first
 
+    def open_session(
+        self, session_id: int, prompt_tokens, slo_class: int = 3,
+        draft_speed: float = 50.0, extras=None, queue_on_full: bool = True,
+    ) -> int | None:
+        """Admit a session, or queue it when the engine is out of KV pages
+        or slots (returns ``None``; the session is retried each dispatch
+        epoch — poll ``pop_admissions()`` for its first token)."""
+        try:
+            slot, first = self.engine.new_session(prompt_tokens, extras=extras)
+        except (OutOfPages, NoFreeSlots):
+            if not queue_on_full:
+                raise
+            self.admission_queue.append(
+                (session_id, list(prompt_tokens), slo_class, draft_speed,
+                 extras)
+            )
+            return None
+        return self._register(session_id, slot, first, len(prompt_tokens),
+                              slo_class, draft_speed)
+
+    def _try_admit(self):
+        """Retry queued sessions in arrival order; stop at the first one
+        that still does not fit (FIFO fairness — no small-session bypass)."""
+        while self.admission_queue:
+            sid, prompt, slo_class, draft_speed, extras = self.admission_queue[0]
+            try:
+                slot, first = self.engine.new_session(prompt, extras=extras)
+            except (OutOfPages, NoFreeSlots):
+                return
+            self.admission_queue.pop(0)
+            self._register(sid, slot, first, len(prompt), slo_class,
+                           draft_speed)
+            self.admitted.append((sid, first))
+
+    def pop_admissions(self) -> list[tuple[int, int]]:
+        out, self.admitted = self.admitted, []
+        return out
+
     def close_session(self, session_id: int):
-        s = self.sessions.pop(session_id)
+        s = self.sessions.pop(session_id, None)
+        if s is None:
+            # session may still be waiting in the admission queue: cancel it
+            before = len(self.admission_queue)
+            self.admission_queue = [
+                q for q in self.admission_queue if q[0] != session_id
+            ]
+            if len(self.admission_queue) == before:
+                raise KeyError(session_id)
+            return
         self.engine.close_session(s.slot)
+        self._try_admit()
 
     # -- request intake (paper Eq. 6/12: server-side budget -> deadline) ----
     def submit(
@@ -137,9 +197,18 @@ class WISPServer:
     # -- dispatch epoch -------------------------------------------------------
     def step(self, now: float) -> list[Verdict]:
         """One dispatch epoch at time ``now``; returns verdicts of the batch."""
+        self._try_admit()
+        # M(t_k): live free-page capacity, not a static config number
+        self.memory_budget_tokens = (
+            self.engine.memory_budget_tokens()
+            if self.dynamic_memory_budget
+            else self.sched_cfg.memory_budget_tokens
+        )
         if not self.pending:
             return []
-        decision = self.scheduler.schedule(self.pending, now)
+        decision = self.scheduler.schedule(
+            self.pending, now, memory_budget_tokens=self.memory_budget_tokens
+        )
         if not decision.batch:
             return []
         chosen = {r.req_id for r in decision.batch}
@@ -150,11 +219,27 @@ class WISPServer:
             s = self.sessions[r.session_id]
             toks, qlog = r.payload
             items.append(VerifyItem(slot=s.slot, draft_tokens=toks, q_logits=qlog))
-        outcomes = self.engine.verify(items)
+        try:
+            served = decision.batch
+            outcomes = self.engine.verify(items)
+        except OutOfPages:
+            # The token budget over-admitted (committed tokens of sessions
+            # outside the batch are not page headroom).  Shrink to whatever
+            # fits — per-request verification — so the epoch still makes
+            # progress instead of requeue-livelocking; requests that cannot
+            # fit even alone go back to pending (they need a close_session
+            # to free pages).
+            served, outcomes = [], []
+            for r, it in zip(decision.batch, items):
+                try:
+                    outcomes.extend(self.engine.verify([it]))
+                    served.append(r)
+                except OutOfPages:
+                    self.pending.append(r)
 
         verdicts = []
         done = time.perf_counter()
-        for r, o in zip(decision.batch, outcomes):
+        for r, o in zip(served, outcomes):
             s = self.sessions[r.session_id]
             # EWMA acceptance update
             if r.draft_len > 0:

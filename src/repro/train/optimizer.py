@@ -63,6 +63,12 @@ def adamw_init(params):
     return {
         "m": jax.tree.map(zeros, params),
         "v": jax.tree.map(zeros, params),
+        # f32 master weights: updates accumulate here and params are the
+        # bf16 cast.  Casting p - lr*u straight back to bf16 silently
+        # drops any update below the bf16 spacing (~4e-4 relative) — at
+        # warmup learning rates that is EVERY update, and training
+        # flatlines.
+        "master": jax.tree.map(lambda p: p.astype(jnp.float32), params),
         "step": jnp.zeros((), jnp.int32),
     }
 
@@ -78,14 +84,16 @@ def adamw_update(params, grads, state, cfg: OptConfig):
     bc1 = 1 - b1**t
     bc2 = 1 - b2**t
 
-    def upd(p, mi, vi):
+    def upd(p, mi, vi, mw):
         u = (mi / bc1) / (jnp.sqrt(vi / bc2) + cfg.eps)
         if p.ndim >= 2:  # decay matrices only (norms/biases exempt)
-            u = u + cfg.weight_decay * p.astype(jnp.float32)
-        return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+            u = u + cfg.weight_decay * mw
+        return mw - lr * u
 
-    params = jax.tree.map(upd, params, m, v)
-    return params, {"m": m, "v": v, "step": step}, {"grad_norm": gnorm, "lr": lr}
+    master = jax.tree.map(upd, params, m, v, state["master"])
+    params = jax.tree.map(lambda p, mw: mw.astype(p.dtype), params, master)
+    return params, {"m": m, "v": v, "master": master, "step": step}, \
+        {"grad_norm": gnorm, "lr": lr}
 
 
 # ---------------------------------------------------------------------------
@@ -165,6 +173,7 @@ def opt_state_axes(name: str, param_axes):
         return {
             "m": param_axes,
             "v": param_axes,
+            "master": param_axes,
             "step": (),
         }
     # adafactor: vr drops the last axis, vc drops the second-to-last

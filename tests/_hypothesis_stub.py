@@ -1,0 +1,53 @@
+"""Fallback shims for the optional ``hypothesis`` dependency.
+
+Property-based tests import from here when ``hypothesis`` is missing so the
+module still collects: ``@given`` replaces the test with a skipped stand-in,
+``@settings`` is a no-op, and ``st`` is an "anything" object whose strategy
+constructors (including ``st.composite``) return inert placeholders that can
+be called or chained at module scope without blowing up.
+"""
+from __future__ import annotations
+
+import pytest
+
+
+class _Strategy:
+    """Inert stand-in for any ``strategies`` attribute: calling it or
+    accessing attributes on it just yields another stand-in, so strategy
+    expressions evaluated at module import (``st.lists(st.integers(0, 4))``,
+    ``@st.composite`` factories, ...) all resolve harmlessly."""
+
+    def __call__(self, *args, **kwargs):
+        return self
+
+    def __getattr__(self, name):
+        return self
+
+    def __repr__(self):
+        return "<hypothesis-stub strategy>"
+
+
+st = _Strategy()
+
+
+def given(*_args, **_kwargs):
+    def deco(fn):
+        @pytest.mark.skip(reason="hypothesis not installed (property test)")
+        def _skipped_property_test():
+            pass  # pragma: no cover
+
+        _skipped_property_test.__name__ = fn.__name__
+        _skipped_property_test.__doc__ = fn.__doc__
+        return _skipped_property_test
+
+    return deco
+
+
+def settings(*_args, **_kwargs):
+    def deco(fn):
+        return fn
+
+    return deco
+
+
+__all__ = ["given", "settings", "st"]

@@ -1,0 +1,290 @@
+"""Paged verification engine: dense-vs-paged losslessness equivalence,
+prefix-page sharing across sessions, rollback page reclamation, the
+scheduler's live memory budget, and OutOfPages admission queueing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.estimator import EstimatorCoeffs
+from repro.core.scheduler import SchedulerConfig
+from repro.models import build
+from repro.serving.engine import VerificationEngine, VerifyItem, supports_paged
+from repro.serving.server import WISPServer
+
+COEFFS = EstimatorCoeffs(a=1e-4, b_compute=1e-8, b_read=1e-6, c=1e-3)
+
+
+@pytest.fixture(scope="module")
+def dense_model():
+    cfg = get_config("qwen2-7b").reduced()
+    bundle = build(cfg)
+    params = bundle.init(jax.random.PRNGKey(0), dtype=jnp.float32)
+    return cfg, bundle, params
+
+
+def _greedy_reference(bundle, params, prompt, n_tokens, max_len=128):
+    """Pure target greedy decode — the stream any lossless engine must emit."""
+    cache = bundle.init_cache(1, max_len, dtype=jnp.float32)
+    toks = jnp.asarray(np.asarray(prompt, np.int32)[None])
+    logits, cache = bundle.prefill(params, {"tokens": toks}, cache)
+    out = [int(jnp.argmax(logits[0, len(prompt) - 1]))]
+    pos = len(prompt)
+    for _ in range(n_tokens - 1):
+        lg, cache = bundle.decode(
+            params, jnp.asarray([[out[-1]]], jnp.int32), cache, jnp.int32(pos)
+        )
+        out.append(int(jnp.argmax(lg[0, -1])))
+        pos += 1
+    return out
+
+
+def test_engine_selects_paged_for_full_attention():
+    assert supports_paged(get_config("qwen2-7b").reduced())
+    assert supports_paged(get_config("deepseek-moe-16b").reduced())
+    assert supports_paged(get_config("whisper-tiny").reduced())
+    assert supports_paged(get_config("llama-3.2-vision-90b").reduced())
+    assert not supports_paged(get_config("xlstm-350m").reduced())
+    assert not supports_paged(get_config("gemma2-9b").reduced())  # windowed
+
+
+def test_dense_and_paged_engines_emit_identical_streams(dense_model):
+    """Crafted drafts drive full-accept, partial-reject and full-reject
+    rounds through BOTH engines; committed streams and accept lengths must
+    match token for token (and equal the target's own greedy decode)."""
+    cfg, bundle, params = dense_model
+    prompt = [3, 1, 4, 1, 5, 9, 2, 6]
+    want = _greedy_reference(bundle, params, prompt, 12)
+
+    dense = VerificationEngine(cfg, params, max_slots=2, max_len=128,
+                               method="greedy", paged=False)
+    paged = VerificationEngine(cfg, params, max_slots=2, max_len=128,
+                               method="greedy", paged=True, page_size=4)
+    sd, fd = dense.new_session(prompt)
+    sp, fp = paged.new_session(prompt)
+    assert fd == fp == want[0]
+
+    committed = [want[0]]
+    V = cfg.vocab
+
+    def garbage(next_tok):
+        return [(next_tok + 7) % V, (next_tok + 13) % V, (next_tok + 29) % V]
+
+    plans = ["accept", "reject", "partial", "accept"]
+    saw_reject = False
+    for plan in plans:
+        n = len(committed)
+        if plan == "accept":
+            d = want[n : n + 3]
+            expect_l = 3
+        elif plan == "reject":
+            d = garbage(want[n])
+            expect_l = 0
+        else:
+            d = [want[n]] + garbage(want[n + 1])[:2]
+            expect_l = 1
+        d = np.asarray(d, np.int32)
+        q = np.zeros((len(d), V), np.float32)
+        (od,) = dense.verify([VerifyItem(slot=sd, draft_tokens=d, q_logits=q)])
+        (op,) = paged.verify([VerifyItem(slot=sp, draft_tokens=d, q_logits=q)])
+        assert (od.accept_len, od.token) == (op.accept_len, op.token)
+        assert od.accept_len == expect_l
+        committed.extend(list(d[: od.accept_len]) + [od.token])
+        saw_reject |= od.accept_len < len(d)
+    assert saw_reject                       # rollback path exercised
+    assert committed == want[: len(committed)]
+    assert dense.fed[sd] == paged.fed[sp]
+
+
+def test_rollback_releases_unreachable_tail_pages(dense_model):
+    cfg, _, params = dense_model
+    eng = VerificationEngine(cfg, params, max_slots=1, max_len=128,
+                             method="greedy", paged=True, page_size=4)
+    slot, _ = eng.new_session([1, 2, 3, 4, 5, 6, 7])        # 7 toks, 2 pages
+    pages_before = eng.kv.seq_pages(slot)
+    # deep garbage draft: verification reserves pages for fed+8 tokens,
+    # then rejects everything — the tail pages must come back
+    d = np.full(7, cfg.vocab - 1, np.int32)
+    q = np.zeros((7, cfg.vocab), np.float32)
+    (o,) = eng.verify([VerifyItem(slot=slot, draft_tokens=d, q_logits=q)])
+    assert o.accept_len == 0
+    # fed advanced by 1 (re-fed last token): 8 tokens -> exactly 2 pages
+    assert eng.kv.seq_len(slot) == 8
+    assert eng.kv.seq_pages(slot) == 2
+    assert eng.kv.seq_pages(slot) <= pages_before + 1
+
+
+def test_sessions_share_prompt_prefix_pages(dense_model):
+    cfg, _, params = dense_model
+    eng = VerificationEngine(cfg, params, max_slots=3, max_len=64,
+                             method="greedy", paged=True, page_size=4)
+    prompt = [5, 4, 3, 2, 1, 0, 1, 2, 3, 4]                 # 2 full pages
+    s1, f1 = eng.new_session(prompt)
+    before = eng.kv.allocator.in_use
+    s2, f2 = eng.new_session(prompt)
+    st = eng.prefix_cache_stats()
+    assert st["hits"] >= 1
+    assert f1 == f2
+    p1, p2 = eng.kv.tables[s1].pages, eng.kv.tables[s2].pages
+    assert p1[:2] == p2[:2]                                 # physical sharing
+    assert eng.kv.allocator.refcount[p1[0]] == 2
+    # the shared prefix cost the pool only the private tail
+    assert eng.kv.allocator.in_use - before < len(p1)
+    assert eng.stats["prefix_cached_tokens"] == 8
+
+    # verification results for the sharing session match a fresh solo engine
+    d = np.asarray([9, 9, 9], np.int32)
+    q = np.zeros((3, cfg.vocab), np.float32)
+    o1, o2 = eng.verify([
+        VerifyItem(slot=s1, draft_tokens=d, q_logits=q),
+        VerifyItem(slot=s2, draft_tokens=d, q_logits=q),
+    ])
+    assert (o1.accept_len, o1.token) == (o2.accept_len, o2.token)
+
+
+def test_scheduler_budget_tracks_live_free_pages(dense_model):
+    cfg, _, params = dense_model
+    eng = VerificationEngine(cfg, params, max_slots=4, max_len=64,
+                             method="greedy", paged=True, page_size=4)
+    server = WISPServer(eng, COEFFS)
+    cap0 = eng.memory_budget_tokens()
+    assert server.open_session(0, [1, 2, 3, 4, 5], slo_class=4) is not None
+    server.submit(0, np.asarray([7, 8], np.int32),
+                  np.zeros((2, cfg.vocab), np.float32),
+                  now=0.0, t_draft=0.0, t_network=0.0)
+    server.step(0.0)
+    server.step(1.0)   # budget refreshes at the START of each epoch
+    # the epoch's budget is the engine's live capacity, not the static
+    # default — and the caller's SchedulerConfig is never mutated
+    assert server.memory_budget_tokens == eng.memory_budget_tokens()
+    assert server.memory_budget_tokens <= cap0
+    assert server.sched_cfg.memory_budget_tokens == \
+        SchedulerConfig().memory_budget_tokens
+
+
+def test_open_session_queues_on_out_of_pages(dense_model):
+    cfg, _, params = dense_model
+    # pool: 3 usable pages of 8 tokens -> two 9-token prompts cannot coexist
+    eng = VerificationEngine(cfg, params, max_slots=4, max_len=24,
+                             method="greedy", paged=True, page_size=8,
+                             n_pages=4)
+    server = WISPServer(eng, COEFFS)
+    prompt = list(range(9))
+    assert server.open_session(0, prompt, slo_class=4) is not None
+    assert server.open_session(1, [9] + prompt[1:], slo_class=4) is None
+    assert server.queue_depth == 0 and len(server.admission_queue) == 1
+
+    server.step(0.0)                       # still full: stays queued
+    assert 1 not in server.sessions
+
+    server.close_session(0)                # frees pages -> admits session 1
+    assert 1 in server.sessions
+    admissions = server.pop_admissions()
+    assert [sid for sid, _ in admissions] == [1]
+    assert isinstance(admissions[0][1], int)
+
+
+def test_close_session_cancels_queued_session(dense_model):
+    cfg, _, params = dense_model
+    eng = VerificationEngine(cfg, params, max_slots=4, max_len=24,
+                             method="greedy", paged=True, page_size=8,
+                             n_pages=4)
+    server = WISPServer(eng, COEFFS)
+    prompt = list(range(9))
+    assert server.open_session(0, prompt, slo_class=4) is not None
+    assert server.open_session(1, [9] + prompt[1:], slo_class=4) is None
+    server.close_session(1)                # cancel while still queued
+    assert not server.admission_queue
+    server.close_session(0)                # must NOT admit the cancelled one
+    assert not server.sessions and not server.pop_admissions()
+    with pytest.raises(KeyError):
+        server.close_session(42)           # unknown session still loud
+
+
+def test_over_admitted_batch_degrades_to_partial_progress(dense_model):
+    """The live token budget can over-admit (committed tokens of sessions
+    outside the batch are not page headroom).  When verify hits OutOfPages
+    the epoch must still serve whatever fits solo instead of requeueing
+    the whole batch forever."""
+    cfg, _, params = dense_model
+    # pool: 7 usable pages of 4 tokens; three 7-token sessions (2 pages
+    # each) leave ONE free page.  Session 2 stays idle: its committed
+    # tokens inflate the budget, so the scheduler admits BOTH submitting
+    # sessions (2*12 = 24 <= free 4 + committed 21) though only one more
+    # page exists.
+    bundle = build(cfg)
+    eng = VerificationEngine(cfg, params, max_slots=3, max_len=24,
+                             method="greedy", paged=True, page_size=4,
+                             n_pages=8)
+    server = WISPServer(eng, COEFFS)
+    firsts = {}
+    for sid in (0, 1, 2):
+        firsts[sid] = server.open_session(
+            sid, list(range(10 * sid, 10 * sid + 7)), slo_class=4
+        )
+        assert firsts[sid] is not None
+    for sid in (0, 1):
+        # drafts = the target's own greedy continuation, so the whole block
+        # is accepted and the extra page stays HELD (no rollback trim that
+        # would free it mid-epoch); each request wants capacity 7+5=12 ->
+        # one more page per session
+        want = _greedy_reference(
+            bundle, params, list(range(10 * sid, 10 * sid + 7)), 5)
+        assert want[0] == firsts[sid]
+        server.submit(sid, np.asarray(want[1:5], np.int32),
+                      np.zeros((4, cfg.vocab), np.float32),
+                      now=0.0, t_draft=0.0, t_network=0.0)
+    verdicts = server.step(0.0)
+    assert len(verdicts) == 1              # one fit, one did not
+    assert verdicts[0].accept_len == 4     # full accept: the page stays held
+    assert server.queue_depth == 1         # the other is requeued, not lost
+    # closing the served session frees pages; the survivor then completes
+    server.close_session(verdicts[0].session_id)
+    verdicts2 = server.step(1.0)
+    assert len(verdicts2) == 1
+    assert {verdicts[0].session_id, verdicts2[0].session_id} == {0, 1}
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", ["deepseek-moe-16b", "llama-3.2-vision-90b",
+                                  "whisper-tiny"])
+def test_paged_matches_dense_across_families(name):
+    """moe / vlm / audio: the paged engine's verify outcomes must equal the
+    dense engine's on the same crafted session (cross-attention K/V rides
+    in the dense side cache; self-attn KV is paged)."""
+    cfg = get_config(name).reduced()
+    bundle = build(cfg)
+    params = bundle.init(jax.random.PRNGKey(0), dtype=jnp.float32)
+    extras = None
+    if cfg.family == "vlm":
+        emb = jax.random.normal(
+            jax.random.PRNGKey(1),
+            (1, cfg.num_image_tokens, cfg.d_model), jnp.float32)
+        extras = {"image_embeds": emb}
+    elif cfg.family == "audio":
+        frames = jax.random.normal(
+            jax.random.PRNGKey(1),
+            (1, cfg.encoder_frames, cfg.d_model), jnp.float32)
+        extras = {"frames": frames}
+
+    dense = VerificationEngine(cfg, params, max_slots=2, max_len=64,
+                               method="greedy", paged=False)
+    paged = VerificationEngine(cfg, params, max_slots=2, max_len=64,
+                               method="greedy", paged=True, page_size=8)
+    assert paged.paged and not dense.paged
+    prompt = [3, 1, 4, 1, 5, 9]
+    sd, fd = dense.new_session(prompt, extras=extras)
+    sp, fp = paged.new_session(prompt, extras=extras)
+    assert fd == fp
+
+    rng = np.random.default_rng(0)
+    last = fd
+    for _ in range(2):
+        d = np.asarray([last, rng.integers(cfg.vocab), rng.integers(cfg.vocab)],
+                       np.int32)
+        q = np.zeros((3, cfg.vocab), np.float32)
+        (od,) = dense.verify([VerifyItem(slot=sd, draft_tokens=d, q_logits=q)])
+        (op,) = paged.verify([VerifyItem(slot=sp, draft_tokens=d, q_logits=q)])
+        assert (od.accept_len, od.token) == (op.accept_len, op.token)
+        last = od.token

@@ -1,7 +1,12 @@
 """Logical-axis sharding resolution: divisibility + uniqueness guards."""
 import jax
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dep: degrade property tests to skips
+    from _hypothesis_stub import given, settings, st
+
 from jax.sharding import PartitionSpec as P
 
 from repro.common.sharding import (
@@ -52,9 +57,12 @@ def test_multi_axis_batch_sharding():
                            TRAIN_RULES)
     assert spec == P(("pod", "data"), "model")
     # batch not divisible by pod*data -> falls back to the divisible prefix
+    # (single mesh axes are emitted unwrapped — P("pod") — matching the
+    # module's convention; older jax PartitionSpec.__eq__ does not
+    # normalize ("pod",) to "pod")
     spec = logical_to_spec(("act_batch", "act_seq"), (2, 4096), mesh,
                            TRAIN_RULES)
-    assert spec == P(("pod",), "model")
+    assert spec == P("pod", "model")
 
 
 def test_rank_mismatch_raises():

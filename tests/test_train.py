@@ -10,9 +10,12 @@ from repro.launch.train import train
 
 @pytest.mark.slow
 def test_training_reduces_loss(tmp_path):
+    # like the adafactor test below: a tiny run spends its whole life in
+    # the schedule's warmup window, so the smoke lr is set high enough
+    # that the effective rate actually moves the weights within 40 steps
     out = train(
-        "qwen2-7b", steps=30, batch=8, seq=64, reduced=True,
-        log_every=5, seed=0,
+        "qwen2-7b", steps=40, batch=8, seq=64, reduced=True,
+        log_every=5, seed=0, lr=3e-3,
     )
     losses = out["losses"]
     assert len(losses) >= 3

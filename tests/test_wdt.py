@@ -1,7 +1,11 @@
 """WDT accounting (Eq. 7-10) + the Theorem-1 monotonicity property."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dep: degrade property tests to skips
+    from _hypothesis_stub import given, settings, st
 
 from repro.core.wdt import IterationLog, WDTStats
 from repro.sim.acceptance import AcceptanceModel, PredictorOperatingPoint
