@@ -1,0 +1,40 @@
+"""Event-driven cluster runtime over the *real* serving stack.
+
+  events   — virtual clock + deterministic event heap
+  workload — fleet specs, session churn, per-device rng streams
+  runtime  — per-device processes overlapping drafting with verification
+  metrics  — measured WDT / speculation / queueing / per-class violations
+
+`repro.sim` answers "what would thousands of devices do" with analytic
+latency + acceptance models; `repro.cluster` answers "what does the real
+stack do" by clocking the actual EdgeDevice / WISPServer / NetworkModel
+objects through a discrete-event loop (see docs/ARCHITECTURE.md §6).
+"""
+from repro.cluster.events import Event, EventKind, EventQueue
+from repro.cluster.metrics import (
+    ClusterMetrics,
+    SessionRecord,
+    SpecStats,
+)
+from repro.cluster.runtime import ClusterResult, ClusterRuntime
+from repro.cluster.workload import (
+    ClusterConfig,
+    DeviceSpec,
+    DeviceWorkload,
+    build_fleet,
+)
+
+__all__ = [
+    "Event",
+    "EventKind",
+    "EventQueue",
+    "ClusterMetrics",
+    "SessionRecord",
+    "SpecStats",
+    "ClusterResult",
+    "ClusterRuntime",
+    "ClusterConfig",
+    "DeviceSpec",
+    "DeviceWorkload",
+    "build_fleet",
+]

@@ -1,0 +1,191 @@
+"""Measured cluster metrics: WDT, speculation outcomes, queueing, goodput.
+
+Everything here is *measured* from the event-driven execution of the real
+models — accept/reject outcomes come from actual target verification, waste
+from tokens that really were drafted and really were thrown away — in
+contrast to `repro.sim`, whose acceptance is an analytic model.  Timing
+(draft steps, verify epochs, transport) runs on the virtual clock, so the
+numbers are reproducible and hardware-independent.
+
+Waste accounting extends the paper's Eq. 7 to the pipelined runtime.  A
+drafted token can die three ways:
+
+  * **rejected**   — submitted, refused by the target (lock-step waste,
+                     ``IterationLog.wasted``);
+  * **discarded**  — drafted speculatively during an overlap window, then
+                     rolled back because the verdict invalidated the guess;
+  * **spent guess**— the bonus-token guess a max-stopped block pays for,
+                     when the verdict contradicts it.
+
+Measured WDT seconds = Σ tau_d · (all three), accumulated per device so
+heterogeneous draft speeds weight correctly.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.wdt import IterationLog, WDTStats
+
+
+@dataclasses.dataclass
+class SpecStats:
+    """Speculative-continuation outcomes (cluster runtime only)."""
+
+    guesses: int = 0          # speculations begun
+    commits: int = 0          # verdicts confirming guess (overlap salvaged)
+    rollbacks: int = 0        # verdicts invalidating it
+    abandoned: int = 0        # session ended with speculation outstanding
+    salvaged: int = 0         # overlap-drafted tokens kept on commit
+    discarded: int = 0        # overlap-drafted tokens rolled back
+    guess_tokens_spent: int = 0   # extra decode steps paid for guesses
+    guess_tokens_dead: int = 0    # ...of which the verdict contradicted
+
+    @property
+    def commit_rate(self) -> float:
+        n = self.commits + self.rollbacks
+        return self.commits / max(n, 1)
+
+
+@dataclasses.dataclass
+class SessionRecord:
+    """One completed (or horizon-truncated) session: the SLO unit."""
+
+    session_id: int
+    device: int
+    slo_class: int
+    slo_speed: float
+    t_open: float
+    t_close: float
+    committed: int            # response tokens committed
+    rounds: int
+
+    @property
+    def speed(self) -> float:
+        return self.committed / max(self.t_close - self.t_open, 1e-9)
+
+    @property
+    def violated(self) -> bool:
+        return self.speed < self.slo_speed
+
+
+class ClusterMetrics:
+    """Accumulates per-iteration logs, speculation outcomes and session
+    records; aggregates per SLO class."""
+
+    def __init__(self, slo_classes: dict):
+        self.slo_classes = dict(slo_classes)
+        self.iterations: list[IterationLog] = []
+        self.sessions: list[SessionRecord] = []
+        self.per_session: dict[int, WDTStats] = {}
+        self.spec = SpecStats()
+        self.queue_samples: list[tuple[float, int]] = []
+        #: measured WDT seconds (tau-weighted; see module docstring)
+        self.t_wdt = 0.0
+        #: device-busy drafting seconds (every real decode step costs tau)
+        self.t_drafting = 0.0
+
+    # -- recording --------------------------------------------------------
+    def add_iteration(self, it: IterationLog, tau_d: float):
+        self.iterations.append(it)
+        st = self.per_session.setdefault(it.session_id, WDTStats())
+        st.add(it, tau_d)
+        self.t_wdt += it.wdt(tau_d)
+        self.t_drafting += it.n_drafted * tau_d
+
+    def add_spec_outcome(self, *, committed: bool, overlap_tokens: int,
+                         guess_tokens: int, tau_d: float):
+        """One resolved speculation: ``overlap_tokens`` spec-block tokens and
+        ``guess_tokens`` (0 or 1) guess steps virtually completed during the
+        wait.  Salvaged overlap tokens are NOT charged here — they become the
+        head of the next submitted block and are charged by that block's
+        ``add_iteration``; only dead work (rollback) and guess steps (never
+        part of any block) are accounted now."""
+        self.spec.guesses += 1
+        self.spec.guess_tokens_spent += guess_tokens
+        self.t_drafting += guess_tokens * tau_d
+        if committed:
+            self.spec.commits += 1
+            self.spec.salvaged += overlap_tokens
+        else:
+            self.spec.rollbacks += 1
+            self.spec.discarded += overlap_tokens
+            self.spec.guess_tokens_dead += guess_tokens
+            self.t_drafting += overlap_tokens * tau_d
+            self.t_wdt += (overlap_tokens + guess_tokens) * tau_d
+
+    def add_spec_abandoned(self, *, overlap_tokens: int, guess_tokens: int,
+                           tau_d: float):
+        """Speculation outstanding when its session ended (churn mode): the
+        overlap work is dead, but no guess was ever judged."""
+        self.spec.guesses += 1
+        self.spec.abandoned += 1
+        self.spec.discarded += overlap_tokens
+        self.spec.guess_tokens_spent += guess_tokens
+        self.spec.guess_tokens_dead += guess_tokens
+        self.t_drafting += (overlap_tokens + guess_tokens) * tau_d
+        self.t_wdt += (overlap_tokens + guess_tokens) * tau_d
+
+    def close_session(self, rec: SessionRecord):
+        self.sessions.append(rec)
+
+    def sample_queue(self, t: float, depth: int):
+        self.queue_samples.append((t, depth))
+
+    # -- aggregates -------------------------------------------------------
+    @property
+    def total(self) -> WDTStats:
+        tot = WDTStats()
+        for it in self.iterations:
+            tot.add(it, 0.0)          # tau folded into self.t_wdt already
+        return tot
+
+    def goodput(self, horizon: float) -> float:
+        """Committed tokens per virtual second across the fleet."""
+        return sum(it.n_committed for it in self.iterations) / max(horizon, 1e-9)
+
+    def waste_fraction(self) -> float:
+        """Dead drafted tokens / all drafted tokens (incl. speculation).
+        A guess that committed was paid for but *became* a committed token,
+        so only rolled-back guess steps count as dead."""
+        drafted = (sum(it.n_drafted for it in self.iterations)
+                   + self.spec.discarded + self.spec.guess_tokens_spent)
+        dead = (sum(it.wasted for it in self.iterations)
+                + self.spec.discarded + self.spec.guess_tokens_dead)
+        return dead / max(drafted, 1)
+
+    def acceptance_rate(self) -> float:
+        sent = sum(it.n_sent for it in self.iterations)
+        return sum(it.n_accepted for it in self.iterations) / max(sent, 1)
+
+    def mean_queue_time(self) -> float:
+        if not self.iterations:
+            return 0.0
+        return sum(it.t_queue for it in self.iterations) / len(self.iterations)
+
+    def per_class(self) -> dict:
+        """Per-SLO-class measured aggregates (sessions + iterations)."""
+        out = {}
+        for cls, speed in sorted(self.slo_classes.items()):
+            its = [it for it in self.iterations if it.slo_class == cls]
+            ses = [s for s in self.sessions if s.slo_class == cls]
+            out[cls] = {
+                "slo_tok_s": speed,
+                "sessions": len(ses),
+                "session_violations": sum(s.violated for s in ses),
+                "iterations": len(its),
+                "deadline_violations": sum(it.violated for it in its),
+                "committed": sum(it.n_committed for it in its),
+                "mean_queue_s": (sum(it.t_queue for it in its) / len(its))
+                if its else 0.0,
+                "mean_speed_tok_s": (sum(s.speed for s in ses) / len(ses))
+                if ses else 0.0,
+            }
+        return out
+
+    def violations(self) -> int:
+        """Session-level SLO violations (the paper's unit)."""
+        return sum(s.violated for s in self.sessions)
+
+    def deadline_violations(self) -> int:
+        """Iteration-level deadline misses (Eq. 6 budget)."""
+        return sum(it.violated for it in self.iterations)

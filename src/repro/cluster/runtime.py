@@ -1,0 +1,435 @@
+"""Event-driven cluster runtime: real models under per-device virtual clocks.
+
+This is the piece that makes the paper's two bottlenecks *happen* instead of
+being accounted analytically: edge drafting and server verification epochs
+overlap in (virtual) time, so Wasted Drafting Time, queueing and
+interference are **measured** from the actual token streams the real draft
+and target models produce — `repro.sim` replays the same control logic
+against an analytic acceptance model instead.
+
+The machinery (docs/ARCHITECTURE.md has the timeline):
+
+  * every device process steps its draft model one token per
+    ``1/draft_speed`` virtual seconds (``DEV_STEP`` events);
+  * a completed block travels ``uplink_time`` and lands in the server's
+    pending pool (``REQUEST``); the server fires dispatch epochs on its own
+    timer (``DISPATCH``), runs Algorithm 1 + real verification, and holds
+    the verifier busy for the estimator-predicted epoch time (optionally
+    noise-scaled), ``GPU_DONE`` releasing it;
+  * verdicts ride the downlink back (``VERDICT``);
+  * while a block is in flight the device *keeps drafting*: it samples a
+    guess for the server's bonus token and speculatively drafts the next
+    block after it (`EdgeDevice.begin_speculation`).  The verdict either
+    commits the speculation — the overlap-drafted tokens become the head of
+    the next block, and the round's effective draft latency shrinks to the
+    post-verdict remainder — or rolls it back by the cache position pointer,
+    the overlapped tokens becoming measured waste.
+
+Determinism: drafting keys are position-folded (`core/controller.py`),
+verification draws are (session, committed_len)-keyed
+(`core/speculative.py`), events are totally ordered (`cluster/events.py`)
+and all workload randomness comes from seeded generators — so a run is a
+pure function of its config, and the committed streams are byte-identical
+to the lock-step driver's (`tests/test_cluster.py`).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.cluster.events import EventKind, EventQueue
+from repro.cluster.metrics import ClusterMetrics, SessionRecord
+from repro.cluster.workload import ClusterConfig, DeviceSpec, DeviceWorkload
+from repro.core.wdt import IterationLog
+
+
+@dataclasses.dataclass
+class _DeviceProc:
+    """Per-device process state the event loop threads through."""
+
+    idx: int
+    device: object                    # EdgeDevice
+    profile: DeviceSpec
+    workload: DeviceWorkload
+    tau: float                        # seconds per drafted token
+    state: str = "idle"               # idle|admission|draft|wait|think|done
+    gen: int = 0                      # event generation; stale steps dropped
+    drafter: object = None            # live BlockDrafter while drafting
+    inflight: object = None           # DraftResult awaiting its verdict
+    round_start: float = 0.0          # when the stream head last advanced
+    next_step_at: float = 0.0         # completion time of the in-flight token
+    last_t_draft: float = 0.0         # effective draft latency submitted
+    last_t_net: float = 0.0
+    # speculation (while state == "wait")
+    spec_active: bool = False
+    spec_guess: int | None = None
+    spec_drafter: object = None
+    spec_cost: int = 0                # guess decode steps the guess needs
+    guess_steps_done: int = 0         # ...virtually completed so far
+    spec_tokens_done: int = 0         # spec-block tokens virtually completed
+    # session bookkeeping
+    session_id: int = -1
+    rounds_done: int = 0
+    response_target: int | None = None
+    t_open: float = 0.0
+    sessions_done: int = 0
+
+    def clear_spec(self):
+        self.spec_active = False
+        self.spec_guess = None
+        self.spec_drafter = None
+        self.spec_cost = 0
+        self.guess_steps_done = 0
+        self.spec_tokens_done = 0
+
+
+@dataclasses.dataclass
+class ClusterResult:
+    cfg: ClusterConfig
+    metrics: ClusterMetrics
+    horizon: float                    # virtual seconds the run covered
+    server: object
+    devices: list                     # EdgeDevice, fleet order
+    fleet: list                       # DeviceSpec
+
+
+class ClusterRuntime:
+    """Drives EdgeDevices + WISPServer + NetworkModel on a virtual clock."""
+
+    def __init__(self, server, edge_devices, fleet, cfg: ClusterConfig, *,
+                 vocab: int):
+        self.server = server
+        self.cfg = cfg
+        self.net = server.network
+        self.events = EventQueue()
+        self.metrics = ClusterMetrics(server.slo_classes)
+        self.fleet = fleet
+        self.devs = [
+            _DeviceProc(
+                idx=i, device=ed, profile=sp,
+                workload=DeviceWorkload(cfg, vocab, i),
+                tau=1.0 / sp.draft_speed,
+            )
+            for i, (ed, sp) in enumerate(zip(edge_devices, fleet))
+        ]
+        self.verifier_busy = False
+        self.now = 0.0
+        self._disp_t: float | None = None
+        self._next_sid = 0
+        self._by_session: dict[int, _DeviceProc] = {}
+        self._pending_open: dict[int, list] = {}    # sid -> prompt (queued)
+        self._noise_rng = np.random.default_rng(cfg.seed + 90_001)
+        self._done_devices = 0
+
+    # -- server timing ------------------------------------------------------
+    def _verify_time(self, served) -> float:
+        """Virtual verification duration of an epoch: the estimator's batch
+        time, optionally jittered (profiling error / contention)."""
+        dt = self.server.scheduler.batch_time(served)
+        if self.cfg.latency_noise_sigma:
+            dt *= float(np.exp(self._noise_rng.normal(
+                0.0, self.cfg.latency_noise_sigma)))
+        return dt
+
+    def _schedule_dispatch(self, t: float):
+        if self._disp_t is not None and self._disp_t <= t:
+            return
+        self._disp_t = t
+        self.events.push(t, EventKind.DISPATCH)
+
+    # -- session lifecycle --------------------------------------------------
+    def _open_session(self, dev: _DeviceProc, prompt: list, t: float):
+        sid = self._next_sid
+        self._next_sid += 1
+        self._by_session[sid] = dev
+        dev.session_id = sid
+        first = self.server.open_session(
+            sid, prompt, slo_class=dev.profile.slo_class,
+            draft_speed=dev.profile.draft_speed, queue_on_full=True,
+        )
+        if first is None:               # engine full: admission queue
+            dev.state = "admission"
+            self._pending_open[sid] = prompt
+            return
+        self._start_session(dev, sid, prompt, first, t)
+
+    def _start_session(self, dev: _DeviceProc, sid: int, prompt: list,
+                       first: int, t: float):
+        dev.device.start_session(sid, prompt, first)
+        dev.t_open = t
+        dev.rounds_done = 0
+        dev.response_target = (
+            None if self.cfg.rounds is not None
+            else dev.workload.response_target()
+        )
+        dev.clear_spec()
+        dev.inflight = None
+        self._begin_block(dev, t)
+
+    def _begin_block(self, dev: _DeviceProc, t: float):
+        dev.drafter = dev.device.begin_round()
+        dev.state = "draft"
+        dev.round_start = t
+        dev.gen += 1
+        dev.next_step_at = t + dev.tau
+        self.events.push(dev.next_step_at, EventKind.DEV_STEP,
+                         (dev.idx, dev.gen))
+
+    def _close_session(self, dev: _DeviceProc, t: float):
+        sid = dev.session_id
+        rec = SessionRecord(
+            session_id=sid,
+            device=dev.idx,
+            slo_class=dev.profile.slo_class,
+            slo_speed=self.server.slo_classes[dev.profile.slo_class],
+            t_open=dev.t_open,
+            t_close=t,
+            committed=len(dev.device.response_tokens),
+            rounds=dev.rounds_done,
+        )
+        self.metrics.close_session(rec)
+        self.server.close_session(sid)
+        self._by_session.pop(sid, None)
+        dev.sessions_done += 1
+        dev.clear_spec()
+        self._drain_admissions(t)
+        if self.cfg.rounds is not None:          # fixed-work mode: retire
+            dev.state = "done"
+            self._done_devices += 1
+        else:                                    # churn: think, then re-open
+            dev.state = "think"
+            self.events.push(t + dev.workload.think_time(),
+                             EventKind.SESSION_OPEN, dev.idx)
+
+    def _drain_admissions(self, t: float):
+        for sid, first in self.server.pop_admissions():
+            dev = self._by_session[sid]
+            prompt = self._pending_open.pop(sid)
+            self._start_session(dev, sid, prompt, first, t)
+
+    # -- block submission + speculation -------------------------------------
+    def _submit(self, dev: _DeviceProc, t: float):
+        res = dev.device.finish_round(dev.drafter)
+        dev.drafter = None
+        dev.inflight = res
+        dev.last_t_draft = t - dev.round_start
+        t_up = self.net.uplink_time(res.n_sent)
+        dev.last_t_net = t_up + self.net.downlink_time()
+        self.events.push(t + t_up, EventKind.REQUEST, dev.idx)
+        dev.state = "wait"
+        dev.gen += 1
+        # a device knows its own quota: never speculate past a known-final
+        # round (fixed-work mode; churn responses end server-side, so the
+        # device speculates and abandoned work is accounted as waste)
+        final_round = (
+            self.cfg.rounds is not None
+            and dev.rounds_done + 1 >= self.cfg.rounds
+        )
+        if self.cfg.speculate and not final_round:
+            guess, sdrafter, cost = dev.device.begin_speculation(res)
+            dev.spec_active = True
+            dev.spec_guess = guess
+            dev.spec_drafter = sdrafter
+            dev.spec_cost = cost
+            dev.guess_steps_done = 0
+            dev.spec_tokens_done = 0
+            dev.next_step_at = t + dev.tau
+            self.events.push(dev.next_step_at, EventKind.DEV_STEP,
+                             (dev.idx, dev.gen))
+
+    # -- event handlers ------------------------------------------------------
+    def _on_dev_step(self, dev: _DeviceProc, gen: int, t: float):
+        if gen != dev.gen:
+            return                      # superseded by a verdict/submission
+        if dev.state == "draft":
+            more = dev.drafter.step()
+            if more:
+                dev.next_step_at = t + dev.tau
+                self.events.push(dev.next_step_at, EventKind.DEV_STEP,
+                                 (dev.idx, dev.gen))
+            else:
+                self._submit(dev, t)
+        elif dev.state == "wait" and dev.spec_active:
+            if dev.guess_steps_done < dev.spec_cost:
+                # the guess decode (run eagerly at submit) completes now
+                dev.guess_steps_done += 1
+                more = True
+            else:
+                more = dev.spec_drafter.step()
+                dev.spec_tokens_done += 1
+            if more:
+                dev.next_step_at = t + dev.tau
+                self.events.push(dev.next_step_at, EventKind.DEV_STEP,
+                                 (dev.idx, dev.gen))
+            # else: speculative block complete; idle until the verdict
+
+    def _on_request(self, dev: _DeviceProc, t: float):
+        res = dev.inflight
+        self.server.submit(
+            dev.session_id, res.tokens, res.q_logits,
+            now=t, t_draft=dev.last_t_draft, t_network=dev.last_t_net,
+        )
+        if not self.verifier_busy:
+            self._schedule_dispatch(t)
+
+    def _on_dispatch(self, t: float):
+        self._disp_t = None
+        if self.verifier_busy:
+            return
+        if not self.server.queue_depth:
+            return
+        verdicts = self.server.step(t, verify_time=self._verify_time)
+        self._drain_admissions(t)
+        self.metrics.sample_queue(t, self.server.queue_depth)
+        if verdicts:
+            dt = self.server.last_verify_time
+            self.verifier_busy = True
+            self.events.push(t + dt, EventKind.GPU_DONE)
+            t_deliver = t + dt + self.net.downlink_time()
+            for v in verdicts:
+                self.events.push(t_deliver, EventKind.VERDICT, v)
+        elif self.server.queue_depth:
+            # nothing schedulable yet (criticality windows still closed):
+            # the server's own timer retries next epoch
+            self._schedule_dispatch(t + self.cfg.dispatch_interval)
+
+    def _on_gpu_done(self, t: float):
+        self.verifier_busy = False
+        if self.server.queue_depth:
+            self._schedule_dispatch(t)
+
+    def _on_verdict(self, v, t: float):
+        dev = self._by_session.get(v.session_id)
+        if dev is None or dev.inflight is None:
+            return                      # session closed under us
+        res, dev.inflight = dev.inflight, None
+        dev.gen += 1                    # halt speculation events
+        overlap, guess_steps = dev.spec_tokens_done, dev.guess_steps_done
+        committed = dev.device.resolve_verdict(
+            v.accept_len, v.token, res,
+            guess=dev.spec_guess, speculated=dev.spec_active,
+        )
+        done = (
+            dev.rounds_done + 1 >= self.cfg.rounds
+            if self.cfg.rounds is not None
+            else len(dev.device.response_tokens) >= dev.response_target
+        )
+        if dev.spec_active:
+            if done:
+                self.metrics.add_spec_abandoned(
+                    overlap_tokens=overlap, guess_tokens=guess_steps,
+                    tau_d=dev.tau,
+                )
+            else:
+                self.metrics.add_spec_outcome(
+                    committed=committed, overlap_tokens=overlap,
+                    guess_tokens=guess_steps, tau_d=dev.tau,
+                )
+        self.metrics.add_iteration(
+            IterationLog(
+                session_id=v.session_id,
+                round_index=dev.rounds_done,
+                n_drafted=res.n_drafted,
+                n_sent=res.n_sent,
+                n_accepted=v.accept_len,
+                n_committed=v.emitted,
+                t_draft=dev.last_t_draft,
+                t_network=dev.last_t_net,
+                t_queue=v.t_queue,
+                t_verify=v.t_verify,
+                deadline=v.deadline,
+                slo_class=dev.profile.slo_class,
+                violated=v.violated,
+            ),
+            tau_d=dev.tau,
+        )
+        dev.rounds_done += 1
+
+        if done:
+            dev.clear_spec()
+            self._close_session(dev, t)
+            return
+        if committed:
+            # speculation committed: the overlap-drafted tokens head the
+            # next block; only the remainder costs post-verdict time
+            dev.drafter = dev.spec_drafter
+            next_at = dev.next_step_at
+            dev.clear_spec()
+            dev.state = "draft"
+            dev.round_start = t
+            if dev.drafter.done:
+                self._submit(dev, t)
+            else:
+                dev.next_step_at = max(next_at, t)
+                self.events.push(dev.next_step_at, EventKind.DEV_STEP,
+                                 (dev.idx, dev.gen))
+        else:
+            # rollback: cache pointer snapped back; draft afresh
+            dev.clear_spec()
+            self._begin_block(dev, t)
+
+    # -- main loop -----------------------------------------------------------
+    def run(self) -> ClusterResult:
+        cfg = self.cfg
+        if cfg.rounds is None and cfg.horizon is None:
+            raise ValueError("churn mode needs cfg.horizon")
+        for dev in self.devs:
+            self.events.push(0.0, EventKind.SESSION_OPEN, dev.idx)
+        end = 0.0
+        while self.events:
+            ev = self.events.pop()
+            if cfg.horizon is not None and ev.time > cfg.horizon:
+                end = cfg.horizon
+                break
+            self.now = end = ev.time
+            k = ev.kind
+            if k == EventKind.SESSION_OPEN:
+                dev = self.devs[ev.payload]
+                prompt = (
+                    dev.profile.prompt if dev.sessions_done == 0
+                    else dev.workload.next_prompt()
+                )
+                self._open_session(dev, prompt, ev.time)
+            elif k == EventKind.DEV_STEP:
+                idx, gen = ev.payload
+                self._on_dev_step(self.devs[idx], gen, ev.time)
+            elif k == EventKind.REQUEST:
+                self._on_request(self.devs[ev.payload], ev.time)
+            elif k == EventKind.DISPATCH:
+                self._on_dispatch(ev.time)
+            elif k == EventKind.GPU_DONE:
+                self._on_gpu_done(ev.time)
+            elif k == EventKind.VERDICT:
+                self._on_verdict(ev.payload, ev.time)
+            if cfg.rounds is not None and self._done_devices == len(self.devs):
+                break
+        if any(d.state == "admission" for d in self.devs) and not self.events:
+            raise RuntimeError(
+                "deadlock: sessions queued for admission but no event can "
+                "free capacity (engine smaller than one session?)"
+            )
+        # Horizon-truncated sessions (churn mode): sessions still open at
+        # the break must be recorded, or violation stats inherit a
+        # survivorship bias — the slow (violating) sessions are exactly the
+        # ones most likely to still be in flight at the horizon.
+        for dev in self.devs:
+            if dev.session_id in self._by_session and dev.rounds_done > 0:
+                self.metrics.close_session(SessionRecord(
+                    session_id=dev.session_id,
+                    device=dev.idx,
+                    slo_class=dev.profile.slo_class,
+                    slo_speed=self.server.slo_classes[dev.profile.slo_class],
+                    t_open=dev.t_open,
+                    t_close=end,
+                    committed=len(dev.device.response_tokens),
+                    rounds=dev.rounds_done,
+                ))
+        return ClusterResult(
+            cfg=cfg,
+            metrics=self.metrics,
+            horizon=end,
+            server=self.server,
+            devices=[d.device for d in self.devs],
+            fleet=self.fleet,
+        )

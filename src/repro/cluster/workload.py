@@ -1,0 +1,98 @@
+"""Cluster workload: device fleet + session churn configuration.
+
+The fleet is fixed (N edge devices, heterogeneous draft speeds and SLO
+classes); *sessions* churn on top of it.  In fixed-work mode every device
+runs one session for exactly ``rounds`` speculate-verify rounds — the shape
+the lock-step driver (`launch/serve.py --sync`) can replay for the
+stream-equivalence guarantee.  In churn mode a device that finishes a
+response thinks for an Exp(think_time_mean) pause and opens a fresh session
+(Poisson session arrivals per device, stationary load, like `repro.sim`),
+with geometric response-length targets; admission runs through the server's
+queue, so capacity exhaustion turns arrivals into queueing, not crashes.
+
+Fleet draws are deterministic per seed: draft speeds and SLO classes
+cycle round-robin over the configured choices (every class is populated at
+any fleet size), prompts come from one seeded generator.  Both drivers
+(`launch/serve.py` event-driven and ``--sync``) build their fleet here, so
+they always replay the same workload for a seed.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class ClusterConfig:
+    """Knobs of the event-driven cluster runtime."""
+
+    devices: int = 4
+    #: fixed-work mode: verify-rounds per session (None => churn mode)
+    rounds: int | None = 8
+    #: churn mode: virtual-seconds horizon (required when rounds is None)
+    horizon: float | None = None
+    k_max: int = 6
+    draft_speeds: tuple = (30.0, 50.0, 80.0)
+    slo_class_choices: tuple = (1, 2, 3, 4)
+    prompt_len: int = 8
+    max_len: int = 512
+    seed: int = 0
+    #: overlap drafting with in-flight verification (commit-or-rollback)
+    speculate: bool = True
+    # -- churn ------------------------------------------------------------
+    think_time_mean: float = 0.25    # Exp pause between sessions per device
+    response_len_mean: float = 24.0  # geometric response-token target
+    # -- server timing ----------------------------------------------------
+    dispatch_interval: float = 0.004
+    #: verify-time jitter: t = estimator * LogNormal(0, sigma); 0 = exact
+    latency_noise_sigma: float = 0.0
+
+
+@dataclasses.dataclass
+class DeviceSpec:
+    """One edge device's static draw: speed, SLO class, first prompt."""
+
+    idx: int
+    draft_speed: float
+    slo_class: int
+    prompt: list
+
+
+def build_fleet(cfg: ClusterConfig, vocab: int) -> list[DeviceSpec]:
+    """Deterministic heterogeneous fleet: draft speeds and SLO classes are
+    cycled round-robin (like `sim.DevicePopulation` — every class is
+    populated at any fleet size, so per-class comparisons never divide by
+    zero), prompts drawn from one generator seeded with cfg.seed."""
+    rng = np.random.default_rng(cfg.seed)
+    fleet = []
+    for i in range(cfg.devices):
+        speed = float(cfg.draft_speeds[i % len(cfg.draft_speeds)])
+        prompt = rng.integers(2, vocab, size=cfg.prompt_len).tolist()
+        slo_class = int(cfg.slo_class_choices[i % len(cfg.slo_class_choices)])
+        fleet.append(DeviceSpec(idx=i, draft_speed=speed,
+                                slo_class=slo_class, prompt=prompt))
+    return fleet
+
+
+class DeviceWorkload:
+    """Deterministic per-device stream of follow-up sessions (churn mode).
+
+    Each device owns an independent generator keyed by (seed, device), so
+    the session sequence a device sees is invariant to what the rest of the
+    fleet does — a prerequisite for the event-ordering determinism test.
+    """
+
+    def __init__(self, cfg: ClusterConfig, vocab: int, device_idx: int):
+        self.cfg = cfg
+        self.vocab = vocab
+        self.rng = np.random.default_rng(cfg.seed * 7919 + 613 * device_idx + 1)
+
+    def think_time(self) -> float:
+        return float(self.rng.exponential(self.cfg.think_time_mean))
+
+    def next_prompt(self) -> list:
+        return self.rng.integers(2, self.vocab, size=self.cfg.prompt_len).tolist()
+
+    def response_target(self) -> int:
+        return int(self.rng.geometric(1.0 / self.cfg.response_len_mean))

@@ -19,7 +19,12 @@ from repro.core.predictor import (
     operating_point,
     auc_score,
 )
-from repro.core.controller import DraftingController, DraftResult, draft_block_scan
+from repro.core.controller import (
+    BlockDrafter,
+    DraftingController,
+    DraftResult,
+    draft_block_scan,
+)
 from repro.core.estimator import (
     BatchShape,
     EstimatorCoeffs,
@@ -54,6 +59,7 @@ __all__ = [
     "train_stumps",
     "operating_point",
     "auc_score",
+    "BlockDrafter",
     "DraftingController",
     "DraftResult",
     "draft_block_scan",

@@ -12,11 +12,21 @@ ablations: the flagged token rides along for free since verifying K+1 vs K
 tokens costs the same batch slot.
 
 Two implementations:
-  * ``draft_block``      — Python loop (edge devices are sequential anyway;
-                           easiest to instrument);
+  * ``BlockDrafter``     — token-granular Python stepping (edge devices are
+                           sequential anyway; easiest to instrument, and the
+                           event-driven cluster runtime interleaves its steps
+                           with verification verdicts);
   * ``draft_block_scan`` — jit-friendly fixed-K lax.scan with halt masking
                            (device-efficient batched drafting; cache updates
                            are masked after the stop so state stays exact).
+
+Sampling keys are *position-folded*: the token destined for stream index p
+is sampled with ``fold_in(session_key, p)``, never by splitting a threaded
+key.  Re-drafting a position after a rollback, or drafting it speculatively
+while a verification is in flight, therefore reproduces the exact sample the
+synchronous path would draw given the same prefix — the property the cluster
+runtime's commit-or-rollback pipelining and the lock-step driver equivalence
+tests rely on.
 """
 from __future__ import annotations
 
@@ -32,13 +42,17 @@ from repro.core.features import logit_features
 
 @dataclasses.dataclass
 class DraftResult:
-    tokens: np.ndarray        # (K_drafted,) int32
-    q_logits: np.ndarray      # (K_drafted, V) float32
-    features: np.ndarray      # (K_drafted, 5)
+    tokens: np.ndarray        # (K_sent,) int32
+    q_logits: np.ndarray      # (K_sent, V) float32
+    features: np.ndarray      # (K_sent, 5)
     n_drafted: int            # tokens physically drafted (incl. flagged one)
     n_sent: int               # tokens sent for verification
     stopped_by: str           # "predictor" | "max"
     draft_time: float         # simulated edge time = n_drafted / draft_speed
+    #: the final token the draft model produced: tokens[-1] on a max-stop,
+    #: the excluded flagged token on a predictor-stop.  The cluster runtime
+    #: uses it as the bonus-token guess for speculative continuation.
+    last_drafted: int = -1
 
 
 class DraftingController:
@@ -66,54 +80,110 @@ class DraftingController:
         self.draft_speed = draft_speed
         self._decode = jax.jit(bundle.decode)
 
+    def sample_next(self, rng, last_token: int, cache, pos: int):
+        """Feed ``last_token`` at cache index ``pos`` and sample the token
+        for index ``pos + 1`` (key = ``fold_in(rng, pos + 1)``).
+
+        Returns (token_id, logits_row (1, V), cache)."""
+        tok = jnp.asarray([[int(last_token)]], jnp.int32)
+        logits, cache = self._decode(self.params, tok, cache, jnp.int32(pos))
+        lg = logits[:, -1]                                   # (1, V)
+        if self.greedy:
+            nxt = int(jnp.argmax(lg, axis=-1)[0])
+        else:
+            k = jax.random.fold_in(rng, pos + 1)
+            nxt = int(jax.random.categorical(
+                k, lg / max(self.temperature, 1e-6)
+            )[0])
+        return nxt, lg, cache
+
+    def begin_block(self, rng, last_token: int, cache, pos: int) -> "BlockDrafter":
+        """Start drafting one block after ``last_token`` (stream index
+        ``pos``); step the returned drafter to completion (``draft`` does)
+        or one token at a time (cluster runtime)."""
+        return BlockDrafter(self, rng, last_token, cache, pos)
+
     def draft(self, rng, last_token, cache, pos):
         """Draft a block starting after ``last_token`` at position ``pos``.
 
         last_token: (B=1,) int32.  Returns (DraftResult, cache, rng).
         The cache is advanced by n_drafted tokens; the server's verdict
         decides the committed prefix (edge rolls forward from there).
-        """
-        toks, qls, feats = [], [], []
-        tok = jnp.asarray(last_token).reshape(1, 1)
-        stopped_by = "max"
-        n_drafted = 0
-        n_sent = 0
-        for i in range(self.k_max):
-            logits, cache = self._decode(self.params, tok, cache, jnp.int32(pos + i))
-            lg = logits[:, -1]                               # (1, V)
-            if self.greedy:
-                nxt = jnp.argmax(lg, axis=-1).astype(jnp.int32)
-            else:
-                rng, k = jax.random.split(rng)
-                nxt = jax.random.categorical(
-                    k, lg / max(self.temperature, 1e-6)
-                ).astype(jnp.int32)
-            f = logit_features(lg)[0]                        # (5,)
-            n_drafted += 1
-            pred_accept = True
-            if self.predictor is not None:
-                pred_accept = bool(self.predictor.predict_accept(f[None])[0])
-            if pred_accept or self.include_flagged:
-                toks.append(int(nxt[0]))
-                qls.append(np.asarray(lg[0], np.float32))
-                feats.append(np.asarray(f, np.float32))
-                n_sent += 1
-            if not pred_accept:
-                stopped_by = "predictor"
-                break
-            tok = nxt.reshape(1, 1)
-        return (
-            DraftResult(
-                tokens=np.asarray(toks, np.int32),
-                q_logits=np.stack(qls) if qls else np.zeros((0, 0), np.float32),
-                features=np.stack(feats) if feats else np.zeros((0, 5), np.float32),
-                n_drafted=n_drafted,
-                n_sent=n_sent,
-                stopped_by=stopped_by,
-                draft_time=n_drafted / self.draft_speed,
-            ),
-            cache,
-            rng,
+        ``rng`` is returned unchanged — sampling keys are position-folded
+        (module docstring), so the caller's key is session-stable."""
+        drafter = self.begin_block(rng, int(np.asarray(last_token).reshape(-1)[0]),
+                                   cache, int(pos))
+        while drafter.step():
+            pass
+        return drafter.result(), drafter.cache, rng
+
+
+class BlockDrafter:
+    """Incremental drafting of a single block, one token per ``step()``.
+
+    The event-driven cluster runtime advances a drafter between virtual-clock
+    events (each step costs 1/draft_speed of device time) and may abandon it
+    mid-block when a verdict invalidates a speculative continuation — the
+    draft cache rolls back by pointer, so a dropped drafter costs nothing.
+    ``DraftingController.draft`` is the run-to-completion wrapper.
+    """
+
+    def __init__(self, controller: DraftingController, rng, last_token: int,
+                 cache, pos: int):
+        self.ctl = controller
+        self.rng = rng
+        self.cache = cache
+        self.pos = int(pos)           # cache index the next feed lands on
+        self._next_feed = int(last_token)
+        self.toks: list = []
+        self.qls: list = []
+        self.feats: list = []
+        self.n_drafted = 0
+        self.n_sent = 0
+        self.stopped_by = "max"
+        self.last_drafted = -1
+        self.done = False
+
+    def step(self) -> bool:
+        """Draft one token; returns True while the block wants more."""
+        if self.done:
+            return False
+        ctl = self.ctl
+        nxt, lg, self.cache = ctl.sample_next(
+            self.rng, self._next_feed, self.cache, self.pos + self.n_drafted
+        )
+        f = logit_features(lg)[0]                            # (5,)
+        self.n_drafted += 1
+        self.last_drafted = nxt
+        pred_accept = True
+        if ctl.predictor is not None:
+            pred_accept = bool(ctl.predictor.predict_accept(f[None])[0])
+        if pred_accept or ctl.include_flagged:
+            self.toks.append(nxt)
+            self.qls.append(np.asarray(lg[0], np.float32))
+            self.feats.append(np.asarray(f, np.float32))
+            self.n_sent += 1
+        if not pred_accept:
+            self.stopped_by = "predictor"
+            self.done = True
+        elif self.n_drafted >= ctl.k_max:
+            self.done = True
+        else:
+            self._next_feed = nxt
+        return not self.done
+
+    def result(self) -> DraftResult:
+        return DraftResult(
+            tokens=np.asarray(self.toks, np.int32),
+            q_logits=np.stack(self.qls) if self.qls
+            else np.zeros((0, 0), np.float32),
+            features=np.stack(self.feats) if self.feats
+            else np.zeros((0, 5), np.float32),
+            n_drafted=self.n_drafted,
+            n_sent=self.n_sent,
+            stopped_by=self.stopped_by,
+            draft_time=self.n_drafted / self.ctl.draft_speed,
+            last_drafted=self.last_drafted,
         )
 
 

@@ -16,6 +16,16 @@ Convention: a verification forward feeds tokens ``[x_last, y_1 .. y_K]``
 (K+1 tokens); its output ``p_logits[:, i]`` is the target distribution for
 the token at draft index i (0-based), and ``p_logits[:, K]`` is the bonus
 distribution after a fully accepted block.
+
+Randomness: with the default ``rng`` alone, accept draws and correction
+samples come from one batch-wide key — outcomes then depend on how requests
+were batched together.  Passing per-row ``rng_tags`` (B, 2) int32 instead
+derives every row's key as ``fold_in(fold_in(rng, tag0), tag1)`` with
+per-position scalar draws, making each request's outcome a pure function of
+(base seed, tag, tokens, logits) — independent of batch composition, draft-
+length bucketing, and dispatch order.  The serving stack tags rows with
+(session_id, committed_len) so the event-driven cluster runtime and the
+lock-step driver commit identical streams.
 """
 from __future__ import annotations
 
@@ -29,6 +39,22 @@ def _log_softmax(logits, temperature):
     return jax.nn.log_softmax(logits / jnp.maximum(temperature, 1e-6), axis=-1)
 
 
+def _row_keys(rng, rng_tags):
+    """(B,2) int32 tags -> per-row keys, batch-independent."""
+    return jax.vmap(
+        lambda t: jax.random.fold_in(jax.random.fold_in(rng, t[0]), t[1])
+    )(rng_tags)
+
+
+def _row_uniform(key, K):
+    """K accept-draws for one row; draw i depends only on (key, i), never on
+    K — so the same request gets the same draws in any draft-length bucket."""
+    ks = jax.vmap(lambda i: jax.random.fold_in(key, i))(
+        jnp.arange(2, 2 + K, dtype=jnp.int32)
+    )
+    return jax.vmap(lambda k: jax.random.uniform(k, ()))(ks)
+
+
 @partial(jax.jit, static_argnames=("method",))
 def speculative_verify(
     rng,
@@ -39,6 +65,7 @@ def speculative_verify(
     *,
     method: str = "residual",
     temperature: float = 1.0,
+    rng_tags=None,       # (B, 2) int32 per-row key tags (see module docstring)
 ):
     """Returns dict with:
       accept_len   (B,)  L = number of accepted draft tokens
@@ -56,11 +83,15 @@ def speculative_verify(
     pos = jnp.arange(K)[None, :]
     valid = pos < draft_len[:, None]                             # (B,K)
 
+    row_keys = None if rng_tags is None else _row_keys(rng, rng_tags)
     if method == "greedy":
         accept = draft_tokens == jnp.argmax(p_logits[:, :K], axis=-1)
     else:
-        k_unif, rng = jax.random.split(rng)
-        u = jax.random.uniform(k_unif, (B, K))
+        if row_keys is None:
+            k_unif, rng = jax.random.split(rng)
+            u = jax.random.uniform(k_unif, (B, K))
+        else:
+            u = jax.vmap(lambda k: _row_uniform(k, K))(row_keys)
         accept = jnp.log(u) <= (logp_tok - logq_tok)             # u <= p/q
 
     accept = jnp.logical_and(accept, valid)
@@ -78,11 +109,20 @@ def speculative_verify(
     )[:, 0]                                                      # (B, V)
     logp_at = _log_softmax(p_at, temperature)
 
+    def _sample_rows(logits_rows):
+        """Correction-token sampling: one batch key, or per-row keys."""
+        if row_keys is None:
+            nonlocal rng
+            k_s, rng = jax.random.split(rng)
+            return jax.random.categorical(k_s, logits_rows).astype(jnp.int32)
+        return jax.vmap(
+            lambda k, lg: jax.random.categorical(jax.random.fold_in(k, 1), lg)
+        )(row_keys, logits_rows).astype(jnp.int32)
+
     if method == "greedy":
         token = jnp.argmax(p_at, axis=-1).astype(jnp.int32)
     elif method == "target":
-        k_s, rng = jax.random.split(rng)
-        token = jax.random.categorical(k_s, logp_at).astype(jnp.int32)
+        token = _sample_rows(logp_at)
     else:  # residual
         q_at = jnp.take_along_axis(
             jnp.pad(logq, ((0, 0), (0, 1), (0, 0)), constant_values=-jnp.inf),
@@ -97,8 +137,7 @@ def speculative_verify(
         fallback = resid.sum(-1, keepdims=True) <= 1e-12
         resid = jnp.where(fallback, jnp.exp(logp_at), resid)
         logresid = jnp.log(jnp.maximum(resid, 1e-38))
-        k_s, rng = jax.random.split(rng)
-        token = jax.random.categorical(k_s, logresid).astype(jnp.int32)
+        token = _sample_rows(logresid)
 
     return {
         "accept_len": L.astype(jnp.int32),

@@ -1,15 +1,25 @@
 """Serving driver: end-to-end WISP loop (drafting edges + verification
 server) on real models.
 
-Functionally complete on CPU with reduced configs: N edge devices run draft
-models with the intelligent drafting controller; the server batches
-verification with the SLO-aware scheduler; PagedAttention-style slot cache +
-prefix reuse on the engine.  Paper-scale capacity numbers come from
-``repro.sim`` (same control logic, analytic latency model).
+Two drive modes over the same models, workload and scheduler:
+
+  * **event-driven** (default) — `repro.cluster.ClusterRuntime`: per-device
+    virtual clocks, drafting overlapped with in-flight verification
+    (speculative continue, commit-or-rollback), server dispatch epochs on
+    their own timer, transport delays from NetworkModel.  WDT, queueing and
+    per-class violations are *measured* from the interleaved execution.
+  * **lock-step** (``sync=True`` / ``--sync``) — the original synchronous
+    round loop: every device drafts, every request verifies, repeat.  WDT
+    can only be accounted analytically here, but the mode is the reference
+    the event-driven stream-equivalence guarantee is checked against.
+
+Both commit byte-identical per-session token streams for the same seed
+(position-folded draft keys + per-request verification keys).
 
 Example:
   python -m repro.launch.serve --target qwen2-7b --draft qwen2-7b \\
       --reduced --devices 4 --rounds 8 --scheduler slo
+  python -m repro.launch.serve --devices 4 --rounds 8 --sync   # lock-step
 """
 from __future__ import annotations
 
@@ -17,10 +27,10 @@ import argparse
 import time
 
 import jax
-import numpy as np
 
+from repro.cluster import ClusterConfig, ClusterRuntime, build_fleet
 from repro.configs import get_config
-from repro.core.estimator import analytic_tpu_coeffs
+from repro.core.estimator import EstimatorCoeffs, analytic_tpu_coeffs
 from repro.core.predictor import RejectionPredictor
 from repro.core.wdt import IterationLog, WDTStats
 from repro.models import build
@@ -44,7 +54,22 @@ def run_serving(
     max_len: int = 512,
     seed: int = 0,
     verbose: bool = True,
+    sync: bool = False,
+    speculate: bool = True,
+    greedy: bool = False,
+    churn: bool = False,
+    horizon: float | None = None,
+    draft_speeds: tuple = (30.0, 50.0, 80.0),
+    coeffs: EstimatorCoeffs | None = None,
+    dispatch_interval: float = 0.004,
+    slo_speeds: dict | None = None,
+    sched_cfg=None,
+    self_draft: bool = False,
+    method: str = "residual",
 ):
+    """Run the WISP serving stack; returns a dict with per-device ``stats``,
+    aggregate ``total``, the ``edges`` / ``server`` objects and — in
+    event-driven mode — the ``ClusterResult`` under ``"result"``."""
     tcfg = get_config(target_arch)
     dcfg = get_config(draft_arch or target_arch)
     if reduced:
@@ -52,32 +77,99 @@ def run_serving(
     if dcfg.vocab != tcfg.vocab:
         raise ValueError("draft/target vocab mismatch")
 
-    tb, db = build(tcfg), build(dcfg)
+    tb = build(tcfg)
     tparams = tb.init(jax.random.PRNGKey(seed))
-    dparams = db.init(jax.random.PRNGKey(seed + 1))
+    if self_draft:
+        # self-speculation: the draft IS the target (with greedy drafting
+        # and greedy verification every block fully accepts and every
+        # speculative continuation commits — the overlap-pipelining upper
+        # bound)
+        dcfg, dparams = tcfg, tparams
+    else:
+        dparams = build(dcfg).init(jax.random.PRNGKey(seed + 1))
 
-    engine = VerificationEngine(tcfg, tparams, max_slots=devices, max_len=max_len)
-    coeffs = analytic_tpu_coeffs(tcfg)
+    ccfg = ClusterConfig(
+        devices=devices,
+        rounds=None if churn else rounds,
+        horizon=horizon,
+        k_max=k_max,
+        draft_speeds=tuple(draft_speeds),
+        prompt_len=prompt_len,
+        max_len=max_len,
+        seed=seed,
+        speculate=speculate,
+        dispatch_interval=dispatch_interval,
+    )
+    fleet = build_fleet(ccfg, tcfg.vocab)
+
+    engine = VerificationEngine(tcfg, tparams, max_slots=devices,
+                                max_len=max_len, method=method)
+    coeffs = coeffs or analytic_tpu_coeffs(tcfg)
     net = NetworkModel()
-    server = WISPServer(engine, coeffs, scheduler=scheduler, network=net)
+    server = WISPServer(engine, coeffs, scheduler=scheduler, network=net,
+                        slo_classes=slo_speeds, sched_cfg=sched_cfg)
 
-    rng = np.random.default_rng(seed)
-    edges, stats = [], []
-    for i in range(devices):
-        dev = EdgeDevice(
+    edges = [
+        EdgeDevice(
             dcfg, dparams, predictor=predictor, k_max=k_max,
-            max_len=max_len, seed=seed + 10 + i,
-            draft_speed=float(rng.choice([30.0, 50.0, 80.0])),
+            max_len=max_len, seed=seed + 10 + sp.idx,
+            draft_speed=sp.draft_speed, greedy=greedy,
         )
-        prompt = rng.integers(2, tcfg.vocab, size=prompt_len).tolist()
-        slo_class = int(rng.integers(1, 5))
+        for sp in fleet
+    ]
+
+    if sync:
+        return _run_lockstep(server, edges, fleet, rounds, net, verbose,
+                             scheduler)
+
+    t_wall0 = time.time()
+    runtime = ClusterRuntime(server, edges, fleet, ccfg, vocab=tcfg.vocab)
+    result = runtime.run()
+    wall = time.time() - t_wall0
+
+    m = result.metrics
+    stats = [m.per_session.get(sp.idx, WDTStats()) for sp in fleet] \
+        if not churn else []
+    total = WDTStats()
+    for it in m.iterations:
+        total.add(it, 0.0)
+    if verbose:
+        print(f"[serve] mode=event devices={devices} "
+              f"{'horizon=%.1fs' % result.horizon if churn else 'rounds=%d' % rounds} "
+              f"scheduler={scheduler} speculate={speculate}")
+        print(f"[serve] drafted={total.drafted} accepted={total.accepted} "
+              f"committed={total.committed} acceptance={total.acceptance_rate:.3f}")
+        print(f"[serve] measured: goodput={m.goodput(result.horizon):.1f} tok/s "
+              f"wdt={m.t_wdt*1e3:.1f} ms waste_frac={m.waste_fraction():.3f} "
+              f"mean_queue={m.mean_queue_time()*1e3:.2f} ms")
+        s = m.spec
+        print(f"[serve] speculation: commits={s.commits} rollbacks={s.rollbacks} "
+              f"salvaged={s.salvaged} discarded={s.discarded} "
+              f"commit_rate={s.commit_rate:.2f}")
+        print(f"[serve] sessions={len(m.sessions)} "
+              f"violations={m.violations()} "
+              f"deadline_misses={m.deadline_violations()} "
+              f"engine batches={engine.stats['batches']} wall={wall:.1f}s")
+        for i, dev in enumerate(edges[:4]):
+            if dev.session is not None:
+                print(f"[serve] dev{i} response: {dev.response_tokens[:12]}")
+    return {"stats": stats, "total": total, "edges": edges, "server": server,
+            "metrics": m, "result": result}
+
+
+def _run_lockstep(server, edges, fleet, rounds, net, verbose, scheduler):
+    """The original synchronous round loop (reference / ``--sync``): all
+    devices draft, the pool drains through dispatch epochs, verdicts apply,
+    repeat.  No drafting/verification overlap exists, so WDT here is the
+    analytic accounting of `core/wdt.py`, not a measurement."""
+    stats = []
+    for sp, dev in zip(fleet, edges):
         # synchronous driver: every device must be admitted up front, so
         # fail loudly on capacity exhaustion instead of queueing
-        first = server.open_session(i, prompt, slo_class=slo_class,
-                                    draft_speed=dev.controller.draft_speed,
+        first = server.open_session(sp.idx, sp.prompt, slo_class=sp.slo_class,
+                                    draft_speed=sp.draft_speed,
                                     queue_on_full=False)
-        dev.start_session(i, prompt, first)
-        edges.append(dev)
+        dev.start_session(sp.idx, sp.prompt, first)
         stats.append(WDTStats())
 
     now = 0.0
@@ -122,7 +214,7 @@ def run_serving(
     wall = time.time() - t_wall0
 
     total = WDTStats()
-    for i, s in enumerate(stats):
+    for s in stats:
         total.iterations += s.iterations
         total.drafted += s.drafted
         total.sent += s.sent
@@ -131,7 +223,9 @@ def run_serving(
         total.wasted += s.wasted
         total.violations += s.violations
     if verbose:
-        print(f"[serve] devices={devices} rounds={rounds} scheduler={scheduler}")
+        engine = server.engine
+        print(f"[serve] mode=sync devices={len(edges)} rounds={rounds} "
+              f"scheduler={scheduler}")
         print(f"[serve] drafted={total.drafted} accepted={total.accepted} "
               f"committed={total.committed} waste_frac={total.waste_fraction:.3f} "
               f"acceptance={total.acceptance_rate:.3f}")
@@ -152,12 +246,21 @@ def main():
     ap.add_argument("--scheduler", choices=("slo", "fcfs"), default="slo")
     ap.add_argument("--predictor-path", default=None)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--sync", action="store_true",
+                    help="lock-step reference driver (no overlap)")
+    ap.add_argument("--no-speculate", action="store_true",
+                    help="event-driven but without speculative continuation")
+    ap.add_argument("--churn", action="store_true",
+                    help="session churn (Poisson think times) until --horizon")
+    ap.add_argument("--horizon", type=float, default=20.0,
+                    help="virtual-seconds horizon for --churn")
     args = ap.parse_args()
     pred = RejectionPredictor.load(args.predictor_path) if args.predictor_path else None
     run_serving(
         args.target, args.draft, devices=args.devices, rounds=args.rounds,
         k_max=args.k_max, scheduler=args.scheduler, predictor=pred,
-        seed=args.seed,
+        seed=args.seed, sync=args.sync, speculate=not args.no_speculate,
+        churn=args.churn, horizon=args.horizon if args.churn else None,
     )
 
 

@@ -5,6 +5,26 @@ Invariant shared with the server: ``fed`` = number of tokens whose state is
 in the local draft cache = len(committed) - 1.  The last committed token is
 the first input of the next draft round; rejected draft tokens are rolled
 back by the position pointer (attention caches are length-capped).
+
+Two drive modes share that invariant:
+
+  * **lock-step** (``draft_round`` / ``apply_verdict``) — draft a block,
+    wait for the verdict, commit, repeat.  The device idles while its
+    request queues and verifies on the server: that idle window is exactly
+    where the paper's Wasted Drafting Time and interference hide.
+  * **pipelined** (``begin_round`` / ``finish_round`` /
+    ``begin_speculation`` / ``resolve_verdict``) — the event-driven cluster
+    runtime steps block drafting token-by-token on a virtual clock and,
+    once a block is in flight, keeps drafting *speculatively*: it samples a
+    guess for the server's bonus token and starts the next block after it.
+    When the verdict lands, the guess either **commits** (full accept and
+    the bonus token matches — the overlap-drafted tokens become the head of
+    the next block, no time wasted) or **rolls back** (the cache position
+    pointer snaps to the committed prefix, the same stale-but-masked
+    rollback `apply_verdict` performs; the overlapped tokens are measured
+    waste).  Both modes produce byte-identical committed streams because
+    drafting keys are position-folded (`core/controller.py`) and stale
+    cache entries past ``fed`` are never attended to.
 """
 from __future__ import annotations
 
@@ -14,7 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.controller import DraftingController
+from repro.core.controller import BlockDrafter, DraftingController, DraftResult
 from repro.models import build
 
 
@@ -78,10 +98,11 @@ class EdgeDevice:
             fed=len(toks),
         )
 
-    def draft_round(self):
-        """Draft a block; returns DraftResult.  Feeds any committed tokens
-        the local cache is missing first (catch-up: after a fully-accepted
-        block the last draft token was produced but never fed)."""
+    def begin_round(self) -> BlockDrafter:
+        """Catch the local cache up to the committed stream and return a
+        token-granular drafter for the next submission block.  The cluster
+        runtime steps it between virtual-clock events; ``draft_round`` is
+        the run-to-completion wrapper."""
         s = self.session
         catch = s.committed[s.fed :]
         assert catch, "invariant: committed always leads fed by >= 1"
@@ -91,14 +112,29 @@ class EdgeDevice:
                 self.params, pre, self.cache, jnp.int32(s.fed)
             )
             s.fed += len(catch) - 1
-        last = np.asarray([catch[-1]], np.int32)
-        res, self.cache, self.rng = self.controller.draft(
-            self.rng, last, self.cache, s.fed
+        return self.controller.begin_block(
+            self.rng, int(catch[-1]), self.cache, s.fed
         )
+
+    def finish_round(self, drafter: BlockDrafter) -> DraftResult:
+        """Absorb a completed drafter: sync the cache, update session
+        counters, and return the block to submit."""
+        res = drafter.result()
+        self.cache = drafter.cache
         self._last_n_drafted = res.n_drafted
+        s = self.session
         s.rounds += 1
         s.drafted += res.n_drafted
         return res
+
+    def draft_round(self):
+        """Draft a block; returns DraftResult.  Feeds any committed tokens
+        the local cache is missing first (catch-up: after a fully-accepted
+        block the last draft token was produced but never fed)."""
+        drafter = self.begin_round()
+        while drafter.step():
+            pass
+        return self.finish_round(drafter)
 
     def apply_verdict(self, accept_len: int, token: int, draft_tokens):
         """Commit the accepted prefix + correction token; roll the cache
@@ -119,6 +155,61 @@ class EdgeDevice:
             raise NotImplementedError(
                 "recurrent draft models need snapshot re-sync on rollback"
             )
+
+    # -- speculative continuation (event-driven cluster runtime) -----------
+    def begin_speculation(self, res) -> tuple[int, BlockDrafter, int]:
+        """Start drafting the NEXT block while ``res`` is in flight, under
+        the optimistic assumption that the whole block is accepted and the
+        server's bonus token equals the draft model's own next sample (the
+        *guess*).
+
+        On a predictor-stopped block the guess is free — the flagged token
+        the controller withheld already sits at the bonus position.  On a
+        max-stopped block the guess costs one extra draft-model step.
+        Returns ``(guess, drafter, guess_cost_tokens)``; the drafter's
+        tokens become the next submission block if the verdict confirms the
+        guess (``resolve_verdict``)."""
+        if self.cfg.family in ("ssm", "hybrid"):
+            raise NotImplementedError(
+                "speculative continuation needs pointer-rollback draft caches"
+            )
+        s = self.session
+        valid = s.fed + res.n_drafted        # cache-valid tokens after block
+        if res.n_drafted > res.n_sent:       # predictor-stop: flagged = guess
+            guess, cost = int(res.last_drafted), 0
+        else:                                # max-stop: sample the guess
+            guess, _, self.cache = self.controller.sample_next(
+                self.rng, int(res.last_drafted), self.cache, valid
+            )
+            valid += 1
+            cost = 1
+        s.drafted += cost
+        drafter = self.controller.begin_block(self.rng, guess, self.cache, valid)
+        return guess, drafter, cost
+
+    def resolve_verdict(self, accept_len: int, token: int, res,
+                        guess: int | None = None,
+                        speculated: bool = False) -> bool:
+        """Apply a verdict to a round that may have speculation in flight.
+
+        Commit path (returns True): the block was fully accepted AND the
+        bonus token matches the guess — every token drafted during the
+        overlap stands, and the speculation drafter simply continues as the
+        live drafter of the next round (``fed`` realigns to the invariant
+        ``len(committed) - 1``: the guess is committed and already fed).
+
+        Rollback path (returns False): plain ``apply_verdict`` — the cache
+        position pointer snaps back over rejected drafts and every
+        speculative entry past it becomes stale-but-masked."""
+        s = self.session
+        if speculated and accept_len == res.n_sent and int(token) == int(guess):
+            s.committed.extend(int(t) for t in res.tokens)
+            s.committed.append(int(token))
+            s.accepted += accept_len
+            s.fed = len(s.committed) - 1
+            return True
+        self.apply_verdict(accept_len, token, res.tokens)
+        return False
 
     @property
     def response_tokens(self):

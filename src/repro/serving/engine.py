@@ -75,6 +75,13 @@ class VerifyItem:
     slot: int
     draft_tokens: np.ndarray     # (k,) int32
     q_logits: np.ndarray         # (k, V) float32
+    #: optional (a, b) int pair keying this row's accept/correction draws
+    #: (serving passes (session_id, committed_len)).  When every item in a
+    #: batch carries a tag, verification outcomes become a pure function of
+    #: (engine seed, tag, tokens, logits) — independent of batch composition
+    #: and dispatch order, so differently-batched drivers commit identical
+    #: streams.  Untagged batches keep the legacy split-per-call stream.
+    rng_tag: tuple | None = None
 
 
 @dataclasses.dataclass
@@ -118,6 +125,8 @@ class VerificationEngine:
         self.last_token = np.zeros(max_slots, np.int64) # committed[-1]/slot
         self.free_slots = list(range(max_slots - 1, -1, -1))
         self.rng = jax.random.PRNGKey(seed)
+        #: never advanced: base for rng_tag-keyed (deterministic) verification
+        self._rng_base = jax.random.PRNGKey(seed)
         self.stats = {
             "batches": 0,
             "tokens_verified": 0,
@@ -223,15 +232,19 @@ class VerificationEngine:
         """KV-token capacity the scheduler may admit against this epoch.
 
         A scheduled request accounts ``cached_len + new_tokens``; its
-        cached tokens are covered by its session's committed (resident)
-        tokens and its new tokens must come out of pages the allocator can
-        still hand out (free + evictable prefix-cached).  So the live
-        budget is ``committed + free`` — it tightens as page slack and
-        rejected-draft garbage accumulate, and widens when sessions close
-        or tail pages are reclaimed.  The dense backend's capacity is
-        static."""
+        cached tokens are covered by its session's resident pages and its
+        new tokens must fit in its own tail-page slack or in pages the
+        allocator can still hand out (free + evictable prefix-cached).  So
+        the live budget is ``resident_capacity + free`` — counting the
+        slack inside sequences' tail pages matters: with large pages and
+        short sessions most capacity *is* tail slack, and a budget of only
+        committed+free livelocks a full pool even though every request
+        fits (single-slot engines hit this immediately).  The budget
+        tightens as rejected-draft garbage accumulates and widens when
+        sessions close or tail pages are trimmed.  The dense backend's
+        capacity is static."""
         if self.paged:
-            return self.kv.free_tokens + self.kv.committed_tokens()
+            return self.kv.free_tokens + self.kv.resident_tokens()
         return self.max_slots * self.max_len
 
     def prefix_cache_stats(self) -> dict:
@@ -377,7 +390,15 @@ class VerificationEngine:
                 p_logits, sub = self._decode(
                     self.params, jnp.asarray(feed), sub, jnp.asarray(pos)
                 )
-        self.rng, kv = jax.random.split(self.rng)
+        tags = None
+        if all(it.rng_tag is not None for it in items):
+            tags = np.zeros((nb, 2), np.int32)   # pad rows: discarded anyway
+            for i, it in enumerate(items):
+                tags[i] = it.rng_tag
+        if tags is None:
+            self.rng, kv = jax.random.split(self.rng)
+        else:
+            kv = self._rng_base
         out = speculative_verify(
             kv,
             jnp.asarray(draft),
@@ -385,6 +406,7 @@ class VerificationEngine:
             jnp.asarray(qlog),
             p_logits,
             method=self.method,
+            rng_tags=None if tags is None else jnp.asarray(tags),
         )
         acc = np.asarray(out["accept_len"])
         tok = np.asarray(out["token"])

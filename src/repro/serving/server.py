@@ -13,7 +13,6 @@ latency model at thousands of devices.
 from __future__ import annotations
 
 import dataclasses
-import time
 
 import numpy as np
 
@@ -68,6 +67,7 @@ class WISPServer:
         slo_classes: dict | None = None,
         network: NetworkModel | None = None,
         dynamic_memory_budget: bool = True,
+        deterministic_verify: bool = True,
     ):
         self.engine = engine
         self.coeffs = coeffs
@@ -81,8 +81,18 @@ class WISPServer:
         #: passed to schedule() as an override — the caller's SchedulerConfig
         #: is never mutated
         self.dynamic_memory_budget = dynamic_memory_budget
+        #: key each request's accept/correction draws by (session_id,
+        #: committed_len) so verification outcomes do not depend on batch
+        #: composition or dispatch order — the event-driven and lock-step
+        #: drivers then commit identical streams (see VerifyItem.rng_tag)
+        self.deterministic_verify = deterministic_verify
         #: the budget the most recent epoch was admitted against
         self.memory_budget_tokens = self.sched_cfg.memory_budget_tokens
+        #: observability: the most recent epoch's ScheduleDecision and the
+        #: verify time attributed to it (wall by default; virtual when the
+        #: cluster runtime passes ``verify_time`` to ``step``)
+        self.last_decision = None
+        self.last_verify_time = 0.0
         self.sessions: dict[int, ServerSession] = {}
         self.pending: list[VerifyRequest] = []
         #: sessions the cache could not admit yet: (session_id, prompt,
@@ -155,6 +165,12 @@ class WISPServer:
             if len(self.admission_queue) == before:
                 raise KeyError(session_id)
             return
+        # Lifecycle rule (docs/ARCHITECTURE.md §"Session lifecycle"): close
+        # drops the session's still-pending verification requests.  Leaving
+        # them behind would make a later step() dispatch a request whose
+        # session — and engine slot — no longer exist (KeyError at best,
+        # verification against a recycled slot at worst).
+        self.pending = [r for r in self.pending if r.session_id != session_id]
         self.engine.close_session(s.slot)
         self._try_admit()
 
@@ -195,8 +211,15 @@ class WISPServer:
         return self._rid
 
     # -- dispatch epoch -------------------------------------------------------
-    def step(self, now: float) -> list[Verdict]:
-        """One dispatch epoch at time ``now``; returns verdicts of the batch."""
+    def step(self, now: float, *, verify_time=None) -> list[Verdict]:
+        """One dispatch epoch at time ``now``; returns verdicts of the batch.
+
+        ``verify_time``: optional callable mapping the list of served
+        VerifyRequests to the verification duration (seconds) to attribute
+        to this epoch.  The event-driven cluster runtime passes one driven
+        by the estimator (+ optional noise) so queueing/violation accounting
+        runs on the virtual clock; by default each verdict carries the
+        engine's measured wall time (synchronous CPU drivers)."""
         self._try_admit()
         # M(t_k): live free-page capacity, not a static config number
         self.memory_budget_tokens = (
@@ -209,6 +232,7 @@ class WISPServer:
         decision = self.scheduler.schedule(
             self.pending, now, memory_budget_tokens=self.memory_budget_tokens
         )
+        self.last_decision = decision
         if not decision.batch:
             return []
         chosen = {r.req_id for r in decision.batch}
@@ -218,7 +242,11 @@ class WISPServer:
         for r in decision.batch:
             s = self.sessions[r.session_id]
             toks, qlog = r.payload
-            items.append(VerifyItem(slot=s.slot, draft_tokens=toks, q_logits=qlog))
+            items.append(VerifyItem(
+                slot=s.slot, draft_tokens=toks, q_logits=qlog,
+                rng_tag=(r.session_id, r.cached_len)
+                if self.deterministic_verify else None,
+            ))
         try:
             served = decision.batch
             outcomes = self.engine.verify(items)
@@ -237,8 +265,12 @@ class WISPServer:
                 except OutOfPages:
                     self.pending.append(r)
 
+        dt_virtual = None if verify_time is None else float(verify_time(served))
+        self.last_verify_time = (
+            dt_virtual if dt_virtual is not None
+            else (outcomes[0].t_verify if outcomes else 0.0)
+        )
         verdicts = []
-        done = time.perf_counter()
         for r, o in zip(served, outcomes):
             s = self.sessions[r.session_id]
             # EWMA acceptance update
@@ -247,14 +279,15 @@ class WISPServer:
             s.rounds += 1
             s.committed_len += o.emitted
             t_queue = max(0.0, now - r.enqueued_at)
-            complete = now + o.t_verify
+            tv = o.t_verify if dt_virtual is None else dt_virtual
+            complete = now + tv
             v = Verdict(
                 session_id=r.session_id,
                 accept_len=o.accept_len,
                 token=o.token,
                 emitted=o.emitted,
                 t_queue=t_queue,
-                t_verify=o.t_verify,
+                t_verify=tv,
                 deadline=r.deadline,
                 violated=complete > r.deadline,
             )

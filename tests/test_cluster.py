@@ -1,0 +1,180 @@
+"""Event-driven cluster runtime: determinism, speculative-continue
+rollback/commit equivalence with the lock-step driver, close-while-pending
+regression, churn/admission integration."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.cluster import ClusterConfig, ClusterRuntime, EventKind, EventQueue, build_fleet
+from repro.configs import get_config
+from repro.core.estimator import EstimatorCoeffs
+from repro.models import build
+from repro.serving.client import EdgeDevice
+from repro.serving.engine import VerificationEngine
+from repro.serving.server import WISPServer
+from repro.serving.transport import NetworkModel
+
+COEFFS = EstimatorCoeffs(a=1e-4, b_compute=1e-8, b_read=1e-6, c=1e-3)
+
+
+@pytest.fixture(scope="module")
+def dense_pair():
+    cfg = get_config("qwen2-7b").reduced()
+    bundle = build(cfg)
+    tparams = bundle.init(jax.random.PRNGKey(0))
+    dparams = bundle.init(jax.random.PRNGKey(1))
+    return cfg, tparams, dparams
+
+
+def _cluster_run(cfg, tparams, dparams, ccfg, *, scheduler="slo",
+                 method="residual", greedy=False, max_slots=None):
+    engine = VerificationEngine(
+        cfg, tparams, max_slots=max_slots or ccfg.devices,
+        max_len=ccfg.max_len, method=method,
+    )
+    server = WISPServer(engine, COEFFS, scheduler=scheduler,
+                        network=NetworkModel())
+    fleet = build_fleet(ccfg, cfg.vocab)
+    edges = [
+        EdgeDevice(cfg, dparams, k_max=ccfg.k_max, max_len=ccfg.max_len,
+                   seed=100 + sp.idx, draft_speed=sp.draft_speed,
+                   greedy=greedy)
+        for sp in fleet
+    ]
+    runtime = ClusterRuntime(server, edges, fleet, ccfg, vocab=cfg.vocab)
+    return runtime.run()
+
+
+def _lockstep_run(cfg, tparams, dparams, ccfg, *, method="residual",
+                  greedy=False):
+    engine = VerificationEngine(cfg, tparams, max_slots=ccfg.devices,
+                                max_len=ccfg.max_len, method=method)
+    server = WISPServer(engine, COEFFS, network=NetworkModel())
+    fleet = build_fleet(ccfg, cfg.vocab)
+    edges = [
+        EdgeDevice(cfg, dparams, k_max=ccfg.k_max, max_len=ccfg.max_len,
+                   seed=100 + sp.idx, draft_speed=sp.draft_speed,
+                   greedy=greedy)
+        for sp in fleet
+    ]
+    now = 0.0
+    for sp, dev in zip(fleet, edges):
+        first = server.open_session(sp.idx, sp.prompt,
+                                    slo_class=sp.slo_class,
+                                    draft_speed=sp.draft_speed,
+                                    queue_on_full=False)
+        dev.start_session(sp.idx, sp.prompt, first)
+    for _ in range(ccfg.rounds):
+        results = {}
+        for i, dev in enumerate(edges):
+            res = dev.draft_round()
+            server.submit(i, res.tokens, res.q_logits, now=now,
+                          t_draft=res.draft_time, t_network=0.01)
+            results[i] = res
+        while server.queue_depth:
+            verdicts = server.step(now)
+            if not verdicts:
+                now += 0.005
+                continue
+            for v in verdicts:
+                edges[v.session_id].apply_verdict(
+                    v.accept_len, v.token, results[v.session_id].tokens
+                )
+            now += 0.01
+    return edges
+
+
+def test_event_queue_same_instant_ordering():
+    """Same-timestamp events pop in EventKind priority order (verdicts and
+    arrivals before dispatch), then insertion order."""
+    q = EventQueue()
+    q.push(1.0, EventKind.DISPATCH, "d")
+    q.push(1.0, EventKind.REQUEST, "r1")
+    q.push(1.0, EventKind.VERDICT, "v")
+    q.push(1.0, EventKind.REQUEST, "r2")
+    q.push(0.5, EventKind.DISPATCH, "early")
+    order = [q.pop().payload for _ in range(5)]
+    assert order == ["early", "v", "r1", "r2", "d"]
+
+
+def test_cluster_deterministic_under_fixed_seed(dense_pair):
+    """Two runs with identical seeds produce the identical event outcome:
+    same iteration logs, same committed streams, same horizon."""
+    cfg, tparams, dparams = dense_pair
+    ccfg = ClusterConfig(devices=2, rounds=3, k_max=3, max_len=128, seed=0)
+    a = _cluster_run(cfg, tparams, dparams, ccfg)
+    b = _cluster_run(cfg, tparams, dparams, ccfg)
+    assert a.horizon == b.horizon
+    assert [dataclasses.astuple(it) for it in a.metrics.iterations] == \
+           [dataclasses.astuple(it) for it in b.metrics.iterations]
+    for da, db in zip(a.devices, b.devices):
+        assert da.session.committed == db.session.committed
+    assert dataclasses.astuple(a.metrics.spec) == \
+           dataclasses.astuple(b.metrics.spec)
+
+
+def test_cluster_stream_matches_lockstep_rollback_path(dense_pair):
+    """Speculative continuation with a weak draft (residual accept, most
+    guesses wrong → rollback path): the clusterized stream must commit
+    byte-identical tokens to the lock-step driver for the same seed."""
+    cfg, tparams, dparams = dense_pair
+    ccfg = ClusterConfig(devices=2, rounds=3, k_max=3, max_len=128, seed=0)
+    result = _cluster_run(cfg, tparams, dparams, ccfg)
+    sync_edges = _lockstep_run(cfg, tparams, dparams, ccfg)
+    assert result.metrics.spec.rollbacks > 0    # the path was exercised
+    for dev_c, dev_s in zip(result.devices, sync_edges):
+        assert dev_c.session.committed == dev_s.session.committed
+
+
+def test_cluster_stream_matches_lockstep_commit_path(dense_pair):
+    """Self-speculation (draft == target, greedy): every block fully
+    accepts and every speculation commits; streams must still match the
+    lock-step driver byte for byte."""
+    cfg, tparams, _ = dense_pair
+    ccfg = ClusterConfig(devices=2, rounds=3, k_max=3, max_len=128, seed=0)
+    result = _cluster_run(cfg, tparams, tparams, ccfg, method="greedy",
+                          greedy=True)
+    sync_edges = _lockstep_run(cfg, tparams, tparams, ccfg,
+                               method="greedy", greedy=True)
+    assert result.metrics.spec.commits > 0      # the path was exercised
+    assert result.metrics.acceptance_rate() == 1.0
+    for dev_c, dev_s in zip(result.devices, sync_edges):
+        assert dev_c.session.committed == dev_s.session.committed
+
+
+def test_close_session_purges_pending(dense_pair):
+    """Regression: close_session must drop the closed session's in-flight
+    requests from the pending pool — a later step() used to KeyError on
+    sessions[r.session_id]."""
+    cfg, tparams, dparams = dense_pair
+    engine = VerificationEngine(cfg, tparams, max_slots=2, max_len=128)
+    server = WISPServer(engine, COEFFS)
+    dev = EdgeDevice(cfg, dparams, k_max=3, max_len=128)
+    first = server.open_session(0, [1, 2, 3], slo_class=2)
+    dev.start_session(0, [1, 2, 3], first)
+    res = dev.draft_round()
+    server.submit(0, res.tokens, res.q_logits, now=0.0, t_draft=0.0,
+                  t_network=0.0)
+    assert server.queue_depth == 1
+    server.close_session(0)
+    assert server.queue_depth == 0              # purged with the session
+    verdicts = server.step(0.0)                 # must not KeyError
+    assert verdicts == []
+
+
+def test_churn_mode_with_admission_queue(dense_pair):
+    """Session churn against an engine with fewer slots than devices: the
+    second device waits in the admission queue and is admitted when the
+    first session closes; the run completes sessions from both devices."""
+    cfg, tparams, dparams = dense_pair
+    ccfg = ClusterConfig(devices=2, rounds=None, horizon=5.0, k_max=2,
+                         max_len=128, seed=0, response_len_mean=3.0,
+                         think_time_mean=0.05)
+    result = _cluster_run(cfg, tparams, dparams, ccfg, max_slots=1)
+    m = result.metrics
+    assert len(m.sessions) >= 2
+    assert {s.device for s in m.sessions} == {0, 1}
+    # streams were committed and sessions closed cleanly
+    assert all(s.committed > 0 for s in m.sessions)
