@@ -29,6 +29,7 @@ TABLES = {
     "predictor_ablation": "Tables 5/6 (predictor ON/OFF ablations)",
     "capacity": "Table 2 (system capacity per SLO class)",
     "paged_serving": "§4.5 (dense vs paged engine: throughput + prefix hits)",
+    "ttft": "long-prompt interference: monolithic vs chunked prefill (§8)",
 }
 
 

@@ -78,9 +78,11 @@ def main():
     server.open_session(1, preamble + [86, 75, 30, 9], slo_class=3,
                         queue_on_full=False)
     st = engine.prefix_cache_stats()
+    # st["backend"] tags where the counters come from: the prefix cache is
+    # a paged-backend structure; a dense engine reports structural zeros
     print(
-        f"second session with same prompt: prefix hits={st['hits']} "
-        f"pages in use={st['pages_in_use']} "
+        f"second session with same prompt [{st['backend']} backend]: "
+        f"prefix hits={st['hits']} pages in use={st['pages_in_use']} "
         f"live KV budget={engine.memory_budget_tokens()} tokens"
     )
 

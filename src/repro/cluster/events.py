@@ -4,10 +4,11 @@ The heap orders events by ``(time, kind, seq)``:
 
   * ``time``  — virtual seconds;
   * ``kind``  — the EventKind value doubles as a same-instant priority:
-    verifier completions land before verdict deliveries, deliveries before
-    session/request arrivals, arrivals before device work, and dispatch
-    epochs last — so an epoch firing at time t sees *every* request that
-    arrived at t (continuous batching, no same-instant races);
+    verifier completions land before deliveries (verdicts, then first
+    tokens of completed prefills), deliveries before session/request
+    arrivals, arrivals before device work, and dispatch epochs last — so
+    an epoch firing at time t sees *every* request that arrived at t
+    (continuous batching, no same-instant races);
   * ``seq``   — a monotone counter breaking remaining ties in push order,
     which is itself deterministic given a fixed seed.
 
@@ -28,10 +29,11 @@ class EventKind(enum.IntEnum):
 
     GPU_DONE = 0        # verifier busy period ends
     VERDICT = 1         # a verdict reaches its edge device
-    SESSION_OPEN = 2    # a device asks to open a new session
-    REQUEST = 3         # a drafted block arrives at the server (post-uplink)
-    DEV_STEP = 4        # one draft-model token completes on a device
-    DISPATCH = 5        # server dispatch epoch (its own timer)
+    FIRST_TOKEN = 2     # a completed prompt prefill's first token arrives
+    SESSION_OPEN = 3    # a device asks to open a new session
+    REQUEST = 4         # a drafted block arrives at the server (post-uplink)
+    DEV_STEP = 5        # one draft-model token completes on a device
+    DISPATCH = 6        # server dispatch epoch (its own timer)
 
 
 @dataclasses.dataclass

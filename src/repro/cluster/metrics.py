@@ -58,6 +58,10 @@ class SessionRecord:
     t_close: float
     committed: int            # response tokens committed
     rounds: int
+    #: time-to-first-token: from the client's open request to the first
+    #: token reaching the device (prefill + queueing + downlink).  0.0
+    #: under prefill_mode="zero", where prefill costs no virtual time.
+    ttft: float = 0.0
 
     @property
     def speed(self) -> float:
@@ -189,3 +193,19 @@ class ClusterMetrics:
     def deadline_violations(self) -> int:
         """Iteration-level deadline misses (Eq. 6 budget)."""
         return sum(it.violated for it in self.iterations)
+
+    def deadline_violation_rate(self) -> float:
+        return self.deadline_violations() / max(len(self.iterations), 1)
+
+    # -- TTFT (chunked-prefill observability) -----------------------------
+    def ttfts(self) -> list[float]:
+        """Per-session time-to-first-token, session-close order."""
+        return [s.ttft for s in self.sessions]
+
+    def ttft_quantile(self, q: float) -> float:
+        """Nearest-rank TTFT quantile (q in [0, 1]); 0.0 with no sessions."""
+        xs = sorted(self.ttfts())
+        if not xs:
+            return 0.0
+        i = min(len(xs) - 1, max(0, int(round(q * (len(xs) - 1)))))
+        return xs[i]

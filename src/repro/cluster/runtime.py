@@ -25,12 +25,23 @@ The machinery (docs/ARCHITECTURE.md has the timeline):
     post-verdict remainder — or rolls it back by the cache position pointer,
     the overlapped tokens becoming measured waste.
 
+Prompt prefill is charged on the virtual clock per ``cfg.prefill_mode``
+(DESIGN.md §8): ``"zero"`` keeps the legacy free-and-instant open,
+``"monolithic"`` seizes the verifier for one estimator-priced blocking
+span per prompt (head-of-line interference — verification queues behind
+every cold prompt), and ``"chunked"`` admits the session immediately and
+lets the server's SLO scheduler interleave fixed-budget prefill chunks
+with verification; the first token rides a ``FIRST_TOKEN`` event back to
+the device when the final chunk's epoch completes.  TTFT is measured
+per session either way.
+
 Determinism: drafting keys are position-folded (`core/controller.py`),
 verification draws are (session, committed_len)-keyed
 (`core/speculative.py`), events are totally ordered (`cluster/events.py`)
 and all workload randomness comes from seeded generators — so a run is a
 pure function of its config, and the committed streams are byte-identical
-to the lock-step driver's (`tests/test_cluster.py`).
+to the lock-step driver's (`tests/test_cluster.py`) **and invariant to
+the prefill mode** (timing never reaches a sampling key).
 """
 from __future__ import annotations
 
@@ -41,6 +52,7 @@ import numpy as np
 from repro.cluster.events import EventKind, EventQueue
 from repro.cluster.metrics import ClusterMetrics, SessionRecord
 from repro.cluster.workload import ClusterConfig, DeviceSpec, DeviceWorkload
+from repro.core.estimator import BatchShape
 from repro.core.wdt import IterationLog
 
 
@@ -53,7 +65,7 @@ class _DeviceProc:
     profile: DeviceSpec
     workload: DeviceWorkload
     tau: float                        # seconds per drafted token
-    state: str = "idle"               # idle|admission|draft|wait|think|done
+    state: str = "idle"               # idle|admission|prefill|draft|wait|think|done
     gen: int = 0                      # event generation; stale steps dropped
     drafter: object = None            # live BlockDrafter while drafting
     inflight: object = None           # DraftResult awaiting its verdict
@@ -73,6 +85,8 @@ class _DeviceProc:
     rounds_done: int = 0
     response_target: int | None = None
     t_open: float = 0.0
+    t_request: float = 0.0            # when SESSION_OPEN fired (TTFT clock)
+    ttft: float = 0.0                 # first token arrival - t_request
     sessions_done: int = 0
 
     def clear_spec(self):
@@ -119,6 +133,10 @@ class ClusterRuntime:
         self._next_sid = 0
         self._by_session: dict[int, _DeviceProc] = {}
         self._pending_open: dict[int, list] = {}    # sid -> prompt (queued)
+        #: monolithic prefill spans waiting for the verifier, FIFO:
+        #: (sid, first_token, prompt_len) — models `new_session` as the
+        #: blocking engine call it is in that mode
+        self._prefill_fifo: list[tuple] = []
         self._noise_rng = np.random.default_rng(cfg.seed + 90_001)
         self._done_devices = 0
 
@@ -138,19 +156,69 @@ class ClusterRuntime:
         self._disp_t = t
         self.events.push(t, EventKind.DISPATCH)
 
+    # -- monolithic prefill spans (prefill_mode="monolithic") ----------------
+    def _prefill_span_time(self, prompt_len: int) -> float:
+        """Virtual duration of one blocking whole-prompt prefill, priced by
+        the same estimator that prices verification batches (a prompt is a
+        cold request: all-new tokens, nothing cached), jittered like them."""
+        dt = self.server.coeffs.predict(
+            [BatchShape(new_tokens=prompt_len, cached_tokens=0)]
+        )
+        if self.cfg.latency_noise_sigma:
+            dt *= float(np.exp(self._noise_rng.normal(
+                0.0, self.cfg.latency_noise_sigma)))
+        return dt
+
+    def _queue_prefill_span(self, sid: int, first: int, prompt_len: int,
+                            t: float):
+        self._prefill_fifo.append((sid, first, prompt_len))
+        self._maybe_start_prefill(t)
+
+    def _maybe_start_prefill(self, t: float):
+        """Start the next blocking prefill span if the verifier is idle.
+        Monolithic `new_session` runs OUTSIDE the scheduler, so it takes
+        the engine ahead of any pending verification — exactly the
+        head-of-line interference chunked prefill removes."""
+        if self.verifier_busy or not self._prefill_fifo:
+            return
+        sid, first, plen = self._prefill_fifo.pop(0)
+        dt = self._prefill_span_time(plen)
+        self.verifier_busy = True
+        self.events.push(t + dt, EventKind.GPU_DONE)
+        self.events.push(t + dt + self.net.downlink_time(),
+                         EventKind.FIRST_TOKEN, (sid, first))
+
     # -- session lifecycle --------------------------------------------------
     def _open_session(self, dev: _DeviceProc, prompt: list, t: float):
         sid = self._next_sid
         self._next_sid += 1
         self._by_session[sid] = dev
         dev.session_id = sid
+        dev.t_request = t
+        # reset NOW, not at first token: a device truncated by the horizon
+        # while still prefilling/queued must not satisfy the end-of-run
+        # "rounds_done > 0" record guard with the PREVIOUS session's
+        # counters (phantom SessionRecord with stale t_open/ttft/committed)
+        dev.rounds_done = 0
         first = self.server.open_session(
             sid, prompt, slo_class=dev.profile.slo_class,
-            draft_speed=dev.profile.draft_speed, queue_on_full=True,
+            draft_speed=dev.profile.draft_speed, queue_on_full=True, now=t,
         )
-        if first is None:               # engine full: admission queue
+        if first is None:
+            # chunked mode: admitted and prefilling under the scheduler —
+            # or, any mode, capacity-queued.  Either way the first token
+            # arrives later; the device idles until then.
             dev.state = "admission"
             self._pending_open[sid] = prompt
+            if (self.cfg.prefill_mode == "chunked"
+                    and not self.verifier_busy and self.server.queue_depth):
+                self._schedule_dispatch(t)
+            return
+        if self.cfg.prefill_mode == "monolithic":
+            # admitted, but the blocking prefill span still has to run
+            dev.state = "prefill"
+            self._pending_open[sid] = prompt
+            self._queue_prefill_span(sid, first, len(prompt), t)
             return
         self._start_session(dev, sid, prompt, first, t)
 
@@ -158,6 +226,7 @@ class ClusterRuntime:
                        first: int, t: float):
         dev.device.start_session(sid, prompt, first)
         dev.t_open = t
+        dev.ttft = t - dev.t_request
         dev.rounds_done = 0
         dev.response_target = (
             None if self.cfg.rounds is not None
@@ -187,6 +256,7 @@ class ClusterRuntime:
             t_close=t,
             committed=len(dev.device.response_tokens),
             rounds=dev.rounds_done,
+            ttft=dev.ttft,
         )
         self.metrics.close_session(rec)
         self.server.close_session(sid)
@@ -194,6 +264,10 @@ class ClusterRuntime:
         dev.sessions_done += 1
         dev.clear_spec()
         self._drain_admissions(t)
+        # chunked mode: a capacity-queued session admitted by this close
+        # just enqueued its first prefill chunk — make sure an epoch fires
+        if self.server.queue_depth and not self.verifier_busy:
+            self._schedule_dispatch(t)
         if self.cfg.rounds is not None:          # fixed-work mode: retire
             dev.state = "done"
             self._done_devices += 1
@@ -203,10 +277,33 @@ class ClusterRuntime:
                              EventKind.SESSION_OPEN, dev.idx)
 
     def _drain_admissions(self, t: float):
+        """Deliver capacity-queue admissions (zero/monolithic modes: the
+        server prefilled the prompt synchronously when capacity freed).
+        Monolithic mode still charges the blocking span before the device
+        starts.  Chunked-mode first tokens do NOT come through here — they
+        ride FIRST_TOKEN events pushed when their final chunk's epoch
+        completes (`_on_dispatch`)."""
         for sid, first in self.server.pop_admissions():
             dev = self._by_session[sid]
-            prompt = self._pending_open.pop(sid)
-            self._start_session(dev, sid, prompt, first, t)
+            if self.cfg.prefill_mode == "monolithic":
+                dev.state = "prefill"
+                self._queue_prefill_span(
+                    sid, first, len(self._pending_open[sid]), t
+                )
+            else:
+                prompt = self._pending_open.pop(sid)
+                self._start_session(dev, sid, prompt, first, t)
+
+    def _on_first_token(self, payload, t: float):
+        """A completed prefill's first token reaches its device: the
+        session leaves the prefill/admission limbo and starts drafting."""
+        sid, first = payload
+        dev = self._by_session.get(sid)
+        if dev is None:
+            self._pending_open.pop(sid, None)
+            return                      # session closed under us
+        prompt = self._pending_open.pop(sid)
+        self._start_session(dev, sid, prompt, first, t)
 
     # -- block submission + speculation -------------------------------------
     def _submit(self, dev: _DeviceProc, t: float):
@@ -280,15 +377,24 @@ class ClusterRuntime:
         if not self.server.queue_depth:
             return
         verdicts = self.server.step(t, verify_time=self._verify_time)
-        self._drain_admissions(t)
+        chunked = self.cfg.prefill_mode == "chunked"
+        if not chunked:
+            self._drain_admissions(t)
         self.metrics.sample_queue(t, self.server.queue_depth)
-        if verdicts:
+        if self.server.last_served:
+            # the epoch executed work (verify items and/or prefill chunks):
+            # the verifier is busy for its estimator-priced duration, and
+            # everything it produced is delivered after the downlink
             dt = self.server.last_verify_time
             self.verifier_busy = True
             self.events.push(t + dt, EventKind.GPU_DONE)
             t_deliver = t + dt + self.net.downlink_time()
             for v in verdicts:
                 self.events.push(t_deliver, EventKind.VERDICT, v)
+            if chunked:
+                for sid, first in self.server.pop_admissions():
+                    self.events.push(t_deliver, EventKind.FIRST_TOKEN,
+                                     (sid, first))
         elif self.server.queue_depth:
             # nothing schedulable yet (criticality windows still closed):
             # the server's own timer retries next epoch
@@ -296,6 +402,11 @@ class ClusterRuntime:
 
     def _on_gpu_done(self, t: float):
         self.verifier_busy = False
+        # monolithic mode: a blocked open_session's prefill span takes the
+        # engine before any dispatch epoch can (it is a blocking call)
+        self._maybe_start_prefill(t)
+        if self.verifier_busy:
+            return
         if self.server.queue_depth:
             self._schedule_dispatch(t)
 
@@ -402,12 +513,15 @@ class ClusterRuntime:
                 self._on_gpu_done(ev.time)
             elif k == EventKind.VERDICT:
                 self._on_verdict(ev.payload, ev.time)
+            elif k == EventKind.FIRST_TOKEN:
+                self._on_first_token(ev.payload, ev.time)
             if cfg.rounds is not None and self._done_devices == len(self.devs):
                 break
-        if any(d.state == "admission" for d in self.devs) and not self.events:
+        if any(d.state in ("admission", "prefill") for d in self.devs) \
+                and not self.events:
             raise RuntimeError(
-                "deadlock: sessions queued for admission but no event can "
-                "free capacity (engine smaller than one session?)"
+                "deadlock: sessions queued for admission/prefill but no "
+                "event can free capacity (engine smaller than one session?)"
             )
         # Horizon-truncated sessions (churn mode): sessions still open at
         # the break must be recorded, or violation stats inherit a
@@ -424,6 +538,7 @@ class ClusterRuntime:
                     t_close=end,
                     committed=len(dev.device.response_tokens),
                     rounds=dev.rounds_done,
+                    ttft=dev.ttft,
                 ))
         return ClusterResult(
             cfg=cfg,

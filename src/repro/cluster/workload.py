@@ -47,6 +47,20 @@ class ClusterConfig:
     dispatch_interval: float = 0.004
     #: verify-time jitter: t = estimator * LogNormal(0, sigma); 0 = exact
     latency_noise_sigma: float = 0.0
+    # -- prompt prefill (DESIGN.md §8) ------------------------------------
+    #: how prompt prefill is charged on the virtual clock:
+    #:   "zero"       — legacy: prefill is instantaneous and free (the
+    #:                  model compute runs, but no virtual time passes —
+    #:                  understates interference for long prompts);
+    #:   "monolithic" — prefill seizes the verifier for one blocking,
+    #:                  estimator-priced span per prompt, OUTSIDE the
+    #:                  scheduler (head-of-line interference, the paper's
+    #:                  unsuppressed baseline);
+    #:   "chunked"    — prefill is split into prefill_chunk_tokens-sized
+    #:                  work items scheduled by Algorithm 1 against a TTFT
+    #:                  deadline, interleaving with verification.
+    prefill_mode: str = "zero"
+    prefill_chunk_tokens: int = 32
 
 
 @dataclasses.dataclass

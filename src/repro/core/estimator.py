@@ -11,6 +11,17 @@ pipeline as the paper's App. C, refit for the deployment hardware.  The
 module also provides analytic TPU-v5e coefficients derived from the machine
 model (197 TFLOP/s bf16, 819 GB/s HBM) for simulator use before any
 profiling data exists.
+
+This is the latency model every control decision rests on: Algorithm 1's
+LST / utility-density / FeasibleAdd checks, the server's deadline
+bookkeeping, the cluster runtime's virtual verification epochs and
+monolithic-prefill spans, and the analytic simulator's service times.
+Chunked-prefill chunks are priced through the same features — a chunk is
+``BatchShape(new_tokens=chunk_len, cached_tokens=tokens_already_done)``,
+so a prompt's chunks sum to its triangular causal attention cost
+(DESIGN.md §8).  Coefficients round-trip as flat JSON via ``save_coeffs``
+/ ``load_coeffs`` — provenance, units and the file format are documented
+in docs/ESTIMATOR.md.
 """
 from __future__ import annotations
 

@@ -11,6 +11,11 @@ against the verification-time estimator:
   * every tentative admission is validated by FeasibleAdd (memory + the
     earliest deadline in the batch vs estimated batch completion).
 
+The pool holds TWO kinds of work item behind one interface: verification
+requests and chunked-prefill chunks (``VerifyRequest.kind``) — prompt
+prefill competes for the verifier under the same LST/utility-density
+rules instead of blocking it from outside the scheduler (DESIGN.md §8).
+
 This is host-side control logic (pure Python, no jax) — it runs on the
 serving coordinator between device steps.
 """
@@ -24,32 +29,61 @@ from repro.core.estimator import BatchShape, EstimatorCoeffs, batch_features
 
 @dataclasses.dataclass
 class VerifyRequest:
-    """A pending verification request on the server."""
+    """A pending work item on the server.
+
+    Two kinds flow through the same Algorithm 1 pool (DESIGN.md §8):
+
+      * ``kind="verify"`` — a drafted block awaiting verification; the
+        deadline is the SLO-class token-speed budget (Eq. 6/12).
+      * ``kind="prefill"`` — one chunk of a cold prompt's prefill; the
+        deadline is the session's **TTFT deadline** (every chunk of a
+        session carries the same one), ``cached_len`` is the prompt prefix
+        already prefilled (or prefix-cache-covered), and
+        ``prefill_tokens`` is the chunk length.  Chunks are usually
+        best-effort fill; as the TTFT deadline nears, LST promotes the
+        remaining chunks to the critical fast path like any verify
+        request.
+    """
 
     req_id: int
     session_id: int
     slo_class: int               # index into class table
     arrival: float               # a_i (s)
-    deadline: float              # d_i = a_i + tau_c (s)
-    draft_len: int               # N_d
+    deadline: float              # d_i = a_i + tau_c (s); TTFT deadline for prefill
+    draft_len: int               # N_d (0 for prefill chunks)
     cached_len: int              # committed prefix length with valid KV
     alpha: float                 # expected acceptance rate of this session
     payload: object = None       # draft tokens + q stats (opaque here)
-    #: prefix tokens that must be re-prefilled because no KV is cached
-    #: (cold start / cache eviction / SLED's no-cache baseline)
+    #: verify: prefix tokens that must be re-prefilled because no KV is
+    #: cached (cold start / cache eviction / SLED's no-cache baseline);
+    #: prefill: the chunk length
     prefill_tokens: int = 0
+    #: "verify" | "prefill"
+    kind: str = "verify"
     # bookkeeping
     enqueued_at: float = 0.0
     round_index: int = 0
 
     @property
     def new_tokens(self) -> int:
+        if self.kind == "prefill":
+            # a chunk feeds exactly its prompt tokens (no draft block, no
+            # re-fed last-committed token — the session has none yet)
+            return self.prefill_tokens
         # + the re-fed last committed token + any uncached prefix
         return self.draft_len + 1 + self.prefill_tokens
 
     @property
     def goodput_value(self) -> float:
-        """g_hat: expected committed tokens (paper Eq. 5, + bonus token)."""
+        """g_hat: expected committed tokens (paper Eq. 5, + bonus token).
+
+        A prefill chunk commits at most the session's first token (and
+        that only when the final chunk lands), so its g_hat is 1.0: long
+        prompts get a low utility density and fill spare capacity instead
+        of outbidding verification — exactly the paper's interference
+        suppression, with escalation left to the TTFT deadline's LST."""
+        if self.kind == "prefill":
+            return 1.0
         return self.alpha * self.draft_len + 1.0
 
     def batch_shape(self) -> BatchShape:

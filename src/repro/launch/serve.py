@@ -66,6 +66,11 @@ def run_serving(
     sched_cfg=None,
     self_draft: bool = False,
     method: str = "residual",
+    prefill_mode: str = "zero",
+    prefill_chunk_tokens: int = 32,
+    ttft_slo: dict | None = None,
+    think_time_mean: float = 0.25,
+    response_len_mean: float = 24.0,
 ):
     """Run the WISP serving stack; returns a dict with per-device ``stats``,
     aggregate ``total``, the ``edges`` / ``server`` objects and — in
@@ -88,6 +93,10 @@ def run_serving(
     else:
         dparams = build(dcfg).init(jax.random.PRNGKey(seed + 1))
 
+    if sync and prefill_mode != "zero":
+        # the lock-step reference has no clock to charge prefill against;
+        # it always opens sessions through the blocking monolithic path
+        raise ValueError("--sync supports prefill_mode='zero' only")
     ccfg = ClusterConfig(
         devices=devices,
         rounds=None if churn else rounds,
@@ -99,6 +108,10 @@ def run_serving(
         seed=seed,
         speculate=speculate,
         dispatch_interval=dispatch_interval,
+        prefill_mode=prefill_mode,
+        prefill_chunk_tokens=prefill_chunk_tokens,
+        think_time_mean=think_time_mean,
+        response_len_mean=response_len_mean,
     )
     fleet = build_fleet(ccfg, tcfg.vocab)
 
@@ -106,8 +119,12 @@ def run_serving(
                                 max_len=max_len, method=method)
     coeffs = coeffs or analytic_tpu_coeffs(tcfg)
     net = NetworkModel()
-    server = WISPServer(engine, coeffs, scheduler=scheduler, network=net,
-                        slo_classes=slo_speeds, sched_cfg=sched_cfg)
+    server = WISPServer(
+        engine, coeffs, scheduler=scheduler, network=net,
+        slo_classes=slo_speeds, sched_cfg=sched_cfg,
+        prefill="chunked" if prefill_mode == "chunked" else "monolithic",
+        prefill_chunk_tokens=prefill_chunk_tokens, ttft_slo=ttft_slo,
+    )
 
     edges = [
         EdgeDevice(
@@ -136,7 +153,22 @@ def run_serving(
     if verbose:
         print(f"[serve] mode=event devices={devices} "
               f"{'horizon=%.1fs' % result.horizon if churn else 'rounds=%d' % rounds} "
-              f"scheduler={scheduler} speculate={speculate}")
+              f"scheduler={scheduler} speculate={speculate} "
+              f"prefill={prefill_mode}")
+        if prefill_mode != "zero" and m.sessions:
+            # chunked mode logs TTFT-deadline outcomes per prefill; the
+            # monolithic path has no prefill_log, so judge its sessions'
+            # measured TTFT against the same per-class budgets
+            ttft_viol = (
+                sum(r.violated for r in server.prefill_log)
+                if server.prefill_log
+                else sum(s.ttft > server.ttft_slo[s.slo_class]
+                         for s in m.sessions)
+            )
+            print(f"[serve] ttft: p50={m.ttft_quantile(0.5)*1e3:.1f} ms "
+                  f"p99={m.ttft_quantile(0.99)*1e3:.1f} ms "
+                  f"prefill_chunks={engine.stats['prefill_chunks']} "
+                  f"ttft_violations={ttft_viol}")
         print(f"[serve] drafted={total.drafted} accepted={total.accepted} "
               f"committed={total.committed} acceptance={total.acceptance_rate:.3f}")
         print(f"[serve] measured: goodput={m.goodput(result.horizon):.1f} tok/s "
@@ -254,6 +286,13 @@ def main():
                     help="session churn (Poisson think times) until --horizon")
     ap.add_argument("--horizon", type=float, default=20.0,
                     help="virtual-seconds horizon for --churn")
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--prefill", choices=("zero", "monolithic", "chunked"),
+                    default="zero",
+                    help="how prompt prefill is charged on the virtual "
+                         "clock (DESIGN.md §8)")
+    ap.add_argument("--prefill-chunk", type=int, default=32,
+                    help="prompt tokens per schedulable prefill chunk")
     args = ap.parse_args()
     pred = RejectionPredictor.load(args.predictor_path) if args.predictor_path else None
     run_serving(
@@ -261,6 +300,8 @@ def main():
         k_max=args.k_max, scheduler=args.scheduler, predictor=pred,
         seed=args.seed, sync=args.sync, speculate=not args.no_speculate,
         churn=args.churn, horizon=args.horizon if args.churn else None,
+        prompt_len=args.prompt_len, prefill_mode=args.prefill,
+        prefill_chunk_tokens=args.prefill_chunk,
     )
 
 

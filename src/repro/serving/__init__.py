@@ -2,6 +2,9 @@
 edge client, simulated transport."""
 from repro.serving.engine import (
     NoFreeSlots,
+    PrefillChunkItem,
+    PrefillOutcome,
+    PrefillState,
     VerificationEngine,
     VerifyItem,
     VerifyOutcome,
@@ -14,6 +17,9 @@ from repro.serving.transport import NetworkModel
 
 __all__ = [
     "NoFreeSlots",
+    "PrefillChunkItem",
+    "PrefillOutcome",
+    "PrefillState",
     "VerificationEngine",
     "VerifyItem",
     "VerifyOutcome",

@@ -23,6 +23,16 @@ Two cache backends, auto-selected per family (DESIGN.md §4):
 
 Batch shapes are padded to fixed buckets (draft length to k_max, batch to
 powers of two) so jit compiles a bounded set of programs.
+
+Prompt prefill is **incremental** (DESIGN.md §8): ``begin_prefill`` opens a
+session without running the model, ``prefill_chunk`` advances it by a
+bounded number of prompt tokens, and the prompt's first response token is
+produced by whichever chunk consumes the final prompt position.
+``new_session`` is the run-to-completion wrapper (one whole-prompt chunk —
+the legacy monolithic path, bit-for-bit).  ``step`` executes a mixed batch
+of verification items and prefill chunks in one engine dispatch, which is
+what lets the SLO scheduler interleave cold-prompt prefill with
+deadline-critical verification instead of stalling behind it.
 """
 from __future__ import annotations
 
@@ -93,6 +103,59 @@ class VerifyOutcome:
     t_verify: float              # engine wall time attributed to the batch
 
 
+@dataclasses.dataclass
+class PrefillState:
+    """Resumable prompt-prefill progress for one session slot.
+
+    Created by ``begin_prefill`` (which allocates the slot and, on the
+    paged backend, reuses any cached prompt prefix); advanced by
+    ``prefill_chunk``.  ``done`` counts prompt tokens whose KV/state is
+    valid (including the prefix-cache hit), so ``done`` is the request's
+    ``cached_len`` when a chunk is priced by the estimator.  A chunk that
+    consumes the final prompt position sets ``first_token`` (the response's
+    token 0, sampled greedily from the target's own logits)."""
+
+    slot: int
+    tokens: np.ndarray           # full prompt, int32
+    done: int                    # prompt tokens with valid KV/state
+    extras: dict | None = None   # vlm/audio conditioning (first chunk only)
+    first_token: int | None = None
+    chunks: int = 0              # chunks executed (observability)
+    n_cached: int = 0            # prompt tokens served by the prefix cache
+
+    @property
+    def total(self) -> int:
+        return len(self.tokens)
+
+    @property
+    def remaining(self) -> int:
+        return self.total - self.done
+
+    @property
+    def finished(self) -> bool:
+        return self.first_token is not None
+
+
+@dataclasses.dataclass
+class PrefillChunkItem:
+    """One schedulable unit of prompt prefill for ``step``: advance
+    ``state`` by up to ``n_tokens`` prompt tokens."""
+
+    state: PrefillState
+    n_tokens: int
+
+
+@dataclasses.dataclass
+class PrefillOutcome:
+    slot: int
+    processed: int               # prompt tokens consumed by this chunk
+    done: int                    # total valid prompt tokens after the chunk
+    total: int                   # prompt length
+    first_token: int | None      # set when the prompt completed this chunk
+    t_chunk: float               # engine wall time attributed to the chunk
+    oom: bool = False            # chunk deferred: page pool cannot cover it
+
+
 class VerificationEngine:
     def __init__(
         self,
@@ -127,11 +190,19 @@ class VerificationEngine:
         self.rng = jax.random.PRNGKey(seed)
         #: never advanced: base for rng_tag-keyed (deterministic) verification
         self._rng_base = jax.random.PRNGKey(seed)
+        #: ``prefix_cached_tokens`` counts prompt tokens satisfied by the
+        #: content-addressed prefix cache.  That cache exists only on the
+        #: paged backend — on the dense backend the field is structurally
+        #: zero (no prefix cache, nothing to hit), not "zero hits observed";
+        #: check ``stats["backend"]`` / ``prefix_cache_stats()["backend"]``
+        #: before reading it as a hit rate (DESIGN.md §3).
         self.stats = {
+            "backend": "paged" if self.paged else "dense",
             "batches": 0,
             "tokens_verified": 0,
             "tokens_committed": 0,
             "prefix_cached_tokens": 0,
+            "prefill_chunks": 0,
         }
 
         if self.paged:
@@ -248,52 +319,54 @@ class VerificationEngine:
         return self.max_slots * self.max_len
 
     def prefix_cache_stats(self) -> dict:
+        """Prefix-cache / page-pool counters, tagged with the backend that
+        produced them.  The prefix cache is a paged-backend structure; the
+        dense backend reports ``backend="dense"`` with zero counters —
+        structurally zero (the cache does not exist), not a measured 0%
+        hit rate.  Callers comparing backends must branch on ``backend``
+        instead of treating the zeros as data (DESIGN.md §3)."""
         if self.paged:
             a = self.kv.allocator
-            return {"hits": a.hits, "misses": a.misses,
+            return {"backend": "paged", "hits": a.hits, "misses": a.misses,
                     "pages_in_use": a.in_use, "pages_free": len(a.free)}
-        return {"hits": 0, "misses": 0, "pages_in_use": 0, "pages_free": 0}
+        return {"backend": "dense", "hits": 0, "misses": 0,
+                "pages_in_use": 0, "pages_free": 0}
 
     # -- session lifecycle -----------------------------------------------------
     def new_session(self, prompt_tokens, extras=None) -> tuple[int, int]:
         """Prefill a prompt into a fresh slot.  Returns (slot, first_token).
 
-        The first committed token is sampled from the target's own prefill
-        logits (the response's token 0 always comes from the target).
-        Paged backend: raises ``OutOfPages`` (with the slot returned to the
-        free list) when the pool cannot cover the prompt."""
+        Monolithic wrapper over the incremental path: one whole-prompt
+        chunk, so behavior (including jit bucketing) is identical to the
+        legacy blocking prefill.  The first committed token is sampled from
+        the target's own prefill logits (the response's token 0 always
+        comes from the target).  Paged backend: raises ``OutOfPages`` (with
+        the slot and any partial pages returned) when the pool cannot cover
+        the prompt."""
+        st = self.begin_prefill(prompt_tokens, extras=extras)
+        try:
+            while not st.finished:
+                self.prefill_chunk(st, st.remaining)
+        except OutOfPages:
+            self.abort_prefill(st)
+            raise
+        return st.slot, st.first_token
+
+    def begin_prefill(self, prompt_tokens, extras=None) -> PrefillState:
+        """Open a session slot for incremental prompt prefill WITHOUT
+        running the model.  Paged backend: allocates the block table and
+        reuses any content-addressed cached prefix (``state.done`` starts
+        at the prefix hit) and builds the bounded cross-attention side
+        cache for vlm/audio extras.  Raises ``NoFreeSlots`` /
+        ``OutOfPages`` with nothing leaked (admission-control signals)."""
         if not self.free_slots:
             raise NoFreeSlots("no free verification slots")
         toks = np.asarray(prompt_tokens, np.int32)
-        if self.paged:
-            return self._new_session_paged(toks, extras)
         slot = self.free_slots.pop()
-        P = len(toks)
-        # Attention targets: bucket the prompt so jit compiles a bounded
-        # set of programs — padded positions are stale-but-masked by the
-        # length pointer.  Recurrent targets: padding would ADVANCE the
-        # stored state through garbage tokens; run the exact length.
-        Pb = P if self.recurrent else _bucket(P, 16)
-        padded = np.zeros((1, Pb), np.int32)
-        padded[0, :P] = toks
-        batch = {"tokens": jnp.asarray(padded)}
-        if extras:
-            batch.update(extras)
-        sub = self._gather([slot])
-        logits, sub = self._prefill(self.params, batch, sub)
-        self._scatter([slot], sub, 1)
-        lg = logits[0, P - 1]
-        first = int(jnp.argmax(lg))
-        self.fed[slot] = P
-        self.last_token[slot] = first
-        return slot, first
-
-    def _new_session_paged(self, toks, extras) -> tuple[int, int]:
-        slot = self.free_slots.pop()
-        P = len(toks)
+        if not self.paged:
+            return PrefillState(slot=slot, tokens=toks, done=0, extras=extras)
         try:
             n_cached = self.kv.open_seq(slot, toks, share=self.share_prefix)
-            self.kv.ensure_capacity(slot, P)
         except OutOfPages:
             if slot in self.kv.tables:
                 self.kv.close_seq(slot)
@@ -305,36 +378,144 @@ class VerificationEngine:
             )
             keys = sorted(self.extras_cache)          # (k_img, v_img) / (k_mem, v_mem)
             self._extras_put(slot, {keys[0]: k_x, keys[1]: v_x})
-        suffix = toks[n_cached:]
-        S = len(suffix)
-        Sb = _bucket(S, 16)
-        padded = np.zeros((1, Sb), np.int32)
-        padded[0, :S] = suffix
-        n_max = _bucket(self.kv.seq_pages(slot), 1)
-        bt = self.kv.block_table([slot], n_max)
-        cross = self._extras_gather([slot]) if self.extras_cache is not None else None
+        return PrefillState(slot=slot, tokens=toks, done=n_cached,
+                            extras=extras, n_cached=n_cached)
+
+    def prefill_chunk(self, st: PrefillState, n_tokens: int) -> int:
+        """Advance ``st`` by up to ``n_tokens`` prompt tokens in one forward
+        pass; returns the tokens consumed.  The chunk that consumes the
+        final prompt position samples the first response token and (paged,
+        sharing families) publishes the prompt's full pages to the prefix
+        index.  Paged backend: raises ``OutOfPages`` with ``st`` intact and
+        resumable when the pool cannot cover the chunk — retry after pages
+        free, or ``abort_prefill``."""
+        if st.finished:
+            return 0
+        n = min(int(n_tokens), st.remaining)
+        if n <= 0:
+            return 0
+        if self.paged:
+            self._prefill_chunks_paged([PrefillChunkItem(st, n)],
+                                       raise_oom=True)
+        else:
+            self._prefill_chunk_dense(st, n)
+        return n
+
+    def abort_prefill(self, st: PrefillState):
+        """Release a partially-prefilled session (slot, pages, block
+        table).  Safe at any progress point: the prefix index only ever
+        sees *completed* prompts, so nothing published needs retraction."""
+        self.close_session(st.slot)
+
+    def _finish_prefill(self, st: PrefillState, first: int):
+        slot = st.slot
+        st.first_token = first
+        self.fed[slot] = st.total
+        self.last_token[slot] = first
+        if self.paged:
+            if self.share_prefix:
+                # register NOW (not at close) so concurrent same-prompt
+                # sessions share pages
+                self.kv.publish_seq_prefix(slot, st.tokens)
+            self.tokens[slot] = [int(t) for t in st.tokens]
+            self.stats["prefix_cached_tokens"] += int(st.n_cached)
+
+    def _prefill_chunks_paged(self, chunks, *, raise_oom: bool = False):
+        """Execute prefill chunks as rows of ONE ragged ``decode_paged``
+        call (the flattened multi-token paged path verification uses — each
+        prompt token is its own kernel row with length ``done + t + 1``, so
+        chunked and monolithic prefill run the identical per-token
+        computation).  Returns per-chunk ``oom`` flags; with ``raise_oom``
+        an uncoverable chunk raises instead.  Either way the affected
+        state is untouched and resumable."""
+        live: list = []
+        oom = [False] * len(chunks)
+        for i, c in enumerate(chunks):
+            st = c.state
+            n = min(int(c.n_tokens), st.remaining)
+            if n <= 0:
+                continue
+            try:
+                self.kv.ensure_capacity(st.slot, st.done + n)
+            except OutOfPages:
+                if raise_oom:
+                    raise
+                oom[i] = True
+                continue
+            live.append((st, n))
+        if not live:
+            return oom
+        T = _bucket(max(n for _, n in live), 16)
+        nb = _bucket(len(live), 1)
+        feed = np.zeros((nb, T), np.int32)
+        base = np.zeros(nb, np.int32)
+        tl = np.zeros(nb, np.int32)
+        # pad rows: zero block table + zero valid length -> their K/V writes
+        # land on the scratch page and their logits are discarded
+        slots = [live[0][0].slot] * nb
+        for i, (st, n) in enumerate(live):
+            feed[i, :n] = st.tokens[st.done : st.done + n]
+            base[i] = st.done
+            tl[i] = n
+            slots[i] = st.slot
+        n_max = _bucket(max(self.kv.seq_pages(st.slot) for st, _ in live), 1)
+        bt = np.zeros((nb, n_max), np.int32)
+        bt[: len(live)] = self.kv.block_table([st.slot for st, _ in live], n_max)
+        cross = self._extras_gather(slots) if self.extras_cache is not None else None
         logits, (kp, vp) = self._prefill_paged(
             self.params,
-            jnp.asarray(padded),
+            jnp.asarray(feed),
             self.kv.k_pages,
             self.kv.v_pages,
             jnp.asarray(bt),
-            jnp.asarray([n_cached], jnp.int32),
-            jnp.asarray([S], jnp.int32),
+            jnp.asarray(base),
+            jnp.asarray(tl),
             cross,
         )
         self.kv.k_pages, self.kv.v_pages = kp, vp
-        first = int(jnp.argmax(logits[0, S - 1]))
-        self.kv.set_len(slot, P)
-        if self.share_prefix:
-            # register NOW (not at close) so concurrent same-prompt
-            # sessions share pages
-            self.kv.publish_seq_prefix(slot, toks)
-        self.fed[slot] = P
-        self.last_token[slot] = first
-        self.tokens[slot] = [int(t) for t in toks]
-        self.stats["prefix_cached_tokens"] += int(n_cached)
-        return slot, first
+        for i, (st, n) in enumerate(live):
+            st.done += n
+            st.chunks += 1
+            self.kv.set_len(st.slot, st.done)
+            self.stats["prefill_chunks"] += 1
+            if st.remaining == 0:
+                self._finish_prefill(st, int(jnp.argmax(logits[i, n - 1])))
+        return oom
+
+    def _prefill_chunk_dense(self, st: PrefillState, n: int):
+        """One dense-backend prefill chunk.  The first chunk goes through
+        the bundle's ``prefill`` entry point (builds vlm/audio cross-KV;
+        keeps the legacy monolithic path bit-identical when the chunk
+        covers the whole prompt); resumed chunks feed the cache at position
+        ``done`` through ``decode`` — the same cached-attention path
+        verification uses.  Attention targets: bucket the chunk so jit
+        compiles a bounded set of programs — padded positions are
+        stale-but-masked by the length pointer (and overwritten by the next
+        chunk).  Recurrent targets: padding would ADVANCE the stored state
+        through garbage tokens; run the exact length."""
+        if n <= 0:
+            return
+        s0 = st.done
+        chunk = st.tokens[s0 : s0 + n]
+        Tb = n if self.recurrent else _bucket(n, 16)
+        padded = np.zeros((1, Tb), np.int32)
+        padded[0, :n] = chunk
+        sub = self._gather([st.slot])
+        if s0 == 0:
+            batch = {"tokens": jnp.asarray(padded)}
+            if st.extras:
+                batch.update(st.extras)
+            logits, sub = self._prefill(self.params, batch, sub)
+        else:
+            logits, sub = self._decode(
+                self.params, jnp.asarray(padded), sub, jnp.int32(s0)
+            )
+        self._scatter([st.slot], sub, 1)
+        st.done += n
+        st.chunks += 1
+        self.stats["prefill_chunks"] += 1
+        if st.remaining == 0:
+            self._finish_prefill(st, int(jnp.argmax(logits[0, n - 1])))
 
     def close_session(self, slot: int):
         if self.paged:
@@ -345,6 +526,60 @@ class VerificationEngine:
             )
         self.fed[slot] = 0
         self.free_slots.append(slot)
+
+    # -- unified dispatch (mixed verify + prefill) ------------------------------
+    def step(self, items: list) -> list:
+        """Execute one mixed engine dispatch: the batch the SLO scheduler
+        admitted for this epoch, containing any mix of ``VerifyItem`` and
+        ``PrefillChunkItem``.
+
+        Contract (docs/ARCHITECTURE.md §2):
+
+          * all verification items run as ONE batched ``verify`` call;
+          * all prefill chunks run as rows of ONE ragged paged prefill call
+            (dense backend: per-slot passes — no shared pool to batch over);
+          * outcomes are returned aligned with ``items``
+            (``VerifyOutcome`` / ``PrefillOutcome``);
+          * ``OutOfPages`` raised by the *verify* portion propagates before
+            any device state is touched (the server degrades to per-item
+            steps, DESIGN.md §6);
+          * a prefill chunk the pool cannot cover does NOT raise: it comes
+            back as ``PrefillOutcome(oom=True, processed=0)`` with its
+            state intact — requeue it and retry once pages free.
+        """
+        vidx = [i for i, it in enumerate(items) if isinstance(it, VerifyItem)]
+        cidx = [i for i, it in enumerate(items)
+                if isinstance(it, PrefillChunkItem)]
+        if len(vidx) + len(cidx) != len(items):
+            raise TypeError("step items must be VerifyItem or PrefillChunkItem")
+        out: list = [None] * len(items)
+        for i, o in zip(vidx, self.verify([items[i] for i in vidx])):
+            out[i] = o
+        t0 = time.perf_counter()        # the verify wall time is not the chunks'
+        if cidx:
+            chunks = [items[i] for i in cidx]
+            before = [c.state.done for c in chunks]
+            if self.paged:
+                oom = self._prefill_chunks_paged(chunks)
+            else:
+                oom = [False] * len(chunks)
+                for c in chunks:
+                    self._prefill_chunk_dense(
+                        c.state, min(int(c.n_tokens), c.state.remaining)
+                    )
+            dt = time.perf_counter() - t0
+            for i, c, was, o in zip(cidx, chunks, before, oom):
+                st = c.state
+                out[i] = PrefillOutcome(
+                    slot=st.slot,
+                    processed=st.done - was,
+                    done=st.done,
+                    total=st.total,
+                    first_token=st.first_token,
+                    t_chunk=dt,
+                    oom=o,
+                )
+        return out
 
     # -- batched verification ---------------------------------------------------
     def verify(self, items: list[VerifyItem]) -> list[VerifyOutcome]:

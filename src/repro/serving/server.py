@@ -5,6 +5,20 @@ acceptance estimate), maintains the pending-request pool, and at each
 dispatch epoch runs Algorithm 1 to build a batch, executes it on the
 verification engine, and returns verdicts.
 
+Prompt prefill runs in one of two modes (DESIGN.md §8):
+
+  * ``prefill="monolithic"`` (default) — ``open_session`` runs the whole
+    prompt as one blocking engine call and returns the first token
+    synchronously (the legacy path; simple drivers and the lock-step
+    reference need it);
+  * ``prefill="chunked"`` — ``open_session`` only *admits* the session
+    (allocating its slot/pages) and returns ``None`` immediately; the
+    prompt is split into fixed-budget chunks that enter the pending pool
+    as ``kind="prefill"`` work items with the session's TTFT deadline and
+    compete with verification under Algorithm 1.  The first token
+    surfaces through ``pop_admissions()`` when the final chunk lands —
+    the same channel capacity-queued admissions already use.
+
 This is the *functional* server used by examples and integration tests
 (driven synchronously, CPU).  Paper-scale capacity/goodput numbers come
 from `repro.sim`, which replays the same scheduler against the analytic
@@ -23,12 +37,23 @@ from repro.core.scheduler import (
     SLOScheduler,
     VerifyRequest,
 )
-from repro.serving.engine import NoFreeSlots, VerificationEngine, VerifyItem
+from repro.serving.engine import (
+    NoFreeSlots,
+    PrefillChunkItem,
+    VerificationEngine,
+    VerifyItem,
+)
 from repro.serving.kv_cache import OutOfPages
 from repro.serving.transport import NetworkModel
 
 #: paper §5.1: four token-speed SLO classes (tokens/s)
 DEFAULT_SLO_CLASSES = {1: 8.0, 2: 6.0, 3: 4.0, 4: 2.0}
+
+#: TTFT (time-to-first-token) budgets per SLO class, seconds — the
+#: deadline chunked prefill schedules against (DESIGN.md §8).  Scaled like
+#: the token-speed classes: a class promising 8 tok/s streaming also
+#: promises a snappier first token than the 2 tok/s tier.
+DEFAULT_TTFT_SLO = {1: 0.75, 2: 1.5, 3: 3.0, 4: 6.0}
 
 
 @dataclasses.dataclass
@@ -42,6 +67,38 @@ class ServerSession:
     draft_speed: float = 50.0
     t_draft_last: float = 0.0
     t_net_last: float = 0.0
+
+
+@dataclasses.dataclass
+class PrefillingSession:
+    """A session whose prompt is still being chunk-prefilled: admitted to
+    the engine (slot + pages held, ``state`` resumable) but not yet
+    streaming.  Exactly one chunk of it is in the pending pool at a time —
+    chunk *i+1* depends on chunk *i*'s KV."""
+
+    session_id: int
+    state: object                # engine PrefillState
+    slo_class: int
+    draft_speed: float
+    t_request: float             # when the client asked (TTFT clock start)
+    deadline: float              # TTFT deadline = t_request + ttft_slo[class]
+
+
+@dataclasses.dataclass
+class PrefillRecord:
+    """One completed chunked prefill (the TTFT observability unit)."""
+
+    session_id: int
+    prompt_len: int
+    chunks: int
+    t_request: float
+    t_first: float               # when the final chunk's epoch completed
+    deadline: float
+    violated: bool
+
+    @property
+    def ttft(self) -> float:
+        return self.t_first - self.t_request
 
 
 @dataclasses.dataclass
@@ -68,6 +125,9 @@ class WISPServer:
         network: NetworkModel | None = None,
         dynamic_memory_budget: bool = True,
         deterministic_verify: bool = True,
+        prefill: str = "monolithic",    # "monolithic" | "chunked"
+        prefill_chunk_tokens: int = 256,
+        ttft_slo: dict | None = None,
     ):
         self.engine = engine
         self.coeffs = coeffs
@@ -76,6 +136,14 @@ class WISPServer:
         self.scheduler = cls(self.sched_cfg, coeffs)
         self.slo_classes = slo_classes or dict(DEFAULT_SLO_CLASSES)
         self.network = network or NetworkModel()
+        if prefill not in ("monolithic", "chunked"):
+            raise ValueError(f"unknown prefill mode {prefill!r}")
+        #: "monolithic": open_session blocks through the whole prompt.
+        #: "chunked": prompts prefill in ``prefill_chunk_tokens``-sized
+        #: work items scheduled by Algorithm 1 against a TTFT deadline.
+        self.prefill_mode = prefill
+        self.prefill_chunk_tokens = int(prefill_chunk_tokens)
+        self.ttft_slo = ttft_slo or dict(DEFAULT_TTFT_SLO)
         #: refresh the scheduler's memory budget from the engine's live
         #: free-page capacity every dispatch epoch (paper Eq. 13's M(t_k));
         #: passed to schedule() as an override — the caller's SchedulerConfig
@@ -94,9 +162,21 @@ class WISPServer:
         self.last_decision = None
         self.last_verify_time = 0.0
         self.sessions: dict[int, ServerSession] = {}
+        #: chunked mode: sessions admitted to the engine but still
+        #: prefilling (slot held, chunks in the pending pool)
+        self.prefilling: dict[int, PrefillingSession] = {}
+        #: completed chunked prefills (TTFT log)
+        self.prefill_log: list[PrefillRecord] = []
+        #: times a mutually-blocked prefill was evicted back to the
+        #: admission queue (liveness preemption, see ``step``)
+        self.prefill_preemptions = 0
         self.pending: list[VerifyRequest] = []
+        #: the requests (verify + prefill chunks) actually executed by the
+        #: most recent ``step`` — what the epoch's verify time covers
+        self.last_served: list[VerifyRequest] = []
         #: sessions the cache could not admit yet: (session_id, prompt,
-        #: slo_class, draft_speed, extras), retried each dispatch epoch
+        #: slo_class, draft_speed, extras, t_request), retried each
+        #: dispatch epoch
         self.admission_queue: list[tuple] = []
         #: (session_id, first_token) of queued sessions admitted since the
         #: last ``pop_admissions()``
@@ -119,29 +199,83 @@ class WISPServer:
     def open_session(
         self, session_id: int, prompt_tokens, slo_class: int = 3,
         draft_speed: float = 50.0, extras=None, queue_on_full: bool = True,
+        now: float = 0.0,
     ) -> int | None:
         """Admit a session, or queue it when the engine is out of KV pages
         or slots (returns ``None``; the session is retried each dispatch
-        epoch — poll ``pop_admissions()`` for its first token)."""
+        epoch — poll ``pop_admissions()`` for its first token).
+
+        Chunked-prefill mode always returns ``None``: admission only
+        reserves the slot and enqueues the first prefill chunk (``now``
+        starts the TTFT clock); the first token arrives via
+        ``pop_admissions()`` when the final chunk completes."""
         try:
+            if self.prefill_mode == "chunked":
+                self._begin_chunked(session_id, prompt_tokens, slo_class,
+                                    draft_speed, extras, now)
+                return None
             slot, first = self.engine.new_session(prompt_tokens, extras=extras)
         except (OutOfPages, NoFreeSlots):
             if not queue_on_full:
                 raise
             self.admission_queue.append(
                 (session_id, list(prompt_tokens), slo_class, draft_speed,
-                 extras)
+                 extras, now)
             )
             return None
         return self._register(session_id, slot, first, len(prompt_tokens),
                               slo_class, draft_speed)
 
+    def _begin_chunked(self, sid, prompt_tokens, slo_class, draft_speed,
+                       extras, t_request):
+        """Reserve engine state for a session and enqueue its first prefill
+        chunk.  Raises OutOfPages/NoFreeSlots with nothing leaked."""
+        state = self.engine.begin_prefill(prompt_tokens, extras=extras)
+        ps = PrefillingSession(
+            session_id=sid,
+            state=state,
+            slo_class=slo_class,
+            draft_speed=draft_speed,
+            t_request=t_request,
+            deadline=t_request + self.ttft_slo[slo_class],
+        )
+        self.prefilling[sid] = ps
+        self._enqueue_chunk(ps, t_request)
+
+    def _enqueue_chunk(self, ps: PrefillingSession, now: float):
+        """Put the session's NEXT prefill chunk in the pending pool (one at
+        a time: chunk i+1 attends to chunk i's KV)."""
+        st = ps.state
+        self._rid += 1
+        self.pending.append(VerifyRequest(
+            req_id=self._rid,
+            session_id=ps.session_id,
+            slo_class=ps.slo_class,
+            arrival=now,
+            deadline=ps.deadline,
+            draft_len=0,
+            cached_len=st.done,
+            alpha=0.0,
+            payload=ps,
+            prefill_tokens=min(self.prefill_chunk_tokens, st.remaining),
+            kind="prefill",
+            enqueued_at=now,
+        ))
+
     def _try_admit(self):
         """Retry queued sessions in arrival order; stop at the first one
         that still does not fit (FIFO fairness — no small-session bypass)."""
         while self.admission_queue:
-            sid, prompt, slo_class, draft_speed, extras = self.admission_queue[0]
+            (sid, prompt, slo_class, draft_speed, extras,
+             t_request) = self.admission_queue[0]
             try:
+                if self.prefill_mode == "chunked":
+                    # TTFT clock started at the original request — a long
+                    # wait in the admission queue is TTFT the client saw
+                    self._begin_chunked(sid, prompt, slo_class, draft_speed,
+                                        extras, t_request)
+                    self.admission_queue.pop(0)
+                    continue
                 slot, first = self.engine.new_session(prompt, extras=extras)
             except (OutOfPages, NoFreeSlots):
                 return
@@ -157,6 +291,16 @@ class WISPServer:
     def close_session(self, session_id: int):
         s = self.sessions.pop(session_id, None)
         if s is None:
+            ps = self.prefilling.pop(session_id, None)
+            if ps is not None:
+                # cancel mid-prefill: drop the session's queued chunk and
+                # release its slot/pages (nothing was published)
+                self.pending = [
+                    r for r in self.pending if r.session_id != session_id
+                ]
+                self.engine.abort_prefill(ps.state)
+                self._try_admit()
+                return
             # session may still be waiting in the admission queue: cancel it
             before = len(self.admission_queue)
             self.admission_queue = [
@@ -227,6 +371,7 @@ class WISPServer:
             if self.dynamic_memory_budget
             else self.sched_cfg.memory_budget_tokens
         )
+        self.last_served = []
         if not self.pending:
             return []
         decision = self.scheduler.schedule(
@@ -240,6 +385,10 @@ class WISPServer:
 
         items = []
         for r in decision.batch:
+            if r.kind == "prefill":
+                ps = r.payload
+                items.append(PrefillChunkItem(ps.state, r.prefill_tokens))
+                continue
             s = self.sessions[r.session_id]
             toks, qlog = r.payload
             items.append(VerifyItem(
@@ -248,30 +397,82 @@ class WISPServer:
                 if self.deterministic_verify else None,
             ))
         try:
-            served = decision.batch
-            outcomes = self.engine.verify(items)
+            served = list(decision.batch)
+            outcomes = self.engine.step(items)
         except OutOfPages:
             # The token budget over-admitted (committed tokens of sessions
             # outside the batch are not page headroom).  Shrink to whatever
-            # fits — per-request verification — so the epoch still makes
+            # fits — per-request execution — so the epoch still makes
             # progress instead of requeue-livelocking; requests that cannot
             # fit even alone go back to pending (they need a close_session
             # to free pages).
             served, outcomes = [], []
             for r, it in zip(decision.batch, items):
                 try:
-                    outcomes.extend(self.engine.verify([it]))
+                    outcomes.extend(self.engine.step([it]))
                     served.append(r)
                 except OutOfPages:
                     self.pending.append(r)
 
-        dt_virtual = None if verify_time is None else float(verify_time(served))
-        self.last_verify_time = (
-            dt_virtual if dt_virtual is not None
-            else (outcomes[0].t_verify if outcomes else 0.0)
-        )
-        verdicts = []
+        # prefill chunks the pool could not cover come back oom (state
+        # untouched): requeue them like the OutOfPages verify path above
+        pairs, oom_reqs = [], []
         for r, o in zip(served, outcomes):
+            if r.kind == "prefill" and o.oom:
+                oom_reqs.append(r)
+                continue
+            pairs.append((r, o))
+        if not pairs and oom_reqs and len(self.prefilling) > 1:
+            # Liveness: every chunk this epoch was uncoverable and nothing
+            # else ran, so no future close/trim is coming from *this* pool
+            # of work — partially-prefilled sessions are mutually blocking
+            # (each holds pages the others need).  Preempt the
+            # youngest-requested *prefilling session* (not merely the
+            # youngest chunk scheduled this epoch — under memory pressure
+            # the scheduler may have admitted only the oldest's chunk)
+            # back to the admission queue: its pages are released, it
+            # retries FIFO with its original TTFT clock, and the oldest
+            # can finish.  Without this, N long prompts that each fit
+            # alone but not together requeue forever.
+            victim_sid = max(
+                self.prefilling,
+                key=lambda sid: (self.prefilling[sid].t_request, sid),
+            )
+            ps = self.prefilling.pop(victim_sid)
+            oom_reqs = [r for r in oom_reqs if r.session_id != victim_sid]
+            self.pending = [
+                r for r in self.pending if r.session_id != victim_sid
+            ]
+            self.engine.abort_prefill(ps.state)
+            self.admission_queue.append(
+                (ps.session_id, [int(x) for x in ps.state.tokens],
+                 ps.slo_class, ps.draft_speed, ps.state.extras,
+                 ps.t_request)
+            )
+            # keep the retry queue in request order (FIFO fairness)
+            self.admission_queue.sort(key=lambda q: q[5])
+            self.prefill_preemptions += 1
+        self.pending.extend(oom_reqs)
+        self.last_served = [r for r, _ in pairs]
+
+        dt_virtual = (
+            None if verify_time is None else float(verify_time(self.last_served))
+        )
+        # epoch wall time: the verify batch and the ragged prefill pass run
+        # back to back (all verify outcomes share one batch time, all chunk
+        # outcomes share one pass time)
+        wall = max((o.t_verify for r, o in pairs if r.kind != "prefill"),
+                   default=0.0) + \
+            max((o.t_chunk for r, o in pairs if r.kind == "prefill"),
+                default=0.0)
+        self.last_verify_time = dt_virtual if dt_virtual is not None else wall
+        tv_epoch = self.last_verify_time
+
+        verdicts = []
+        for r, o in pairs:
+            if r.kind == "prefill":
+                self._apply_chunk(r, o, now, tv_epoch)
+                continue
             s = self.sessions[r.session_id]
             # EWMA acceptance update
             if r.draft_len > 0:
@@ -294,6 +495,31 @@ class WISPServer:
             self.log.append(v)
             verdicts.append(v)
         return verdicts
+
+    def _apply_chunk(self, r: VerifyRequest, outcome, now: float,
+                     tv_epoch: float):
+        """Account one executed prefill chunk: enqueue the successor chunk,
+        or — on the final chunk — activate the session and surface its
+        first token through ``pop_admissions()``."""
+        ps: PrefillingSession = r.payload
+        st = ps.state
+        if outcome.first_token is None:
+            self._enqueue_chunk(ps, now)
+            return
+        del self.prefilling[ps.session_id]
+        self._register(ps.session_id, st.slot, outcome.first_token,
+                       st.total, ps.slo_class, ps.draft_speed)
+        self.admitted.append((ps.session_id, outcome.first_token))
+        t_first = now + tv_epoch
+        self.prefill_log.append(PrefillRecord(
+            session_id=ps.session_id,
+            prompt_len=st.total,
+            chunks=st.chunks,
+            t_request=ps.t_request,
+            t_first=t_first,
+            deadline=ps.deadline,
+            violated=t_first > ps.deadline,
+        ))
 
     @property
     def queue_depth(self) -> int:

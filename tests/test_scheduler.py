@@ -125,3 +125,49 @@ def test_sled_uncached_request_costs_prefill():
     assert uncached.new_tokens == 1007 and cached.new_tokens == 7
     s = SLOScheduler(SchedulerConfig(), COEFFS)
     assert s.v_hat(uncached) > s.v_hat(cached)
+
+
+def mk_chunk(i, *, deadline, cached=0, chunk=256, arrival=0.0):
+    """A chunked-prefill work item (kind="prefill", TTFT deadline)."""
+    return VerifyRequest(
+        req_id=i, session_id=i, slo_class=0, arrival=arrival,
+        deadline=deadline, draft_len=0, cached_len=cached, alpha=0.0,
+        prefill_tokens=chunk, kind="prefill", enqueued_at=arrival,
+    )
+
+
+def test_prefill_chunk_shape_and_pricing():
+    """A chunk feeds exactly its prompt tokens (no draft, no re-fed last
+    token), is priced by the same estimator, and values one first token."""
+    c = mk_chunk(1, deadline=5.0, cached=512, chunk=256)
+    assert c.new_tokens == 256
+    assert c.goodput_value == 1.0
+    assert c.batch_shape().cached_tokens == 512
+    s = SLOScheduler(SchedulerConfig(), COEFFS)
+    assert s.v_hat(c) > s.v_hat(mk_chunk(2, deadline=5.0, chunk=16))
+
+
+def test_critical_verify_preempts_best_effort_prefill_chunk():
+    """Interference suppression for cold prompts (DESIGN.md §8): a
+    deadline-critical verification request must be admitted ahead of a
+    best-effort prefill chunk — the chunk waits for a later epoch, which
+    is exactly the preemption point chunking creates."""
+    cfg = SchedulerConfig(max_batch_requests=1)
+    s = SLOScheduler(cfg, COEFFS)
+    chunk = mk_chunk(1, deadline=10.0, chunk=512)          # big, far TTFT
+    crit = mk_req(2, deadline=0.08, draft=2, cached=100, alpha=0.2)
+    d = s.schedule([chunk, crit], t_k=0.05)
+    assert [r.req_id for r in d.batch] == [2]
+    assert d.critical == 1 and d.skipped_infeasible >= 1
+
+
+def test_prefill_chunk_goes_critical_near_ttft_deadline():
+    """As its TTFT deadline nears, a chunk enters the EDF fast path like
+    any other request — long prompts are starvable only until their LST."""
+    cfg = SchedulerConfig(max_batch_requests=1)
+    s = SLOScheduler(cfg, COEFFS)
+    chunk = mk_chunk(1, deadline=0.14, chunk=64)           # LST imminent
+    rich = mk_req(2, deadline=10.0, draft=16, cached=0, alpha=0.95)
+    d = s.schedule([chunk, rich], t_k=0.1)
+    assert [r.req_id for r in d.batch] == [1]
+    assert d.critical == 1
