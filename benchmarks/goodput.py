@@ -5,28 +5,56 @@ Two engines:
 
   * ``--engine sim`` (default) — analytic simulator at paper scale;
   * ``--engine cluster`` — the event-driven runtime over the real models:
-    measured goodput / violation / waste for WISP vs FCFS on the same seed,
-    plus a `repro.sim` prediction at matched per-token acceptance for the
-    cross-check (GoodSpeed-style goodput under heterogeneous edges).
+    measured goodput / violation / waste per scheduling policy on the
+    same seed, each cross-checked against a `repro.sim` run of the SAME
+    policy at matched per-token acceptance (GoodSpeed-style goodput under
+    heterogeneous edges).
+
+``--policy`` (repeatable; also forwarded by ``benchmarks.run --policy``)
+selects which registered scheduling policies the sweep compares; every
+row carries the policy name.
 """
 from __future__ import annotations
 
 import argparse
 
-from repro.sim import centralized, simulate, sled, wisp
+from repro.core.scheduler import available_policies
+from repro.sim import centralized, policy_variant, simulate, sled, wisp
+
+#: the paper's three system columns -> (config factory, policy tag)
+SYSTEMS = {
+    "sled": (sled, "fcfs"),
+    "centralized": (centralized, "-"),
+    "wisp": (wisp, "wisp"),
+}
 
 
-def run(quick: bool = True) -> list[dict]:
+def run(quick: bool = True, policies: list | None = None) -> list[dict]:
     sim_time = 40.0 if quick else 150.0
     N = 128 if quick else 192
     rows = []
-    for name, mk in (("sled", sled), ("centralized", centralized),
-                     ("wisp", wisp)):
+    for name, (mk, pol) in SYSTEMS.items():
         r = simulate(mk(N, sim_time=sim_time))
         rows.append(
             {
                 "table": "goodput(T3)",
                 "system": name,
+                "policy": pol,
+                "n_devices": N,
+                "goodput_tok_s": round(r.goodput(), 1),
+                "violation_rate": round(r.violation_rate(), 4),
+                "acceptance": round(r.acceptance_rate(), 3),
+                "waste_fraction": round(r.waste_fraction(), 3),
+            }
+        )
+    # policy ablations: WISP's engine under each requested batching rule
+    for pol in policies or ():
+        r = simulate(policy_variant(pol, N, sim_time=sim_time))
+        rows.append(
+            {
+                "table": "goodput(T3)",
+                "system": f"wisp-engine/{pol}",
+                "policy": pol,
                 "n_devices": N,
                 "goodput_tok_s": round(r.goodput(), 1),
                 "violation_rate": round(r.violation_rate(), 4),
@@ -37,21 +65,22 @@ def run(quick: bool = True) -> list[dict]:
     return rows
 
 
-def run_cluster(quick: bool = True) -> list[dict]:
+def run_cluster(quick: bool = True, policies: list | None = None) -> list[dict]:
     """Measured whole-system + per-class goodput from the functional stack
-    (WISP vs FCFS, same seed), cross-checked against the simulator."""
+    (one run per policy, same seed), each cross-checked against the
+    simulator running the same policy at the observed acceptance."""
     from benchmarks.wdt import _per_token_alpha, sim_crosscheck
     from repro.launch.serve import run_serving
 
     devices = 3 if quick else 8
     rounds = 3 if quick else 10
     k_max = 4
+    policies = list(policies) if policies else available_policies()
 
     rows = []
-    measured_accept = None
-    for sched in ("slo", "fcfs"):
+    for pol in policies:
         r = run_serving(
-            devices=devices, rounds=rounds, k_max=k_max, scheduler=sched,
+            devices=devices, rounds=rounds, k_max=k_max, policy=pol,
             verbose=False, seed=0,
         )
         m = r["metrics"]
@@ -61,7 +90,7 @@ def run_cluster(quick: bool = True) -> list[dict]:
         row = {
             "table": "goodput(cluster)",
             "engine": "cluster",
-            "system": "wisp" if sched == "slo" else "fcfs",
+            "policy": pol,
             "n_devices": devices,
             "goodput_tok_s": round(m.goodput(horizon), 2),
             "violations": m.violations(),
@@ -77,19 +106,24 @@ def run_cluster(quick: bool = True) -> list[dict]:
             )
         rows.append(row)
 
-    alpha_hat = _per_token_alpha(measured_accept, k_max)
-    sr, cfg = sim_crosscheck(alpha_hat, k_max=k_max, quick=quick)
-    rows.append(
-        {
-            "table": "goodput(cluster)",
-            "engine": "sim-crosscheck",
-            "alpha_hat_per_token": round(alpha_hat, 3),
-            "predicted_device_goodput_tok_s": round(
-                sr.goodput() / cfg.n_devices, 2
-            ),
-            "predicted_waste_fraction": round(sr.waste_fraction(), 3),
-        }
-    )
+        # same policy, analytic engine, measured acceptance: the sim and
+        # the functional stack must tell the same goodput/waste story
+        alpha_hat = _per_token_alpha(measured_accept, k_max)
+        sr, cfg = sim_crosscheck(alpha_hat, k_max=k_max, quick=quick,
+                                 policy=pol)
+        rows.append(
+            {
+                "table": "goodput(cluster)",
+                "engine": "sim-crosscheck",
+                "policy": pol,
+                "alpha_hat_per_token": round(alpha_hat, 3),
+                "predicted_device_goodput_tok_s": round(
+                    sr.goodput() / cfg.n_devices, 2
+                ),
+                "predicted_violation_rate": round(sr.violation_rate(), 4),
+                "predicted_waste_fraction": round(sr.waste_fraction(), 3),
+            }
+        )
     return rows
 
 
@@ -99,6 +133,10 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--engine", choices=("sim", "cluster"), default="sim")
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--policy", nargs="+", default=None,
+                    choices=available_policies(),
+                    help="scheduling policies to sweep (default: all "
+                         "registered, cluster engine)")
     args = ap.parse_args()
     fn = run_cluster if args.engine == "cluster" else run
-    print_rows(fn(quick=not args.full))
+    print_rows(fn(quick=not args.full, policies=args.policy))

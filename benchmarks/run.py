@@ -3,18 +3,24 @@
     PYTHONPATH=src python -m benchmarks.run            # quick mode
     PYTHONPATH=src python -m benchmarks.run --full     # paper-scale sweeps
     PYTHONPATH=src python -m benchmarks.run --only capacity goodput
+    PYTHONPATH=src python -m benchmarks.run --only goodput wdt ttft \\
+        --policy wisp fcfs edf priority        # one sweep, all policies
 
 Prints ``key=value`` CSV rows per table and writes JSON artifacts under
-``artifacts/bench/``.
+``artifacts/bench/``.  ``--policy`` is forwarded to every benchmark whose
+``run()`` accepts a ``policies`` argument (goodput / wdt / ttft); those
+emit the policy name into each result row.
 """
 from __future__ import annotations
 
 import argparse
 import importlib
+import inspect
 import time
 import traceback
 
 from benchmarks.common import print_rows, save_rows
+from repro.core.scheduler import available_policies
 
 #: module -> paper reference
 TABLES = {
@@ -37,6 +43,10 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper-scale sweeps")
     ap.add_argument("--only", nargs="*", default=None)
+    ap.add_argument("--policy", nargs="+", default=None,
+                    choices=available_policies(),
+                    help="scheduling policies to sweep in the benchmarks "
+                         "that support it (rows carry the policy name)")
     args = ap.parse_args()
 
     names = args.only or list(TABLES)
@@ -45,8 +55,12 @@ def main() -> None:
         mod = importlib.import_module(f"benchmarks.{name}")
         print(f"# === {name}: {TABLES.get(name, '')} ===", flush=True)
         t0 = time.time()
+        kwargs = {"quick": not args.full}
+        if (args.policy
+                and "policies" in inspect.signature(mod.run).parameters):
+            kwargs["policies"] = args.policy
         try:
-            rows = mod.run(quick=not args.full)
+            rows = mod.run(**kwargs)
         except Exception as e:
             traceback.print_exc()
             failures.append(name)

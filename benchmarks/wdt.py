@@ -16,40 +16,46 @@ from __future__ import annotations
 
 import argparse
 
-from repro.sim import simulate, wisp
+from repro.core.scheduler import available_policies
+from repro.sim import simulate
 from repro.sim.config import DevicePopulation
-from repro.sim.systems import variant
+from repro.sim.systems import policy_variant, variant
 
 
-def run(quick: bool = True) -> list[dict]:
+def run(quick: bool = True, policies: list | None = None) -> list[dict]:
     sim_time = 30.0 if quick else 90.0
     rows = []
-    # sweep per-token acceptance (draft quality) at fixed 50 tok/s drafting
-    for alpha in (0.6, 0.7, 0.8, 0.9):
-        cfg = variant(
-            wisp(16, sim_time=sim_time, predictor=None),
-            population=DevicePopulation(
-                draft_speeds=(50.0,), base_acceptance=(alpha,)
-            ),
-        )
-        r = simulate(cfg)
-        live = [x for x in r.records if x.t_arrival >= cfg.warmup]
-        drafted = sum(x.n_drafted for x in live)
-        wasted = sum(x.wasted for x in live)
-        t_draft = sum(x.t_draft for x in live)
-        t_wdt = wasted / 50.0
-        rows.append(
-            {
-                "table": "wdt(F1)",
-                "per_token_alpha": alpha,
-                "wasted_tokens_per_s": round(wasted / (sim_time - cfg.warmup), 2),
-                "device_goodput_tok_s": round(
-                    r.goodput() / cfg.n_devices, 2
+    # sweep per-token acceptance (draft quality) at fixed 50 tok/s
+    # drafting, under each requested batch-selection policy (WDT is a
+    # drafting-side quantity, but the policy shapes queueing -> goodput)
+    for pol in policies or ("wisp",):
+        for alpha in (0.6, 0.7, 0.8, 0.9):
+            cfg = variant(
+                policy_variant(pol, 16, sim_time=sim_time, predictor=None),
+                population=DevicePopulation(
+                    draft_speeds=(50.0,), base_acceptance=(alpha,)
                 ),
-                "waste_fraction": round(r.waste_fraction(), 3),
-                "t_wdt_over_t_draft": round(t_wdt / max(t_draft, 1e-9), 3),
-            }
-        )
+            )
+            r = simulate(cfg)
+            live = [x for x in r.records if x.t_arrival >= cfg.warmup]
+            wasted = sum(x.wasted for x in live)
+            t_draft = sum(x.t_draft for x in live)
+            t_wdt = wasted / 50.0
+            rows.append(
+                {
+                    "table": "wdt(F1)",
+                    "policy": pol,
+                    "per_token_alpha": alpha,
+                    "wasted_tokens_per_s": round(
+                        wasted / (sim_time - cfg.warmup), 2
+                    ),
+                    "device_goodput_tok_s": round(
+                        r.goodput() / cfg.n_devices, 2
+                    ),
+                    "waste_fraction": round(r.waste_fraction(), 3),
+                    "t_wdt_over_t_draft": round(t_wdt / max(t_draft, 1e-9), 3),
+                }
+            )
     return rows
 
 
@@ -68,12 +74,13 @@ def _per_token_alpha(mean_accept: float, k: int) -> float:
 
 
 def sim_crosscheck(alpha_hat: float, *, k_max: int, quick: bool,
-                   speed: float = 50.0):
-    """Simulate a 16-device fleet at the measured per-token acceptance —
-    the analytic prediction both cluster benchmarks cross-check against."""
+                   speed: float = 50.0, policy: str = "wisp"):
+    """Simulate a 16-device fleet at the measured per-token acceptance,
+    under the same scheduling policy the functional run used — the
+    analytic prediction both cluster benchmarks cross-check against."""
     cfg = variant(
-        wisp(16, sim_time=30.0 if quick else 90.0, predictor=None,
-             k_max=k_max),
+        policy_variant(policy, 16, sim_time=30.0 if quick else 90.0,
+                       predictor=None, k_max=k_max),
         population=DevicePopulation(
             draft_speeds=(speed,), base_acceptance=(alpha_hat,)
         ),
@@ -81,7 +88,7 @@ def sim_crosscheck(alpha_hat: float, *, k_max: int, quick: bool,
     return simulate(cfg), cfg
 
 
-def run_cluster(quick: bool = True) -> list[dict]:
+def run_cluster(quick: bool = True, policy: str = "wisp") -> list[dict]:
     """Measured WDT from the functional stack, cross-checked against the
     analytic simulator configured with the acceptance that run exhibited."""
     from repro.launch.serve import run_serving
@@ -92,8 +99,8 @@ def run_cluster(quick: bool = True) -> list[dict]:
     speed = 50.0
 
     r = run_serving(
-        devices=devices, rounds=rounds, k_max=k_max, verbose=False,
-        draft_speeds=(speed,), seed=0,
+        devices=devices, rounds=rounds, k_max=k_max, policy=policy,
+        verbose=False, draft_speeds=(speed,), seed=0,
     )
     m = r["metrics"]
     horizon = r["result"].horizon
@@ -106,12 +113,13 @@ def run_cluster(quick: bool = True) -> list[dict]:
 
     alpha_hat = _per_token_alpha(mean_accept, k_max)
     sr, sim_cfg = sim_crosscheck(alpha_hat, k_max=k_max, quick=quick,
-                                 speed=speed)
+                                 speed=speed, policy=policy)
 
     return [
         {
             "table": "wdt(cluster)",
             "engine": "cluster",
+            "policy": policy,
             "devices": devices,
             "rounds": rounds,
             "drafted": drafted,
@@ -127,6 +135,7 @@ def run_cluster(quick: bool = True) -> list[dict]:
         {
             "table": "wdt(cluster)",
             "engine": "sim-crosscheck",
+            "policy": policy,
             "alpha_hat_per_token": round(alpha_hat, 3),
             "predicted_waste_fraction": round(sr.waste_fraction(), 3),
             "predicted_device_goodput_tok_s": round(
@@ -142,6 +151,14 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--engine", choices=("sim", "cluster"), default="sim")
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--policy", nargs="+", default=None,
+                    choices=available_policies(),
+                    help="scheduling policies to sweep")
     args = ap.parse_args()
-    fn = run_cluster if args.engine == "cluster" else run
-    print_rows(fn(quick=not args.full))
+    if args.engine == "cluster":
+        rows = []
+        for pol in args.policy or ("wisp",):
+            rows.extend(run_cluster(quick=not args.full, policy=pol))
+    else:
+        rows = run(quick=not args.full, policies=args.policy)
+    print_rows(rows)

@@ -32,23 +32,30 @@ def main():
     #    identical prompt prefixes share physical pages.
     engine = VerificationEngine(target_cfg, target_params, max_slots=4,
                                 max_len=512, page_size=16)
-    server = WISPServer(engine, analytic_tpu_coeffs(target_cfg))
+    # policy picks the batch-selection rule from the scheduling registry:
+    # "wisp" (Algorithm 1, the default), "fcfs", "edf" or "priority"
+    server = WISPServer(engine, analytic_tpu_coeffs(target_cfg),
+                        policy="wisp")
     print(f"engine backend: {'paged' if engine.paged else 'dense'}  "
           f"KV budget: {engine.memory_budget_tokens()} tokens")
 
     # 3. edge device: draft model + drafting controller
     device = EdgeDevice(draft_cfg, draft_params, k_max=6, draft_speed=50.0)
 
-    # 4. open a session (server prefills the prompt, returns token 0).
-    #    The 16-token "system preamble" fills one full page, so later
-    #    sessions with the same preamble share its physical KV page.
+    # 4. open a session: open_session returns a SessionHandle — state
+    #    walks queued -> prefilling -> active -> closed, and first_token
+    #    is the response's token 0 once the prompt has prefilled
+    #    (immediately, in the default monolithic mode).  The 16-token
+    #    "system preamble" fills one full page, so later sessions with
+    #    the same preamble share its physical KV page.
     preamble = list(range(100, 116))
     prompt = preamble + [11, 24, 35, 46, 57]
     # queue_on_full=False: this synchronous demo wants a loud failure,
     # not a queued admission, if the KV pool is misconfigured
-    first = server.open_session(0, prompt, slo_class=3, queue_on_full=False)
+    handle = server.open_session(0, prompt, slo_class=3, queue_on_full=False)
+    first = handle.first_token
     device.start_session(0, prompt, first)
-    print(f"prompt={prompt}  first committed token={first}")
+    print(f"prompt={prompt}  handle={handle}")
 
     # 5. speculate -> verify rounds
     for rnd in range(5):
@@ -72,6 +79,12 @@ def main():
 
     print("response tokens:", device.response_tokens)
     print("engine stats:", engine.stats)
+
+    # every outcome above also flowed through the server's typed event
+    # stream — ADMITTED / FIRST_TOKEN / VERDICT / ... (docs/API.md); this
+    # drains it in order
+    events = server.pop_events()
+    print("server events:", [ev.kind for ev in events])
 
     # 6. prefix sharing: a second session with the same preamble reuses the
     #    first session's full prompt pages (content-addressed prefix cache)

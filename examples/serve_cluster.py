@@ -6,10 +6,11 @@ queueing / violations are *measured*, not modelled.
 
 Three sections:
 
-  1. **Interference** — WISP vs FCFS on the same seed against an
-     overloaded single-stream verifier: per-class measured goodput, queue
-     times, deadline violations.  WISP's EDF critical path must beat FCFS
-     on violations (asserted).
+  1. **Interference** — the selected ``--policy`` vs the FCFS baseline on
+     the same seed against an overloaded single-stream verifier:
+     per-class measured goodput, queue times, deadline violations.
+     WISP's EDF critical path must beat FCFS on violations (asserted
+     when ``--policy wisp``).
   2. **Overlap** — speculative continuation on vs off under
      self-speculation (draft == target, greedy): how much drafting time
      pipelining hides, measured as virtual-horizon speedup + salvage stats.
@@ -17,12 +18,13 @@ Three sections:
      per-session token streams to the lock-step driver (asserted).
 
     PYTHONPATH=src python examples/serve_cluster.py --devices 8 --rounds 8
+    PYTHONPATH=src python examples/serve_cluster.py --devices 8 --policy edf
     PYTHONPATH=src python examples/serve_cluster.py --devices 2 --rounds 2 --sync
 """
 import argparse
 
 from repro.core.estimator import EstimatorCoeffs
-from repro.core.scheduler import SchedulerConfig
+from repro.core.scheduler import SchedulerConfig, available_policies
 from repro.launch.serve import run_serving
 
 #: a verifier serving a 32B-class target: per-epoch overhead dominates, so
@@ -48,21 +50,21 @@ def _per_class_table(m, horizon):
 
 
 def section_interference(args):
-    print("=== 1. interference: WISP vs FCFS (same seed, overloaded "
-          "verifier) ===")
+    print(f"=== 1. interference: {args.policy} vs fcfs (same seed, "
+          "overloaded verifier) ===")
     out = {}
-    for sched in ("slo", "fcfs"):
+    policies = [args.policy] + (["fcfs"] if args.policy != "fcfs" else [])
+    for pol in policies:
         r = run_serving(
             devices=args.devices, rounds=args.rounds, k_max=args.k_max,
-            scheduler=sched, seed=args.seed, verbose=False,
+            policy=pol, seed=args.seed, verbose=False,
             coeffs=CONTENTION_COEFFS, draft_speeds=DRAFT_SPEEDS,
             slo_speeds=SLO_SPEEDS,
             sched_cfg=SchedulerConfig(max_batch_requests=1),
         )
         m, horizon = r["metrics"], r["result"].horizon
-        out[sched] = m
-        name = "WISP" if sched == "slo" else "FCFS"
-        print(f"\n--- {name} ---")
+        out[pol] = m
+        print(f"\n--- {pol} ---")
         print(f"goodput={m.goodput(horizon):.1f} tok/s  "
               f"measured WDT={m.t_wdt * 1e3:.0f} ms  "
               f"waste={m.waste_fraction():.3f}  "
@@ -70,9 +72,11 @@ def section_interference(args):
         print(f"deadline violations={m.deadline_violations()}  "
               f"session violations={m.violations()}")
         _per_class_table(m, horizon)
-    w, f = out["slo"].deadline_violations(), out["fcfs"].deadline_violations()
-    print(f"\nWISP {w} vs FCFS {f} deadline violations")
-    assert w <= f, "WISP must not lose to FCFS on deadline violations"
+    if args.policy == "wisp":
+        w = out["wisp"].deadline_violations()
+        f = out["fcfs"].deadline_violations()
+        print(f"\nWISP {w} vs FCFS {f} deadline violations")
+        assert w <= f, "WISP must not lose to FCFS on deadline violations"
     return out
 
 
@@ -85,6 +89,7 @@ def section_overlap(args):
     for spec in (True, False):
         r = run_serving(
             devices=devices, rounds=rounds, k_max=args.k_max,
+            policy=args.policy,
             seed=args.seed, verbose=False, self_draft=True, greedy=True,
             method="greedy", speculate=spec, coeffs=CONTENTION_COEFFS,
             draft_speeds=DRAFT_SPEEDS, slo_speeds=SLO_SPEEDS,
@@ -106,7 +111,10 @@ def section_equivalence(args):
     print("\n=== 3. equivalence: event-driven vs lock-step streams ===")
     devices, rounds = min(args.devices, 3), min(args.rounds, 3)
     kw = dict(devices=devices, rounds=rounds, k_max=args.k_max,
-              seed=args.seed, verbose=False)
+              policy=args.policy, seed=args.seed, verbose=False)
+    # the event-driven runtime consumes the typed server event stream;
+    # the lock-step reference consumes the legacy shim channels — equal
+    # streams mean the two APIs report identical outcomes
     ev = run_serving(sync=False, **kw)
     sy = run_serving(sync=True, **kw)
     for i, (de, ds) in enumerate(zip(ev["edges"], sy["edges"])):
@@ -122,6 +130,9 @@ def main():
     ap.add_argument("--rounds", type=int, default=8)
     ap.add_argument("--k-max", type=int, default=5)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--policy", default="wisp", choices=available_policies(),
+                    help="scheduling policy for sections 1-3 (section 1 "
+                         "compares it against the fcfs baseline)")
     ap.add_argument("--sync", action="store_true",
                     help="run only the lock-step reference driver")
     args = ap.parse_args()
@@ -129,7 +140,7 @@ def main():
     if args.sync:
         run_serving(devices=args.devices, rounds=args.rounds,
                     k_max=args.k_max, seed=args.seed, sync=True,
-                    scheduler="slo")
+                    policy=args.policy)
         return
     section_interference(args)
     section_overlap(args)

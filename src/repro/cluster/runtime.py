@@ -35,13 +35,21 @@ with verification; the first token rides a ``FIRST_TOKEN`` event back to
 the device when the final chunk's epoch completes.  TTFT is measured
 per session either way.
 
+Server outcomes reach the runtime through the server's **typed event
+stream** (`repro.serving.events`, docs/API.md): after every server call
+the runtime drains ``pop_events()`` and routes ``FIRST_TOKEN`` /
+``VERDICT`` events onto its own virtual-clock event heap (delivered
+after the verify span + downlink), so first-token and verdict plumbing
+share one channel for every prefill mode and scheduling policy.
+
 Determinism: drafting keys are position-folded (`core/controller.py`),
 verification draws are (session, committed_len)-keyed
 (`core/speculative.py`), events are totally ordered (`cluster/events.py`)
 and all workload randomness comes from seeded generators — so a run is a
 pure function of its config, and the committed streams are byte-identical
 to the lock-step driver's (`tests/test_cluster.py`) **and invariant to
-the prefill mode** (timing never reaches a sampling key).
+the prefill mode and scheduling policy** (timing never reaches a
+sampling key).
 """
 from __future__ import annotations
 
@@ -200,27 +208,20 @@ class ClusterRuntime:
         # "rounds_done > 0" record guard with the PREVIOUS session's
         # counters (phantom SessionRecord with stale t_open/ttft/committed)
         dev.rounds_done = 0
-        first = self.server.open_session(
+        # until a FIRST_TOKEN event starts the session, the device idles:
+        # admitted-and-prefilling (chunked), waiting on the blocking span
+        # (monolithic), or capacity-queued (any mode)
+        dev.state = "admission"
+        self._pending_open[sid] = prompt
+        self.server.open_session(
             sid, prompt, slo_class=dev.profile.slo_class,
             draft_speed=dev.profile.draft_speed, queue_on_full=True, now=t,
         )
-        if first is None:
-            # chunked mode: admitted and prefilling under the scheduler —
-            # or, any mode, capacity-queued.  Either way the first token
-            # arrives later; the device idles until then.
-            dev.state = "admission"
-            self._pending_open[sid] = prompt
-            if (self.cfg.prefill_mode == "chunked"
-                    and not self.verifier_busy and self.server.queue_depth):
-                self._schedule_dispatch(t)
-            return
-        if self.cfg.prefill_mode == "monolithic":
-            # admitted, but the blocking prefill span still has to run
-            dev.state = "prefill"
-            self._pending_open[sid] = prompt
-            self._queue_prefill_span(sid, first, len(prompt), t)
-            return
-        self._start_session(dev, sid, prompt, first, t)
+        self._drain_server_events(t)
+        if (self.cfg.prefill_mode == "chunked"
+                and dev.state == "admission"
+                and not self.verifier_busy and self.server.queue_depth):
+            self._schedule_dispatch(t)
 
     def _start_session(self, dev: _DeviceProc, sid: int, prompt: list,
                        first: int, t: float):
@@ -259,11 +260,12 @@ class ClusterRuntime:
             ttft=dev.ttft,
         )
         self.metrics.close_session(rec)
-        self.server.close_session(sid)
+        self.server.close_session(sid, now=t)
         self._by_session.pop(sid, None)
         dev.sessions_done += 1
         dev.clear_spec()
-        self._drain_admissions(t)
+        # the close may have admitted a capacity-queued session
+        self._drain_server_events(t)
         # chunked mode: a capacity-queued session admitted by this close
         # just enqueued its first prefill chunk — make sure an epoch fires
         if self.server.queue_depth and not self.verifier_busy:
@@ -276,23 +278,41 @@ class ClusterRuntime:
             self.events.push(t + dev.workload.think_time(),
                              EventKind.SESSION_OPEN, dev.idx)
 
-    def _drain_admissions(self, t: float):
-        """Deliver capacity-queue admissions (zero/monolithic modes: the
-        server prefilled the prompt synchronously when capacity freed).
-        Monolithic mode still charges the blocking span before the device
-        starts.  Chunked-mode first tokens do NOT come through here — they
-        ride FIRST_TOKEN events pushed when their final chunk's epoch
-        completes (`_on_dispatch`)."""
-        for sid, first in self.server.pop_admissions():
-            dev = self._by_session[sid]
-            if self.cfg.prefill_mode == "monolithic":
-                dev.state = "prefill"
-                self._queue_prefill_span(
-                    sid, first, len(self._pending_open[sid]), t
-                )
-            else:
-                prompt = self._pending_open.pop(sid)
-                self._start_session(dev, sid, prompt, first, t)
+    def _drain_server_events(self, t: float, t_deliver: float | None = None):
+        """Route the server's typed event stream (docs/API.md) onto the
+        cluster's virtual clock.  ``VERDICT`` events (dispatch epochs
+        only) are delivered at ``t_deliver`` = epoch end + downlink.
+        ``FIRST_TOKEN`` events depend on how the mode charges prefill:
+
+          * ``zero``       — prefill is free and instant; the session
+            starts right now;
+          * ``monolithic`` — the token exists, but the blocking
+            estimator-priced prefill span still has to run (FIFO on the
+            verifier) before it rides the downlink;
+          * ``chunked``    — the final chunk's epoch just completed; the
+            token is delivered with that epoch's outputs at ``t_deliver``.
+
+        ``ADMITTED`` / ``PREEMPTED`` / ``TTFT_RECORD`` / ``CLOSED`` need
+        no runtime action (device timing is measured runtime-side)."""
+        for ev in self.server.pop_events():
+            if ev.kind == "VERDICT":
+                self.events.push(t_deliver, EventKind.VERDICT, ev.verdict)
+            elif ev.kind == "FIRST_TOKEN":
+                sid = ev.session_id
+                if self.cfg.prefill_mode == "monolithic":
+                    dev = self._by_session.get(sid)
+                    if dev is None:           # closed under us
+                        self._pending_open.pop(sid, None)
+                        continue
+                    dev.state = "prefill"
+                    self._queue_prefill_span(
+                        sid, ev.token, len(self._pending_open[sid]), t
+                    )
+                elif self.cfg.prefill_mode == "chunked":
+                    self.events.push(t_deliver, EventKind.FIRST_TOKEN,
+                                     (sid, ev.token))
+                else:
+                    self._on_first_token((sid, ev.token), t)
 
     def _on_first_token(self, payload, t: float):
         """A completed prefill's first token reaches its device: the
@@ -376,29 +396,28 @@ class ClusterRuntime:
             return
         if not self.server.queue_depth:
             return
-        verdicts = self.server.step(t, verify_time=self._verify_time)
-        chunked = self.cfg.prefill_mode == "chunked"
-        if not chunked:
-            self._drain_admissions(t)
+        self.server.step(t, verify_time=self._verify_time)
         self.metrics.sample_queue(t, self.server.queue_depth)
         if self.server.last_served:
             # the epoch executed work (verify items and/or prefill chunks):
             # the verifier is busy for its estimator-priced duration, and
-            # everything it produced is delivered after the downlink
+            # everything it produced (VERDICT events, chunked-prefill
+            # FIRST_TOKEN events) is delivered after the downlink
             dt = self.server.last_verify_time
             self.verifier_busy = True
             self.events.push(t + dt, EventKind.GPU_DONE)
-            t_deliver = t + dt + self.net.downlink_time()
-            for v in verdicts:
-                self.events.push(t_deliver, EventKind.VERDICT, v)
-            if chunked:
-                for sid, first in self.server.pop_admissions():
-                    self.events.push(t_deliver, EventKind.FIRST_TOKEN,
-                                     (sid, first))
-        elif self.server.queue_depth:
-            # nothing schedulable yet (criticality windows still closed):
-            # the server's own timer retries next epoch
-            self._schedule_dispatch(t + self.cfg.dispatch_interval)
+            self._drain_server_events(
+                t, t_deliver=t + dt + self.net.downlink_time()
+            )
+        else:
+            # the epoch may still have admitted capacity-queued sessions
+            # (zero/monolithic: their FIRST_TOKEN fired) even though
+            # nothing was schedulable
+            self._drain_server_events(t)
+            if self.server.queue_depth:
+                # nothing schedulable yet (criticality windows still
+                # closed): the server's own timer retries next epoch
+                self._schedule_dispatch(t + self.cfg.dispatch_interval)
 
     def _on_gpu_done(self, t: float):
         self.verifier_busy = False

@@ -5,7 +5,8 @@
   predictor   — rejection predictor: MLP + stump-ensemble baseline (§4.1)
   controller  — stop-at-first-predicted-rejection drafting (§4.1, Thm. 1)
   estimator   — verification-time estimator, OLS-fit (§4.4, App. C)
-  scheduler   — SLO-aware batch scheduling, Algorithm 1 (§4.2-4.3)
+  scheduler   — work items + scheduling-policy registry; Algorithm 1
+                ("wisp") plus fcfs/edf/priority baselines (§4.2-4.3)
   wdt         — Wasted-Drafting-Time accounting (§3.2)
 """
 from repro.core.speculative import speculative_verify, committed_tokens, wasted_tokens
@@ -37,11 +38,20 @@ from repro.core.estimator import (
     save_coeffs,
 )
 from repro.core.scheduler import (
+    EDFScheduler,
     FCFSScheduler,
+    PrefillChunkWork,
+    PriorityScheduler,
     ScheduleDecision,
     SchedulerConfig,
+    SchedulingPolicy,
     SLOScheduler,
     VerifyRequest,
+    VerifyWork,
+    WorkItem,
+    available_policies,
+    make_policy,
+    register_policy,
 )
 from repro.core.wdt import IterationLog, WDTStats
 
@@ -72,11 +82,20 @@ __all__ = [
     "fit_ols",
     "load_coeffs",
     "save_coeffs",
+    "EDFScheduler",
     "FCFSScheduler",
+    "PrefillChunkWork",
+    "PriorityScheduler",
     "ScheduleDecision",
     "SchedulerConfig",
+    "SchedulingPolicy",
     "SLOScheduler",
     "VerifyRequest",
+    "VerifyWork",
+    "WorkItem",
+    "available_policies",
+    "make_policy",
+    "register_policy",
     "IterationLog",
     "WDTStats",
 ]

@@ -1,48 +1,59 @@
-"""SLO-aware verification batch scheduler (paper §4.2-4.3, Algorithm 1).
+"""SLO-aware verification batch scheduling (paper §4.2-4.3, Algorithm 1)
+behind a pluggable policy registry.
 
-Per dispatch epoch t_k, select a batch B_k maximizing goodput density
-under (i) a GPU/TPU memory budget and (ii) per-request deadlines checked
-against the verification-time estimator:
+Two first-class abstractions (docs/API.md):
 
-  * critical fast path: requests past their Latest Start Time
-    (LST_i = d_i - v_hat_i - delta) are admitted first in EDF order;
-  * best-effort fill: remaining capacity is filled by decreasing utility
-    density U_i = g_hat_i / v_hat_i;
-  * every tentative admission is validated by FeasibleAdd (memory + the
-    earliest deadline in the batch vs estimated batch completion).
+**WorkItem** — one schedulable unit of server work.  The pool holds a
+small class hierarchy behind one scheduling protocol (uniform
+``deadline`` / ``goodput_value`` / ``batch_shape()`` plus engine hooks
+``make_engine_item`` / ``apply``):
 
-The pool holds TWO kinds of work item behind one interface: verification
-requests and chunked-prefill chunks (``VerifyRequest.kind``) — prompt
-prefill competes for the verifier under the same LST/utility-density
-rules instead of blocking it from outside the scheduler (DESIGN.md §8).
+  * ``VerifyWork`` — a drafted block awaiting verification; the deadline
+    is the SLO-class token-speed budget (Eq. 6/12);
+  * ``PrefillChunkWork`` — one chunk of a cold prompt's prefill; the
+    deadline is the session's TTFT deadline (DESIGN.md §8).
+
+A future work type (e.g. a non-speculative decode fallback) is additive:
+subclass ``WorkItem``, implement the four hooks, and every policy, the
+estimator pricing, and the server's dispatch loop handle it unchanged.
+
+**SchedulingPolicy** — the batch-selection rule, one per name in a
+registry.  Per dispatch epoch t_k a policy selects a batch B_k under
+(i) a GPU/TPU memory budget and (ii) its own ordering rule:
+
+  * ``"wisp"`` (alias ``"slo"``) — Algorithm 1: EDF critical fast path
+    past the Latest Start Time, utility-density best-effort fill, every
+    admission validated by FeasibleAdd;
+  * ``"fcfs"`` — SLED-style arrival order, fill to limits;
+  * ``"edf"``  — earliest-deadline-first fill (deadline awareness
+    without the estimator-driven criticality split);
+  * ``"priority"`` — strict SLO-class priority, EDF within a class.
 
 This is host-side control logic (pure Python, no jax) — it runs on the
-serving coordinator between device steps.
+serving coordinator between device steps.  Both the functional server
+(`repro.serving`) and the analytic simulator (`repro.sim`) select
+policies from the same registry.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Iterable, Optional
+from typing import Iterable
 
-from repro.core.estimator import BatchShape, EstimatorCoeffs, batch_features
+from repro.core.estimator import BatchShape, EstimatorCoeffs
 
 
+# ---------------------------------------------------------------------------
+# Work items
+# ---------------------------------------------------------------------------
 @dataclasses.dataclass
-class VerifyRequest:
-    """A pending work item on the server.
+class WorkItem:
+    """One pending work item on the server (the scheduling protocol).
 
-    Two kinds flow through the same Algorithm 1 pool (DESIGN.md §8):
-
-      * ``kind="verify"`` — a drafted block awaiting verification; the
-        deadline is the SLO-class token-speed budget (Eq. 6/12).
-      * ``kind="prefill"`` — one chunk of a cold prompt's prefill; the
-        deadline is the session's **TTFT deadline** (every chunk of a
-        session carries the same one), ``cached_len`` is the prompt prefix
-        already prefilled (or prefix-cache-covered), and
-        ``prefill_tokens`` is the chunk length.  Chunks are usually
-        best-effort fill; as the TTFT deadline nears, LST promotes the
-        remaining chunks to the critical fast path like any verify
-        request.
+    Subclasses define what the item *is* by overriding the pricing
+    properties (``new_tokens``, ``goodput_value``) and the engine hooks
+    (``make_engine_item``, ``apply``, ``deferred``); the scheduling
+    fields are uniform so every `SchedulingPolicy` prices and orders any
+    mix of kinds without branching.
     """
 
     req_id: int
@@ -50,44 +61,137 @@ class VerifyRequest:
     slo_class: int               # index into class table
     arrival: float               # a_i (s)
     deadline: float              # d_i = a_i + tau_c (s); TTFT deadline for prefill
-    draft_len: int               # N_d (0 for prefill chunks)
-    cached_len: int              # committed prefix length with valid KV
-    alpha: float                 # expected acceptance rate of this session
-    payload: object = None       # draft tokens + q stats (opaque here)
+    draft_len: int = 0           # N_d (0 for non-verify work)
+    cached_len: int = 0          # committed prefix length with valid KV
+    alpha: float = 0.0           # expected acceptance rate of this session
+    payload: object = None       # kind-specific (opaque to scheduling)
     #: verify: prefix tokens that must be re-prefilled because no KV is
     #: cached (cold start / cache eviction / SLED's no-cache baseline);
     #: prefill: the chunk length
     prefill_tokens: int = 0
-    #: "verify" | "prefill"
-    kind: str = "verify"
     # bookkeeping
     enqueued_at: float = 0.0
     round_index: int = 0
 
+    #: kind tag (class attribute, kept for observability and the legacy
+    #: ``VerifyRequest(kind=...)`` constructor shim)
+    kind = "work"
+
+    # -- pricing (what every policy needs) --------------------------------
     @property
     def new_tokens(self) -> int:
-        if self.kind == "prefill":
-            # a chunk feeds exactly its prompt tokens (no draft block, no
-            # re-fed last-committed token — the session has none yet)
-            return self.prefill_tokens
+        raise NotImplementedError
+
+    @property
+    def goodput_value(self) -> float:
+        """g_hat: expected committed tokens if this item executes."""
+        raise NotImplementedError
+
+    def batch_shape(self) -> BatchShape:
+        return BatchShape(new_tokens=self.new_tokens, cached_tokens=self.cached_len)
+
+    # -- engine hooks (the serving coordinator protocol) ------------------
+    def make_engine_item(self, server):
+        """Build the engine-level item (`repro.serving.engine`) this work
+        executes as.  ``server`` is the coordinator (duck-typed: session
+        table, engine, determinism switches)."""
+        raise NotImplementedError
+
+    def apply(self, server, outcome, now: float, tv_epoch: float):
+        """Commit one executed outcome back into the coordinator; returns
+        a ``Verdict`` for verify-like work, ``None`` otherwise."""
+        raise NotImplementedError
+
+    def deferred(self, outcome) -> bool:
+        """True when ``outcome`` means "could not run, requeue me" (e.g. a
+        prefill chunk the page pool could not cover this epoch)."""
+        return False
+
+
+@dataclasses.dataclass
+class VerifyWork(WorkItem):
+    """A drafted block awaiting verification (``payload`` = (draft token
+    ids, q logits)).  Deadline is the SLO-class token-speed budget."""
+
+    kind = "verify"
+
+    @property
+    def new_tokens(self) -> int:
         # + the re-fed last committed token + any uncached prefix
         return self.draft_len + 1 + self.prefill_tokens
 
     @property
     def goodput_value(self) -> float:
-        """g_hat: expected committed tokens (paper Eq. 5, + bonus token).
-
-        A prefill chunk commits at most the session's first token (and
-        that only when the final chunk lands), so its g_hat is 1.0: long
-        prompts get a low utility density and fill spare capacity instead
-        of outbidding verification — exactly the paper's interference
-        suppression, with escalation left to the TTFT deadline's LST."""
-        if self.kind == "prefill":
-            return 1.0
+        """Expected committed tokens (paper Eq. 5, + bonus token)."""
         return self.alpha * self.draft_len + 1.0
 
-    def batch_shape(self) -> BatchShape:
-        return BatchShape(new_tokens=self.new_tokens, cached_tokens=self.cached_len)
+    def make_engine_item(self, server):
+        from repro.serving.engine import VerifyItem
+
+        s = server.sessions[self.session_id]
+        toks, qlog = self.payload
+        return VerifyItem(
+            slot=s.slot, draft_tokens=toks, q_logits=qlog,
+            rng_tag=(self.session_id, self.cached_len)
+            if server.deterministic_verify else None,
+        )
+
+    def apply(self, server, outcome, now, tv_epoch):
+        return server.commit_verify(self, outcome, now, tv_epoch)
+
+
+@dataclasses.dataclass
+class PrefillChunkWork(WorkItem):
+    """One chunk of a cold prompt's prefill (``payload`` = the server's
+    PrefillingSession; ``prefill_tokens`` = chunk length; ``cached_len``
+    = prompt prefix already prefilled or prefix-cache-covered).
+
+    Every chunk of a session carries the session's **TTFT deadline**.
+    Chunks are usually best-effort fill; as the TTFT deadline nears, LST
+    promotes the remaining chunks to the critical fast path like any
+    verify request.  g_hat is 1.0 — a prefill commits at most the
+    session's first token — so long prompts get a low utility density
+    and fill spare capacity instead of outbidding verification, exactly
+    the paper's interference suppression (DESIGN.md §8)."""
+
+    kind = "prefill"
+
+    @property
+    def new_tokens(self) -> int:
+        # a chunk feeds exactly its prompt tokens (no draft block, no
+        # re-fed last-committed token — the session has none yet)
+        return self.prefill_tokens
+
+    @property
+    def goodput_value(self) -> float:
+        return 1.0
+
+    def make_engine_item(self, server):
+        from repro.serving.engine import PrefillChunkItem
+
+        return PrefillChunkItem(self.payload.state, self.prefill_tokens)
+
+    def apply(self, server, outcome, now, tv_epoch):
+        server.apply_chunk(self, outcome, now, tv_epoch)
+        return None
+
+    def deferred(self, outcome) -> bool:
+        return bool(outcome.oom)
+
+
+#: kind tag -> concrete work class (extended by new work types)
+WORK_KINDS: dict[str, type] = {
+    VerifyWork.kind: VerifyWork,
+    PrefillChunkWork.kind: PrefillChunkWork,
+}
+
+
+def VerifyRequest(*args, kind: str = "verify", **kwargs) -> WorkItem:
+    """Deprecated constructor shim: the stringly-typed
+    ``VerifyRequest(kind=...)`` now dispatches to the `WorkItem` class
+    hierarchy (``VerifyWork`` / ``PrefillChunkWork``).  Field names and
+    order are unchanged; new code should construct the classes directly."""
+    return WORK_KINDS[kind](*args, **kwargs)
 
 
 @dataclasses.dataclass
@@ -110,7 +214,7 @@ class SchedulerConfig:
 
 @dataclasses.dataclass
 class ScheduleDecision:
-    batch: list        # [VerifyRequest]
+    batch: list        # [WorkItem]
     est_time: float    # T_hat(B_k)
     critical: int      # how many came from the critical fast path
     skipped_infeasible: int
@@ -118,36 +222,141 @@ class ScheduleDecision:
     #: the budget this epoch was admitted against (observability: dynamic
     #: budgets change per epoch with cache pressure)
     memory_budget_tokens: int = 0
+    #: registry name of the policy that produced this decision
+    policy: str = ""
 
 
-class SLOScheduler:
-    """Algorithm 1.  ``estimator`` maps a list of BatchShape -> seconds."""
+# ---------------------------------------------------------------------------
+# Policy registry
+# ---------------------------------------------------------------------------
+#: registry name (and aliases) -> policy class
+POLICIES: dict[str, type] = {}
+
+
+def register_policy(name: str, *aliases: str):
+    """Class decorator: register a `SchedulingPolicy` under ``name`` (its
+    canonical ``cls.name``) plus any legacy aliases."""
+
+    def deco(cls):
+        cls.name = name
+        for n in (name, *aliases):
+            POLICIES[n] = cls
+        return cls
+
+    return deco
+
+
+def available_policies() -> list[str]:
+    """Canonical registered policy names, sorted."""
+    return sorted({cls.name for cls in POLICIES.values()})
+
+
+def make_policy(policy, cfg: SchedulerConfig, coeffs: EstimatorCoeffs):
+    """Resolve ``policy`` — a registry name (``"wisp"``, ``"fcfs"``,
+    ``"edf"``, ``"priority"``; legacy alias ``"slo"``), a policy class,
+    or an already-built instance — into a policy instance."""
+    if isinstance(policy, str):
+        try:
+            cls = POLICIES[policy]
+        except KeyError:
+            raise ValueError(
+                f"unknown scheduling policy {policy!r}; registered: "
+                f"{available_policies()}"
+            ) from None
+        return cls(cfg, coeffs)
+    if isinstance(policy, type):
+        return policy(cfg, coeffs)
+    return policy
+
+
+class SchedulingPolicy:
+    """Batch-selection protocol + the pricing helpers every rule shares.
+
+    ``schedule(pending, t_k, *, memory_budget_tokens=None) ->
+    ScheduleDecision`` must (a) draw its batch from ``pending`` without
+    duplicates, (b) keep ``memory_tokens(batch)`` within the budget and
+    ``len(batch)`` within ``cfg.max_batch_requests``, and (c) report the
+    estimator's batch time as ``est_time``.  ``memory_budget_tokens``
+    overrides the static config budget for one epoch (the coordinator
+    passes the engine's live free-page capacity here)."""
+
+    name = "?"
 
     def __init__(self, cfg: SchedulerConfig, coeffs: EstimatorCoeffs):
         self.cfg = cfg
         self.coeffs = coeffs
 
-    # -- per-request estimates -------------------------------------------
-    def v_hat(self, r: VerifyRequest) -> float:
-        """Marginal verification cost of r alone (used for U_i and LST_i)."""
-        return self.coeffs.predict([r.batch_shape()])
-
-    def utility(self, r: VerifyRequest) -> float:
-        return r.goodput_value / max(self.v_hat(r), 1e-9)
-
-    def lst(self, r: VerifyRequest) -> float:
-        return r.deadline - self.v_hat(r) - self.cfg.guard_time
-
-    # -- batch feasibility (FeasibleAdd) ----------------------------------
-    def batch_time(self, batch: Iterable[VerifyRequest]) -> float:
+    # -- shared pricing ----------------------------------------------------
+    def batch_time(self, batch: Iterable[WorkItem]) -> float:
         shapes = [r.batch_shape() for r in batch]
         if not shapes:
             return 0.0
         return self.coeffs.predict(shapes)
 
-    def memory_tokens(self, batch: Iterable[VerifyRequest]) -> int:
+    def memory_tokens(self, batch: Iterable[WorkItem]) -> int:
         return sum(r.cached_len + r.new_tokens for r in batch)
 
+    def _budget(self, memory_budget_tokens: int | None) -> int:
+        return (
+            self.cfg.memory_budget_tokens
+            if memory_budget_tokens is None
+            else memory_budget_tokens
+        )
+
+    def schedule(
+        self, pending: list, t_k: float, *,
+        memory_budget_tokens: int | None = None,
+    ) -> ScheduleDecision:
+        raise NotImplementedError
+
+    def _decision(self, batch, t_k, budget, *, critical=0, skipped=0):
+        return ScheduleDecision(
+            batch=batch,
+            est_time=self.batch_time(batch),
+            critical=critical,
+            skipped_infeasible=skipped,
+            epoch=t_k,
+            memory_budget_tokens=budget,
+            policy=self.name,
+        )
+
+    def _fill_in_order(self, pending, t_k, budget, key) -> ScheduleDecision:
+        """Greedy fill in ``key`` order under the memory/batch caps —
+        the shared body of the strict-order baselines (EDF, priority):
+        no estimator feasibility check, no smaller-item bypass past the
+        first one that does not fit."""
+        batch: list = []
+        tokens = 0
+        skipped = 0
+        for r in sorted(pending, key=key):
+            if len(batch) >= self.cfg.max_batch_requests:
+                break
+            need = r.cached_len + r.new_tokens
+            if tokens + need > budget:
+                skipped += 1
+                break
+            batch.append(r)
+            tokens += need
+        return self._decision(batch, t_k, budget, skipped=skipped)
+
+
+@register_policy("wisp", "slo")
+class SLOScheduler(SchedulingPolicy):
+    """Algorithm 1: EDF critical fast path + utility-density fill, every
+    admission validated by FeasibleAdd against the estimator."""
+
+    # -- per-request estimates -------------------------------------------
+    def v_hat(self, r: WorkItem) -> float:
+        """Marginal verification cost of r alone (used for U_i and LST_i)."""
+        return self.coeffs.predict([r.batch_shape()])
+
+    def utility(self, r: WorkItem) -> float:
+        return r.goodput_value / max(self.v_hat(r), 1e-9)
+
+    def lst(self, r: WorkItem) -> float:
+        return r.deadline - self.v_hat(r) - self.cfg.guard_time
+
+    # -- batch feasibility (FeasibleAdd) ----------------------------------
     def feasible_add(
         self, batch, r, t_k, doomed: set | None = None,
         memory_budget_tokens: int | None = None,
@@ -157,11 +366,7 @@ class SLOScheduler:
         missed their deadline — Eq. 15 cannot bind for them (they violate
         regardless), so they do not constrain d_min; excluding them avoids
         the one-request death-spiral a literal reading would cause."""
-        budget = (
-            self.cfg.memory_budget_tokens
-            if memory_budget_tokens is None
-            else memory_budget_tokens
-        )
+        budget = self._budget(memory_budget_tokens)
         nb = batch + [r]
         if len(nb) > self.cfg.max_batch_requests:
             return False
@@ -178,14 +383,7 @@ class SLOScheduler:
         self, pending: list, t_k: float, *,
         memory_budget_tokens: int | None = None,
     ) -> ScheduleDecision:
-        """``memory_budget_tokens`` overrides the static config budget for
-        this epoch (the coordinator passes the engine's live free-page
-        capacity here)."""
-        budget = (
-            self.cfg.memory_budget_tokens
-            if memory_budget_tokens is None
-            else memory_budget_tokens
-        )
+        budget = self._budget(memory_budget_tokens)
         # Requests that cannot meet their deadline even alone are "doomed":
         # they violate regardless of what we do, so they must not block the
         # critical fast path (a literal Alg. 1 would dispatch them one at a
@@ -227,40 +425,20 @@ class SLOScheduler:
                 else:
                     skipped += 1
                     break
-        return ScheduleDecision(
-            batch=batch,
-            est_time=self.batch_time(batch),
-            critical=n_crit,
-            skipped_infeasible=skipped,
-            epoch=t_k,
-            memory_budget_tokens=budget,
-        )
+        return self._decision(batch, t_k, budget, critical=n_crit,
+                              skipped=skipped)
 
 
-class FCFSScheduler:
+@register_policy("fcfs")
+class FCFSScheduler(SchedulingPolicy):
     """SLED-style baseline: first-come-first-served, fill to limits, no
     deadline awareness."""
-
-    def __init__(self, cfg: SchedulerConfig, coeffs: EstimatorCoeffs):
-        self.cfg = cfg
-        self.coeffs = coeffs
-
-    def batch_time(self, batch) -> float:
-        shapes = [r.batch_shape() for r in batch]
-        return self.coeffs.predict(shapes) if shapes else 0.0
-
-    def memory_tokens(self, batch) -> int:
-        return sum(r.cached_len + r.new_tokens for r in batch)
 
     def schedule(
         self, pending: list, t_k: float, *,
         memory_budget_tokens: int | None = None,
     ) -> ScheduleDecision:
-        budget = (
-            self.cfg.memory_budget_tokens
-            if memory_budget_tokens is None
-            else memory_budget_tokens
-        )
+        budget = self._budget(memory_budget_tokens)
         batch: list = []
         for r in sorted(pending, key=lambda x: x.arrival):
             if len(batch) >= self.cfg.max_batch_requests:
@@ -268,11 +446,45 @@ class FCFSScheduler:
             if self.memory_tokens(batch + [r]) > budget:
                 break
             batch.append(r)
-        return ScheduleDecision(
-            batch=batch,
-            est_time=self.batch_time(batch),
-            critical=0,
-            skipped_infeasible=0,
-            epoch=t_k,
-            memory_budget_tokens=budget,
+        return self._decision(batch, t_k, budget)
+
+
+@register_policy("edf")
+class EDFScheduler(SchedulingPolicy):
+    """Earliest-deadline-first baseline: admit in deadline order, fill to
+    the memory/batch caps.
+
+    Deadline-aware but estimator-blind: no Latest-Start-Time criticality
+    split, no utility-density fill, no FeasibleAdd completion check — so
+    a batch may still blow the earliest deadline it contains.  Isolates
+    how much of WISP's win comes from mere deadline *ordering* vs from
+    Algorithm 1's estimator-validated admission."""
+
+    def schedule(
+        self, pending: list, t_k: float, *,
+        memory_budget_tokens: int | None = None,
+    ) -> ScheduleDecision:
+        return self._fill_in_order(
+            pending, t_k, self._budget(memory_budget_tokens),
+            key=lambda x: (x.deadline, x.arrival, x.req_id),
+        )
+
+
+@register_policy("priority")
+class PriorityScheduler(SchedulingPolicy):
+    """Strict SLO-class priority: premium classes (lower class index =
+    faster token-speed promise) always outrank best-effort ones; EDF
+    order within a class; fill to the memory/batch caps.
+
+    The classic starvation-prone baseline — a saturated premium tier
+    locks lower tiers out entirely, which is exactly the failure mode
+    WISP's utility-density fill avoids."""
+
+    def schedule(
+        self, pending: list, t_k: float, *,
+        memory_budget_tokens: int | None = None,
+    ) -> ScheduleDecision:
+        return self._fill_in_order(
+            pending, t_k, self._budget(memory_budget_tokens),
+            key=lambda x: (x.slo_class, x.deadline, x.arrival, x.req_id),
         )

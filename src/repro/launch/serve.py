@@ -18,19 +18,22 @@ Both commit byte-identical per-session token streams for the same seed
 
 Example:
   python -m repro.launch.serve --target qwen2-7b --draft qwen2-7b \\
-      --reduced --devices 4 --rounds 8 --scheduler slo
+      --reduced --devices 4 --rounds 8 --policy wisp
+  python -m repro.launch.serve --devices 4 --rounds 8 --policy edf
   python -m repro.launch.serve --devices 4 --rounds 8 --sync   # lock-step
 """
 from __future__ import annotations
 
 import argparse
 import time
+import warnings
 
 import jax
 
 from repro.cluster import ClusterConfig, ClusterRuntime, build_fleet
 from repro.configs import get_config
 from repro.core.estimator import EstimatorCoeffs, analytic_tpu_coeffs
+from repro.core.scheduler import available_policies
 from repro.core.predictor import RejectionPredictor
 from repro.core.wdt import IterationLog, WDTStats
 from repro.models import build
@@ -48,7 +51,8 @@ def run_serving(
     devices: int = 4,
     rounds: int = 8,
     k_max: int = 6,
-    scheduler: str = "slo",
+    policy: str = "wisp",
+    scheduler: str | None = None,       # DEPRECATED alias of ``policy``
     predictor: RejectionPredictor | None = None,
     prompt_len: int = 8,
     max_len: int = 512,
@@ -74,7 +78,23 @@ def run_serving(
 ):
     """Run the WISP serving stack; returns a dict with per-device ``stats``,
     aggregate ``total``, the ``edges`` / ``server`` objects and — in
-    event-driven mode — the ``ClusterResult`` under ``"result"``."""
+    event-driven mode — the ``ClusterResult`` under ``"result"``.
+
+    ``policy`` selects the server's batch-selection rule from the
+    scheduling-policy registry (``repro.core.scheduler``): ``"wisp"``
+    (Algorithm 1; legacy alias ``"slo"``), ``"fcfs"``, ``"edf"``,
+    ``"priority"``."""
+    if scheduler is not None:
+        if policy != "wisp" and policy != scheduler:
+            raise ValueError(
+                f"pass either policy={policy!r} or the deprecated "
+                f"scheduler={scheduler!r}, not both"
+            )
+        warnings.warn(
+            "run_serving(scheduler=...) is deprecated; use policy=...",
+            DeprecationWarning, stacklevel=2,
+        )
+        policy = scheduler
     tcfg = get_config(target_arch)
     dcfg = get_config(draft_arch or target_arch)
     if reduced:
@@ -120,7 +140,7 @@ def run_serving(
     coeffs = coeffs or analytic_tpu_coeffs(tcfg)
     net = NetworkModel()
     server = WISPServer(
-        engine, coeffs, scheduler=scheduler, network=net,
+        engine, coeffs, policy=policy, network=net,
         slo_classes=slo_speeds, sched_cfg=sched_cfg,
         prefill="chunked" if prefill_mode == "chunked" else "monolithic",
         prefill_chunk_tokens=prefill_chunk_tokens, ttft_slo=ttft_slo,
@@ -136,8 +156,7 @@ def run_serving(
     ]
 
     if sync:
-        return _run_lockstep(server, edges, fleet, rounds, net, verbose,
-                             scheduler)
+        return _run_lockstep(server, edges, fleet, rounds, net, verbose)
 
     t_wall0 = time.time()
     runtime = ClusterRuntime(server, edges, fleet, ccfg, vocab=tcfg.vocab)
@@ -153,7 +172,7 @@ def run_serving(
     if verbose:
         print(f"[serve] mode=event devices={devices} "
               f"{'horizon=%.1fs' % result.horizon if churn else 'rounds=%d' % rounds} "
-              f"scheduler={scheduler} speculate={speculate} "
+              f"policy={server.policy} speculate={speculate} "
               f"prefill={prefill_mode}")
         if prefill_mode != "zero" and m.sessions:
             # chunked mode logs TTFT-deadline outcomes per prefill; the
@@ -189,19 +208,26 @@ def run_serving(
             "metrics": m, "result": result}
 
 
-def _run_lockstep(server, edges, fleet, rounds, net, verbose, scheduler):
+def _run_lockstep(server, edges, fleet, rounds, net, verbose):
     """The original synchronous round loop (reference / ``--sync``): all
     devices draft, the pool drains through dispatch epochs, verdicts apply,
     repeat.  No drafting/verification overlap exists, so WDT here is the
-    analytic accounting of `core/wdt.py`, not a measurement."""
+    analytic accounting of `core/wdt.py`, not a measurement.
+
+    This driver deliberately sticks to the LEGACY channels — the
+    ``open_session`` handle's synchronous ``first_token`` and the
+    ``step()`` verdict return list — so the event-driven runtime's
+    stream-equivalence guarantee is checked against a consumer of the
+    deprecation shims (tests/test_policies.py)."""
     stats = []
     for sp, dev in zip(fleet, edges):
         # synchronous driver: every device must be admitted up front, so
         # fail loudly on capacity exhaustion instead of queueing
-        first = server.open_session(sp.idx, sp.prompt, slo_class=sp.slo_class,
-                                    draft_speed=sp.draft_speed,
-                                    queue_on_full=False)
-        dev.start_session(sp.idx, sp.prompt, first)
+        handle = server.open_session(sp.idx, sp.prompt,
+                                     slo_class=sp.slo_class,
+                                     draft_speed=sp.draft_speed,
+                                     queue_on_full=False)
+        dev.start_session(sp.idx, sp.prompt, handle.first_token)
         stats.append(WDTStats())
 
     now = 0.0
@@ -221,6 +247,9 @@ def _run_lockstep(server, edges, fleet, rounds, net, verbose, scheduler):
             if not verdicts:
                 now += 0.005   # idle epoch: advance time to unblock criticals
                 continue
+            server.pop_events()   # discard the mirrored event stream: this
+            # driver reads the legacy channels, and an undrained event
+            # buffer would otherwise grow per round in long runs
             for v in verdicts:
                 res, t_net = results[v.session_id]
                 edges[v.session_id].apply_verdict(
@@ -257,7 +286,7 @@ def _run_lockstep(server, edges, fleet, rounds, net, verbose, scheduler):
     if verbose:
         engine = server.engine
         print(f"[serve] mode=sync devices={len(edges)} rounds={rounds} "
-              f"scheduler={scheduler}")
+              f"policy={server.policy}")
         print(f"[serve] drafted={total.drafted} accepted={total.accepted} "
               f"committed={total.committed} waste_frac={total.waste_fraction:.3f} "
               f"acceptance={total.acceptance_rate:.3f}")
@@ -275,7 +304,11 @@ def main():
     ap.add_argument("--devices", type=int, default=4)
     ap.add_argument("--rounds", type=int, default=8)
     ap.add_argument("--k-max", type=int, default=6)
-    ap.add_argument("--scheduler", choices=("slo", "fcfs"), default="slo")
+    ap.add_argument("--policy", default="wisp",
+                    choices=(*available_policies(), "slo"),
+                    help="batch-selection policy from the scheduling "
+                         "registry ('slo' is a legacy alias of 'wisp')")
+    ap.add_argument("--scheduler", dest="policy", help=argparse.SUPPRESS)
     ap.add_argument("--predictor-path", default=None)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--sync", action="store_true",
@@ -297,7 +330,7 @@ def main():
     pred = RejectionPredictor.load(args.predictor_path) if args.predictor_path else None
     run_serving(
         args.target, args.draft, devices=args.devices, rounds=args.rounds,
-        k_max=args.k_max, scheduler=args.scheduler, predictor=pred,
+        k_max=args.k_max, policy=args.policy, predictor=pred,
         seed=args.seed, sync=args.sync, speculate=not args.no_speculate,
         churn=args.churn, horizon=args.horizon if args.churn else None,
         prompt_len=args.prompt_len, prefill_mode=args.prefill,

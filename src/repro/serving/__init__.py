@@ -12,10 +12,39 @@ from repro.serving.engine import (
 )
 from repro.serving.kv_cache import PagedKV, PageAllocator, SeqPages, OutOfPages, PAGE_SIZE
 from repro.serving.client import EdgeDevice, EdgeSession
-from repro.serving.server import WISPServer, Verdict, ServerSession, DEFAULT_SLO_CLASSES
+from repro.serving.events import (
+    Admitted,
+    Closed,
+    FirstToken,
+    Preempted,
+    ServerEvent,
+    SessionHandle,
+    TTFTRecord,
+    VerdictEvent,
+)
+from repro.serving.server import (
+    DEFAULT_SLO_CLASSES,
+    DEFAULT_TTFT_SLO,
+    AdmissionQueue,
+    PrefillRecord,
+    ServerSession,
+    Verdict,
+    WISPServer,
+)
 from repro.serving.transport import NetworkModel
 
 __all__ = [
+    "Admitted",
+    "Closed",
+    "FirstToken",
+    "Preempted",
+    "ServerEvent",
+    "SessionHandle",
+    "TTFTRecord",
+    "VerdictEvent",
+    "AdmissionQueue",
+    "PrefillRecord",
+    "DEFAULT_TTFT_SLO",
     "NoFreeSlots",
     "PrefillChunkItem",
     "PrefillOutcome",

@@ -1,0 +1,138 @@
+"""Typed server events + session handles (docs/API.md).
+
+Every outcome a `WISPServer` produces — admission, first tokens, verify
+verdicts, preemptions, TTFT records, closes — flows through ONE ordered,
+drainable channel, ``server.pop_events()``, as a typed `ServerEvent`.
+This replaces the three legacy ad-hoc channels (``pop_admissions()``
+polling, the ``step()`` verdict return list, the ``prefill_log``
+side-car), which remain as thin deprecation shims for one release.
+
+Ordering guarantees, per session (tests/test_policies.py):
+
+  * ``ADMITTED`` precedes every other event of the session;
+  * exactly one ``FIRST_TOKEN`` is emitted, before any ``VERDICT``;
+  * ``CLOSED`` is final (nothing follows it);
+  * a ``PREEMPTED`` session re-enters the admission queue and emits a
+    fresh ``ADMITTED`` when capacity frees (still before its single
+    ``FIRST_TOKEN`` — preemption only happens mid-prefill).
+
+`SessionHandle` is the client-facing half: ``open_session`` returns one,
+and its ``state`` property walks the lifecycle state machine
+
+    queued -> prefilling -> active -> closed
+      ^            |  (chunked mode; monolithic skips to active)
+      └─ PREEMPTED ┘
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ServerEvent:
+    """Base event: ``session_id`` + the server-clock ``time`` it fired."""
+
+    session_id: int
+    time: float
+
+    kind = "EVENT"               # class tag, overridden per event type
+
+
+@dataclasses.dataclass(frozen=True)
+class Admitted(ServerEvent):
+    """The session holds an engine slot (and, paged, its block table):
+    monolithic mode right at ``open_session``/queue retry; chunked mode
+    when prefill *begins* (the first token comes later)."""
+
+    kind = "ADMITTED"
+
+
+@dataclasses.dataclass(frozen=True)
+class FirstToken(ServerEvent):
+    """The session's first committed response token exists.  Emitted
+    exactly once per session: at admission for monolithic prefill, when
+    the final chunk's epoch lands for chunked prefill."""
+
+    token: int
+
+    kind = "FIRST_TOKEN"
+
+
+@dataclasses.dataclass(frozen=True)
+class VerdictEvent(ServerEvent):
+    """One verification verdict (``verdict`` is the `Verdict` dataclass:
+    accept_len, correction/bonus token, deadline accounting)."""
+
+    verdict: object
+
+    kind = "VERDICT"
+
+
+@dataclasses.dataclass(frozen=True)
+class Preempted(ServerEvent):
+    """A mutually-blocked prefilling session was evicted back to the
+    admission queue (liveness preemption; its pages were released and it
+    retries FIFO with its original TTFT clock)."""
+
+    kind = "PREEMPTED"
+
+
+@dataclasses.dataclass(frozen=True)
+class TTFTRecord(ServerEvent):
+    """A chunked prefill completed; ``record`` is the `PrefillRecord`
+    (prompt length, chunk count, TTFT vs deadline)."""
+
+    record: object
+
+    kind = "TTFT_RECORD"
+
+
+@dataclasses.dataclass(frozen=True)
+class Closed(ServerEvent):
+    """The session is gone: slot/pages released, pending work purged,
+    or a queued/prefilling session cancelled."""
+
+    kind = "CLOSED"
+
+
+#: event-kind tags in lifecycle order (documentation + test helper)
+EVENT_KINDS = ("ADMITTED", "FIRST_TOKEN", "VERDICT", "PREEMPTED",
+               "TTFT_RECORD", "CLOSED")
+
+
+class SessionHandle:
+    """Client-facing handle for one server session.
+
+    Returned by ``WISPServer.open_session``; all *outcomes* flow through
+    the server's event stream (``pop_events()``) — the handle is the
+    cheap synchronous view: lifecycle ``state``, the ``first_token``
+    once known, and ``close()``."""
+
+    __slots__ = ("session_id", "_server")
+
+    def __init__(self, session_id: int, server):
+        self.session_id = session_id
+        self._server = server
+
+    @property
+    def state(self) -> str:
+        """``"queued"`` (admission queue) | ``"prefilling"`` (chunked
+        prefill in flight) | ``"active"`` (streaming) | ``"closed"``."""
+        return self._server.session_state(self.session_id)
+
+    @property
+    def first_token(self) -> int | None:
+        """The session's first committed token, or ``None`` until it is
+        admitted (queued) / finishes prefilling (chunked)."""
+        return self._server.first_tokens.get(self.session_id)
+
+    @property
+    def active(self) -> bool:
+        return self.state == "active"
+
+    def close(self) -> None:
+        self._server.close_session(self.session_id)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging nicety
+        return (f"SessionHandle(session_id={self.session_id}, "
+                f"state={self.state!r}, first_token={self.first_token!r})")

@@ -1,47 +1,63 @@
-"""WISP verification server: queues + SLO-aware scheduler + engine.
+"""WISP verification server: queues + pluggable scheduling policy + engine.
 
 The coordinator keeps per-session state (slot, committed tokens, EWMA
-acceptance estimate), maintains the pending-request pool, and at each
-dispatch epoch runs Algorithm 1 to build a batch, executes it on the
-verification engine, and returns verdicts.
+acceptance estimate), maintains the pending-work pool, and at each
+dispatch epoch runs the selected `SchedulingPolicy` (``"wisp"`` =
+Algorithm 1; ``"fcfs"`` / ``"edf"`` / ``"priority"`` baselines — see
+`repro.core.scheduler`) to build a batch, executes it on the
+verification engine, and publishes the outcomes.
+
+**Every outcome flows through one ordered event stream** (docs/API.md):
+``open_session`` returns a `SessionHandle`; admissions, first tokens,
+verify verdicts, preemptions, TTFT records and closes surface as typed
+`ServerEvent`s drained with ``pop_events()``.  The legacy channels —
+``pop_admissions()`` polling, the ``step()`` verdict return list, the
+``prefill_log`` side-car — still work as thin deprecation shims and
+carry byte-identical results (tests/test_policies.py).
 
 Prompt prefill runs in one of two modes (DESIGN.md §8):
 
   * ``prefill="monolithic"`` (default) — ``open_session`` runs the whole
-    prompt as one blocking engine call and returns the first token
-    synchronously (the legacy path; simple drivers and the lock-step
-    reference need it);
+    prompt as one blocking engine call; the handle is ``active`` with its
+    ``first_token`` set on return (the legacy path; simple drivers and
+    the lock-step reference need it);
   * ``prefill="chunked"`` — ``open_session`` only *admits* the session
-    (allocating its slot/pages) and returns ``None`` immediately; the
+    (allocating its slot/pages) and returns a ``prefilling`` handle; the
     prompt is split into fixed-budget chunks that enter the pending pool
-    as ``kind="prefill"`` work items with the session's TTFT deadline and
-    compete with verification under Algorithm 1.  The first token
-    surfaces through ``pop_admissions()`` when the final chunk lands —
-    the same channel capacity-queued admissions already use.
+    as `PrefillChunkWork` items with the session's TTFT deadline and
+    compete with verification under the scheduling policy.  The first
+    token surfaces as a ``FIRST_TOKEN`` event when the final chunk lands.
 
 This is the *functional* server used by examples and integration tests
 (driven synchronously, CPU).  Paper-scale capacity/goodput numbers come
-from `repro.sim`, which replays the same scheduler against the analytic
+from `repro.sim`, which replays the same policies against the analytic
 latency model at thousands of devices.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
+from collections import deque
 
 import numpy as np
 
 from repro.core.estimator import EstimatorCoeffs
 from repro.core.scheduler import (
-    FCFSScheduler,
+    PrefillChunkWork,
     SchedulerConfig,
-    SLOScheduler,
-    VerifyRequest,
+    VerifyWork,
+    make_policy,
 )
-from repro.serving.engine import (
-    NoFreeSlots,
-    PrefillChunkItem,
-    VerificationEngine,
-    VerifyItem,
+from repro.serving.engine import NoFreeSlots, VerificationEngine
+from repro.serving.events import (
+    Admitted,
+    Closed,
+    FirstToken,
+    Preempted,
+    ServerEvent,
+    SessionHandle,
+    TTFTRecord,
+    VerdictEvent,
 )
 from repro.serving.kv_cache import OutOfPages
 from repro.serving.transport import NetworkModel
@@ -113,13 +129,92 @@ class Verdict:
     violated: bool
 
 
+class AdmissionQueue:
+    """FIFO admission-retry queue with O(1) pops and O(1) cancellation.
+
+    This queue is on the per-epoch hot path under churn (``_try_admit``
+    runs every dispatch epoch and every close): a plain list cost O(n)
+    per admission (``pop(0)``) and a full rebuild per cancellation.  Here
+    admissions pop from a `deque` and cancellation just tombstones the
+    entry — dead entries are skipped (and dropped) when the FIFO scan
+    reaches them.  ``len`` / iteration / membership see only live
+    entries.  Entries are tuples whose first element is the session id.
+
+    Tombstones are keyed by a per-push unique token, NOT the session id:
+    session ids may be reused (close a queued session, open a new one
+    under the same id), and an id-keyed tombstone for the old entry
+    would otherwise cancel — or, absorbed into a set, fail to cancel —
+    the new one (ghost admission of a closed session)."""
+
+    def __init__(self):
+        self._q: deque = deque()            # (token, entry)
+        self._dead: set[int] = set()        # cancelled tokens
+        self._live: dict[int, int] = {}     # session id -> token
+        self._next_token = 0
+
+    def push(self, entry: tuple) -> None:
+        sid = entry[0]
+        old = self._live.pop(sid, None)
+        if old is not None:                 # re-queue supersedes the old entry
+            self._dead.add(old)
+        self._next_token += 1
+        self._q.append((self._next_token, entry))
+        self._live[sid] = self._next_token
+
+    def _drop_dead_prefix(self) -> None:
+        while self._q and self._q[0][0] in self._dead:
+            self._dead.discard(self._q.popleft()[0])
+
+    def peek(self) -> tuple | None:
+        """The oldest live entry (or None) — does not remove it."""
+        self._drop_dead_prefix()
+        return self._q[0][1] if self._q else None
+
+    def popleft(self) -> tuple:
+        self._drop_dead_prefix()
+        token, entry = self._q.popleft()
+        self._live.pop(entry[0], None)
+        return entry
+
+    def cancel(self, session_id: int) -> bool:
+        """Tombstone a queued session; False when it is not queued."""
+        token = self._live.pop(session_id, None)
+        if token is None:
+            return False
+        self._dead.add(token)
+        return True
+
+    def resort(self, key) -> None:
+        """Re-establish FIFO order after an out-of-order push (preemption
+        re-queues a session with its *original* request time).  Rare path:
+        O(n log n) is fine here; the hot path stays O(1)."""
+        self._q = deque(sorted(
+            ((t, e) for t, e in self._q if t not in self._dead),
+            key=lambda te: key(te[1]),
+        ))
+        self._dead.clear()
+
+    def __len__(self) -> int:
+        return len(self._live)
+
+    def __bool__(self) -> bool:
+        return bool(self._live)
+
+    def __contains__(self, session_id: int) -> bool:
+        return session_id in self._live
+
+    def __iter__(self):
+        return (e for t, e in self._q if t not in self._dead)
+
+
 class WISPServer:
     def __init__(
         self,
         engine: VerificationEngine,
         coeffs: EstimatorCoeffs,
         *,
-        scheduler: str = "slo",          # "slo" | "fcfs"
+        policy="wisp",                  # registry name | class | instance
+        scheduler: str | None = None,   # DEPRECATED alias of ``policy``
         sched_cfg: SchedulerConfig | None = None,
         slo_classes: dict | None = None,
         network: NetworkModel | None = None,
@@ -132,15 +227,23 @@ class WISPServer:
         self.engine = engine
         self.coeffs = coeffs
         self.sched_cfg = sched_cfg or SchedulerConfig()
-        cls = SLOScheduler if scheduler == "slo" else FCFSScheduler
-        self.scheduler = cls(self.sched_cfg, coeffs)
+        if scheduler is not None:
+            warnings.warn(
+                "WISPServer(scheduler=...) is deprecated; use policy=... "
+                "(registry names: repro.core.scheduler.available_policies())",
+                DeprecationWarning, stacklevel=2,
+            )
+            policy = scheduler
+        self.scheduler = make_policy(policy, self.sched_cfg, coeffs)
+        #: canonical registry name of the active policy
+        self.policy = self.scheduler.name
         self.slo_classes = slo_classes or dict(DEFAULT_SLO_CLASSES)
         self.network = network or NetworkModel()
         if prefill not in ("monolithic", "chunked"):
             raise ValueError(f"unknown prefill mode {prefill!r}")
         #: "monolithic": open_session blocks through the whole prompt.
         #: "chunked": prompts prefill in ``prefill_chunk_tokens``-sized
-        #: work items scheduled by Algorithm 1 against a TTFT deadline.
+        #: work items scheduled by the policy against a TTFT deadline.
         self.prefill_mode = prefill
         self.prefill_chunk_tokens = int(prefill_chunk_tokens)
         self.ttft_slo = ttft_slo or dict(DEFAULT_TTFT_SLO)
@@ -161,28 +264,78 @@ class WISPServer:
         #: cluster runtime passes ``verify_time`` to ``step``)
         self.last_decision = None
         self.last_verify_time = 0.0
+        self._dt_virtual = None
+        #: server clock: the latest ``now`` any entry point saw (stamps
+        #: events from calls that have no time argument of their own)
+        self.now = 0.0
         self.sessions: dict[int, ServerSession] = {}
         #: chunked mode: sessions admitted to the engine but still
         #: prefilling (slot held, chunks in the pending pool)
         self.prefilling: dict[int, PrefillingSession] = {}
-        #: completed chunked prefills (TTFT log)
+        #: DEPRECATED side-car of completed chunked prefills — the same
+        #: records ride TTFT_RECORD events; kept one release for drivers
+        #: reading TTFT logs directly
         self.prefill_log: list[PrefillRecord] = []
         #: times a mutually-blocked prefill was evicted back to the
         #: admission queue (liveness preemption, see ``step``)
         self.prefill_preemptions = 0
-        self.pending: list[VerifyRequest] = []
-        #: the requests (verify + prefill chunks) actually executed by the
-        #: most recent ``step`` — what the epoch's verify time covers
-        self.last_served: list[VerifyRequest] = []
-        #: sessions the cache could not admit yet: (session_id, prompt,
-        #: slo_class, draft_speed, extras, t_request), retried each
-        #: dispatch epoch
-        self.admission_queue: list[tuple] = []
-        #: (session_id, first_token) of queued sessions admitted since the
-        #: last ``pop_admissions()``
+        self.pending: list = []          # WorkItem pool
+        #: the work items actually executed by the most recent ``step`` —
+        #: what the epoch's verify time covers
+        self.last_served: list = []
+        #: sessions the cache could not admit yet, FIFO-retried each
+        #: dispatch epoch; entries: (session_id, prompt, slo_class,
+        #: draft_speed, extras, t_request)
+        self.admission_queue = AdmissionQueue()
+        #: DEPRECATED (sid, first_token) mirror of queued-session /
+        #: chunked-prefill FIRST_TOKEN events; drain with pop_admissions()
         self.admitted: list[tuple[int, int]] = []
+        #: first committed token per session (feeds SessionHandle)
+        self.first_tokens: dict[int, int] = {}
+        #: the ordered typed event stream (drain with ``pop_events()``)
+        self._events: list[ServerEvent] = []
         self._rid = 0
         self.log: list[Verdict] = []
+
+    # -- event stream -------------------------------------------------------
+    def _emit(self, event: ServerEvent) -> None:
+        self._events.append(event)
+
+    def pop_events(self) -> list[ServerEvent]:
+        """Drain the typed event stream, in emission order.  THE way to
+        observe server outcomes; see docs/API.md for the event types and
+        their per-session ordering guarantees.
+
+        A long-running driver must drain this regularly (event-stream
+        consumers do so by construction; a legacy-channel driver should
+        drain-and-discard, as the lock-step reference does) — the buffer
+        grows with every epoch otherwise.  The deprecated mirrors it
+        supersedes (``admitted``, ``prefill_log``, ``log``) grow only
+        per-session / per-verdict, like the metrics logs."""
+        out, self._events = self._events, []
+        return out
+
+    def pop_admissions(self) -> list[tuple[int, int]]:
+        """DEPRECATED shim: (session_id, first_token) of queued sessions
+        admitted — and chunked prefills completed — since the last call.
+        Use ``pop_events()`` and match ``FIRST_TOKEN`` events instead."""
+        warnings.warn(
+            "pop_admissions() is deprecated; drain pop_events() and match "
+            "FIRST_TOKEN events",
+            DeprecationWarning, stacklevel=2,
+        )
+        out, self.admitted = self.admitted, []
+        return out
+
+    def session_state(self, session_id: int) -> str:
+        """Lifecycle state (see `SessionHandle.state`)."""
+        if session_id in self.sessions:
+            return "active"
+        if session_id in self.prefilling:
+            return "prefilling"
+        if session_id in self.admission_queue:
+            return "queued"
+        return "closed"
 
     # -- sessions -----------------------------------------------------------
     def _register(self, session_id, slot, first, prompt_len, slo_class,
@@ -194,37 +347,48 @@ class WISPServer:
             committed_len=prompt_len + 1,
             draft_speed=draft_speed,
         )
+        self.first_tokens[session_id] = first
         return first
 
     def open_session(
         self, session_id: int, prompt_tokens, slo_class: int = 3,
         draft_speed: float = 50.0, extras=None, queue_on_full: bool = True,
         now: float = 0.0,
-    ) -> int | None:
-        """Admit a session, or queue it when the engine is out of KV pages
-        or slots (returns ``None``; the session is retried each dispatch
-        epoch — poll ``pop_admissions()`` for its first token).
+    ) -> SessionHandle:
+        """Open a session; returns its `SessionHandle`.
 
-        Chunked-prefill mode always returns ``None``: admission only
+        Monolithic prefill: on success the handle is ``active`` with
+        ``first_token`` set (the prompt ran as one blocking engine call);
+        when the engine is out of KV pages or slots the session is queued
+        (``queued`` handle; retried each dispatch epoch, its
+        ``FIRST_TOKEN`` event fires on admission) unless
+        ``queue_on_full=False``, which re-raises instead.
+
+        Chunked prefill: the handle is ``prefilling`` — admission only
         reserves the slot and enqueues the first prefill chunk (``now``
-        starts the TTFT clock); the first token arrives via
-        ``pop_admissions()`` when the final chunk completes."""
+        starts the TTFT clock); the first token arrives as a
+        ``FIRST_TOKEN`` event when the final chunk completes."""
+        self.now = max(self.now, now)
+        handle = SessionHandle(session_id, self)
         try:
             if self.prefill_mode == "chunked":
                 self._begin_chunked(session_id, prompt_tokens, slo_class,
                                     draft_speed, extras, now)
-                return None
+                return handle
             slot, first = self.engine.new_session(prompt_tokens, extras=extras)
         except (OutOfPages, NoFreeSlots):
             if not queue_on_full:
                 raise
-            self.admission_queue.append(
+            self.admission_queue.push(
                 (session_id, list(prompt_tokens), slo_class, draft_speed,
                  extras, now)
             )
-            return None
-        return self._register(session_id, slot, first, len(prompt_tokens),
-                              slo_class, draft_speed)
+            return handle
+        self._register(session_id, slot, first, len(prompt_tokens),
+                       slo_class, draft_speed)
+        self._emit(Admitted(session_id, now))
+        self._emit(FirstToken(session_id, now, first))
+        return handle
 
     def _begin_chunked(self, sid, prompt_tokens, slo_class, draft_speed,
                        extras, t_request):
@@ -240,14 +404,18 @@ class WISPServer:
             deadline=t_request + self.ttft_slo[slo_class],
         )
         self.prefilling[sid] = ps
-        self._enqueue_chunk(ps, t_request)
+        self._emit(Admitted(sid, self.now))
+        # arrival = the ORIGINAL request time, not the (possibly later)
+        # admission-retry time: FCFS/utility ordering and queue-time
+        # accounting must see the wait the client actually experienced
+        self._enqueue_chunk(ps, ps.t_request)
 
     def _enqueue_chunk(self, ps: PrefillingSession, now: float):
         """Put the session's NEXT prefill chunk in the pending pool (one at
         a time: chunk i+1 attends to chunk i's KV)."""
         st = ps.state
         self._rid += 1
-        self.pending.append(VerifyRequest(
+        self.pending.append(PrefillChunkWork(
             req_id=self._rid,
             session_id=ps.session_id,
             slo_class=ps.slo_class,
@@ -258,37 +426,38 @@ class WISPServer:
             alpha=0.0,
             payload=ps,
             prefill_tokens=min(self.prefill_chunk_tokens, st.remaining),
-            kind="prefill",
             enqueued_at=now,
         ))
 
     def _try_admit(self):
         """Retry queued sessions in arrival order; stop at the first one
         that still does not fit (FIFO fairness — no small-session bypass)."""
-        while self.admission_queue:
-            (sid, prompt, slo_class, draft_speed, extras,
-             t_request) = self.admission_queue[0]
+        while True:
+            entry = self.admission_queue.peek()
+            if entry is None:
+                return
+            sid, prompt, slo_class, draft_speed, extras, t_request = entry
             try:
                 if self.prefill_mode == "chunked":
                     # TTFT clock started at the original request — a long
                     # wait in the admission queue is TTFT the client saw
                     self._begin_chunked(sid, prompt, slo_class, draft_speed,
                                         extras, t_request)
-                    self.admission_queue.pop(0)
+                    self.admission_queue.popleft()
                     continue
                 slot, first = self.engine.new_session(prompt, extras=extras)
             except (OutOfPages, NoFreeSlots):
                 return
-            self.admission_queue.pop(0)
+            self.admission_queue.popleft()
             self._register(sid, slot, first, len(prompt), slo_class,
                            draft_speed)
             self.admitted.append((sid, first))
+            self._emit(Admitted(sid, self.now))
+            self._emit(FirstToken(sid, self.now, first))
 
-    def pop_admissions(self) -> list[tuple[int, int]]:
-        out, self.admitted = self.admitted, []
-        return out
-
-    def close_session(self, session_id: int):
+    def close_session(self, session_id: int, now: float | None = None):
+        t = self.now if now is None else now
+        self.now = max(self.now, t)
         s = self.sessions.pop(session_id, None)
         if s is None:
             ps = self.prefilling.pop(session_id, None)
@@ -299,15 +468,13 @@ class WISPServer:
                     r for r in self.pending if r.session_id != session_id
                 ]
                 self.engine.abort_prefill(ps.state)
+                self._emit(Closed(session_id, t))
                 self._try_admit()
                 return
             # session may still be waiting in the admission queue: cancel it
-            before = len(self.admission_queue)
-            self.admission_queue = [
-                q for q in self.admission_queue if q[0] != session_id
-            ]
-            if len(self.admission_queue) == before:
+            if not self.admission_queue.cancel(session_id):
                 raise KeyError(session_id)
+            self._emit(Closed(session_id, t))
             return
         # Lifecycle rule (docs/ARCHITECTURE.md §"Session lifecycle"): close
         # drops the session's still-pending verification requests.  Leaving
@@ -316,6 +483,8 @@ class WISPServer:
         # verification against a recycled slot at worst).
         self.pending = [r for r in self.pending if r.session_id != session_id]
         self.engine.close_session(s.slot)
+        self.first_tokens.pop(session_id, None)
+        self._emit(Closed(session_id, t))
         self._try_admit()
 
     # -- request intake (paper Eq. 6/12: server-side budget -> deadline) ----
@@ -329,6 +498,7 @@ class WISPServer:
         t_draft: float,
         t_network: float,
     ) -> int:
+        self.now = max(self.now, now)
         s = self.sessions[session_id]
         s.t_draft_last = t_draft
         s.t_net_last = t_network
@@ -338,7 +508,7 @@ class WISPServer:
         budget = expected_tokens / target_speed - t_draft - t_network
         budget = max(budget, 1e-3)
         self._rid += 1
-        req = VerifyRequest(
+        req = VerifyWork(
             req_id=self._rid,
             session_id=session_id,
             slo_class=s.slo_class,
@@ -356,14 +526,20 @@ class WISPServer:
 
     # -- dispatch epoch -------------------------------------------------------
     def step(self, now: float, *, verify_time=None) -> list[Verdict]:
-        """One dispatch epoch at time ``now``; returns verdicts of the batch.
+        """One dispatch epoch at time ``now``.
+
+        Outcomes surface on the event stream (``VERDICT`` /
+        ``FIRST_TOKEN`` / ``TTFT_RECORD`` / ``PREEMPTED`` events); the
+        byte-identical verdict list is also *returned* as the legacy shim
+        channel.
 
         ``verify_time``: optional callable mapping the list of served
-        VerifyRequests to the verification duration (seconds) to attribute
+        work items to the verification duration (seconds) to attribute
         to this epoch.  The event-driven cluster runtime passes one driven
         by the estimator (+ optional noise) so queueing/violation accounting
         runs on the virtual clock; by default each verdict carries the
         engine's measured wall time (synchronous CPU drivers)."""
+        self.now = max(self.now, now)
         self._try_admit()
         # M(t_k): live free-page capacity, not a static config number
         self.memory_budget_tokens = (
@@ -383,19 +559,7 @@ class WISPServer:
         chosen = {r.req_id for r in decision.batch}
         self.pending = [r for r in self.pending if r.req_id not in chosen]
 
-        items = []
-        for r in decision.batch:
-            if r.kind == "prefill":
-                ps = r.payload
-                items.append(PrefillChunkItem(ps.state, r.prefill_tokens))
-                continue
-            s = self.sessions[r.session_id]
-            toks, qlog = r.payload
-            items.append(VerifyItem(
-                slot=s.slot, draft_tokens=toks, q_logits=qlog,
-                rng_tag=(r.session_id, r.cached_len)
-                if self.deterministic_verify else None,
-            ))
+        items = [r.make_engine_item(self) for r in decision.batch]
         try:
             served = list(decision.batch)
             outcomes = self.engine.step(items)
@@ -414,15 +578,16 @@ class WISPServer:
                 except OutOfPages:
                     self.pending.append(r)
 
-        # prefill chunks the pool could not cover come back oom (state
-        # untouched): requeue them like the OutOfPages verify path above
-        pairs, oom_reqs = [], []
+        # work the engine deferred (e.g. prefill chunks the page pool could
+        # not cover — state untouched) requeues like the OutOfPages verify
+        # path above
+        pairs, deferred = [], []
         for r, o in zip(served, outcomes):
-            if r.kind == "prefill" and o.oom:
-                oom_reqs.append(r)
-                continue
-            pairs.append((r, o))
-        if not pairs and oom_reqs and len(self.prefilling) > 1:
+            if r.deferred(o):
+                deferred.append(r)
+            else:
+                pairs.append((r, o))
+        if not pairs and deferred and len(self.prefilling) > 1:
             # Liveness: every chunk this epoch was uncoverable and nothing
             # else ran, so no future close/trim is coming from *this* pool
             # of work — partially-prefilled sessions are mutually blocking
@@ -439,20 +604,21 @@ class WISPServer:
                 key=lambda sid: (self.prefilling[sid].t_request, sid),
             )
             ps = self.prefilling.pop(victim_sid)
-            oom_reqs = [r for r in oom_reqs if r.session_id != victim_sid]
+            deferred = [r for r in deferred if r.session_id != victim_sid]
             self.pending = [
                 r for r in self.pending if r.session_id != victim_sid
             ]
             self.engine.abort_prefill(ps.state)
-            self.admission_queue.append(
+            self.admission_queue.push(
                 (ps.session_id, [int(x) for x in ps.state.tokens],
                  ps.slo_class, ps.draft_speed, ps.state.extras,
                  ps.t_request)
             )
             # keep the retry queue in request order (FIFO fairness)
-            self.admission_queue.sort(key=lambda q: q[5])
+            self.admission_queue.resort(key=lambda q: q[5])
             self.prefill_preemptions += 1
-        self.pending.extend(oom_reqs)
+            self._emit(Preempted(victim_sid, now))
+        self.pending.extend(deferred)
         self.last_served = [r for r, _ in pairs]
 
         dt_virtual = (
@@ -461,46 +627,54 @@ class WISPServer:
         # epoch wall time: the verify batch and the ragged prefill pass run
         # back to back (all verify outcomes share one batch time, all chunk
         # outcomes share one pass time)
-        wall = max((o.t_verify for r, o in pairs if r.kind != "prefill"),
+        wall = max((o.t_verify for _, o in pairs if hasattr(o, "t_verify")),
                    default=0.0) + \
-            max((o.t_chunk for r, o in pairs if r.kind == "prefill"),
+            max((o.t_chunk for _, o in pairs if hasattr(o, "t_chunk")),
                 default=0.0)
         self.last_verify_time = dt_virtual if dt_virtual is not None else wall
+        #: verify hooks read this: None -> each verdict carries the engine's
+        #: measured wall time; set -> the epoch's virtual duration
+        self._dt_virtual = dt_virtual
         tv_epoch = self.last_verify_time
 
         verdicts = []
         for r, o in pairs:
-            if r.kind == "prefill":
-                self._apply_chunk(r, o, now, tv_epoch)
-                continue
-            s = self.sessions[r.session_id]
-            # EWMA acceptance update
-            if r.draft_len > 0:
-                s.alpha = 0.8 * s.alpha + 0.2 * (o.accept_len / r.draft_len)
-            s.rounds += 1
-            s.committed_len += o.emitted
-            t_queue = max(0.0, now - r.enqueued_at)
-            tv = o.t_verify if dt_virtual is None else dt_virtual
-            complete = now + tv
-            v = Verdict(
-                session_id=r.session_id,
-                accept_len=o.accept_len,
-                token=o.token,
-                emitted=o.emitted,
-                t_queue=t_queue,
-                t_verify=tv,
-                deadline=r.deadline,
-                violated=complete > r.deadline,
-            )
-            self.log.append(v)
-            verdicts.append(v)
+            v = r.apply(self, o, now, tv_epoch)
+            if v is not None:
+                verdicts.append(v)
         return verdicts
 
-    def _apply_chunk(self, r: VerifyRequest, outcome, now: float,
-                     tv_epoch: float):
+    # -- work-item commit hooks (called via WorkItem.apply) -----------------
+    def commit_verify(self, r, outcome, now: float, tv_epoch: float) -> Verdict:
+        """Account one executed verification: EWMA acceptance update,
+        committed-stream advance, deadline verdict (VERDICT event + the
+        legacy return/log channels)."""
+        s = self.sessions[r.session_id]
+        if r.draft_len > 0:
+            s.alpha = 0.8 * s.alpha + 0.2 * (outcome.accept_len / r.draft_len)
+        s.rounds += 1
+        s.committed_len += outcome.emitted
+        t_queue = max(0.0, now - r.enqueued_at)
+        tv = outcome.t_verify if self._dt_virtual is None else self._dt_virtual
+        complete = now + tv
+        v = Verdict(
+            session_id=r.session_id,
+            accept_len=outcome.accept_len,
+            token=outcome.token,
+            emitted=outcome.emitted,
+            t_queue=t_queue,
+            t_verify=tv,
+            deadline=r.deadline,
+            violated=complete > r.deadline,
+        )
+        self.log.append(v)
+        self._emit(VerdictEvent(r.session_id, now, v))
+        return v
+
+    def apply_chunk(self, r, outcome, now: float, tv_epoch: float) -> None:
         """Account one executed prefill chunk: enqueue the successor chunk,
         or — on the final chunk — activate the session and surface its
-        first token through ``pop_admissions()``."""
+        first token as a FIRST_TOKEN event (+ TTFT_RECORD)."""
         ps: PrefillingSession = r.payload
         st = ps.state
         if outcome.first_token is None:
@@ -510,8 +684,9 @@ class WISPServer:
         self._register(ps.session_id, st.slot, outcome.first_token,
                        st.total, ps.slo_class, ps.draft_speed)
         self.admitted.append((ps.session_id, outcome.first_token))
+        self._emit(FirstToken(ps.session_id, now, outcome.first_token))
         t_first = now + tv_epoch
-        self.prefill_log.append(PrefillRecord(
+        rec = PrefillRecord(
             session_id=ps.session_id,
             prompt_len=st.total,
             chunks=st.chunks,
@@ -519,7 +694,9 @@ class WISPServer:
             t_first=t_first,
             deadline=ps.deadline,
             violated=t_first > ps.deadline,
-        ))
+        )
+        self.prefill_log.append(rec)
+        self._emit(TTFTRecord(ps.session_id, now, rec))
 
     @property
     def queue_depth(self) -> int:

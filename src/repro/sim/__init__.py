@@ -14,7 +14,15 @@ analytic latency model instead of real hardware:
 from repro.sim.config import A100_QWEN32B, SimConfig, DevicePopulation
 from repro.sim.acceptance import AcceptanceModel, PredictorOperatingPoint
 from repro.sim.engine import SimResult, simulate
-from repro.sim.systems import centralized, sled, wisp
+from repro.sim.systems import (
+    centralized,
+    edf,
+    fcfs_cached,
+    policy_variant,
+    priority,
+    sled,
+    wisp,
+)
 from repro.sim.capacity import capacity_search, violation_rate
 
 __all__ = [
@@ -28,6 +36,10 @@ __all__ = [
     "wisp",
     "sled",
     "centralized",
+    "edf",
+    "fcfs_cached",
+    "policy_variant",
+    "priority",
     "capacity_search",
     "violation_rate",
 ]

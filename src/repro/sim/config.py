@@ -59,7 +59,9 @@ class SimConfig:
 
     # server
     coeffs: EstimatorCoeffs = dataclasses.field(default_factory=lambda: A100_QWEN32B)
-    scheduler: str = "slo"           # "slo" | "fcfs"
+    #: batch-selection policy, any name registered in
+    #: repro.core.scheduler (wisp/slo, fcfs, edf, priority)
+    scheduler: str = "slo"
     prefix_cache: bool = True        # SLED: False (re-prefill every round)
     #: resident KV pool (tokens).  A100-80GB serving Qwen3-32B: ~16 GB left
     #: after weights at ~0.4 MB/token of KV -> ~48k tokens.  When aggregate

@@ -20,12 +20,7 @@ import heapq
 import numpy as np
 
 from repro.core.estimator import BatchShape
-from repro.core.scheduler import (
-    FCFSScheduler,
-    SchedulerConfig,
-    SLOScheduler,
-    VerifyRequest,
-)
+from repro.core.scheduler import SchedulerConfig, VerifyRequest, make_policy
 from repro.sim.acceptance import AcceptanceModel
 from repro.sim.config import SimConfig
 
@@ -179,8 +174,8 @@ def simulate(cfg: SimConfig) -> SimResult:
         guard_time=cfg.guard_time,
         max_batch_requests=cfg.max_batch_requests,
     )
-    sched_cls = SLOScheduler if cfg.scheduler == "slo" else FCFSScheduler
-    scheduler = sched_cls(sched_cfg, cfg.coeffs)
+    # any registered policy name ("wisp"/"slo", "fcfs", "edf", "priority")
+    scheduler = make_policy(cfg.scheduler, sched_cfg, cfg.coeffs)
 
     devices = []
     for i in range(cfg.n_devices):

@@ -1,4 +1,7 @@
-"""System presets: WISP, SLED, centralized (the paper's three columns)."""
+"""System presets: WISP, SLED, centralized (the paper's three columns),
+plus policy ablations drawn from the scheduling-policy registry
+(`repro.core.scheduler`) — the simulator accepts any registered policy
+name through ``SimConfig.scheduler`` / ``policy_variant``."""
 from __future__ import annotations
 
 import dataclasses
@@ -49,6 +52,44 @@ def centralized(n_devices: int, **kw) -> SimConfig:
         centralized=True,
         prefix_cache=True,
         predictor=None,
+        **kw,
+    )
+
+
+def edf(n_devices: int, **kw) -> SimConfig:
+    """Ablation: WISP's engine but earliest-deadline-first batching —
+    deadline *ordering* without Algorithm 1's estimator-validated
+    admission (registry policy ``"edf"``)."""
+    kw.setdefault("predictor", PredictorOperatingPoint.mlp())
+    return SimConfig(
+        n_devices=n_devices,
+        scheduler="edf",
+        prefix_cache=True,
+        **kw,
+    )
+
+
+def priority(n_devices: int, **kw) -> SimConfig:
+    """Ablation: WISP's engine but strict SLO-class priority batching
+    (registry policy ``"priority"`` — the starvation-prone baseline)."""
+    kw.setdefault("predictor", PredictorOperatingPoint.mlp())
+    return SimConfig(
+        n_devices=n_devices,
+        scheduler="priority",
+        prefix_cache=True,
+        **kw,
+    )
+
+
+def policy_variant(policy: str, n_devices: int, **kw) -> SimConfig:
+    """WISP's engine (cache + dynamic drafting) under any registered
+    scheduling policy — the generic form of `fcfs_cached`, used by the
+    benchmark drivers to sweep ``--policy`` through the simulator."""
+    kw.setdefault("predictor", PredictorOperatingPoint.mlp())
+    return SimConfig(
+        n_devices=n_devices,
+        scheduler=policy,
+        prefix_cache=True,
         **kw,
     )
 

@@ -140,19 +140,21 @@ def test_engine_step_executes_mixed_batches(dense_model, paged):
 
 
 def test_server_chunked_flow_matches_monolithic_first_token(dense_model):
-    """Server in chunked mode: open_session returns None, dispatch epochs
-    drive the chunks under Algorithm 1, pop_admissions surfaces the same
-    first token the monolithic server returns, and the TTFT log records
-    the completion against the class's TTFT deadline."""
+    """Server in chunked mode: open_session returns a ``prefilling``
+    handle, dispatch epochs drive the chunks under Algorithm 1, the
+    FIRST_TOKEN event (and the deprecated pop_admissions shim) surfaces
+    the same first token the monolithic server returns, and the TTFT
+    record lands on the event stream against the class's deadline."""
     cfg, _, params = dense_model
     prompt = list(range(2, 22))
     mono = WISPServer(_engine(cfg, params, paged=True), COEFFS)
-    first_mono = mono.open_session(0, prompt, slo_class=2)
+    first_mono = mono.open_session(0, prompt, slo_class=2).first_token
 
     srv = WISPServer(_engine(cfg, params, paged=True), COEFFS,
                      prefill="chunked", prefill_chunk_tokens=8)
     vt = lambda served: srv.scheduler.batch_time(served)
-    assert srv.open_session(0, prompt, slo_class=2, now=0.0) is None
+    h = srv.open_session(0, prompt, slo_class=2, now=0.0)
+    assert h.state == "prefilling" and h.first_token is None
     assert 0 in srv.prefilling and srv.queue_depth == 1
     t, epochs = 0.0, 0
     while 0 in srv.prefilling:
@@ -160,8 +162,15 @@ def test_server_chunked_flow_matches_monolithic_first_token(dense_model):
         t += 0.01
         epochs += 1
         assert epochs < 10, "chunked prefill did not converge"
-    assert srv.pop_admissions() == [(0, first_mono)]
-    (rec,) = srv.prefill_log
+    assert h.state == "active" and h.first_token == first_mono
+    evs = srv.pop_events()
+    firsts = [(e.session_id, e.token) for e in evs
+              if e.kind == "FIRST_TOKEN"]
+    assert firsts == [(0, first_mono)]
+    with pytest.warns(DeprecationWarning):
+        assert srv.pop_admissions() == firsts      # legacy shim agrees
+    (rec,) = [e.record for e in evs if e.kind == "TTFT_RECORD"]
+    assert srv.prefill_log == [rec]                # legacy side-car agrees
     assert rec.chunks == 3 and rec.prompt_len == 20
     assert not rec.violated and rec.ttft > 0.0
 
@@ -182,7 +191,7 @@ def test_server_close_cancels_prefilling_session(dense_model):
     srv = WISPServer(_engine(cfg, params, paged=True), COEFFS,
                      prefill="chunked", prefill_chunk_tokens=8)
     assert srv.open_session(0, list(range(2, 22)), slo_class=3,
-                            now=0.0) is None
+                            now=0.0).state == "prefilling"
     srv.step(0.0)                           # one chunk runs
     srv.close_session(0)
     assert 0 not in srv.prefilling
@@ -206,9 +215,9 @@ def test_mutually_blocked_prefills_preempt_instead_of_livelock(dense_model):
     srv = WISPServer(eng, COEFFS, prefill="chunked", prefill_chunk_tokens=4)
     vt = lambda served: srv.scheduler.batch_time(served)
     assert srv.open_session(0, list(range(2, 14)), slo_class=3,
-                            now=0.0) is None
-    assert srv.open_session(1, list(range(20, 32)), slo_class=3,
-                            now=0.1) is None
+                            now=0.0).state == "prefilling"
+    h1 = srv.open_session(1, list(range(20, 32)), slo_class=3, now=0.1)
+    assert h1.state == "prefilling"
     t, epochs = 0.2, 0
     while 0 not in srv.sessions:
         srv.step(t, verify_time=vt)
@@ -219,7 +228,9 @@ def test_mutually_blocked_prefills_preempt_instead_of_livelock(dense_model):
     # may already be re-prefilling on the freed slot, but it is not done)
     assert srv.prefill_preemptions >= 1
     assert 1 not in srv.sessions
-    assert [sid for sid, _ in srv.pop_admissions()] == [0]
+    evs = srv.pop_events()
+    assert [e.session_id for e in evs if e.kind == "PREEMPTED"] == [1]
+    assert [e.session_id for e in evs if e.kind == "FIRST_TOKEN"] == [0]
     srv.close_session(0)
     epochs = 0
     while 1 not in srv.sessions:
@@ -229,7 +240,10 @@ def test_mutually_blocked_prefills_preempt_instead_of_livelock(dense_model):
         assert epochs < 20, "preempted session never re-admitted"
     want = _engine(cfg, params, paged=True).new_session(
         list(range(20, 32)))[1]
-    assert dict(srv.pop_admissions())[1] == want
+    assert h1.first_token == want
+    firsts = {e.session_id: e.token for e in srv.pop_events()
+              if e.kind == "FIRST_TOKEN"}
+    assert firsts[1] == want
 
 
 def test_cluster_streams_invariant_to_prefill_mode(dense_model):

@@ -28,13 +28,13 @@ def dense_pair():
     return cfg, tparams, dparams
 
 
-def _cluster_run(cfg, tparams, dparams, ccfg, *, scheduler="slo",
+def _cluster_run(cfg, tparams, dparams, ccfg, *, policy="wisp",
                  method="residual", greedy=False, max_slots=None):
     engine = VerificationEngine(
         cfg, tparams, max_slots=max_slots or ccfg.devices,
         max_len=ccfg.max_len, method=method,
     )
-    server = WISPServer(engine, COEFFS, scheduler=scheduler,
+    server = WISPServer(engine, COEFFS, policy=policy,
                         network=NetworkModel())
     fleet = build_fleet(ccfg, cfg.vocab)
     edges = [
@@ -61,11 +61,11 @@ def _lockstep_run(cfg, tparams, dparams, ccfg, *, method="residual",
     ]
     now = 0.0
     for sp, dev in zip(fleet, edges):
-        first = server.open_session(sp.idx, sp.prompt,
-                                    slo_class=sp.slo_class,
-                                    draft_speed=sp.draft_speed,
-                                    queue_on_full=False)
-        dev.start_session(sp.idx, sp.prompt, first)
+        handle = server.open_session(sp.idx, sp.prompt,
+                                     slo_class=sp.slo_class,
+                                     draft_speed=sp.draft_speed,
+                                     queue_on_full=False)
+        dev.start_session(sp.idx, sp.prompt, handle.first_token)
     for _ in range(ccfg.rounds):
         results = {}
         for i, dev in enumerate(edges):
@@ -152,7 +152,7 @@ def test_close_session_purges_pending(dense_pair):
     engine = VerificationEngine(cfg, tparams, max_slots=2, max_len=128)
     server = WISPServer(engine, COEFFS)
     dev = EdgeDevice(cfg, dparams, k_max=3, max_len=128)
-    first = server.open_session(0, [1, 2, 3], slo_class=2)
+    first = server.open_session(0, [1, 2, 3], slo_class=2).first_token
     dev.start_session(0, [1, 2, 3], first)
     res = dev.draft_round()
     server.submit(0, res.tokens, res.q_logits, now=0.0, t_draft=0.0,

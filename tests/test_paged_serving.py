@@ -149,7 +149,7 @@ def test_scheduler_budget_tracks_live_free_pages(dense_model):
                              method="greedy", paged=True, page_size=4)
     server = WISPServer(eng, COEFFS)
     cap0 = eng.memory_budget_tokens()
-    assert server.open_session(0, [1, 2, 3, 4, 5], slo_class=4) is not None
+    assert server.open_session(0, [1, 2, 3, 4, 5], slo_class=4).active
     server.submit(0, np.asarray([7, 8], np.int32),
                   np.zeros((2, cfg.vocab), np.float32),
                   now=0.0, t_draft=0.0, t_network=0.0)
@@ -171,18 +171,27 @@ def test_open_session_queues_on_out_of_pages(dense_model):
                              n_pages=4)
     server = WISPServer(eng, COEFFS)
     prompt = list(range(9))
-    assert server.open_session(0, prompt, slo_class=4) is not None
-    assert server.open_session(1, [9] + prompt[1:], slo_class=4) is None
+    assert server.open_session(0, prompt, slo_class=4).active
+    server.pop_events()                    # drain session 0's direct open
+    h1 = server.open_session(1, [9] + prompt[1:], slo_class=4)
+    assert h1.state == "queued" and h1.first_token is None
     assert server.queue_depth == 0 and len(server.admission_queue) == 1
 
     server.step(0.0)                       # still full: stays queued
-    assert 1 not in server.sessions
+    assert 1 not in server.sessions and h1.state == "queued"
 
     server.close_session(0)                # frees pages -> admits session 1
     assert 1 in server.sessions
-    admissions = server.pop_admissions()
-    assert [sid for sid, _ in admissions] == [1]
-    assert isinstance(admissions[0][1], int)
+    assert h1.active and isinstance(h1.first_token, int)
+    # the FIRST_TOKEN event matches the handle; the deprecated
+    # pop_admissions() shim mirrors it byte for byte
+    firsts = [(e.session_id, e.token) for e in server.pop_events()
+              if e.kind == "FIRST_TOKEN"]
+    assert firsts == [(1, h1.first_token)]
+    # the deprecated shim mirrors only QUEUED admissions — byte-identical
+    # to the queued sessions' FIRST_TOKEN events
+    with pytest.warns(DeprecationWarning):
+        assert server.pop_admissions() == firsts
 
 
 def test_close_session_cancels_queued_session(dense_model):
@@ -192,12 +201,15 @@ def test_close_session_cancels_queued_session(dense_model):
                              n_pages=4)
     server = WISPServer(eng, COEFFS)
     prompt = list(range(9))
-    assert server.open_session(0, prompt, slo_class=4) is not None
-    assert server.open_session(1, [9] + prompt[1:], slo_class=4) is None
+    assert server.open_session(0, prompt, slo_class=4).active
+    h1 = server.open_session(1, [9] + prompt[1:], slo_class=4)
+    assert h1.state == "queued"
     server.close_session(1)                # cancel while still queued
-    assert not server.admission_queue
+    assert not server.admission_queue and h1.state == "closed"
     server.close_session(0)                # must NOT admit the cancelled one
-    assert not server.sessions and not server.pop_admissions()
+    assert not server.sessions
+    assert not [e for e in server.pop_events()
+                if e.kind == "FIRST_TOKEN" and e.session_id == 1]
     with pytest.raises(KeyError):
         server.close_session(42)           # unknown session still loud
 
@@ -222,7 +234,7 @@ def test_over_admitted_batch_degrades_to_partial_progress(dense_model):
     for sid in (0, 1, 2):
         firsts[sid] = server.open_session(
             sid, list(range(10 * sid, 10 * sid + 7)), slo_class=4
-        )
+        ).first_token
         assert firsts[sid] is not None
     for sid in (0, 1):
         # drafts = the target's own greedy continuation, so the whole block

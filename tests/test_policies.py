@@ -1,0 +1,351 @@
+"""Scheduling-policy registry + typed server-event stream (docs/API.md).
+
+Three guarantee families:
+
+  * **policy-generic properties** — every registered policy's
+    ScheduleDecision respects the memory budget, the batch-size cap and
+    estimator batch-time consistency, on arbitrary mixed pools;
+  * **event-stream ordering** — per session: ADMITTED before everything,
+    exactly one FIRST_TOKEN, no VERDICT before FIRST_TOKEN, CLOSED last;
+  * **channel equivalence** — the legacy shims (open_session handle /
+    ``step()`` verdict list / ``pop_admissions()`` / ``prefill_log``)
+    and ``pop_events()`` report byte-identical token streams across
+    {monolithic, chunked} prefill x all registered policies, in both the
+    functional server and (via the lock-step reference driver, a legacy-
+    channel consumer) the event-driven cluster runtime.
+"""
+import jax
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dep: degrade property tests to skips
+    from _hypothesis_stub import given, settings, st
+
+from repro.configs import get_config
+from repro.core.estimator import EstimatorCoeffs
+from repro.core.scheduler import (
+    POLICIES,
+    PrefillChunkWork,
+    SchedulerConfig,
+    SLOScheduler,
+    VerifyRequest,
+    VerifyWork,
+    available_policies,
+    make_policy,
+)
+from repro.models import build
+from repro.serving.engine import VerificationEngine
+from repro.serving.server import WISPServer
+
+COEFFS = EstimatorCoeffs(a=3.3e-5, b_compute=3.5e-8, b_read=4.6e-6, c=0.015)
+RUN_COEFFS = EstimatorCoeffs(a=1e-4, b_compute=1e-8, b_read=1e-6, c=1e-3)
+
+
+@pytest.fixture(scope="module")
+def dense_model():
+    cfg = get_config("qwen2-7b").reduced()
+    bundle = build(cfg)
+    tparams = bundle.init(jax.random.PRNGKey(0))
+    dparams = bundle.init(jax.random.PRNGKey(1))
+    return cfg, tparams, dparams
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+def test_registry_contents_and_aliases():
+    assert available_policies() == ["edf", "fcfs", "priority", "wisp"]
+    assert POLICIES["slo"] is POLICIES["wisp"] is SLOScheduler
+    p = make_policy("slo", SchedulerConfig(), COEFFS)
+    assert p.name == "wisp"                 # alias resolves to canonical
+    # instances and classes pass through
+    assert make_policy(p, SchedulerConfig(), COEFFS) is p
+    assert isinstance(make_policy(SLOScheduler, SchedulerConfig(), COEFFS),
+                      SLOScheduler)
+    with pytest.raises(ValueError, match="unknown scheduling policy"):
+        make_policy("lifo", SchedulerConfig(), COEFFS)
+
+
+def test_work_item_hierarchy_and_factory_shim():
+    """The legacy VerifyRequest(kind=...) constructor dispatches to the
+    class hierarchy; scheduling fields and pricing are unchanged."""
+    v = VerifyRequest(req_id=1, session_id=1, slo_class=0, arrival=0.0,
+                      deadline=1.0, draft_len=6, cached_len=200, alpha=0.5)
+    assert isinstance(v, VerifyWork) and v.kind == "verify"
+    assert v.new_tokens == 7 and v.goodput_value == 0.5 * 6 + 1.0
+    c = VerifyRequest(req_id=2, session_id=2, slo_class=0, arrival=0.0,
+                      deadline=1.0, cached_len=64, prefill_tokens=32,
+                      kind="prefill")
+    assert isinstance(c, PrefillChunkWork) and c.kind == "prefill"
+    assert c.new_tokens == 32 and c.goodput_value == 1.0
+    assert c.batch_shape().cached_tokens == 64
+
+
+# ---------------------------------------------------------------------------
+# policy-generic properties
+# ---------------------------------------------------------------------------
+@st.composite
+def mixed_pool(draw):
+    """A pool mixing verify work and prefill chunks (arbitrary shapes)."""
+    n = draw(st.integers(1, 24))
+    reqs = []
+    for i in range(n):
+        if draw(st.booleans()):
+            reqs.append(VerifyWork(
+                req_id=i, session_id=i,
+                slo_class=draw(st.integers(1, 4)),
+                arrival=draw(st.floats(0, 1)),
+                deadline=draw(st.floats(0.01, 3.0)),
+                draft_len=draw(st.integers(1, 16)),
+                cached_len=draw(st.integers(0, 4000)),
+                alpha=draw(st.floats(0.1, 0.95)),
+            ))
+        else:
+            reqs.append(PrefillChunkWork(
+                req_id=i, session_id=i,
+                slo_class=draw(st.integers(1, 4)),
+                arrival=draw(st.floats(0, 1)),
+                deadline=draw(st.floats(0.01, 3.0)),
+                cached_len=draw(st.integers(0, 512)),
+                prefill_tokens=draw(st.integers(1, 512)),
+            ))
+    return reqs
+
+
+@settings(max_examples=25, deadline=None)
+@given(pool=mixed_pool(), t_k=st.floats(0, 2.0),
+       budget=st.integers(500, 40_000))
+def test_every_policy_respects_budget_and_estimator(pool, t_k, budget):
+    """Registry-generic invariants: for EVERY registered policy, the
+    decision draws from the pool without duplicates, respects the
+    per-epoch memory budget override and the batch-size cap, and reports
+    the estimator's batch time for the batch it chose."""
+    cfg = SchedulerConfig(memory_budget_tokens=20_000, max_batch_requests=8)
+    for name in available_policies():
+        s = make_policy(name, cfg, COEFFS)
+        d = s.schedule(pool, t_k, memory_budget_tokens=budget)
+        ids = [r.req_id for r in d.batch]
+        assert len(ids) == len(set(ids))
+        assert set(ids) <= {r.req_id for r in pool}
+        assert len(d.batch) <= cfg.max_batch_requests
+        assert s.memory_tokens(d.batch) <= budget
+        assert d.memory_budget_tokens == budget
+        assert d.policy == name
+        # est_time is the estimator's prediction for exactly this batch
+        assert d.est_time == pytest.approx(s.batch_time(d.batch))
+
+
+def test_edf_orders_by_deadline():
+    cfg = SchedulerConfig(max_batch_requests=2)
+    s = make_policy("edf", cfg, COEFFS)
+    mk = lambda i, dl: VerifyWork(req_id=i, session_id=i, slo_class=2,
+                                  arrival=0.0, deadline=dl, draft_len=4,
+                                  cached_len=10, alpha=0.5)
+    d = s.schedule([mk(1, 3.0), mk(2, 1.0), mk(3, 2.0)], 0.0)
+    assert [r.req_id for r in d.batch] == [2, 3]
+
+
+def test_priority_orders_by_slo_class_then_deadline():
+    cfg = SchedulerConfig(max_batch_requests=2)
+    s = make_policy("priority", cfg, COEFFS)
+    mk = lambda i, cls, dl: VerifyWork(req_id=i, session_id=i, slo_class=cls,
+                                       arrival=0.0, deadline=dl, draft_len=4,
+                                       cached_len=10, alpha=0.5)
+    # class 1 outranks class 2 regardless of deadline; EDF within class
+    d = s.schedule([mk(1, 2, 0.1), mk(2, 1, 5.0), mk(3, 1, 2.0)], 0.0)
+    assert [r.req_id for r in d.batch] == [3, 2]
+
+
+# ---------------------------------------------------------------------------
+# event-stream ordering
+# ---------------------------------------------------------------------------
+def _assert_stream_ordered(events):
+    """Per-session lifecycle ordering (docs/API.md)."""
+    seen: dict[int, list] = {}
+    for ev in events:
+        seen.setdefault(ev.session_id, []).append(ev.kind)
+    for sid, kinds in seen.items():
+        admitted_at = kinds.index("ADMITTED") if "ADMITTED" in kinds else None
+        firsts = [i for i, k in enumerate(kinds) if k == "FIRST_TOKEN"]
+        verdicts = [i for i, k in enumerate(kinds) if k == "VERDICT"]
+        if firsts or verdicts:
+            assert admitted_at is not None, f"session {sid}: no ADMITTED"
+            assert admitted_at == 0, f"session {sid}: ADMITTED not first"
+        assert len(firsts) <= 1, f"session {sid}: multiple FIRST_TOKEN"
+        if verdicts:
+            assert firsts and firsts[0] < verdicts[0], \
+                f"session {sid}: VERDICT before FIRST_TOKEN"
+        if "CLOSED" in kinds:
+            assert kinds.index("CLOSED") == len(kinds) - 1, \
+                f"session {sid}: events after CLOSED"
+
+
+@pytest.mark.parametrize("policy", ["wisp", "fcfs", "edf", "priority"])
+def test_event_stream_ordered_chunked_flow(dense_model, policy):
+    """Chunked prefill + verification + close under every policy emits an
+    ordered stream: one ADMITTED first, exactly one FIRST_TOKEN, no
+    VERDICT before it, CLOSED last."""
+    from repro.serving.client import EdgeDevice
+
+    cfg, tparams, dparams = dense_model
+    eng = VerificationEngine(cfg, tparams, max_slots=2, max_len=128,
+                             method="greedy", paged=True, page_size=4)
+    srv = WISPServer(eng, RUN_COEFFS, policy=policy, prefill="chunked",
+                     prefill_chunk_tokens=8)
+    dev = EdgeDevice(cfg, dparams, k_max=3, max_len=128, greedy=True)
+    h = srv.open_session(0, list(range(2, 22)), slo_class=2, now=0.0)
+    t = 0.0
+    while h.state == "prefilling":
+        srv.step(t, verify_time=lambda served: srv.scheduler.batch_time(served))
+        t += 0.01
+    dev.start_session(0, list(range(2, 22)), h.first_token)
+    for _ in range(2):
+        res = dev.draft_round()
+        srv.submit(0, res.tokens, res.q_logits, now=t, t_draft=0.0,
+                   t_network=0.0)
+        (v,) = srv.step(t)
+        dev.apply_verdict(v.accept_len, v.token, res.tokens)
+        t += 0.01
+    srv.close_session(0)
+    events = srv.pop_events()
+    assert [e.kind for e in events if e.session_id == 0][-1] == "CLOSED"
+    _assert_stream_ordered(events)
+
+
+# ---------------------------------------------------------------------------
+# channel equivalence: legacy shims vs pop_events()
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("prefill", ["monolithic", "chunked"])
+@pytest.mark.parametrize("policy", ["wisp", "fcfs", "edf", "priority"])
+def test_functional_server_channels_agree(dense_model, policy, prefill):
+    """One server, two observers: the committed token stream read off the
+    legacy channels (handle first_token + step() verdict list) must be
+    byte-identical to the stream read off pop_events(), for every policy
+    x prefill mode."""
+    from repro.serving.client import EdgeDevice
+
+    cfg, tparams, dparams = dense_model
+    eng = VerificationEngine(cfg, tparams, max_slots=2, max_len=128)
+    srv = WISPServer(eng, RUN_COEFFS, policy=policy, prefill=prefill,
+                     prefill_chunk_tokens=4)
+    dev = EdgeDevice(cfg, dparams, k_max=3, max_len=128)
+    prompt = list(range(3, 13))
+    h = srv.open_session(0, prompt, slo_class=2, now=0.0)
+    t = 0.0
+    while h.state == "prefilling":
+        srv.step(t, verify_time=lambda served: srv.scheduler.batch_time(served))
+        t += 0.01
+    dev.start_session(0, prompt, h.first_token)
+
+    legacy_stream = [h.first_token]
+    drafts = []
+    for _ in range(3):
+        res = dev.draft_round()
+        drafts.append([int(x) for x in res.tokens])
+        srv.submit(0, res.tokens, res.q_logits, now=t, t_draft=0.0,
+                   t_network=0.0)
+        (v,) = srv.step(t)                   # legacy channel: return list
+        dev.apply_verdict(v.accept_len, v.token, res.tokens)
+        legacy_stream.extend(drafts[-1][:v.accept_len])
+        legacy_stream.append(int(v.token))
+        t += 0.01
+
+    # second observer: replay the SAME run purely off the event stream
+    events = srv.pop_events()
+    event_stream = [e.token for e in events if e.kind == "FIRST_TOKEN"]
+    verdict_events = [e.verdict for e in events if e.kind == "VERDICT"]
+    assert len(verdict_events) == len(drafts)
+    for d, v in zip(drafts, verdict_events):
+        event_stream.extend(d[:v.accept_len])
+        event_stream.append(int(v.token))
+    assert dev.session.committed[len(prompt):] == legacy_stream
+    assert event_stream == legacy_stream
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("policy", ["wisp", "fcfs", "edf", "priority"])
+def test_cluster_streams_match_lockstep_per_policy(dense_model, policy):
+    """The event-driven cluster runtime (a pop_events() consumer) and the
+    lock-step reference (a legacy-shim consumer) commit byte-identical
+    per-session streams for every registered policy."""
+    from repro.launch.serve import run_serving
+
+    kw = dict(devices=2, rounds=2, k_max=3, seed=0, verbose=False,
+              policy=policy)
+    ev = run_serving(sync=False, **kw)
+    sy = run_serving(sync=True, **kw)
+    for i, (de, ds) in enumerate(zip(ev["edges"], sy["edges"])):
+        assert de.response_tokens == ds.response_tokens, (policy, i)
+    assert ev["server"].policy == sy["server"].policy == \
+        ("wisp" if policy == "slo" else policy)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("policy", ["fcfs", "priority"])
+def test_cluster_streams_invariant_to_prefill_mode_per_policy(dense_model,
+                                                              policy):
+    """Prefill-mode invariance (timing never reaches a sampling key)
+    holds under baseline policies too, not just wisp."""
+    from repro.launch.serve import run_serving
+
+    slow = EstimatorCoeffs(a=2e-3, b_compute=1e-7, b_read=1e-6, c=1e-3)
+    streams = {}
+    for mode in ("monolithic", "chunked"):
+        r = run_serving(devices=2, rounds=2, k_max=3, verbose=False, seed=0,
+                        prompt_len=12, prefill_mode=mode, policy=policy,
+                        prefill_chunk_tokens=4, coeffs=slow)
+        streams[mode] = [list(d.session.committed)
+                         for d in r["result"].devices]
+    assert streams["monolithic"] == streams["chunked"]
+
+
+def test_admission_queue_survives_session_id_reuse():
+    """Regression: tombstones are keyed per entry, not per session id —
+    cancel a queued session, reuse its id for a new one, cancel that too:
+    neither entry may ever be admitted (an id-keyed tombstone set would
+    absorb the second cancel and ghost-admit the closed session)."""
+    from repro.serving.server import AdmissionQueue
+
+    q = AdmissionQueue()
+    q.push((0, "first"))
+    assert q.cancel(0)                  # close while queued
+    q.push((0, "second"))               # id reused by a new session
+    assert 0 in q and len(q) == 1
+    assert q.cancel(0)                  # close that one too
+    assert q.peek() is None and len(q) == 0 and not q
+    # and the mixed case: a live entry behind a dead reused id still pops
+    q.push((1, "a"))
+    q.cancel(1)
+    q.push((1, "b"))
+    assert q.peek() == (1, "b") and q.popleft() == (1, "b")
+    assert len(q) == 0
+
+
+def test_deprecated_scheduler_kwarg_still_works(dense_model):
+    cfg, tparams, _ = dense_model
+    eng = VerificationEngine(cfg, tparams, max_slots=1, max_len=64)
+    with pytest.warns(DeprecationWarning):
+        srv = WISPServer(eng, RUN_COEFFS, scheduler="fcfs")
+    assert srv.policy == "fcfs"
+
+
+def test_fcfs_cluster_crosschecks_against_sim(dense_model):
+    """--policy fcfs acceptance: the functional stack's FCFS goodput and
+    violation metrics cross-check against repro.sim's FCFS system at the
+    observed acceptance rate (same policy code on both engines; analytic
+    prediction within a loose band of the measurement)."""
+    from benchmarks.goodput import run_cluster
+
+    rows = run_cluster(quick=True, policies=["fcfs"])
+    (meas,) = [r for r in rows if r["engine"] == "cluster"]
+    (pred,) = [r for r in rows if r["engine"] == "sim-crosscheck"]
+    assert meas["policy"] == pred["policy"] == "fcfs"
+    per_dev = meas["goodput_tok_s"] / meas["n_devices"]
+    assert pred["predicted_device_goodput_tok_s"] == pytest.approx(
+        per_dev, rel=1.0
+    )
+    assert 0.0 <= pred["predicted_violation_rate"] <= 1.0
+    assert pred["predicted_waste_fraction"] == pytest.approx(
+        meas["waste_fraction"], abs=0.35
+    )

@@ -54,7 +54,7 @@ def test_greedy_speculative_is_lossless(dense_pair):
     )
     server = WISPServer(engine, COEFFS)
     dev = EdgeDevice(cfg, dparams, k_max=4, greedy=True, max_len=256)
-    first = server.open_session(0, prompt, slo_class=4)
+    first = server.open_session(0, prompt, slo_class=4).first_token
     dev.start_session(0, prompt, first)
     assert first == want[0]
     while len(dev.response_tokens) < len(want):
@@ -123,7 +123,7 @@ def test_server_tracks_committed_and_alpha(dense_pair):
     engine = VerificationEngine(cfg, tparams, max_slots=2, max_len=128)
     server = WISPServer(engine, COEFFS)
     dev = EdgeDevice(cfg, dparams, k_max=3, max_len=128)
-    first = server.open_session(0, [1, 2, 3], slo_class=2)
+    first = server.open_session(0, [1, 2, 3], slo_class=2).first_token
     dev.start_session(0, [1, 2, 3], first)
     a0 = server.sessions[0].alpha
     for r in range(3):
