@@ -36,6 +36,7 @@ TABLES = {
     "capacity": "Table 2 (system capacity per SLO class)",
     "paged_serving": "§4.5 (dense vs paged engine: throughput + prefix hits)",
     "ttft": "long-prompt interference: monolithic vs chunked prefill (§8)",
+    "hotpath": "verification hot-path budgets: dispatches + bytes (§9)",
 }
 
 

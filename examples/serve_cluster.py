@@ -16,6 +16,10 @@ Three sections:
      pipelining hides, measured as virtual-horizon speedup + salvage stats.
   3. **Equivalence** — the event-driven runtime commits byte-identical
      per-session token streams to the lock-step driver (asserted).
+  4. **Compact payload** — the edge ships `CompactQ` draft statistics
+     (O(K·C)) instead of dense (K, V) logit rows (DESIGN.md §9): uplink
+     bytes per block, and the compact streams stay byte-identical across
+     the event-driven and lock-step drivers (asserted).
 
     PYTHONPATH=src python examples/serve_cluster.py --devices 8 --rounds 8
     PYTHONPATH=src python examples/serve_cluster.py --devices 8 --policy edf
@@ -23,9 +27,13 @@ Three sections:
 """
 import argparse
 
+import numpy as np
+
 from repro.core.estimator import EstimatorCoeffs
 from repro.core.scheduler import SchedulerConfig, available_policies
+from repro.core.speculative import CompactQ
 from repro.launch.serve import run_serving
+from repro.serving.transport import NetworkModel
 
 #: a verifier serving a 32B-class target: per-epoch overhead dominates, so
 #: a single-stream (max_batch=1) verifier under many fast edges is the
@@ -124,6 +132,30 @@ def section_equivalence(args):
     print("event-driven == lock-step per-session streams (verified)")
 
 
+def section_payload(args):
+    print("\n=== 4. compact draft payload: O(K·V) -> O(K·C) uplink ===")
+    devices, rounds = min(args.devices, 2), min(args.rounds, 2)
+    kw = dict(devices=devices, rounds=rounds, k_max=args.k_max,
+              policy=args.policy, seed=args.seed, verbose=False,
+              q_mode="compact")
+    ev = run_serving(sync=False, **kw)
+    sy = run_serving(sync=True, **kw)
+    for i, (de, ds) in enumerate(zip(ev["edges"], sy["edges"])):
+        assert de.response_tokens == ds.response_tokens, \
+            f"device {i}: compact stream diverged across drivers"
+    net = NetworkModel()
+    k, C = args.k_max, 64
+    vocab = ev["server"].engine.cfg.vocab
+    qc = CompactQ(np.zeros(k, np.float32), np.zeros((k, C), np.int32),
+                  np.zeros((k, C), np.float32), np.zeros(k, np.float32))
+    print(f"uplink bytes per {k}-token block: "
+          f"raw dense (V={vocab}) = {64 + k * 4 + k * vocab * 4}, "
+          f"modelled top-{net.q_topk} = {net.uplink_bytes(k)}, "
+          f"compact C={C} = {net.uplink_bytes(k, qc)}, "
+          f"greedy (ids only) = {net.uplink_bytes(k, None)}")
+    print("compact streams byte-identical across drivers (verified)")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--devices", type=int, default=8)
@@ -145,6 +177,7 @@ def main():
     section_interference(args)
     section_overlap(args)
     section_equivalence(args)
+    section_payload(args)
 
 
 if __name__ == "__main__":

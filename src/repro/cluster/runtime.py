@@ -331,7 +331,9 @@ class ClusterRuntime:
         dev.drafter = None
         dev.inflight = res
         dev.last_t_draft = t - dev.round_start
-        t_up = self.net.uplink_time(res.n_sent)
+        # price the q representation that actually rides this request
+        # (CompactQ table / modelled dense top-k / ids only, DESIGN.md §9)
+        t_up = self.net.uplink_time(res.n_sent, res.q_payload())
         dev.last_t_net = t_up + self.net.downlink_time()
         self.events.push(t + t_up, EventKind.REQUEST, dev.idx)
         dev.state = "wait"
@@ -385,6 +387,7 @@ class ClusterRuntime:
         res = dev.inflight
         self.server.submit(
             dev.session_id, res.tokens, res.q_logits,
+            q_compact=res.q_compact,
             now=t, t_draft=dev.last_t_draft, t_network=dev.last_t_net,
         )
         if not self.verifier_busy:

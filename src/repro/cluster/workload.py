@@ -61,6 +61,16 @@ class ClusterConfig:
     #:                  deadline, interleaving with verification.
     prefill_mode: str = "zero"
     prefill_chunk_tokens: int = 32
+    # -- edge->server draft payload (DESIGN.md §9) ------------------------
+    #: q representation the edge devices ship with each drafted block:
+    #: "dense" (full (K,V) logit rows, exact residual — the default),
+    #: "compact" (per-token log-prob + top-C/tail table, O(K·C) payload,
+    #: exact accept test / bounded-error residual) or "none" (greedy
+    #: verification reads no q).  Drivers construct their EdgeDevices
+    #: with the matching ``q_mode``; the runtime's uplink accounting
+    #: prices whatever representation actually rides the request.
+    q_mode: str = "dense"
+    q_top_c: int = 64
 
 
 @dataclasses.dataclass

@@ -38,12 +38,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.features import logit_features
+from repro.core.speculative import CompactQ, _compact_q_kernel
 
 
 @dataclasses.dataclass
 class DraftResult:
     tokens: np.ndarray        # (K_sent,) int32
-    q_logits: np.ndarray      # (K_sent, V) float32
+    #: dense (K_sent, V) float32 draft logits (``q_mode="dense"``); empty
+    #: under "compact"/"none" — the engine's exact-residual wire format
+    q_logits: np.ndarray
     features: np.ndarray      # (K_sent, 5)
     n_drafted: int            # tokens physically drafted (incl. flagged one)
     n_sent: int               # tokens sent for verification
@@ -53,6 +56,21 @@ class DraftResult:
     #: the excluded flagged token on a predictor-stop.  The cluster runtime
     #: uses it as the bonus-token guess for speculative continuation.
     last_drafted: int = -1
+    #: compact O(K·C) q statistics (``q_mode="compact"``, DESIGN.md §9):
+    #: exact per-token log-probs for the accept test + top-C/tail table
+    #: for residual reconstruction.  None under "dense"/"none".
+    q_compact: CompactQ | None = None
+
+    def q_payload(self):
+        """The q argument for `NetworkModel.uplink_bytes`/`uplink_time` —
+        the single mapping from this block's representation to the wire
+        pricing: the actual `CompactQ` table, the ``"modelled"`` top-k
+        sentinel for dense logit rows, or None when no q rides at all."""
+        if self.q_compact is not None:
+            return self.q_compact
+        if self.q_logits is not None and self.q_logits.size:
+            return "modelled"
+        return None
 
 
 class DraftingController:
@@ -69,6 +87,8 @@ class DraftingController:
         greedy: bool = False,
         include_flagged_token: bool = False,
         draft_speed: float = 50.0,     # tokens/s on this device (paper Fig. 1)
+        q_mode: str = "dense",         # "dense" | "compact" | "none"
+        q_top_c: int = 64,             # top-C table width under "compact"
     ):
         self.bundle = bundle
         self.params = params
@@ -78,6 +98,17 @@ class DraftingController:
         self.greedy = greedy
         self.include_flagged = include_flagged_token
         self.draft_speed = draft_speed
+        if q_mode not in ("dense", "compact", "none"):
+            raise ValueError(f"unknown q_mode {q_mode!r}")
+        #: which q representation rides with a drafted block (DESIGN.md §9):
+        #: "dense"   — full (K, V) logit rows (exact residual; the legacy
+        #:             wire format and the default);
+        #: "compact" — per-token log-prob + top-C/tail table, computed ON
+        #:             DEVICE per step so only O(C) crosses to the host
+        #:             (exact accept test, bounded-error residual);
+        #: "none"    — nothing (a greedy verifier reads no q at all).
+        self.q_mode = q_mode
+        self.q_top_c = int(q_top_c)
         self._decode = jax.jit(bundle.decode)
 
     def sample_next(self, rng, last_token: int, cache, pos: int):
@@ -137,6 +168,7 @@ class BlockDrafter:
         self._next_feed = int(last_token)
         self.toks: list = []
         self.qls: list = []
+        self.qcs: list = []           # per-token compact stats (q_mode=compact)
         self.feats: list = []
         self.n_drafted = 0
         self.n_sent = 0
@@ -160,7 +192,14 @@ class BlockDrafter:
             pred_accept = bool(ctl.predictor.predict_accept(f[None])[0])
         if pred_accept or ctl.include_flagged:
             self.toks.append(nxt)
-            self.qls.append(np.asarray(lg[0], np.float32))
+            if ctl.q_mode == "dense":
+                self.qls.append(np.asarray(lg[0], np.float32))
+            elif ctl.q_mode == "compact":
+                # device-side top-C + token log-prob: O(C) crosses to the
+                # host instead of the (V,) logit row
+                self.qcs.append(jax.device_get(_compact_q_kernel(
+                    lg, jnp.asarray([nxt], jnp.int32), C=ctl.q_top_c
+                )))
             self.feats.append(np.asarray(f, np.float32))
             self.n_sent += 1
         if not pred_accept:
@@ -173,10 +212,32 @@ class BlockDrafter:
         return not self.done
 
     def result(self) -> DraftResult:
+        qc = None
+        if self.ctl.q_mode == "compact":
+            if self.qcs:
+                qc = CompactQ(
+                    logq_tok=np.concatenate(
+                        [np.asarray(s[0], np.float32) for s in self.qcs]),
+                    top_idx=np.concatenate(
+                        [np.asarray(s[1], np.int32) for s in self.qcs]),
+                    top_logq=np.concatenate(
+                        [np.asarray(s[2], np.float32) for s in self.qcs]),
+                    tail=np.concatenate(
+                        [np.asarray(s[3], np.float32) for s in self.qcs]),
+                )
+            else:
+                C = self.ctl.q_top_c
+                qc = CompactQ(
+                    logq_tok=np.zeros((0,), np.float32),
+                    top_idx=np.zeros((0, C), np.int32),
+                    top_logq=np.zeros((0, C), np.float32),
+                    tail=np.zeros((0,), np.float32),
+                )
         return DraftResult(
             tokens=np.asarray(self.toks, np.int32),
             q_logits=np.stack(self.qls) if self.qls
             else np.zeros((0, 0), np.float32),
+            q_compact=qc,
             features=np.stack(self.feats) if self.feats
             else np.zeros((0, 5), np.float32),
             n_drafted=self.n_drafted,

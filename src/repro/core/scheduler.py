@@ -111,7 +111,9 @@ class WorkItem:
 @dataclasses.dataclass
 class VerifyWork(WorkItem):
     """A drafted block awaiting verification (``payload`` = (draft token
-    ids, q logits)).  Deadline is the SLO-class token-speed budget."""
+    ids, dense q logits | None, `CompactQ` | None) — exactly one q
+    representation is set unless the verifier is greedy, which reads
+    neither).  Deadline is the SLO-class token-speed budget."""
 
     kind = "verify"
 
@@ -129,9 +131,10 @@ class VerifyWork(WorkItem):
         from repro.serving.engine import VerifyItem
 
         s = server.sessions[self.session_id]
-        toks, qlog = self.payload
+        toks, qlog, qc = (self.payload if len(self.payload) == 3
+                          else (*self.payload, None))
         return VerifyItem(
-            slot=s.slot, draft_tokens=toks, q_logits=qlog,
+            slot=s.slot, draft_tokens=toks, q_logits=qlog, q_compact=qc,
             rng_tag=(self.session_id, self.cached_len)
             if server.deterministic_verify else None,
         )

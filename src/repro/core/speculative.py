@@ -26,13 +26,38 @@ per-position scalar draws, making each request's outcome a pure function of
 length bucketing, and dispatch order.  The serving stack tags rows with
 (session_id, committed_len) so the event-driven cluster runtime and the
 lock-step driver commit identical streams.
+
+Draft-side q representations (DESIGN.md §9)
+-------------------------------------------
+The accept test only needs ``log q(y_i)`` at the drafted token, and the
+residual correction only needs q's distribution at ONE position (the stop
+position).  `CompactQ` exploits that: instead of shipping dense ``(K, V)``
+q-logits edge->server, a draft sends per-token log-probs (accept test,
+**exact**) plus a top-C + tail-mass table per position (residual
+reconstruction, bounded error).  Reconstruction spreads the tail mass
+uniformly over the V-C non-top tokens, so the rebuilt q̂ satisfies
+``||q̂ - q||_1 <= 2·tail`` (top entries are exact; at most ``tail``
+probability is misplaced on each side), and the compact residual
+distribution is within total-variation ``2·tail / Z`` of the exact one,
+where ``Z = sum_v max(p_v - q_v, 0)`` is the exact residual mass at the
+stop position (asserted in tests/test_hotpath.py).  Greedy verification
+uses no q at all; exact ``residual`` remains available by sending dense
+q-logits (the legacy wire format / fallback path).
+
+``verify_epoch_rule`` is the *traceable* core shared by the public jitted
+wrappers below and by the verification engine's fused per-epoch programs
+(`repro.serving.engine` inlines it after the target forward so accept_len
+and the correction token are computed on device and the ``(B, K+1, V)``
+target logits never leave it).
 """
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def _log_softmax(logits, temperature):
@@ -55,7 +80,276 @@ def _row_uniform(key, K):
     return jax.vmap(lambda k: jax.random.uniform(k, ()))(ks)
 
 
-@partial(jax.jit, static_argnames=("method",))
+# ---------------------------------------------------------------------------
+# compact draft-side q representation (wire format)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class CompactQ:
+    """Compact per-block draft distribution statistics (host-side numpy).
+
+    ``logq_tok`` is exact — the accept test with CompactQ is bit-identical
+    to the dense path.  ``top_idx``/``top_logq``/``tail`` reconstruct q̂
+    for the residual correction within the bound documented in the module
+    docstring.  The whole structure is O(K·C) instead of O(K·V)."""
+
+    logq_tok: np.ndarray    # (k,)    float32: log q(y_i) at each draft token
+    top_idx: np.ndarray     # (k, C)  int32:   top-C token ids per position
+    top_logq: np.ndarray    # (k, C)  float32: their log-probs
+    tail: np.ndarray        # (k,)    float32: prob mass outside the top-C
+
+    @property
+    def k(self) -> int:
+        return int(self.logq_tok.shape[0])
+
+    @property
+    def C(self) -> int:
+        return int(self.top_idx.shape[-1]) if self.top_idx.ndim == 2 else 0
+
+    def wire_bytes(self) -> int:
+        """Modelled uplink payload: per drafted token a float32 token
+        log-prob, C (id: 4B + logit: 2B) table entries, and a float16 tail
+        mass."""
+        return self.k * (4 + self.C * 6 + 2)
+
+
+@partial(jax.jit, static_argnames=("C",))
+def _compact_q_kernel(logits, tokens, *, C: int):
+    """(k, V) raw draft logits + (k,) drafted tokens -> compact stats.
+    Runs on device so only O(k·C) crosses to the host."""
+    logq = jax.nn.log_softmax(logits, axis=-1)
+    logq_tok = jnp.take_along_axis(logq, tokens[:, None], axis=-1)[:, 0]
+    top_logq, top_idx = jax.lax.top_k(logq, C)
+    tail = jnp.maximum(1.0 - jnp.exp(top_logq).sum(-1), 0.0)
+    return logq_tok, top_idx.astype(jnp.int32), top_logq, tail
+
+
+def compact_from_logits(logits, tokens, C: int = 64) -> CompactQ:
+    """Build a `CompactQ` from raw draft logits ``(k, V)`` and the drafted
+    token ids ``(k,)``.  Always at temperature 1.0 — the verification rule
+    softmaxes raw q-logits at 1.0, and the compact stats must describe the
+    same distribution the dense path would."""
+    toks = jnp.asarray(np.asarray(tokens, np.int32))
+    lt, ti, tl, ta = _compact_q_kernel(jnp.asarray(logits), toks, C=C)
+    lt, ti, tl, ta = jax.device_get((lt, ti, tl, ta))
+    return CompactQ(
+        logq_tok=np.asarray(lt, np.float32),
+        top_idx=np.asarray(ti, np.int32),
+        top_logq=np.asarray(tl, np.float32),
+        tail=np.asarray(ta, np.float32),
+    )
+
+
+def stack_compact(items: list[CompactQ], nb: int, K: int, C: int,
+                  *, pad_idx: int = 1 << 30):
+    """Stack per-row CompactQ blocks into padded (nb, ...) batch arrays.
+    Unused table cells get ``pad_idx`` — an out-of-vocab id whose scatter
+    update is dropped during reconstruction (see `residual_qhat_compact`:
+    an in-bounds pad would collide with a real top entry)."""
+    logq_tok = np.zeros((nb, K), np.float32)
+    top_idx = np.full((nb, K, C), pad_idx, np.int32)
+    top_logq = np.full((nb, K, C), -30.0, np.float32)
+    tail = np.zeros((nb, K), np.float32)
+    for i, q in enumerate(items):
+        k, c = q.k, q.C
+        logq_tok[i, :k] = q.logq_tok
+        top_idx[i, :k, :c] = q.top_idx
+        top_logq[i, :k, :c] = q.top_logq
+        tail[i, :k] = q.tail
+    return logq_tok, top_idx, top_logq, tail
+
+
+# ---------------------------------------------------------------------------
+# traceable core (shared by the jitted wrappers and the engine's fused
+# per-epoch programs)
+# ---------------------------------------------------------------------------
+
+
+def accept_draws(rng, B: int, K: int, method: str, rng_tags):
+    """The accept-test uniforms and per-row keys.  Key-consumption order is
+    part of the stream contract: row keys derive from the UNSPLIT rng;
+    the batch-wide path splits once for the draws (greedy draws nothing)."""
+    row_keys = None if rng_tags is None else _row_keys(rng, rng_tags)
+    if method == "greedy":
+        return None, row_keys, rng
+    if row_keys is None:
+        k_unif, rng = jax.random.split(rng)
+        u = jax.random.uniform(k_unif, (B, K))
+    else:
+        u = jax.vmap(lambda k: _row_uniform(k, K))(row_keys)
+    return u, row_keys, rng
+
+
+def accept_length(accept, valid, draft_len):
+    """First-rejection semantics: L per row + the masked accept positions."""
+    K = accept.shape[1]
+    pos = jnp.arange(K)[None, :]
+    rejected = jnp.logical_and(jnp.logical_not(accept), valid)
+    any_rej = rejected.any(axis=-1)
+    first_rej = jnp.argmax(rejected, axis=-1)
+    L = jnp.where(any_rej, first_rej, draft_len)
+    accept_mask = jnp.logical_and(accept, pos < L[:, None])
+    return L, accept_mask
+
+
+def residual_qhat_dense(logq, L):
+    """q probabilities at the stop position from dense (B,K,V) log-q.
+
+    Bonus rows with L == K gather the appended -inf pad row -> q̂ = 0 ->
+    residual == p, exactly the bonus distribution.  Bonus rows with
+    L == draft_len < K gather whatever the CALLER staged at position
+    draft_len: the engine's dense staging fills those positions with a
+    -30.0 constant, whose softmax is the uniform distribution — so such
+    bonus tokens sample from norm(max(p - 1/V, 0)), a small bias
+    inherited from the seed engine and pinned by the golden-stream suite
+    (the compact path's out-of-vocab pads yield q̂ ≈ 0 there, i.e. the
+    exact bonus rule; fixing dense to match means regenerating the
+    goldens in a behavior-change PR, not a refactor PR)."""
+    q_at = jnp.take_along_axis(
+        jnp.pad(logq, ((0, 0), (0, 1), (0, 0)), constant_values=-jnp.inf),
+        L[:, None, None],
+        axis=1,
+    )[:, 0]
+    return jnp.exp(q_at)
+
+
+def residual_qhat_compact(top_idx, top_logq, tail, L, V: int):
+    """Reconstructed q̂ probabilities at the stop position from the top-C +
+    tail table: exact on the top-C ids, tail mass spread uniformly over the
+    V-C others (``||q̂ - q||_1 <= 2·tail``; module docstring).  Bonus rows
+    gather the out-of-bounds pad row, whose scatter updates XLA drops ->
+    q̂ = 0 -> residual == p, exact.  Unused table columns (a block whose
+    own C is narrower than the batch bucket) MUST carry index >= V — an
+    in-bounds pad id would collide with that token's real entry in the
+    scatter, where XLA leaves the duplicate winner unspecified."""
+    C = top_idx.shape[-1]
+    pad_i = jnp.pad(top_idx, ((0, 0), (0, 1), (0, 0)), constant_values=V)
+    pad_l = jnp.pad(top_logq, ((0, 0), (0, 1), (0, 0)),
+                    constant_values=-jnp.inf)
+    pad_t = jnp.pad(tail, ((0, 0), (0, 1)))
+    sel = L[:, None, None]
+    idx_L = jnp.take_along_axis(pad_i, sel, axis=1)[:, 0]          # (B, C)
+    logq_L = jnp.take_along_axis(pad_l, sel, axis=1)[:, 0]         # (B, C)
+    tail_L = jnp.take_along_axis(pad_t, L[:, None], axis=1)[:, 0]  # (B,)
+    uniform = tail_L / max(V - C, 1)
+    base = jnp.broadcast_to(uniform[:, None], (L.shape[0], V))
+    return jax.vmap(lambda q, i, v: q.at[i].set(v))(
+        base, idx_L, jnp.exp(logq_L)
+    )
+
+
+def correction_token(rng, row_keys, p_at, qhat, *, method, temperature):
+    """Sample/select the correction token from the RAW target logits at the
+    stop position.  ``qhat``: q probabilities there (residual mode only).
+    Returns (token, rng) — rng advanced only on the batch-wide path."""
+    logp_at = _log_softmax(p_at, temperature)
+
+    def _sample_rows(logits_rows):
+        nonlocal rng
+        if row_keys is None:
+            k_s, rng = jax.random.split(rng)
+            return jax.random.categorical(k_s, logits_rows).astype(jnp.int32)
+        return jax.vmap(
+            lambda k, lg: jax.random.categorical(jax.random.fold_in(k, 1), lg)
+        )(row_keys, logits_rows).astype(jnp.int32)
+
+    if method == "greedy":
+        return jnp.argmax(p_at, axis=-1).astype(jnp.int32), rng
+    if method == "target":
+        return _sample_rows(logp_at), rng
+    # residual = max(p - q̂, 0); rows can only be all-zero if p == q̂
+    # elementwise and a rejection happened (prob-0 event up to fp error);
+    # fall back to p.
+    resid = jnp.maximum(jnp.exp(logp_at) - qhat, 0.0)
+    fallback = resid.sum(-1, keepdims=True) <= 1e-12
+    resid = jnp.where(fallback, jnp.exp(logp_at), resid)
+    logresid = jnp.log(jnp.maximum(resid, 1e-38))
+    return _sample_rows(logresid), rng
+
+
+def verify_epoch_rule(
+    rng,
+    draft_tokens,            # (B, K) int32
+    draft_len,               # (B,)   int32
+    p_logits,                # (B, K+1, V) raw target logits
+    *,
+    method: str = "residual",
+    temperature: float = 1.0,
+    rng_tags=None,
+    q_logits=None,           # dense (B, K, V) draft logits (exact residual)
+    logq_tok=None,           # compact: (B, K) exact token log-probs
+    top_idx=None,            # compact: (B, K, C)
+    top_logq=None,           # compact: (B, K, C)
+    tail=None,               # compact: (B, K)
+):
+    """The full accept/reject + correction rule, traceable (inline it into
+    a larger jit program).  q comes in exactly one representation: dense
+    ``q_logits``, compact (``logq_tok`` + table), or nothing (greedy)."""
+    B, K = draft_tokens.shape
+    if (q_logits is None and logq_tok is not None
+            and method != "greedy" and temperature != 1.0):
+        # compact statistics are built at temperature 1.0
+        # (`_compact_q_kernel`); rescaling only the target side would make
+        # the accept test compare p^(1/T) against unscaled q — silently
+        # not min(1, p/q).  Dense q rescales both sides, so only the
+        # compact path must refuse.
+        raise ValueError(
+            "compact q statistics support temperature=1.0 only "
+            "(send dense q_logits to verify at other temperatures)"
+        )
+    logq = None
+    if q_logits is not None:
+        logq = _log_softmax(q_logits, temperature)
+        logq_tok = jnp.take_along_axis(
+            logq, draft_tokens[..., None], axis=-1
+        )[..., 0]
+
+    pos = jnp.arange(K)[None, :]
+    valid = pos < draft_len[:, None]
+
+    u, row_keys, rng = accept_draws(rng, B, K, method, rng_tags)
+    if method == "greedy":
+        accept = draft_tokens == jnp.argmax(p_logits[:, :K], axis=-1)
+    else:
+        if logq_tok is None:
+            raise ValueError(f"method {method!r} needs draft q statistics")
+        logp = _log_softmax(p_logits[:, :K], temperature)
+        logp_tok = jnp.take_along_axis(
+            logp, draft_tokens[..., None], axis=-1
+        )[..., 0]
+        accept = jnp.log(u) <= (logp_tok - logq_tok)         # u <= p/q
+    accept = jnp.logical_and(accept, valid)
+    L, accept_mask = accept_length(accept, valid, draft_len)
+
+    p_at = jnp.take_along_axis(p_logits, L[:, None, None], axis=1)[:, 0]
+    qhat = None
+    if method == "residual":
+        if logq is not None:
+            qhat = residual_qhat_dense(logq, L)
+        elif top_idx is not None:
+            qhat = residual_qhat_compact(
+                top_idx, top_logq, tail, L, p_logits.shape[-1]
+            )
+        else:
+            raise ValueError("residual mode needs dense or compact q")
+    token, rng = correction_token(
+        rng, row_keys, p_at, qhat, method=method, temperature=temperature
+    )
+    return {
+        "accept_len": L.astype(jnp.int32),
+        "token": token,
+        "accept_mask": accept_mask,
+        "num_emitted": (L + 1).astype(jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# public jitted wrappers
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("method", "temperature"))
 def speculative_verify(
     rng,
     draft_tokens,        # (B, K) int32
@@ -73,78 +367,36 @@ def speculative_verify(
       accept_mask  (B,K) which draft positions were accepted
       num_emitted  (B,)  L + 1 (tokens committed this round)
     """
-    B, K = draft_tokens.shape
-    logq = _log_softmax(q_logits, temperature)                   # (B,K,V)
-    logp = _log_softmax(p_logits[:, :K], temperature)            # (B,K,V)
-    idx = draft_tokens[..., None]
-    logq_tok = jnp.take_along_axis(logq, idx, axis=-1)[..., 0]   # (B,K)
-    logp_tok = jnp.take_along_axis(logp, idx, axis=-1)[..., 0]
+    return verify_epoch_rule(
+        rng, draft_tokens, draft_len, p_logits,
+        method=method, temperature=temperature, rng_tags=rng_tags,
+        q_logits=q_logits,
+    )
 
-    pos = jnp.arange(K)[None, :]
-    valid = pos < draft_len[:, None]                             # (B,K)
 
-    row_keys = None if rng_tags is None else _row_keys(rng, rng_tags)
-    if method == "greedy":
-        accept = draft_tokens == jnp.argmax(p_logits[:, :K], axis=-1)
-    else:
-        if row_keys is None:
-            k_unif, rng = jax.random.split(rng)
-            u = jax.random.uniform(k_unif, (B, K))
-        else:
-            u = jax.vmap(lambda k: _row_uniform(k, K))(row_keys)
-        accept = jnp.log(u) <= (logp_tok - logq_tok)             # u <= p/q
-
-    accept = jnp.logical_and(accept, valid)
-    # first rejection among valid positions
-    rejected = jnp.logical_and(jnp.logical_not(accept), valid)
-    any_rej = rejected.any(axis=-1)
-    first_rej = jnp.argmax(rejected, axis=-1)                    # (B,)
-    L = jnp.where(any_rej, first_rej, draft_len)                 # accept len
-    # mask acceptances after the first rejection (verification stops there)
-    accept_mask = jnp.logical_and(accept, pos < L[:, None])
-
-    # distribution for the correction token at position L (0..K)
-    p_at = jnp.take_along_axis(
-        p_logits, L[:, None, None], axis=1
-    )[:, 0]                                                      # (B, V)
-    logp_at = _log_softmax(p_at, temperature)
-
-    def _sample_rows(logits_rows):
-        """Correction-token sampling: one batch key, or per-row keys."""
-        if row_keys is None:
-            nonlocal rng
-            k_s, rng = jax.random.split(rng)
-            return jax.random.categorical(k_s, logits_rows).astype(jnp.int32)
-        return jax.vmap(
-            lambda k, lg: jax.random.categorical(jax.random.fold_in(k, 1), lg)
-        )(row_keys, logits_rows).astype(jnp.int32)
-
-    if method == "greedy":
-        token = jnp.argmax(p_at, axis=-1).astype(jnp.int32)
-    elif method == "target":
-        token = _sample_rows(logp_at)
-    else:  # residual
-        q_at = jnp.take_along_axis(
-            jnp.pad(logq, ((0, 0), (0, 1), (0, 0)), constant_values=-jnp.inf),
-            L[:, None, None],
-            axis=1,
-        )[:, 0]                                                  # (B, V)
-        # residual = max(p - q, 0); on bonus rows (L == draft_len) q is -inf
-        # padded -> residual == p, exactly the bonus distribution.
-        resid = jnp.maximum(jnp.exp(logp_at) - jnp.exp(q_at), 0.0)
-        # rows can only be all-zero if p == q elementwise and a rejection
-        # happened (prob-0 event up to fp error); fall back to p.
-        fallback = resid.sum(-1, keepdims=True) <= 1e-12
-        resid = jnp.where(fallback, jnp.exp(logp_at), resid)
-        logresid = jnp.log(jnp.maximum(resid, 1e-38))
-        token = _sample_rows(logresid)
-
-    return {
-        "accept_len": L.astype(jnp.int32),
-        "token": token,
-        "accept_mask": accept_mask,
-        "num_emitted": (L + 1).astype(jnp.int32),
-    }
+@partial(jax.jit, static_argnames=("method", "temperature"))
+def speculative_verify_compact(
+    rng,
+    draft_tokens,        # (B, K) int32
+    draft_len,           # (B,)   int32
+    logq_tok,            # (B, K)    exact draft token log-probs
+    top_idx,             # (B, K, C) top-C ids per draft position
+    top_logq,            # (B, K, C) their log-probs
+    tail,                # (B, K)    tail mass per position
+    p_logits,            # (B, K+1, V) target logits
+    *,
+    method: str = "residual",
+    temperature: float = 1.0,
+    rng_tags=None,
+):
+    """`speculative_verify` over the compact wire format: accept decisions
+    (and greedy entirely) are exact; residual correction is within the
+    documented TV bound of the dense rule."""
+    return verify_epoch_rule(
+        rng, draft_tokens, draft_len, p_logits,
+        method=method, temperature=temperature, rng_tags=rng_tags,
+        logq_tok=logq_tok, top_idx=top_idx, top_logq=top_logq, tail=tail,
+    )
 
 
 def committed_tokens(draft_tokens, accept_len, token):

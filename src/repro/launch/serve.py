@@ -70,6 +70,8 @@ def run_serving(
     sched_cfg=None,
     self_draft: bool = False,
     method: str = "residual",
+    q_mode: str = "dense",
+    q_top_c: int = 64,
     prefill_mode: str = "zero",
     prefill_chunk_tokens: int = 32,
     ttft_slo: dict | None = None,
@@ -95,6 +97,14 @@ def run_serving(
             DeprecationWarning, stacklevel=2,
         )
         policy = scheduler
+    if q_mode == "none" and method != "greedy":
+        # a residual/target verifier with no q statistics would silently
+        # fall back to the staging buffers' uniform fill — an accept test
+        # of u <= p·V, not the paper's rule.  Only greedy reads no q.
+        raise ValueError(
+            f"q_mode='none' requires method='greedy' (got {method!r}): "
+            "residual/target verification needs dense or compact q"
+        )
     tcfg = get_config(target_arch)
     dcfg = get_config(draft_arch or target_arch)
     if reduced:
@@ -132,6 +142,8 @@ def run_serving(
         prefill_chunk_tokens=prefill_chunk_tokens,
         think_time_mean=think_time_mean,
         response_len_mean=response_len_mean,
+        q_mode=q_mode,
+        q_top_c=q_top_c,
     )
     fleet = build_fleet(ccfg, tcfg.vocab)
 
@@ -151,6 +163,7 @@ def run_serving(
             dcfg, dparams, predictor=predictor, k_max=k_max,
             max_len=max_len, seed=seed + 10 + sp.idx,
             draft_speed=sp.draft_speed, greedy=greedy,
+            q_mode=q_mode, q_top_c=q_top_c,
         )
         for sp in fleet
     ]
@@ -237,8 +250,9 @@ def _run_lockstep(server, edges, fleet, rounds, net, verbose):
         results = {}
         for i, dev in enumerate(edges):
             res = dev.draft_round()
-            t_net = net.round_trip(res.n_sent)
-            server.submit(i, res.tokens, res.q_logits, now=now,
+            t_net = net.round_trip(res.n_sent, res.q_payload())
+            server.submit(i, res.tokens, res.q_logits,
+                          q_compact=res.q_compact, now=now,
                           t_draft=res.draft_time, t_network=t_net)
             results[i] = (res, t_net)
         # dispatch epochs until the pool drains
@@ -326,6 +340,12 @@ def main():
                          "clock (DESIGN.md §8)")
     ap.add_argument("--prefill-chunk", type=int, default=32,
                     help="prompt tokens per schedulable prefill chunk")
+    ap.add_argument("--q-mode", choices=("dense", "compact", "none"),
+                    default="dense",
+                    help="draft q payload: dense (K,V) logits, compact "
+                         "top-C table (O(K*C) uplink), or none (greedy)")
+    ap.add_argument("--q-top-c", type=int, default=64,
+                    help="top-C table width for --q-mode compact")
     args = ap.parse_args()
     pred = RejectionPredictor.load(args.predictor_path) if args.predictor_path else None
     run_serving(
@@ -335,6 +355,7 @@ def main():
         churn=args.churn, horizon=args.horizon if args.churn else None,
         prompt_len=args.prompt_len, prefill_mode=args.prefill,
         prefill_chunk_tokens=args.prefill_chunk,
+        q_mode=args.q_mode, q_top_c=args.q_top_c,
     )
 
 

@@ -63,6 +63,8 @@ class EdgeDevice:
         greedy: bool = False,
         max_len: int = 4096,
         seed: int = 0,
+        q_mode: str = "dense",
+        q_top_c: int = 64,
     ):
         self.cfg = draft_cfg
         self.bundle = build(draft_cfg)
@@ -74,6 +76,8 @@ class EdgeDevice:
             k_max=k_max,
             greedy=greedy,
             draft_speed=draft_speed,
+            q_mode=q_mode,
+            q_top_c=q_top_c,
         )
         self.max_len = max_len
         self.cache = None

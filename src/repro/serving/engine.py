@@ -17,9 +17,26 @@ Two cache backends, auto-selected per family (DESIGN.md §4):
 
   * dense slots (recurrent families: ssm/hybrid, plus windowed-attention
     configs) — the engine owns a fixed-capacity cache with ``max_slots``
-    rows; sessions map to slots.  Recurrent targets verify stepwise —
-    per-step states are stacked and the state at the accepted length is
-    selected per row (recurrent state cannot be truncated; DESIGN.md §5).
+    rows; sessions map to slots.  Recurrent targets verify through a
+    ``lax.scan`` over the K+1 fed tokens that computes the accept rule
+    *incrementally* (the accept test at draft position t only needs the
+    logits step t produced) and keeps exactly one live "selected state"
+    per row — the state at the accepted length — inside the scan carry
+    (recurrent state cannot be truncated; DESIGN.md §5).
+
+Hot path (DESIGN.md §9): each ``verify`` batch executes as ONE fused jit
+program per (backend, bucket) — cache gather, target forward, the
+accept/reject + correction rule, and cache scatter-back all inside the
+same dispatch — so only two small ``(B,)`` arrays (``accept_len``,
+``token``) return to the host and the ``(B, K+1, V)`` target logits never
+leave the device.  Host-side staging uses pooled, bucket-keyed buffers
+(no per-call ``np.zeros``/``np.full``); pad rows simply keep the pooled
+buffers' reset state — slot index ``max_slots`` is an out-of-bounds
+sentinel that gathers clamped (read-only) and whose scatter updates XLA
+drops.  ``fed``/``last_token`` commit from one device->host transfer.
+The engine counts compiled-program launches (``dispatch_counts``) and
+staged bytes (``stats``) so benchmarks/hotpath.py and CI can hold the
+dispatch/byte budgets.
 
 Batch shapes are padded to fixed buckets (draft length to k_max, batch to
 powers of two) so jit compiles a bounded set of programs.
@@ -38,13 +55,21 @@ from __future__ import annotations
 
 import dataclasses
 import time
+from collections import Counter
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.speculative import speculative_verify
+from repro.core.speculative import (
+    CompactQ,
+    accept_draws,
+    correction_token,
+    residual_qhat_compact,
+    residual_qhat_dense,
+    verify_epoch_rule,
+)
 from repro.models import build, encdec, transformer
 from repro.serving.kv_cache import PAGE_SIZE, OutOfPages, PagedKV
 
@@ -80,11 +105,23 @@ def _bucket(n: int, lo: int = 1) -> int:
     return b
 
 
+def _log_softmax1(x):
+    """log_softmax at temperature 1.0, matching `speculative._log_softmax`
+    bit-for-bit (x / max(1.0, eps) == x exactly)."""
+    return jax.nn.log_softmax(x, axis=-1)
+
+
 @dataclasses.dataclass
 class VerifyItem:
     slot: int
     draft_tokens: np.ndarray     # (k,) int32
-    q_logits: np.ndarray         # (k, V) float32
+    #: dense (k, V) float32 draft logits — the exact-residual wire format.
+    #: Ignored entirely in greedy mode (nothing is staged).
+    q_logits: np.ndarray | None = None
+    #: compact draft statistics (`CompactQ`, O(k·C)) — exact accept test,
+    #: residual correction within the documented bound (DESIGN.md §9).
+    #: A batch must be uniformly dense or uniformly compact.
+    q_compact: CompactQ | None = None
     #: optional (a, b) int pair keying this row's accept/correction draws
     #: (serving passes (session_id, committed_len)).  When every item in a
     #: batch carries a tag, verification outcomes become a pure function of
@@ -190,6 +227,16 @@ class VerificationEngine:
         self.rng = jax.random.PRNGKey(seed)
         #: never advanced: base for rng_tag-keyed (deterministic) verification
         self._rng_base = jax.random.PRNGKey(seed)
+        #: pooled, bucket-keyed host staging buffers (DESIGN.md §9): one
+        #: allocation per (shape bucket, q representation), reused across
+        #: calls.  Rows written by the previous call are reset to their pad
+        #: value on reuse; pad rows beyond the live batch simply keep that
+        #: reset state (slot sentinel ``max_slots``: clamped gather,
+        #: dropped scatter — no per-pad-row Python work).
+        self._pools: dict[tuple, dict] = {}
+        #: compiled-program launches by name ("verify" is the fused
+        #: per-epoch program — exactly one per verify() call, any backend)
+        self.dispatch_counts: Counter = Counter()
         #: ``prefix_cached_tokens`` counts prompt tokens satisfied by the
         #: content-addressed prefix cache.  That cache exists only on the
         #: paged backend — on the dense backend the field is structurally
@@ -203,6 +250,10 @@ class VerificationEngine:
             "tokens_committed": 0,
             "prefix_cached_tokens": 0,
             "prefill_chunks": 0,
+            "dispatches": 0,          # compiled-program launches
+            "h2d_bytes": 0,           # host->device staged bytes (verify)
+            "h2d_q_bytes": 0,         # ...of which draft-q payload
+            "d2h_bytes": 0,           # device->host result bytes (verify)
         }
 
         if self.paged:
@@ -213,6 +264,11 @@ class VerificationEngine:
             self._bax = _batch_axis_tree(self.bundle.cache_axes())
             self._decode = jax.jit(self.bundle.decode)
             self._prefill = jax.jit(self.bundle.prefill)
+            self._fused_verify = (
+                self._build_fused_recurrent()
+                if self.recurrent
+                else self._build_fused_attention()
+            )
 
     # -- paged backend setup --------------------------------------------------
     def _init_paged(self, cache_dtype, page_size, n_pages):
@@ -245,7 +301,7 @@ class VerificationEngine:
             self.extras_cache = {"k_img": z(), "v_img": z()}
             self._extras_key = "image_embeds"
             self._extras_builder = jax.jit(partial(transformer.vlm_cross_kv, cfg))
-            self._decode_paged = _jit(partial(transformer.decode_paged, cfg))
+            decode_raw = partial(transformer.decode_paged, cfg)
             self._prefill_paged = _jit(
                 partial(transformer.decode_paged, cfg, dropless=False)
             )
@@ -257,21 +313,202 @@ class VerificationEngine:
             self.extras_cache = {"k_mem": z(), "v_mem": z()}
             self._extras_key = "frames"
             self._extras_builder = jax.jit(partial(encdec.encdec_cross_kv, cfg))
-            self._decode_paged = _jit(partial(encdec.encdec_decode_paged, cfg))
-            self._prefill_paged = self._decode_paged     # no MoE routing
+            decode_raw = partial(encdec.encdec_decode_paged, cfg)
+            self._prefill_paged = _jit(decode_raw)       # no MoE routing
         else:
-            self._decode_paged = _jit(partial(transformer.decode_paged, cfg))
+            decode_raw = partial(transformer.decode_paged, cfg)
             # prompt prefill keeps GShard capacity MoE routing, matching
             # the dense `prefill` path (verify stays dropless)
             self._prefill_paged = _jit(
                 partial(transformer.decode_paged, cfg, dropless=False)
             )
+        self._fused_verify = self._build_fused_paged(decode_raw)
+
+    # -- fused per-epoch verify programs (DESIGN.md §9) -----------------------
+    # Each program is ONE jit dispatch: target forward + the accept/reject
+    # + correction rule, returning just (accept_len, token) plus the
+    # updated device-resident cache state.  ``qargs`` is a (possibly empty)
+    # dict of staged draft-q arrays whose structure selects the dense /
+    # compact / greedy variant at trace time.
+
+    def _build_fused_attention(self):
+        decode = self.bundle.decode
+        bax = self._bax
+
+        def fused(params, cache, slot_idx, feed, pos, draft, dlen, rng,
+                  tags, qargs, *, method, tagged):
+            sub = jax.tree.map(
+                lambda leaf, ax: jnp.take(leaf, slot_idx, axis=ax,
+                                          mode="clip"),
+                cache, bax,
+            )
+            p_logits, sub = decode(params, feed, sub, pos)
+            out = verify_epoch_rule(
+                rng, draft, dlen, p_logits, method=method,
+                rng_tags=tags if tagged else None, **qargs,
+            )
+
+            def put(leaf, new, ax):
+                sl = (slice(None),) * ax
+                # pad rows carry the OOB slot sentinel: XLA drops their
+                # updates, so no masking / per-row host logic is needed
+                return leaf.at[sl + (slot_idx,)].set(new.astype(leaf.dtype))
+
+            cache = jax.tree.map(put, cache, sub, bax)
+            return out["accept_len"], out["token"], cache
+
+        return jax.jit(fused, static_argnames=("method", "tagged"),
+                       donate_argnums=(1,))
+
+    def _build_fused_recurrent(self):
+        decode = self.bundle.decode
+        bax = self._bax
+        V = self.cfg.vocab
+
+        def tree_where(cond, new, old):
+            def w(nl, ol, ax):
+                shape = [1] * nl.ndim
+                shape[ax] = cond.shape[0]
+                return jnp.where(cond.reshape(shape), nl, ol)
+
+            return jax.tree.map(w, new, old, bax)
+
+        def fused(params, cache, slot_idx, feed, pos, draft, dlen, rng,
+                  tags, qargs, *, method, tagged):
+            B, T = feed.shape
+            K = T - 1
+            sub = jax.tree.map(
+                lambda leaf, ax: jnp.take(leaf, slot_idx, axis=ax,
+                                          mode="clip"),
+                cache, bax,
+            )
+            rng_tags = tags if tagged else None
+            u, row_keys, rng = accept_draws(rng, B, K, method, rng_tags)
+            logq_full = None
+            if "q_logits" in qargs:
+                logq_full = _log_softmax1(qargs["q_logits"])
+                lqt = jnp.take_along_axis(
+                    logq_full, draft[..., None], axis=-1
+                )[..., 0]
+            elif "logq_tok" in qargs:
+                lqt = qargs["logq_tok"]
+            else:
+                lqt = jnp.zeros((B, K), jnp.float32)     # greedy: unused
+
+            # Per-step inputs, padded to T steps.  Step t feeds feed[:, t]
+            # and its output logits are the target distribution for draft
+            # position t — so the accept test runs INSIDE the scan, the
+            # carry tracks the still-accepting prefix, and the state at the
+            # accepted length is selected as it streams past (one live
+            # state copy instead of T+1 stacked caches).  Step K is the
+            # bonus slot (its logits are the bonus distribution).
+            kpos = jnp.arange(K, dtype=jnp.int32)
+            xs = dict(
+                tok=feed.T,
+                t=jnp.arange(T, dtype=jnp.int32),
+                d=jnp.pad(draft, ((0, 0), (0, 1))).T,
+                val=jnp.pad(kpos[None, :] < dlen[:, None],
+                            ((0, 0), (0, 1))).T,
+                bon=(jnp.arange(T, dtype=jnp.int32)[None, :]
+                     == dlen[:, None]).T,
+                u=jnp.pad(jnp.ones((B, K)) if u is None else u,
+                          ((0, 0), (0, 1)), constant_values=1.0).T,
+                lq=jnp.pad(lqt, ((0, 0), (0, 1))).T,
+            )
+
+            def body(carry, x):
+                state, kept, still, corr, L = carry
+                lg, state = decode(params, x["tok"][:, None], state,
+                                   pos + x["t"])
+                row = lg[:, 0]
+                # rows whose accepted prefix is still growing (still was
+                # True *entering* this step) advance their selected state;
+                # the step after a row's stop (rejection or bonus) — and
+                # every later one — leaves it frozen at length L+1
+                kept = tree_where(still, state, kept)
+                if method == "greedy":
+                    acc_raw = x["d"] == jnp.argmax(row, axis=-1).astype(
+                        x["d"].dtype
+                    )
+                else:
+                    lpt = jnp.take_along_axis(
+                        _log_softmax1(row), x["d"][:, None], axis=-1
+                    )[:, 0]
+                    acc_raw = jnp.log(x["u"]) <= (lpt - x["lq"])
+                stop = jnp.logical_and(
+                    still,
+                    jnp.logical_or(
+                        x["bon"],
+                        jnp.logical_and(x["val"], jnp.logical_not(acc_raw)),
+                    ),
+                )
+                corr = jnp.where(stop[:, None], row.astype(corr.dtype), corr)
+                L = L + jnp.logical_and(
+                    still, jnp.logical_and(x["val"], acc_raw)
+                ).astype(jnp.int32)
+                still = jnp.logical_and(still, jnp.logical_not(stop))
+                return (state, kept, still, corr, L), None
+
+            # the scan carry must be type-stable: decode may return state
+            # in a wider dtype than the stored cache (e.g. bf16 conv
+            # buffers stepping in f32) — initialize the carry in decode's
+            # OUTPUT dtypes (exact upcast) and cast back at scatter
+            out_aval = jax.eval_shape(
+                lambda s: decode(params, feed[:, :1], s, pos)[1], sub
+            )
+            sub0 = jax.tree.map(
+                lambda leaf, a: leaf.astype(a.dtype), sub, out_aval
+            )
+            init = (
+                sub0, sub0, jnp.ones((B,), bool),
+                jnp.zeros((B, V), jnp.float32),
+                jnp.zeros((B,), jnp.int32),
+            )
+            (_, kept, _, corr, L), _ = jax.lax.scan(body, init, xs)
+
+            qhat = None
+            if method == "residual":
+                if logq_full is not None:
+                    qhat = residual_qhat_dense(logq_full, L)
+                else:
+                    qhat = residual_qhat_compact(
+                        qargs["top_idx"], qargs["top_logq"], qargs["tail"],
+                        L, V,
+                    )
+            token, rng = correction_token(
+                rng, row_keys, corr, qhat, method=method, temperature=1.0
+            )
+
+            def put(leaf, new, ax):
+                sl = (slice(None),) * ax
+                return leaf.at[sl + (slot_idx,)].set(new.astype(leaf.dtype))
+
+            cache = jax.tree.map(put, cache, kept, bax)
+            return L, token.astype(jnp.int32), cache
+
+        return jax.jit(fused, static_argnames=("method", "tagged"),
+                       donate_argnums=(1,))
+
+    def _build_fused_paged(self, decode_raw):
+        def fused(params, feed, kp, vp, bt, base, tl, cross, draft, dlen,
+                  rng, tags, qargs, *, method, tagged):
+            logits, (kp, vp) = decode_raw(params, feed, kp, vp, bt, base,
+                                          tl, cross)
+            out = verify_epoch_rule(
+                rng, draft, dlen, logits, method=method,
+                rng_tags=tags if tagged else None, **qargs,
+            )
+            return out["accept_len"], out["token"], (kp, vp)
+
+        return jax.jit(fused, static_argnames=("method", "tagged"),
+                       donate_argnums=(2, 3))
 
     # -- slot/cache plumbing (dense backend) ----------------------------------
     def _gather(self, slots):
         idx = jnp.asarray(slots, jnp.int32)
         return jax.tree.map(
-            lambda leaf, ax: jnp.take(leaf, idx, axis=ax), self.cache, self._bax
+            lambda leaf, ax: jnp.take(leaf, idx, axis=ax, mode="clip"),
+            self.cache, self._bax,
         )
 
     def _scatter(self, slots, sub, valid_n):
@@ -289,7 +526,8 @@ class VerificationEngine:
     def _extras_gather(self, slots):
         idx = jnp.asarray(slots, jnp.int32)
         return jax.tree.map(
-            lambda leaf: jnp.take(leaf, idx, axis=1), self.extras_cache
+            lambda leaf: jnp.take(leaf, idx, axis=1, mode="clip"),
+            self.extras_cache,
         )
 
     def _extras_put(self, slot, sub):
@@ -297,6 +535,54 @@ class VerificationEngine:
             lambda leaf, new: leaf.at[:, slot].set(new[:, 0].astype(leaf.dtype)),
             self.extras_cache, sub,
         )
+
+    # -- staging pools + dispatch accounting ----------------------------------
+    def _count_dispatch(self, name: str):
+        self.dispatch_counts[name] += 1
+        self.stats["dispatches"] += 1
+
+    def _pool(self, key: tuple, spec: dict) -> dict:
+        """Fetch (or build) the pooled buffer set for ``key``.  On reuse,
+        rows the previous call wrote (tracked by the ``_hw`` high-water
+        mark) are reset to their pad value — pad rows of the next batch
+        need no per-row Python work, they just keep this state."""
+        p = self._pools.get(key)
+        if p is None:
+            p = {"_hw": 0}
+            for name2, (shape, dtype, fill) in spec.items():
+                p[name2] = np.full(shape, fill, dtype) if fill else \
+                    np.zeros(shape, dtype)
+            self._pools[key] = p
+            return p
+        hw = p["_hw"]
+        if hw:
+            for name2, (shape, dtype, fill) in spec.items():
+                p[name2][:hw] = fill if fill else 0
+        return p
+
+    def _stage_verify(self, nb: int, K: int, q_kind: str, C: int) -> dict:
+        sent = self.max_slots                  # OOB slot sentinel (pad rows)
+        spec = {
+            "draft": ((nb, K), np.int32, 0),
+            "dlen": ((nb,), np.int32, 0),
+            "feed": ((nb, K + 1), np.int32, 0),
+            "pos": ((nb,), np.int32, 0),
+            "slots": ((nb,), np.int32, sent),
+            "tags": ((nb, 2), np.int32, 0),
+            "tl": ((nb,), np.int32, 0),
+        }
+        if q_kind == "dense":
+            spec["qlog"] = ((nb, K, self.cfg.vocab), np.float32, -30.0)
+        elif q_kind == "compact":
+            spec["logq_tok"] = ((nb, K), np.float32, 0)
+            # unused table cells carry an out-of-vocab id: their scatter
+            # updates are dropped during q̂ reconstruction — an in-bounds
+            # pad (e.g. 0) would collide with token 0's real top entry
+            # when blocks of different C share a batch bucket
+            spec["top_idx"] = ((nb, K, C), np.int32, 1 << 30)
+            spec["top_logq"] = ((nb, K, C), np.float32, -30.0)
+            spec["tail"] = ((nb, K), np.float32, 0)
+        return self._pool(("verify", nb, K, q_kind, C), spec)
 
     # -- memory accounting ----------------------------------------------------
     def memory_budget_tokens(self) -> int:
@@ -373,6 +659,7 @@ class VerificationEngine:
             self.free_slots.append(slot)
             raise
         if self.extras_cache is not None:
+            self._count_dispatch("extras")
             k_x, v_x = self._extras_builder(
                 self.params, jnp.asarray(extras[self._extras_key])
             )
@@ -447,39 +734,61 @@ class VerificationEngine:
             return oom
         T = _bucket(max(n for _, n in live), 16)
         nb = _bucket(len(live), 1)
-        feed = np.zeros((nb, T), np.int32)
-        base = np.zeros(nb, np.int32)
-        tl = np.zeros(nb, np.int32)
-        # pad rows: zero block table + zero valid length -> their K/V writes
-        # land on the scratch page and their logits are discarded
-        slots = [live[0][0].slot] * nb
-        for i, (st, n) in enumerate(live):
-            feed[i, :n] = st.tokens[st.done : st.done + n]
-            base[i] = st.done
-            tl[i] = n
-            slots[i] = st.slot
         n_max = _bucket(max(self.kv.seq_pages(st.slot) for st, _ in live), 1)
-        bt = np.zeros((nb, n_max), np.int32)
-        bt[: len(live)] = self.kv.block_table([st.slot for st, _ in live], n_max)
-        cross = self._extras_gather(slots) if self.extras_cache is not None else None
+        bufs = self._pool(("prefill", nb, T, n_max), {
+            "feed": ((nb, T), np.int32, 0),
+            "base": ((nb,), np.int32, 0),
+            "tl": ((nb,), np.int32, 0),
+            "slots": ((nb,), np.int32, self.max_slots),
+            "bt": ((nb, n_max), np.int32, 0),
+        })
+        # pad rows: zero block table + zero valid length -> their K/V writes
+        # land on the scratch page and their logits are discarded (slot
+        # sentinel: extras gather clamps, read-only)
+        for i, (st, n) in enumerate(live):
+            bufs["feed"][i, :n] = st.tokens[st.done : st.done + n]
+            bufs["base"][i] = st.done
+            bufs["tl"][i] = n
+            bufs["slots"][i] = st.slot
+        bufs["bt"][: len(live)] = self.kv.block_table(
+            [st.slot for st, _ in live], n_max
+        )
+        bufs["_hw"] = len(live)
+        cross = (
+            self._extras_gather(bufs["slots"])
+            if self.extras_cache is not None else None
+        )
+        self._count_dispatch("prefill")
         logits, (kp, vp) = self._prefill_paged(
             self.params,
-            jnp.asarray(feed),
+            jnp.asarray(bufs["feed"]),
             self.kv.k_pages,
             self.kv.v_pages,
-            jnp.asarray(bt),
-            jnp.asarray(base),
-            jnp.asarray(tl),
+            jnp.asarray(bufs["bt"]),
+            jnp.asarray(bufs["base"]),
+            jnp.asarray(bufs["tl"]),
             cross,
         )
         self.kv.k_pages, self.kv.v_pages = kp, vp
+        finished: list = []
         for i, (st, n) in enumerate(live):
             st.done += n
             st.chunks += 1
             self.kv.set_len(st.slot, st.done)
             self.stats["prefill_chunks"] += 1
             if st.remaining == 0:
-                self._finish_prefill(st, int(jnp.argmax(logits[i, n - 1])))
+                finished.append((i, n, st))
+        if finished:
+            # one device-side argmax + ONE transfer for every chunk that
+            # completed its prompt this call (was: a blocking
+            # int(jnp.argmax(...)) sync per finished row)
+            ridx = jnp.asarray([i for i, _, _ in finished], jnp.int32)
+            cpos = jnp.asarray([n - 1 for _, n, _ in finished], jnp.int32)
+            firsts = np.asarray(
+                jax.device_get(jnp.argmax(logits[ridx, cpos], axis=-1))
+            )
+            for (_, _, st), first in zip(finished, firsts):
+                self._finish_prefill(st, int(first))
         return oom
 
     def _prefill_chunk_dense(self, st: PrefillState, n: int):
@@ -505,8 +814,10 @@ class VerificationEngine:
             batch = {"tokens": jnp.asarray(padded)}
             if st.extras:
                 batch.update(st.extras)
+            self._count_dispatch("prefill")
             logits, sub = self._prefill(self.params, batch, sub)
         else:
+            self._count_dispatch("prefill")
             logits, sub = self._decode(
                 self.params, jnp.asarray(padded), sub, jnp.int32(s0)
             )
@@ -515,7 +826,8 @@ class VerificationEngine:
         st.chunks += 1
         self.stats["prefill_chunks"] += 1
         if st.remaining == 0:
-            self._finish_prefill(st, int(jnp.argmax(logits[0, n - 1])))
+            first = int(jax.device_get(jnp.argmax(logits[0, n - 1])))
+            self._finish_prefill(st, first)
 
     def close_session(self, slot: int):
         if self.paged:
@@ -583,6 +895,9 @@ class VerificationEngine:
 
     # -- batched verification ---------------------------------------------------
     def verify(self, items: list[VerifyItem]) -> list[VerifyOutcome]:
+        """One fused dispatch per batch: stage into pooled buffers, run the
+        (backend-specific) fused program, read back two (B,) arrays in one
+        transfer, commit ``fed``/``last_token`` vectorized."""
         if not items:
             return []
         t0 = time.perf_counter()
@@ -590,156 +905,155 @@ class VerificationEngine:
         K = max(len(it.draft_tokens) for it in items)
         K = _bucket(max(K, 1), 2)
         nb = _bucket(n, 1)
-        V = self.cfg.vocab
 
-        draft = np.zeros((nb, K), np.int32)
-        qlog = np.full((nb, K, V), -30.0, np.float32)
-        dlen = np.zeros(nb, np.int32)
-        feed = np.zeros((nb, K + 1), np.int32)
-        pos = np.zeros(nb, np.int32)
-        slots = [0] * nb
+        if self.method == "greedy":
+            # greedy verification never reads q: nothing is staged at all
+            q_kind, C = "none", 0
+        elif all(it.q_compact is not None for it in items):
+            q_kind = "compact"
+            C = max(1, max(it.q_compact.C for it in items))
+        else:
+            if any(it.q_compact is not None for it in items):
+                raise ValueError(
+                    "a verify batch must be uniformly dense-q or "
+                    "uniformly compact-q"
+                )
+            q_kind, C = "dense", 0
+
+        bufs = self._stage_verify(nb, K, q_kind, C)
         for i, it in enumerate(items):
             k = len(it.draft_tokens)
-            draft[i, :k] = it.draft_tokens
-            if it.q_logits.size:
-                qlog[i, :k] = it.q_logits
-            dlen[i] = k
-            feed[i, 0] = self.last_token[it.slot]
-            feed[i, 1 : 1 + k] = it.draft_tokens
-            pos[i] = self.fed[it.slot]
-            slots[i] = it.slot
-        # pad rows reuse slot of item 0 read-only (their updates are dropped;
-        # the paged path additionally zeroes their block table + lengths so
-        # their K/V writes land on the scratch page)
-        for i in range(n, nb):
-            slots[i] = items[0].slot
-            pos[i] = self.fed[items[0].slot]
+            bufs["draft"][i, :k] = it.draft_tokens
+            bufs["dlen"][i] = k
+            bufs["tl"][i] = k + 1
+            bufs["feed"][i, 0] = self.last_token[it.slot]
+            bufs["feed"][i, 1 : 1 + k] = it.draft_tokens
+            bufs["pos"][i] = self.fed[it.slot]
+            bufs["slots"][i] = it.slot
+            if q_kind == "dense":
+                if it.q_logits is not None and it.q_logits.size:
+                    bufs["qlog"][i, :k] = it.q_logits
+            elif q_kind == "compact":
+                q = it.q_compact
+                c = q.C
+                bufs["logq_tok"][i, :k] = q.logq_tok
+                bufs["top_idx"][i, :k, :c] = q.top_idx
+                bufs["top_logq"][i, :k, :c] = q.top_logq
+                bufs["tail"][i, :k] = q.tail
+        bufs["_hw"] = n
 
         if self.paged:
-            p_logits = self._verify_paged(items, feed, slots, n, nb)
-        else:
-            sub = self._gather(slots)
-            if self.recurrent:
-                p_logits, sub = self._verify_stepwise(feed, sub, pos, dlen)
-            else:
-                p_logits, sub = self._decode(
-                    self.params, jnp.asarray(feed), sub, jnp.asarray(pos)
+            # reserve pages FIRST: OutOfPages must propagate before any
+            # engine side effect (rng split, byte counters) so an
+            # OOM-requeued batch replays identically and is not
+            # double-counted (staging pools alone are reset-on-reuse)
+            for it in items:
+                self.kv.ensure_capacity(
+                    it.slot,
+                    int(self.fed[it.slot]) + len(it.draft_tokens) + 1,
                 )
-        tags = None
-        if all(it.rng_tag is not None for it in items):
-            tags = np.zeros((nb, 2), np.int32)   # pad rows: discarded anyway
+
+        tagged = all(it.rng_tag is not None for it in items)
+        if tagged:
             for i, it in enumerate(items):
-                tags[i] = it.rng_tag
-        if tags is None:
-            self.rng, kv = jax.random.split(self.rng)
-        else:
+                bufs["tags"][i] = it.rng_tag
             kv = self._rng_base
-        out = speculative_verify(
-            kv,
-            jnp.asarray(draft),
-            jnp.asarray(dlen),
-            jnp.asarray(qlog),
-            p_logits,
-            method=self.method,
-            rng_tags=None if tags is None else jnp.asarray(tags),
-        )
-        acc = np.asarray(out["accept_len"])
-        tok = np.asarray(out["token"])
-        if self.paged:
-            jax.block_until_ready(self.kv.k_pages)
         else:
-            if self.recurrent:
-                sub = self._select_states(sub, acc + 1)
-            self._scatter(slots, sub, n)
-            jax.block_until_ready(self.cache)
+            self.rng, kv = jax.random.split(self.rng)
+
+        qargs = {}
+        q_bytes = 0
+        if q_kind == "dense":
+            qargs["q_logits"] = jnp.asarray(bufs["qlog"])
+            q_bytes = bufs["qlog"].nbytes
+        elif q_kind == "compact":
+            for name in ("logq_tok", "top_idx", "top_logq", "tail"):
+                qargs[name] = jnp.asarray(bufs[name])
+                q_bytes += bufs[name].nbytes
+        core_bytes = (bufs["draft"].nbytes + bufs["dlen"].nbytes
+                      + bufs["feed"].nbytes + bufs["pos"].nbytes
+                      + bufs["tags"].nbytes)
+        self.stats["h2d_bytes"] += core_bytes + q_bytes
+        self.stats["h2d_q_bytes"] += q_bytes
+
+        draft_d = jnp.asarray(bufs["draft"])
+        dlen_d = jnp.asarray(bufs["dlen"])
+        feed_d = jnp.asarray(bufs["feed"])
+        tags_d = jnp.asarray(bufs["tags"])
+
+        if self.paged:
+            acc_d, tok_d = self._dispatch_verify_paged(
+                items, bufs, feed_d, draft_d, dlen_d, kv, tags_d, tagged,
+                qargs, n, nb,
+            )
+        else:
+            self._count_dispatch("verify")
+            acc_d, tok_d, self.cache = self._fused_verify(
+                self.params, self.cache, jnp.asarray(bufs["slots"]),
+                feed_d, jnp.asarray(bufs["pos"]), draft_d, dlen_d,
+                kv, tags_d, qargs, method=self.method, tagged=tagged,
+            )
+        # ONE device->host transfer carries the whole epoch's results
+        acc, tok = jax.device_get((acc_d, tok_d))
+        self.stats["d2h_bytes"] += acc.nbytes + tok.nbytes
         dt = time.perf_counter() - t0
+
+        # batched commit: fed/last_token advance for all rows at once
+        sl = bufs["slots"][:n].astype(np.int64)
+        accs = np.asarray(acc[:n], np.int64)
+        toks = np.asarray(tok[:n], np.int64)
+        self.fed[sl] += accs + 1
+        self.last_token[sl] = toks
 
         results = []
         for i, it in enumerate(items):
-            L = int(acc[i])
-            self.fed[it.slot] += L + 1
-            self.last_token[it.slot] = int(tok[i])
+            L = int(accs[i])
             if self.paged:
                 # the accepted prefix (+ re-fed last token) now has live KV;
                 # rejected tail K/V is dead — roll back the length pointer
                 # and release any now-unreachable tail pages
-                self.tokens[it.slot].extend(int(t) for t in feed[i, : L + 1])
+                self.tokens[it.slot].extend(
+                    int(t) for t in bufs["feed"][i, : L + 1]
+                )
                 self.kv.set_len(it.slot, int(self.fed[it.slot]))
                 self.kv.trim_seq(it.slot)
             results.append(
                 VerifyOutcome(
                     slot=it.slot,
                     accept_len=L,
-                    token=int(tok[i]),
+                    token=int(toks[i]),
                     emitted=L + 1,
                     t_verify=dt,
                 )
             )
         self.stats["batches"] += 1
-        self.stats["tokens_verified"] += int(dlen[:n].sum())
-        self.stats["tokens_committed"] += int(acc[:n].sum()) + n
+        self.stats["tokens_verified"] += int(bufs["dlen"][:n].sum())
+        self.stats["tokens_committed"] += int(accs.sum()) + n
         return results
 
     # -- paged-target verification ---------------------------------------------
-    def _verify_paged(self, items, feed, slots, n, nb):
-        """One ragged pass over ``[x_last, y_1..y_K]`` per row through the
-        paged attention kernel.  May raise ``OutOfPages`` before any device
-        state is touched (the server requeues the batch)."""
-        T = feed.shape[1]
-        base = np.zeros(nb, np.int32)
-        tl = np.zeros(nb, np.int32)
-        for i, it in enumerate(items):
-            k = len(it.draft_tokens)
-            base[i] = self.fed[it.slot]
-            tl[i] = k + 1
-            self.kv.ensure_capacity(it.slot, int(self.fed[it.slot]) + k + 1)
+    def _dispatch_verify_paged(self, items, bufs, feed_d, draft_d, dlen_d,
+                               kv, tags_d, tagged, qargs, n, nb):
+        """Stage block tables and launch the fused paged program.  Page
+        capacity was already reserved by ``verify`` (OutOfPages raises
+        there, before any engine side effect)."""
         n_max = _bucket(max(self.kv.seq_pages(it.slot) for it in items), 1)
-        bt = np.zeros((nb, n_max), np.int32)
-        bt[:n] = self.kv.block_table([it.slot for it in items], n_max)
+        btb = self._pool(("bt", nb, n_max), {
+            "bt": ((nb, n_max), np.int32, 0),
+        })
+        btb["bt"][:n] = self.kv.block_table([it.slot for it in items], n_max)
+        btb["_hw"] = n
+        self.stats["h2d_bytes"] += btb["bt"].nbytes + bufs["tl"].nbytes
         cross = (
-            self._extras_gather(slots) if self.extras_cache is not None else None
+            self._extras_gather(bufs["slots"])
+            if self.extras_cache is not None else None
         )
-        logits, (kp, vp) = self._decode_paged(
-            self.params,
-            jnp.asarray(feed),
-            self.kv.k_pages,
-            self.kv.v_pages,
-            jnp.asarray(bt),
-            jnp.asarray(base),
-            jnp.asarray(tl),
-            cross,
+        self._count_dispatch("verify")
+        acc_d, tok_d, (kp, vp) = self._fused_verify(
+            self.params, feed_d, self.kv.k_pages, self.kv.v_pages,
+            jnp.asarray(btb["bt"]), jnp.asarray(bufs["pos"]),
+            jnp.asarray(bufs["tl"]), cross, draft_d, dlen_d,
+            kv, tags_d, qargs, method=self.method, tagged=tagged,
         )
         self.kv.k_pages, self.kv.v_pages = kp, vp
-        return logits
-
-    # -- recurrent-target support -------------------------------------------------
-    def _verify_stepwise(self, feed, sub, pos, dlen):
-        """Step the target one token at a time, stacking per-step states."""
-        T = feed.shape[1]
-        logits_steps = []
-        states = [sub]
-        cur = sub
-        for t in range(T):
-            lg, cur = self._decode(
-                self.params, jnp.asarray(feed[:, t : t + 1]), cur,
-                jnp.asarray(pos + t),
-            )
-            logits_steps.append(lg[:, 0])
-            states.append(cur)
-        p_logits = jnp.stack(logits_steps, axis=1)          # (nb, T, V)
-        stacked = jax.tree.map(lambda *xs: jnp.stack(xs, 0), *states)
-        return p_logits, stacked
-
-    def _select_states(self, stacked, n_steps):
-        """Pick state after step n_steps[b] per row (0 = before any step)."""
-        sel = jnp.asarray(n_steps, jnp.int32)
-
-        def pick(leaf, ax):
-            # leaf: (T+1, ...) with batch at ax+1
-            m = jnp.moveaxis(leaf, ax + 1, 0)               # (B, T+1, ...)
-            picked = jnp.take_along_axis(
-                m, sel.reshape(-1, *([1] * (m.ndim - 1))), axis=1
-            )[:, 0]
-            return picked if ax == 0 else jnp.moveaxis(picked, 0, ax)
-
-        return jax.tree.map(pick, stacked, self._bax)
+        return acc_d, tok_d

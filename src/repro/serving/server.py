@@ -492,12 +492,17 @@ class WISPServer:
         self,
         session_id: int,
         draft_tokens,
-        q_logits,
+        q_logits=None,
         *,
+        q_compact=None,
         now: float,
         t_draft: float,
         t_network: float,
     ) -> int:
+        """Queue a drafted block for verification.  The draft distribution
+        arrives as dense ``q_logits`` (exact residual), a `CompactQ` via
+        ``q_compact`` (O(K·C) wire payload, DESIGN.md §9), or neither
+        (greedy verification reads no q)."""
         self.now = max(self.now, now)
         s = self.sessions[session_id]
         s.t_draft_last = t_draft
@@ -517,7 +522,11 @@ class WISPServer:
             draft_len=nd,
             cached_len=int(self.engine.fed[s.slot]),
             alpha=s.alpha,
-            payload=(np.asarray(draft_tokens, np.int32), np.asarray(q_logits)),
+            payload=(
+                np.asarray(draft_tokens, np.int32),
+                None if q_logits is None else np.asarray(q_logits),
+                q_compact,
+            ),
             enqueued_at=now,
             round_index=s.rounds,
         )

@@ -5,11 +5,19 @@ in-process and the transport contributes *modelled* latency:
 
     t = base_rtt/2 + payload_bytes / bandwidth
 
-Payload accounting matches the wire protocol: uplink carries draft token ids
-plus the q-statistics needed by the acceptance rule (top-k sparsified logits,
-k=32 by default — the residual-distribution tail mass is renormalized, a
-standard lossless-in-practice compression the paper's SLED baseline also
-uses); downlink carries (accept_len, token).
+Payload accounting matches the wire protocol: uplink carries draft token
+ids plus the q-statistics the acceptance rule needs, downlink carries
+(accept_len, token).  The q payload depends on the representation the
+draft side chose (DESIGN.md §9):
+
+  * ``CompactQ``     — the actual compact table: per drafted token a
+    float32 token log-prob, C × (id: 4B + logit: 2B) top entries and a
+    float16 tail mass (O(K·C); exact accept test, bounded-error residual);
+  * dense q-logits / unspecified — the legacy modelled top-k
+    sparsification at ``q_topk`` entries (the residual-distribution tail
+    mass is renormalized, the lossless-in-practice compression the
+    paper's SLED baseline also uses);
+  * ``None``         — token ids only (a greedy verifier reads no q).
 """
 from __future__ import annotations
 
@@ -21,20 +29,32 @@ class NetworkModel:
     base_rtt: float = 0.010        # 10 ms edge<->cloud
     uplink_bw: float = 12.5e6      # 100 Mbit/s in bytes/s
     downlink_bw: float = 25e6      # 200 Mbit/s
-    q_topk: int = 32               # sparsified draft distribution entries
+    q_topk: int = 32               # modelled sparsification of dense q
 
-    def uplink_bytes(self, n_draft_tokens: int) -> int:
-        # token ids (4B) + topk (id 4B + logit 2B) per drafted token + header
-        return 64 + n_draft_tokens * (4 + self.q_topk * 6)
+    def uplink_bytes(self, n_draft_tokens: int, q="modelled") -> int:
+        """Uplink payload for one drafted block.  ``q`` selects the
+        q-statistics representation: a `CompactQ` (anything exposing
+        ``wire_bytes()``) is priced at its actual table size, ``None``
+        means ids-only (greedy), and the default prices the legacy
+        modelled top-k sparsification of dense logits."""
+        ids = n_draft_tokens * 4                     # token ids
+        if q is None:
+            q_bytes = 0
+        elif hasattr(q, "wire_bytes"):
+            q_bytes = q.wire_bytes()
+        else:
+            q_bytes = n_draft_tokens * self.q_topk * 6
+        return 64 + ids + q_bytes
 
     def downlink_bytes(self) -> int:
         return 64 + 8
 
-    def uplink_time(self, n_draft_tokens: int) -> float:
-        return self.base_rtt / 2 + self.uplink_bytes(n_draft_tokens) / self.uplink_bw
+    def uplink_time(self, n_draft_tokens: int, q="modelled") -> float:
+        return self.base_rtt / 2 + \
+            self.uplink_bytes(n_draft_tokens, q) / self.uplink_bw
 
     def downlink_time(self) -> float:
         return self.base_rtt / 2 + self.downlink_bytes() / self.downlink_bw
 
-    def round_trip(self, n_draft_tokens: int) -> float:
-        return self.uplink_time(n_draft_tokens) + self.downlink_time()
+    def round_trip(self, n_draft_tokens: int, q="modelled") -> float:
+        return self.uplink_time(n_draft_tokens, q) + self.downlink_time()

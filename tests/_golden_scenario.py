@@ -1,0 +1,142 @@
+"""Shared golden-stream scenario for the hot-path refactor regression suite.
+
+One deterministic serving run per (backend, policy, prefill-mode) cell:
+two sessions open against a tiny engine, then a fixed number of
+synthetic draft rounds flow through ``WISPServer.submit`` -> ``step``.
+Draft tokens and q-logits are derived from seeded generators keyed by
+(session, round) only — NOT from the committed stream — so every cell is
+a pure function of (engine seed, rng tags, model params) and the streams
+can be captured once and replayed across refactors.
+
+``python tests/_golden_scenario.py`` (re)generates
+``tests/golden/streams.json`` — run it BEFORE a hot-path refactor to pin
+the seed behavior, never after (the whole point is catching drift).
+Verification is ``method="residual"`` with ``deterministic_verify=True``
+(rng-tagged rows): the accept draws AND the residual correction sampling
+are exercised, which is exactly the math the fused dispatch must
+preserve bit-for-bit.
+"""
+from __future__ import annotations
+
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.estimator import EstimatorCoeffs
+from repro.models import build
+from repro.serving.engine import VerificationEngine
+from repro.serving.server import WISPServer
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "golden", "streams.json")
+
+COEFFS = EstimatorCoeffs(a=1e-4, b_compute=1e-8, b_read=1e-6, c=1e-3)
+
+#: backend name -> (config name, engine kwargs)
+BACKENDS = {
+    "dense": ("qwen2-7b", {"paged": False}),
+    "paged": ("qwen2-7b", {"paged": True, "page_size": 4}),
+    "recurrent": ("xlstm-350m", {}),
+}
+POLICIES = ("wisp", "fcfs")
+PREFILL_MODES = ("monolithic", "chunked")
+
+PROMPTS = {0: [1, 2, 3, 4, 5, 6], 1: [7, 8, 9, 3, 2, 1]}
+ROUNDS = 4
+K = 3
+
+
+@functools.lru_cache(maxsize=None)
+def _model_for(name: str):
+    cfg = get_config(name).reduced()
+    bundle = build(cfg)
+    if cfg.family in ("ssm", "hybrid"):
+        params = bundle.init(jax.random.PRNGKey(0), dtype=jnp.float32)
+    else:
+        params = bundle.init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _draft_for(vocab: int, sid: int, rnd: int):
+    """Synthetic draft block keyed by (session, round) only."""
+    rng = np.random.default_rng(10_000 + 997 * sid + rnd)
+    toks = rng.integers(0, vocab, size=K).astype(np.int32)
+    qlog = (rng.normal(size=(K, vocab)) * 1.5).astype(np.float32)
+    return toks, qlog
+
+
+def run_scenario(backend: str, policy: str, prefill: str,
+                 *, rounds: int = ROUNDS):
+    """Returns {session_id: committed token stream (list[int])}."""
+    name, ekw = BACKENDS[backend]
+    cfg, params = _model_for(name)
+    kw = dict(ekw)
+    if cfg.family in ("ssm", "hybrid"):
+        kw["cache_dtype"] = jnp.float32
+    engine = VerificationEngine(
+        cfg, params, max_slots=4, max_len=128, method="residual", seed=7, **kw
+    )
+    server = WISPServer(
+        engine, COEFFS, policy=policy, prefill=prefill,
+        prefill_chunk_tokens=4,
+    )
+    now = 0.0
+    streams: dict[int, list[int]] = {}
+    for sid, prompt in PROMPTS.items():
+        server.open_session(sid, prompt, slo_class=2, now=now)
+    # chunked mode: pump dispatch epochs until every prompt finished
+    while len(server.sessions) < len(PROMPTS):
+        server.step(now)
+        now += 0.005
+    for ev in server.pop_events():
+        if ev.kind == "FIRST_TOKEN":
+            streams[ev.session_id] = [int(ev.token)]
+    assert set(streams) == set(PROMPTS), "every session must have a first token"
+
+    for rnd in range(rounds):
+        drafts = {}
+        for sid in PROMPTS:
+            toks, qlog = _draft_for(cfg.vocab, sid, rnd)
+            drafts[sid] = toks
+            server.submit(sid, toks, qlog, now=now, t_draft=0.02,
+                          t_network=0.01)
+        while server.queue_depth:
+            verdicts = server.step(now)
+            now += 0.005
+            for v in verdicts:
+                toks = drafts[v.session_id]
+                streams[v.session_id].extend(
+                    int(t) for t in toks[: v.accept_len]
+                )
+                streams[v.session_id].append(int(v.token))
+        server.pop_events()
+    return {str(sid): s for sid, s in streams.items()}
+
+
+def all_cells():
+    for backend in BACKENDS:
+        for policy in POLICIES:
+            for prefill in PREFILL_MODES:
+                yield backend, policy, prefill
+
+
+def generate() -> dict:
+    out = {}
+    for backend, policy, prefill in all_cells():
+        key = f"{backend}/{policy}/{prefill}"
+        out[key] = run_scenario(backend, policy, prefill)
+        print(f"{key}: "
+              + ", ".join(f"s{sid}:{len(s)} tok" for sid, s in out[key].items()))
+    return out
+
+
+if __name__ == "__main__":
+    os.makedirs(os.path.dirname(GOLDEN_PATH), exist_ok=True)
+    streams = generate()
+    with open(GOLDEN_PATH, "w") as f:
+        json.dump(streams, f, indent=1, sort_keys=True)
+    print(f"wrote {GOLDEN_PATH}")
