@@ -1,0 +1,103 @@
+"""Fleet goodput under verifier churn (repro.fleet, ISSUE 6).
+
+Three measured rows on the same seed and workload (session churn until
+``--horizon``):
+
+  * ``1-verifier``   — the single-server baseline runtime;
+  * ``N-verifier``   — the fleet router, no failures (scale-up headroom);
+  * ``N-verifier/churn`` — the fleet with one verifier killed at
+    ``--fail-at`` (a fraction of the horizon): heartbeat detection,
+    session migration via committed-stream replay, hedged re-dispatch.
+
+The acceptance bar this table pins: the fleet's goodput **under churn**
+stays strictly above the healthy single-verifier baseline — losing a
+replica mid-run still beats never having had the replicas.
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.core.estimator import EstimatorCoeffs
+from repro.launch.serve import run_serving
+
+#: epoch pricing of a full-size (not ``--reduced``) target on one chip —
+#: the reduced model's analytic coefficients price epochs so cheap that a
+#: single verifier never saturates and the fleet comparison degenerates
+#: (verification must be the bottleneck for replicas to matter, exactly
+#: the regime the paper serves in)
+COEFFS = EstimatorCoeffs(a=2e-3, b_compute=1e-7, b_read=2e-5, c=8e-3)
+
+
+def _measure(*, devices, horizon, seed, policy, verifiers, fail_at):
+    r = run_serving(
+        devices=devices, policy=policy, verbose=False, seed=seed,
+        churn=True, horizon=horizon, k_max=4, coeffs=COEFFS,
+        prefill_mode="chunked", prefill_chunk_tokens=16,
+        verifiers=verifiers, fail_at=fail_at,
+    )
+    m = r["metrics"]
+    row = {
+        "goodput_tok_s": round(m.goodput(r["result"].horizon), 2),
+        "sessions": len(m.sessions),
+        "violations": m.violations(),
+        "waste_fraction": round(m.waste_fraction(), 3),
+    }
+    if verifiers > 1:
+        fs = r["server"].stats
+        row.update(
+            verifier_downs=fs["verifier_downs"],
+            migrations=fs["migrations"],
+            reopens=fs["reopens"],
+            redispatches=fs["redispatches"],
+        )
+    return row
+
+
+def run(quick: bool = True, verifiers: int = 3, fail_frac: float = 0.5,
+        policies: list | None = None) -> list[dict]:
+    devices = 6 if quick else 10
+    horizon = 1.0 if quick else 4.0
+    seed = 0
+    rows = []
+    for policy in policies or ["wisp"]:
+        base = _measure(devices=devices, horizon=horizon, seed=seed,
+                        policy=policy, verifiers=1, fail_at=())
+        healthy = _measure(devices=devices, horizon=horizon, seed=seed,
+                           policy=policy, verifiers=verifiers, fail_at=())
+        churn = _measure(
+            devices=devices, horizon=horizon, seed=seed, policy=policy,
+            verifiers=verifiers,
+            fail_at=((0, fail_frac * horizon, None),),
+        )
+        for system, row in (("1-verifier", base),
+                            (f"{verifiers}-verifier", healthy),
+                            (f"{verifiers}-verifier/churn", churn)):
+            rows.append({"table": "fleet(churn)", "system": system,
+                         "policy": policy, "n_devices": devices,
+                         "horizon_s": horizon, **row})
+        # the acceptance bar: a fleet that lost a verifier mid-run still
+        # out-serves the verifier that was never backed up
+        assert churn["verifier_downs"] >= 1, "failure injection never fired"
+        assert churn["goodput_tok_s"] > base["goodput_tok_s"], (
+            f"fleet goodput under churn ({churn['goodput_tok_s']}) must "
+            f"beat the 1-verifier baseline ({base['goodput_tok_s']}) "
+            f"[policy={policy}]"
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import print_rows, save_rows
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--verifiers", type=int, default=3)
+    ap.add_argument("--fail-at", type=float, default=0.5,
+                    help="kill verifier 0 at this fraction of the horizon")
+    ap.add_argument("--policy", nargs="+", default=None,
+                    help="scheduling policies to sweep (default: wisp)")
+    args = ap.parse_args()
+    rows = run(quick=not args.full, verifiers=args.verifiers,
+               fail_frac=args.fail_at, policies=args.policy)
+    save_rows("fleet", rows)
+    print_rows(rows)

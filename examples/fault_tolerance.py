@@ -33,6 +33,7 @@ def heartbeat_demo():
             mon.beat("verifier-1", t)
         mon.sweep(t)
     print(f"  alive: {mon.alive_peers()}")
+    mon.on_rejoin = lambda p, t: print(f"  t={t:4.1f}s  {p} REJOINED")
     mon.beat("verifier-1", 5.0)      # node restarts and rejoins
     print(f"  after rejoin: {mon.alive_peers()}\n")
 
@@ -52,7 +53,15 @@ def hedging_demo():
     print(f"  first commit wins: {hd.commit((0, 0))}")
     print(f"  duplicate dropped: {hd.commit((0, 0))}")
     # a replica dies outright: its in-flight work re-dispatches
-    hd.remove_replica("verifier-1")
+    plan = hd.remove_replica("verifier-1")
+    print(f"  re-dispatch plan after failure: {plan}")
+    # the last replica dying parks the work (degraded mode) instead of
+    # fake-re-dispatching it back to the dead node...
+    plan = hd.remove_replica("verifier-0")
+    print(f"  degraded={hd.degraded} orphans={sorted(hd.orphaned)}")
+    # ...until a rejoin reclaims the orphans
+    plan = hd.add_replica("verifier-0")
+    print(f"  reclaimed on rejoin: {plan}")
     print(f"  stats: {hd.stats}\n")
 
 

@@ -34,6 +34,10 @@ class EventKind(enum.IntEnum):
     REQUEST = 4         # a drafted block arrives at the server (post-uplink)
     DEV_STEP = 5        # one draft-model token completes on a device
     DISPATCH = 6        # server dispatch epoch (its own timer)
+    # Values 0-6 double as golden same-instant priorities — never renumber
+    # them.  New kinds take values 7+ and route through the runtime's
+    # ``_handle_event`` fallback.
+    HEARTBEAT = 7       # fleet: one verifier's liveness beat + failover sweep
 
 
 @dataclasses.dataclass

@@ -77,6 +77,11 @@ class _DeviceProc:
     gen: int = 0                      # event generation; stale steps dropped
     drafter: object = None            # live BlockDrafter while drafting
     inflight: object = None           # DraftResult awaiting its verdict
+    #: the in-flight block's REQUEST event already landed on the server —
+    #: i.e. the (possibly dead) verifier holds the round, so a fleet
+    #: migration must re-dispatch it; False means the REQUEST is still on
+    #: the uplink and will reach the *new* owner by itself
+    request_arrived: bool = False
     round_start: float = 0.0          # when the stream head last advanced
     next_step_at: float = 0.0         # completion time of the in-flight token
     last_t_draft: float = 0.0         # effective draft latency submitted
@@ -213,6 +218,12 @@ class ClusterRuntime:
         # (monolithic), or capacity-queued (any mode)
         dev.state = "admission"
         self._pending_open[sid] = prompt
+        self._admit_session(dev, sid, prompt, t)
+
+    def _admit_session(self, dev: _DeviceProc, sid: int, prompt: list,
+                       t: float):
+        """Hand the new session to the serving tier (the fleet runtime
+        overrides this with prefix-locality routing)."""
         self.server.open_session(
             sid, prompt, slo_class=dev.profile.slo_class,
             draft_speed=dev.profile.draft_speed, queue_on_full=True, now=t,
@@ -260,16 +271,10 @@ class ClusterRuntime:
             ttft=dev.ttft,
         )
         self.metrics.close_session(rec)
-        self.server.close_session(sid, now=t)
+        self._server_close(sid, t)
         self._by_session.pop(sid, None)
         dev.sessions_done += 1
         dev.clear_spec()
-        # the close may have admitted a capacity-queued session
-        self._drain_server_events(t)
-        # chunked mode: a capacity-queued session admitted by this close
-        # just enqueued its first prefill chunk — make sure an epoch fires
-        if self.server.queue_depth and not self.verifier_busy:
-            self._schedule_dispatch(t)
         if self.cfg.rounds is not None:          # fixed-work mode: retire
             dev.state = "done"
             self._done_devices += 1
@@ -277,6 +282,17 @@ class ClusterRuntime:
             dev.state = "think"
             self.events.push(t + dev.workload.think_time(),
                              EventKind.SESSION_OPEN, dev.idx)
+
+    def _server_close(self, sid: int, t: float):
+        """Tear the session down on the serving tier (the fleet runtime
+        overrides this to route the close to the session's owner)."""
+        self.server.close_session(sid, now=t)
+        # the close may have admitted a capacity-queued session
+        self._drain_server_events(t)
+        # chunked mode: a capacity-queued session admitted by this close
+        # just enqueued its first prefill chunk — make sure an epoch fires
+        if self.server.queue_depth and not self.verifier_busy:
+            self._schedule_dispatch(t)
 
     def _drain_server_events(self, t: float, t_deliver: float | None = None):
         """Route the server's typed event stream (docs/API.md) onto the
@@ -330,6 +346,7 @@ class ClusterRuntime:
         res = dev.device.finish_round(dev.drafter)
         dev.drafter = None
         dev.inflight = res
+        dev.request_arrived = False
         dev.last_t_draft = t - dev.round_start
         # price the q representation that actually rides this request
         # (CompactQ table / modelled dense top-k / ids only, DESIGN.md §9)
@@ -385,6 +402,7 @@ class ClusterRuntime:
 
     def _on_request(self, dev: _DeviceProc, t: float):
         res = dev.inflight
+        dev.request_arrived = True
         self.server.submit(
             dev.session_id, res.tokens, res.q_logits,
             q_compact=res.q_compact,
@@ -393,7 +411,7 @@ class ClusterRuntime:
         if not self.verifier_busy:
             self._schedule_dispatch(t)
 
-    def _on_dispatch(self, t: float):
+    def _on_dispatch(self, t: float, payload=None):
         self._disp_t = None
         if self.verifier_busy:
             return
@@ -422,7 +440,7 @@ class ClusterRuntime:
                 # closed): the server's own timer retries next epoch
                 self._schedule_dispatch(t + self.cfg.dispatch_interval)
 
-    def _on_gpu_done(self, t: float):
+    def _on_gpu_done(self, t: float, payload=None):
         self.verifier_busy = False
         # monolithic mode: a blocked open_session's prefill span takes the
         # engine before any dispatch epoch can (it is a blocking call)
@@ -437,6 +455,7 @@ class ClusterRuntime:
         if dev is None or dev.inflight is None:
             return                      # session closed under us
         res, dev.inflight = dev.inflight, None
+        dev.request_arrived = False
         dev.gen += 1                    # halt speculation events
         overlap, guess_steps = dev.spec_tokens_done, dev.guess_steps_done
         committed = dev.device.resolve_verdict(
@@ -502,11 +521,23 @@ class ClusterRuntime:
             dev.clear_spec()
             self._begin_block(dev, t)
 
+    # -- subclass hooks -------------------------------------------------------
+    def _before_run(self) -> None:
+        """Called once before the first event fires (the fleet runtime
+        seeds its recurring per-verifier heartbeat events here)."""
+
+    def _handle_event(self, ev) -> None:
+        """Fallback for event kinds the base loop does not know (values
+        ≥ 7, e.g. HEARTBEAT — the 0–6 kinds double as same-instant
+        priorities and are handled inline)."""
+        raise RuntimeError(f"unhandled event kind {ev.kind!r}")
+
     # -- main loop -----------------------------------------------------------
     def run(self) -> ClusterResult:
         cfg = self.cfg
         if cfg.rounds is None and cfg.horizon is None:
             raise ValueError("churn mode needs cfg.horizon")
+        self._before_run()
         for dev in self.devs:
             self.events.push(0.0, EventKind.SESSION_OPEN, dev.idx)
         end = 0.0
@@ -530,13 +561,15 @@ class ClusterRuntime:
             elif k == EventKind.REQUEST:
                 self._on_request(self.devs[ev.payload], ev.time)
             elif k == EventKind.DISPATCH:
-                self._on_dispatch(ev.time)
+                self._on_dispatch(ev.time, ev.payload)
             elif k == EventKind.GPU_DONE:
-                self._on_gpu_done(ev.time)
+                self._on_gpu_done(ev.time, ev.payload)
             elif k == EventKind.VERDICT:
                 self._on_verdict(ev.payload, ev.time)
             elif k == EventKind.FIRST_TOKEN:
                 self._on_first_token(ev.payload, ev.time)
+            else:
+                self._handle_event(ev)
             if cfg.rounds is not None and self._done_devices == len(self.devs):
                 break
         if any(d.state in ("admission", "prefill") for d in self.devs) \

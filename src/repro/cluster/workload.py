@@ -71,6 +71,24 @@ class ClusterConfig:
     #: prices whatever representation actually rides the request.
     q_mode: str = "dense"
     q_top_c: int = 64
+    # -- verifier fleet (repro.fleet; ignored by the single-server runtime) -
+    #: number of verifier replicas behind the prefix-locality router
+    verifiers: int = 1
+    #: deterministic failure injection: (verifier_index, t_fail,
+    #: t_recover_or_None) tuples fed to `repro.runtime.FailurePlan` — the
+    #: verifier stops executing/answering in [t_fail, t_recover)
+    fail_at: tuple = ()
+    #: deterministic straggler injection: (verifier_index, t0, t1, factor)
+    #: tuples — the verifier's epochs run ``factor``x slower in [t0, t1)
+    straggle: tuple = ()
+    #: seconds between per-verifier liveness beats (also the failover
+    #: sweep cadence floor; sweeps additionally run every dispatch epoch)
+    heartbeat_interval: float = 0.05
+    #: missed-beat window after which a verifier is declared dead
+    heartbeat_timeout: float = 0.15
+    #: hedge an in-flight round past hedge_factor x (eta + hedge_guard)
+    hedge_factor: float = 8.0
+    hedge_guard: float = 0.01
 
 
 @dataclasses.dataclass

@@ -1,0 +1,67 @@
+"""Verifier fleet: prefix-locality routing, heartbeat failover, hedged
+re-dispatch (docs/ARCHITECTURE.md §7, DESIGN.md §10).
+
+``build_verifier_fleet`` constructs N independent `WISPServer` verifiers
+— same target params, same engine seed, so they are functionally
+interchangeable under rng-tagged verification — behind one `FleetRouter`;
+`FleetRuntime` drives the ensemble on the cluster's virtual clock with
+deterministic failure/straggler injection (`ClusterConfig.fail_at` /
+``straggle``).
+"""
+from __future__ import annotations
+
+from repro.fleet.router import FleetCapacityError, FleetRouter
+from repro.fleet.runtime import FleetRuntime
+
+
+def build_verifier_fleet(
+    model_cfg,
+    tparams,
+    n_verifiers: int,
+    coeffs,
+    *,
+    max_slots: int,
+    max_len: int,
+    method: str = "residual",
+    policy="wisp",
+    sched_cfg=None,
+    network=None,
+    prefill: str = "monolithic",
+    prefill_chunk_tokens: int = 256,
+    slo_classes=None,
+    ttft_slo=None,
+    engine_seed: int = 0,
+    heartbeat_timeout: float = 0.15,
+    hedge_factor: float = 8.0,
+    hedge_guard: float = 0.01,
+) -> FleetRouter:
+    """N same-seed verifiers (each its own engine + page pool + scheduler
+    instance) behind a prefix-locality router.  ``max_slots`` is PER
+    VERIFIER — the fleet's aggregate capacity is ``n_verifiers x
+    max_slots`` — and every verifier shares ``tparams`` (one trained
+    target model, replicated), which is what makes migration lossless."""
+    from repro.serving.engine import VerificationEngine
+    from repro.serving.server import WISPServer
+
+    verifiers = {}
+    for i in range(int(n_verifiers)):
+        engine = VerificationEngine(
+            model_cfg, tparams, max_slots=max_slots, max_len=max_len,
+            method=method, seed=engine_seed,
+        )
+        verifiers[f"v{i}"] = WISPServer(
+            engine, coeffs, policy=policy, sched_cfg=sched_cfg,
+            network=network, prefill=prefill,
+            prefill_chunk_tokens=prefill_chunk_tokens,
+            slo_classes=slo_classes, ttft_slo=ttft_slo,
+        )
+    return FleetRouter(verifiers, heartbeat_timeout=heartbeat_timeout,
+                       hedge_factor=hedge_factor, hedge_guard=hedge_guard)
+
+
+__all__ = [
+    "FleetCapacityError",
+    "FleetRouter",
+    "FleetRuntime",
+    "build_verifier_fleet",
+]

@@ -1,0 +1,296 @@
+"""Multi-verifier cluster runtime: per-verifier clocks + failure injection.
+
+`FleetRuntime` extends the single-server `ClusterRuntime` with a verifier
+*fleet* behind a `FleetRouter`:
+
+  * every verifier has its own busy clock (``GPU_DONE``/``DISPATCH``
+    events carry the verifier id) and its own dispatch-epoch timer, so
+    epochs on different verifiers overlap in virtual time;
+  * a recurring ``HEARTBEAT`` event per verifier (``EventKind`` value 7 —
+    the golden 0–6 priorities are untouched) beats the router's monitor
+    while the injected `FailurePlan` says the verifier is up, and runs the
+    failover sweep; the sweep also runs at the top of every dispatch
+    epoch, so detection latency is bounded by min(heartbeat_interval,
+    dispatch cadence) past the timeout;
+  * failure injection is deterministic config (`ClusterConfig.fail_at` /
+    ``straggle``): a down verifier executes no epochs and any epoch that
+    would have completed after its death never delivers (the verdicts are
+    *lost*, exercising the re-dispatch path);
+  * when a verifier is declared dead, its never-started sessions re-open
+    elsewhere and its streaming sessions migrate — committed stream
+    replayed as an estimator-priced prefill on the destination's clock —
+    after which any round the dead verifier held is re-submitted to the
+    new owner under the same (session_id, round_index) key.  Straggling
+    rounds that blow through the hedge guard take the same
+    migrate-and-resubmit path.
+
+Losslessness (DESIGN.md §10): verification draws are keyed by
+(session_id, committed_len) against a never-advanced rng base and prefill
+first-tokens are argmax, so same-seed verifier engines are *functionally
+interchangeable* — committed streams are invariant to fleet size,
+routing, failures and hedging; only timing changes.  The chaos test
+(tests/test_fleet.py) pins this byte-for-byte.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.cluster.events import EventKind
+from repro.cluster.runtime import ClusterRuntime
+from repro.core.estimator import BatchShape
+from repro.runtime.failure import FailurePlan
+
+_EPS = 1e-12
+
+
+class FleetRuntime(ClusterRuntime):
+    """Drives EdgeDevices + a FleetRouter of verifiers on a virtual clock."""
+
+    def __init__(self, router, edge_devices, fleet, cfg, *, vocab: int):
+        if cfg.prefill_mode == "monolithic":
+            raise ValueError(
+                "FleetRuntime supports prefill_mode 'zero' and 'chunked'; "
+                "monolithic prefill is a single-verifier blocking span"
+            )
+        super().__init__(router, edge_devices, fleet, cfg, vocab=vocab)
+        self.router = router
+        self.vids = list(router.verifiers)
+        self.plan = FailurePlan([
+            (f"v{int(i)}", float(t0), None if t1 is None else float(t1))
+            for (i, t0, t1) in cfg.fail_at
+        ])
+        self._straggle = [
+            (f"v{int(i)}", float(t0), float(t1), float(f))
+            for (i, t0, t1, f) in cfg.straggle
+        ]
+        self._busy_until = {vid: 0.0 for vid in self.vids}
+        self._disp_at: dict[str, float | None] = {v: None for v in self.vids}
+        #: MIGRATED / VERIFIER_DOWN events, in delivery order (observability)
+        self.fleet_log: list = []
+
+    # -- per-verifier clocks --------------------------------------------------
+    def _busy(self, vid: str, t: float) -> bool:
+        return t + _EPS < self._busy_until[vid]
+
+    def _occupy(self, vid: str, t: float, dt: float) -> None:
+        """Extend the verifier's busy span by ``dt`` (spans chain: a
+        migration replay landing during an epoch queues behind it) and
+        arm a GPU_DONE at the new end; earlier GPU_DONEs for the old end
+        are superseded (ignored on pop)."""
+        end = max(t, self._busy_until[vid]) + dt
+        self._busy_until[vid] = end
+        self.events.push(end, EventKind.GPU_DONE, vid)
+
+    def _sched_dispatch(self, vid: str, t: float) -> None:
+        cur = self._disp_at.get(vid)
+        if cur is not None and cur <= t:
+            return
+        self._disp_at[vid] = t
+        self.events.push(t, EventKind.DISPATCH, vid)
+
+    def _kick(self, vid: str, t: float) -> None:
+        if (self.router.queue_depth(vid) and not self._busy(vid, t)
+                and self.plan.is_up(vid, t)):
+            self._sched_dispatch(vid, t)
+
+    def _verify_time_v(self, vid: str, served, t: float) -> float:
+        """Per-verifier epoch duration: that verifier's scheduler pricing,
+        shared jitter, and any injected straggle window."""
+        dt = self.router.verifiers[vid].scheduler.batch_time(served)
+        if self.cfg.latency_noise_sigma:
+            dt *= float(np.exp(self._noise_rng.normal(
+                0.0, self.cfg.latency_noise_sigma)))
+        for svid, t0, t1, f in self._straggle:
+            if svid == vid and t0 <= t < t1:
+                dt *= f
+        return dt
+
+    # -- heartbeats + failover sweep -----------------------------------------
+    def _before_run(self) -> None:
+        for vid in self.vids:
+            self.events.push(self.cfg.heartbeat_interval,
+                             EventKind.HEARTBEAT, vid)
+
+    def _handle_event(self, ev) -> None:
+        if ev.kind == EventKind.HEARTBEAT:
+            self._on_heartbeat(ev.payload, ev.time)
+        else:
+            super()._handle_event(ev)
+
+    def _on_heartbeat(self, vid: str, t: float) -> None:
+        if self.plan.is_up(vid, t):
+            self.router.beat(vid, t)        # fires on_rejoin on recovery
+        self._fleet_sweep(t)
+        if not (self.cfg.rounds is not None
+                and self._done_devices == len(self.devs)):
+            self.events.push(t + self.cfg.heartbeat_interval,
+                             EventKind.HEARTBEAT, vid)
+
+    def _fleet_sweep(self, t: float) -> None:
+        """Death detection + straggler hedging (runs every heartbeat and
+        at the top of every dispatch epoch)."""
+        for vid in self.router.sweep(t):
+            self._on_verifier_down(vid, t)
+        for (sid, rnd), backup in self.router.sweep_hedges(t):
+            dev = self._by_session.get(sid)
+            if (dev is None or dev.inflight is None
+                    or not dev.request_arrived or dev.rounds_done != rnd):
+                continue                    # round resolved/closed under us
+            self._migrate(dev, t, target=backup)
+        self._drain_fleet(t)
+
+    def _on_verifier_down(self, vid: str, t: float) -> None:
+        # Never-started sessions first: their cancellation has no side
+        # effects, so the later closes' _try_admit retries find an empty
+        # queue instead of re-admitting onto the dead verifier.
+        started = []
+        for sid in self.router.sessions_on(vid):
+            dev = self._by_session.get(sid)
+            if dev is None:
+                continue
+            if dev.state in ("admission", "prefill"):
+                self.router.reopen_session(sid, self._pending_open[sid],
+                                           now=t)
+            elif dev.state in ("draft", "wait"):
+                started.append(dev)
+        for dev in started:
+            self._migrate(dev, t)
+        self.router.scrub(vid)
+
+    def _migrate(self, dev, t: float, target: str | None = None) -> None:
+        """Move a streaming session to a new verifier: replay its
+        committed stream (estimator-priced on the destination's clock,
+        prefix-cache hits come off the bill) and re-dispatch the round the
+        old owner was holding, if any."""
+        sid = dev.session_id
+        committed = list(dev.device.session.committed)
+        dst, replayed = self.router.migrate_session(
+            sid, committed, rounds=dev.rounds_done, now=t, target=target,
+        )
+        if replayed > 0:
+            dt = self.router.coeffs.predict([BatchShape(
+                new_tokens=replayed,
+                cached_tokens=len(committed) - 1 - replayed,
+            )])
+            self._occupy(dst, t, float(dt))
+        if dev.inflight is not None and dev.request_arrived:
+            res = dev.inflight
+            self.router.resubmit(
+                sid, res.tokens, res.q_logits, q_compact=res.q_compact,
+                now=t, t_draft=dev.last_t_draft, t_network=dev.last_t_net,
+            )
+        self._kick(dst, t)
+
+    # -- serving-tier hooks (routed versions of the base seams) ---------------
+    def _admit_session(self, dev, sid, prompt, t: float) -> None:
+        vid = self.router.open_session(
+            sid, prompt, slo_class=dev.profile.slo_class,
+            draft_speed=dev.profile.draft_speed, now=t,
+        )
+        self._drain_fleet(t)
+        if self.cfg.prefill_mode == "chunked" and dev.state == "admission":
+            self._kick(vid, t)
+
+    def _server_close(self, sid: int, t: float) -> None:
+        vid = self.router.close_session(sid, now=t)
+        self._drain_fleet(t)
+        if vid is not None:
+            self._kick(vid, t)
+
+    def _on_request(self, dev, t: float) -> None:
+        res = dev.inflight
+        if res is None or dev.session_id not in self.router.owner:
+            return                          # closed/raced under us
+        dev.request_arrived = True
+        vid = self.router.submit(
+            dev.session_id, res.tokens, res.q_logits, q_compact=res.q_compact,
+            now=t, t_draft=dev.last_t_draft, t_network=dev.last_t_net,
+        )
+        self._drain_fleet(t)
+        self._kick(vid, t)
+
+    # -- event handlers -------------------------------------------------------
+    def _on_dispatch(self, t: float, payload=None) -> None:
+        vid = payload
+        self._disp_at[vid] = None
+        self._fleet_sweep(t)                # failover check every epoch
+        if not self.plan.is_up(vid, t):
+            return                          # a down verifier runs nothing
+        if self._busy(vid, t):
+            return
+        srv = self.router.verifiers[vid]
+        if not srv.queue_depth:
+            return
+        self.router.step(
+            vid, t, verify_time=lambda served: self._verify_time_v(
+                vid, served, t),
+        )
+        self.metrics.sample_queue(
+            t, sum(self.router.queue_depth(v) for v in self.vids)
+        )
+        if srv.last_served:
+            dt = srv.last_verify_time
+            self._occupy(vid, t, dt)
+            self._drain_fleet(
+                t, src=vid, t_sent=t + dt,
+                t_deliver=t + dt + self.net.downlink_time(),
+            )
+        else:
+            self._drain_fleet(t)
+            if srv.queue_depth:
+                self._sched_dispatch(vid, t + self.cfg.dispatch_interval)
+
+    def _on_gpu_done(self, t: float, payload=None) -> None:
+        vid = payload
+        if self._busy(vid, t):
+            return                          # superseded by a longer span
+        self._kick(vid, t)
+
+    def _on_verdict(self, payload, t: float) -> None:
+        vid, t_sent, v = payload
+        if not self.plan.is_up(vid, t_sent):
+            # the epoch would have completed after the verifier died: the
+            # verdict was never sent (re-dispatch will resolve the round)
+            self.router.note_lost_verdict()
+            return
+        if not self.router.deliver_verdict(vid, v):
+            return                          # stale owner / duplicate round
+        super()._on_verdict(v, t)
+
+    def _on_first_token(self, payload, t: float) -> None:
+        vid, sid, first = payload
+        if self.router.owner.get(sid) != vid:
+            return                          # stale: session moved on
+        super()._on_first_token((sid, first), t)
+
+    # -- event routing --------------------------------------------------------
+    def _drain_fleet(self, t: float, src: str | None = None,
+                     t_sent: float | None = None,
+                     t_deliver: float | None = None) -> None:
+        """Route the merged fleet event stream onto the virtual clock.
+        Events from the epoch just executed on ``src`` are delivered at
+        ``t_deliver`` (epoch end + downlink) and stamped with ``t_sent``
+        (epoch end) for the died-before-sending check; everything else —
+        admission retries, instant zero-mode first tokens — lands now."""
+        for vid, ev in self.router.pop_events():
+            if ev.kind == "VERDICT":
+                from_epoch = vid == src and t_deliver is not None
+                td = t_deliver if from_epoch else t
+                ts = t_sent if from_epoch else t
+                self.events.push(td, EventKind.VERDICT,
+                                 (vid, ts, ev.verdict))
+            elif ev.kind == "FIRST_TOKEN":
+                from_epoch = vid == src and t_deliver is not None
+                if self.cfg.prefill_mode == "chunked" and from_epoch:
+                    self.events.push(t_deliver, EventKind.FIRST_TOKEN,
+                                     (vid, ev.session_id, ev.token))
+                else:
+                    self._on_first_token((vid, ev.session_id, ev.token), t)
+            elif ev.kind in ("MIGRATED", "VERIFIER_DOWN"):
+                self.fleet_log.append(ev)
+            # ADMITTED / PREEMPTED / TTFT_RECORD / CLOSED: no runtime action
+
+    def _drain_server_events(self, t, t_deliver=None):  # pragma: no cover
+        raise NotImplementedError(
+            "fleet runtime drains through _drain_fleet"
+        )

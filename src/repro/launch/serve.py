@@ -77,6 +77,13 @@ def run_serving(
     ttft_slo: dict | None = None,
     think_time_mean: float = 0.25,
     response_len_mean: float = 24.0,
+    verifiers: int = 1,
+    fail_at: tuple = (),
+    straggle: tuple = (),
+    heartbeat_interval: float = 0.05,
+    heartbeat_timeout: float = 0.15,
+    hedge_factor: float = 8.0,
+    hedge_guard: float = 0.01,
 ):
     """Run the WISP serving stack; returns a dict with per-device ``stats``,
     aggregate ``total``, the ``edges`` / ``server`` objects and — in
@@ -144,19 +151,44 @@ def run_serving(
         response_len_mean=response_len_mean,
         q_mode=q_mode,
         q_top_c=q_top_c,
+        verifiers=verifiers,
+        fail_at=tuple(fail_at),
+        straggle=tuple(straggle),
+        heartbeat_interval=heartbeat_interval,
+        heartbeat_timeout=heartbeat_timeout,
+        hedge_factor=hedge_factor,
+        hedge_guard=hedge_guard,
     )
     fleet = build_fleet(ccfg, tcfg.vocab)
 
-    engine = VerificationEngine(tcfg, tparams, max_slots=devices,
-                                max_len=max_len, method=method)
     coeffs = coeffs or analytic_tpu_coeffs(tcfg)
     net = NetworkModel()
-    server = WISPServer(
-        engine, coeffs, policy=policy, network=net,
-        slo_classes=slo_speeds, sched_cfg=sched_cfg,
-        prefill="chunked" if prefill_mode == "chunked" else "monolithic",
-        prefill_chunk_tokens=prefill_chunk_tokens, ttft_slo=ttft_slo,
-    )
+    if verifiers > 1:
+        if sync:
+            raise ValueError("--sync is single-verifier only")
+        from repro.fleet import build_verifier_fleet
+
+        router = build_verifier_fleet(
+            tcfg, tparams, verifiers, coeffs, max_slots=devices,
+            max_len=max_len, method=method, policy=policy,
+            sched_cfg=sched_cfg, network=net,
+            prefill="chunked" if prefill_mode == "chunked" else "monolithic",
+            prefill_chunk_tokens=prefill_chunk_tokens,
+            slo_classes=slo_speeds, ttft_slo=ttft_slo,
+            heartbeat_timeout=heartbeat_timeout,
+            hedge_factor=hedge_factor, hedge_guard=hedge_guard,
+        )
+        engine = next(iter(router.verifiers.values())).engine
+        server = router
+    else:
+        engine = VerificationEngine(tcfg, tparams, max_slots=devices,
+                                    max_len=max_len, method=method)
+        server = WISPServer(
+            engine, coeffs, policy=policy, network=net,
+            slo_classes=slo_speeds, sched_cfg=sched_cfg,
+            prefill="chunked" if prefill_mode == "chunked" else "monolithic",
+            prefill_chunk_tokens=prefill_chunk_tokens, ttft_slo=ttft_slo,
+        )
 
     edges = [
         EdgeDevice(
@@ -172,9 +204,17 @@ def run_serving(
         return _run_lockstep(server, edges, fleet, rounds, net, verbose)
 
     t_wall0 = time.time()
-    runtime = ClusterRuntime(server, edges, fleet, ccfg, vocab=tcfg.vocab)
+    if verifiers > 1:
+        from repro.fleet import FleetRuntime
+
+        runtime = FleetRuntime(router, edges, fleet, ccfg, vocab=tcfg.vocab)
+    else:
+        runtime = ClusterRuntime(server, edges, fleet, ccfg, vocab=tcfg.vocab)
     result = runtime.run()
     wall = time.time() - t_wall0
+    engines = server.engines if verifiers > 1 else [engine]
+    n_batches = sum(e.stats["batches"] for e in engines)
+    n_chunks = sum(e.stats["prefill_chunks"] for e in engines)
 
     m = result.metrics
     stats = [m.per_session.get(sp.idx, WDTStats()) for sp in fleet] \
@@ -199,7 +239,7 @@ def run_serving(
             )
             print(f"[serve] ttft: p50={m.ttft_quantile(0.5)*1e3:.1f} ms "
                   f"p99={m.ttft_quantile(0.99)*1e3:.1f} ms "
-                  f"prefill_chunks={engine.stats['prefill_chunks']} "
+                  f"prefill_chunks={n_chunks} "
                   f"ttft_violations={ttft_viol}")
         print(f"[serve] drafted={total.drafted} accepted={total.accepted} "
               f"committed={total.committed} acceptance={total.acceptance_rate:.3f}")
@@ -213,7 +253,14 @@ def run_serving(
         print(f"[serve] sessions={len(m.sessions)} "
               f"violations={m.violations()} "
               f"deadline_misses={m.deadline_violations()} "
-              f"engine batches={engine.stats['batches']} wall={wall:.1f}s")
+              f"engine batches={n_batches} wall={wall:.1f}s")
+        if verifiers > 1:
+            fs = server.stats
+            print(f"[serve] fleet: verifiers={verifiers} "
+                  f"downs={fs['verifier_downs']} rejoins={fs['rejoins']} "
+                  f"migrations={fs['migrations']} reopens={fs['reopens']} "
+                  f"redispatches={fs['redispatches']} "
+                  f"lost_verdicts={fs['lost_verdicts']}")
         for i, dev in enumerate(edges[:4]):
             if dev.session is not None:
                 print(f"[serve] dev{i} response: {dev.response_tokens[:12]}")
@@ -346,7 +393,33 @@ def main():
                          "top-C table (O(K*C) uplink), or none (greedy)")
     ap.add_argument("--q-top-c", type=int, default=64,
                     help="top-C table width for --q-mode compact")
+    ap.add_argument("--verifiers", type=int, default=1,
+                    help="verifier replicas behind the prefix-locality "
+                         "router (repro.fleet); 1 = single-server runtime")
+    ap.add_argument("--fail-at", action="append", default=[],
+                    metavar="IDX:T0[:T1]",
+                    help="kill verifier IDX at virtual time T0 (recover at "
+                         "T1 if given); repeatable")
+    ap.add_argument("--straggle", action="append", default=[],
+                    metavar="IDX:T0:T1:FACTOR",
+                    help="slow verifier IDX's epochs by FACTOR in [T0,T1); "
+                         "repeatable")
     args = ap.parse_args()
+
+    def _parse_fail(spec: str) -> tuple:
+        parts = spec.split(":")
+        if len(parts) not in (2, 3):
+            raise SystemExit(f"--fail-at wants IDX:T0[:T1], got {spec!r}")
+        return (int(parts[0]), float(parts[1]),
+                float(parts[2]) if len(parts) == 3 else None)
+
+    def _parse_straggle(spec: str) -> tuple:
+        parts = spec.split(":")
+        if len(parts) != 4:
+            raise SystemExit(f"--straggle wants IDX:T0:T1:FACTOR, got {spec!r}")
+        return (int(parts[0]), float(parts[1]), float(parts[2]),
+                float(parts[3]))
+
     pred = RejectionPredictor.load(args.predictor_path) if args.predictor_path else None
     run_serving(
         args.target, args.draft, devices=args.devices, rounds=args.rounds,
@@ -356,6 +429,9 @@ def main():
         prompt_len=args.prompt_len, prefill_mode=args.prefill,
         prefill_chunk_tokens=args.prefill_chunk,
         q_mode=args.q_mode, q_top_c=args.q_top_c,
+        verifiers=args.verifiers,
+        fail_at=tuple(_parse_fail(s) for s in args.fail_at),
+        straggle=tuple(_parse_straggle(s) for s in args.straggle),
     )
 
 

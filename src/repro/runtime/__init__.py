@@ -6,14 +6,16 @@ from repro.runtime.checkpoint import (
     restore_checkpoint,
     save_checkpoint,
 )
-from repro.runtime.failure import HeartbeatMonitor
-from repro.runtime.straggler import HedgedDispatcher
+from repro.runtime.failure import FailurePlan, HeartbeatMonitor
+from repro.runtime.straggler import HedgedDispatcher, NoReplicasError
 
 __all__ = [
     "CheckpointManager",
     "save_checkpoint",
     "restore_checkpoint",
     "latest_step",
+    "FailurePlan",
     "HeartbeatMonitor",
     "HedgedDispatcher",
+    "NoReplicasError",
 ]

@@ -25,11 +25,13 @@ class PeerState:
 class HeartbeatMonitor:
     """Declares a peer dead after ``timeout`` without a heartbeat."""
 
-    def __init__(self, *, timeout: float = 5.0, on_death=None):
+    def __init__(self, *, timeout: float = 5.0, on_death=None, on_rejoin=None):
         self.timeout = timeout
         self.on_death = on_death
+        self.on_rejoin = on_rejoin
         self.peers: dict[str, PeerState] = {}
         self.deaths: list[tuple[str, float]] = []
+        self.rejoins: list[tuple[str, float]] = []
 
     def register(self, peer_id: str, now: float):
         self.peers[peer_id] = PeerState(peer_id, last_beat=now)
@@ -43,6 +45,9 @@ class HeartbeatMonitor:
         p.missed = 0
         if not p.alive:  # peer rejoined (elastic scale-up path)
             p.alive = True
+            self.rejoins.append((peer_id, now))
+            if self.on_rejoin:
+                self.on_rejoin(peer_id, now)
 
     def sweep(self, now: float) -> list[str]:
         """Returns peers newly declared dead at ``now``."""

@@ -11,11 +11,21 @@ verification requests are stateless *given the KV prefix*, and prefix KV is
 reconstructable from the committed tokens, so hedging is safe — the backup
 replica cold-starts the prefix (cost modeled by the estimator's N_linear
 term) and still beats a wedged primary.
+
+Degraded mode: when the last replica dies there is nowhere to re-dispatch.
+``remove_replica`` then parks the dead replica's in-flight work in
+``orphaned`` and sets ``degraded`` — an explicit signal the caller must
+handle (fail the requests, or wait for ``add_replica`` to reclaim them) —
+instead of silently "re-dispatching" back to the dead replica.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Callable, Optional
+
+
+class NoReplicasError(RuntimeError):
+    """Raised when a dispatch is requested but no replica is in rotation."""
 
 
 @dataclasses.dataclass
@@ -43,52 +53,101 @@ class HedgedDispatcher:
         self.hedge_factor = hedge_factor
         self.on_hedge = on_hedge
         self.inflight: dict[tuple, InFlight] = {}
+        self.orphaned: dict[tuple, InFlight] = {}
         self.committed: set[tuple] = set()
-        self.stats = {"dispatched": 0, "hedged": 0, "dup_commits_dropped": 0}
+        self.stats = {"dispatched": 0, "hedged": 0, "dup_commits_dropped": 0,
+                      "hedges_skipped": 0, "orphaned": 0}
         self._rr = 0
 
     # -- replica selection ---------------------------------------------------
-    def pick_replica(self, exclude: str | None = None) -> str:
+    @property
+    def degraded(self) -> bool:
+        """True when in-flight work is parked with no replica to run it."""
+        return bool(self.orphaned) or not self.replicas
+
+    def pick_replica(self, exclude: str | None = None) -> str | None:
+        """Next replica in rotation, or ``None`` when every candidate is
+        excluded (single-replica fleet hedging against itself, or an empty
+        rotation).  Callers must skip the hedge on ``None`` — re-dispatching
+        to the excluded primary would just double the wedged work."""
         for _ in range(len(self.replicas)):
             r = self.replicas[self._rr % len(self.replicas)]
             self._rr += 1
             if r != exclude:
                 return r
-        return self.replicas[0]
+        return None
 
-    def remove_replica(self, replica: str):
-        """Failure path: drop the replica, re-dispatch its inflight work."""
-        if replica in self.replicas and len(self.replicas) > 1:
+    def remove_replica(self, replica: str) -> list[tuple]:
+        """Failure path: drop the replica from rotation and re-assign its
+        in-flight work.  Returns the re-dispatch plan as ``(key, backup)``
+        pairs; ``backup is None`` means the work is orphaned (no surviving
+        replica — ``degraded`` is now set) and parked in ``orphaned`` until
+        ``add_replica`` reclaims it or the caller fails the request."""
+        if replica in self.replicas:
             self.replicas.remove(replica)
+        plan: list[tuple] = []
         for f in list(self.inflight.values()):
-            if f.replica == replica:
-                f.replica = self.pick_replica(exclude=replica)
+            if f.replica != replica:
+                continue
+            backup = self.pick_replica(exclude=replica)
+            if backup is None:
+                del self.inflight[f.key]
+                self.orphaned[f.key] = f
+                self.stats["orphaned"] += 1
+                plan.append((f.key, None))
+            else:
+                f.replica = backup
                 f.hedged = True
                 self.stats["hedged"] += 1
+                plan.append((f.key, backup))
+        return plan
 
-    def add_replica(self, replica: str):
+    def add_replica(self, replica: str) -> list[tuple]:
+        """Elastic scale-up / rejoin.  Reclaims orphaned work onto the new
+        replica and returns it as ``(key, replica)`` re-dispatch pairs."""
         if replica not in self.replicas:
             self.replicas.append(replica)
+        plan: list[tuple] = []
+        for key, f in list(self.orphaned.items()):
+            del self.orphaned[key]
+            f.replica = replica
+            f.hedged = True
+            self.inflight[key] = f
+            plan.append((key, replica))
+        return plan
 
     # -- dispatch / commit -----------------------------------------------------
     def dispatch(self, key: tuple, eta: float, now: float) -> str:
         replica = self.pick_replica()
+        if replica is None:
+            raise NoReplicasError("no replica in rotation")
+        self.track(key, replica, eta, now)
+        return replica
+
+    def track(self, key: tuple, replica: str, eta: float, now: float):
+        """Record an externally-routed dispatch (the fleet router picks the
+        replica by session ownership, not round-robin) so ``sweep`` can
+        hedge it and ``commit`` can dedup it."""
         self.inflight[key] = InFlight(
             key=key, replica=replica, dispatched_at=now, eta=eta
         )
         self.stats["dispatched"] += 1
-        return replica
 
     def sweep(self, now: float) -> list[tuple]:
         """Hedge everything whose ETA has been exceeded by hedge_factor x
         (eta + guard).  Returns the hedged keys (caller re-enqueues them on
-        the returned backup replica)."""
+        the returned backup replica).  Entries with no eligible backup are
+        left un-hedged (and re-checked next sweep, so a later rejoin can
+        still rescue them)."""
         hedged = []
         for f in self.inflight.values():
             deadline = f.dispatched_at + self.hedge_factor * (f.eta + self.guard)
             if not f.hedged and now > deadline:
-                f.hedged = True
                 backup = self.pick_replica(exclude=f.replica)
+                if backup is None:
+                    self.stats["hedges_skipped"] += 1
+                    continue
+                f.hedged = True
                 self.stats["hedged"] += 1
                 hedged.append((f.key, backup))
                 if self.on_hedge:
@@ -102,4 +161,5 @@ class HedgedDispatcher:
             return False
         self.committed.add(key)
         self.inflight.pop(key, None)
+        self.orphaned.pop(key, None)
         return True

@@ -95,9 +95,36 @@ class Closed(ServerEvent):
     kind = "CLOSED"
 
 
-#: event-kind tags in lifecycle order (documentation + test helper)
+@dataclasses.dataclass(frozen=True)
+class Migrated(ServerEvent):
+    """Fleet tier (repro.fleet): the session moved verifiers — its
+    committed prefix was replayed as a chunked prefill on ``dst`` after
+    ``src`` died (heartbeat sweep) or straggled past the hedge guard.
+    ``replayed_tokens`` is the prompt work actually recomputed (prefix-
+    cache hits on the destination make a warm migration nearly free)."""
+
+    src: str
+    dst: str
+    replayed_tokens: int = 0
+
+    kind = "MIGRATED"
+
+
+@dataclasses.dataclass(frozen=True)
+class VerifierDown(ServerEvent):
+    """Fleet tier: a verifier replica was declared dead by the heartbeat
+    sweep.  Fleet-scoped, not session-scoped: ``session_id`` is -1."""
+
+    verifier: str = ""
+
+    kind = "VERIFIER_DOWN"
+
+
+#: event-kind tags in lifecycle order (documentation + test helper);
+#: MIGRATED / VERIFIER_DOWN are fleet-tier events and can interleave
+#: anywhere between a session's FIRST_TOKEN and CLOSED
 EVENT_KINDS = ("ADMITTED", "FIRST_TOKEN", "VERDICT", "PREEMPTED",
-               "TTFT_RECORD", "CLOSED")
+               "TTFT_RECORD", "MIGRATED", "VERIFIER_DOWN", "CLOSED")
 
 
 class SessionHandle:

@@ -127,6 +127,10 @@ class Verdict:
     t_verify: float
     deadline: float
     violated: bool
+    #: which verify round of the session this verdict resolves — the
+    #: second half of the fleet's idempotency key (session_id, round_index)
+    #: for hedged re-dispatch (repro.fleet); -1 on legacy paths
+    round_index: int = -1
 
 
 class AdmissionQueue:
@@ -487,6 +491,69 @@ class WISPServer:
         self._emit(Closed(session_id, t))
         self._try_admit()
 
+    def restore_session(
+        self,
+        session_id: int,
+        committed_tokens,
+        *,
+        slo_class: int = 3,
+        draft_speed: float = 50.0,
+        rounds: int = 0,
+        alpha: float = 0.6,
+        first_token: int | None = None,
+        extras=None,
+        now: float = 0.0,
+    ) -> int:
+        """Rebuild a migrated session from its committed token stream
+        (the fleet failover path, docs/ARCHITECTURE.md §7).
+
+        The committed stream is the device-side ground truth: everything
+        before its last token is replayed as a (resumable, prefix-cache
+        aware) prefill — exactly the state the engine invariant requires
+        (``fed = committed_len - 1``, KV for ``committed[:-1]``) — and the
+        replay's argmax-sampled first token is discarded in favor of the
+        stream's actual last token.  With deterministic (rng-tagged)
+        verification and same-seed engines the restored session then
+        continues byte-identically to the dead verifier (DESIGN.md §10).
+
+        ``rounds`` must be the session's delivered-verdict count so the
+        fleet's ``(session_id, round_index)`` hedge keys stay collision
+        free across the migration.  Emits NO ADMITTED/FIRST_TOKEN events —
+        the client already holds those tokens.  Raises OutOfPages /
+        NoFreeSlots (nothing leaked) when this verifier cannot take the
+        session; returns the number of prompt tokens actually recomputed
+        (prefix-cache hits make migration to a warm verifier nearly
+        free)."""
+        self.now = max(self.now, now)
+        if (session_id in self.sessions or session_id in self.prefilling
+                or session_id in self.admission_queue):
+            raise ValueError(f"session {session_id} already live here")
+        committed = [int(t) for t in committed_tokens]
+        if len(committed) < 2:
+            raise ValueError("restore needs a prompt plus a first token")
+        st = self.engine.begin_prefill(committed[:-1], extras=extras)
+        try:
+            while not st.finished:
+                self.engine.prefill_chunk(st, self.prefill_chunk_tokens)
+        except OutOfPages:
+            self.engine.abort_prefill(st)
+            raise
+        # the replay sampled a throwaway first token at committed[:-1]'s
+        # final position; the stream already committed its successor
+        self.engine.last_token[st.slot] = committed[-1]
+        self.sessions[session_id] = ServerSession(
+            session_id=session_id,
+            slot=st.slot,
+            slo_class=slo_class,
+            committed_len=len(committed),
+            alpha=alpha,
+            rounds=rounds,
+            draft_speed=draft_speed,
+        )
+        if first_token is not None:
+            self.first_tokens[session_id] = int(first_token)
+        return st.total - st.n_cached
+
     # -- request intake (paper Eq. 6/12: server-side budget -> deadline) ----
     def submit(
         self,
@@ -675,6 +742,7 @@ class WISPServer:
             t_verify=tv,
             deadline=r.deadline,
             violated=complete > r.deadline,
+            round_index=r.round_index,
         )
         self.log.append(v)
         self._emit(VerdictEvent(r.session_id, now, v))

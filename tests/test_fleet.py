@@ -1,0 +1,245 @@
+"""Verifier fleet (repro.fleet): prefix-locality routing, owner-gated
+verdict delivery, lossless migration, and the chaos guarantee — kill a
+verifier mid-stream and every committed stream stays byte-identical to
+the single-verifier golden run (DESIGN.md §10)."""
+import types
+
+import jax
+import pytest
+
+from repro.cluster import ClusterConfig, ClusterRuntime, build_fleet
+from repro.configs import get_config
+from repro.core.estimator import EstimatorCoeffs
+from repro.fleet import FleetRouter, FleetRuntime, build_verifier_fleet
+from repro.models import build
+from repro.serving.client import EdgeDevice
+from repro.serving.engine import VerificationEngine
+from repro.serving.server import WISPServer
+from repro.serving.transport import NetworkModel
+
+COEFFS = EstimatorCoeffs(a=1e-4, b_compute=1e-8, b_read=1e-6, c=1e-3)
+
+
+@pytest.fixture(scope="module")
+def dense_pair():
+    cfg = get_config("qwen2-7b").reduced()
+    bundle = build(cfg)
+    tparams = bundle.init(jax.random.PRNGKey(0))
+    dparams = bundle.init(jax.random.PRNGKey(1))
+    return cfg, tparams, dparams
+
+
+def _mini_router(cfg, tparams, n=2, page_size=4, max_slots=4):
+    """Tiny fleet with small pages so short prompts fill whole pages
+    (prefix-index entries) — routing probes have something to hit."""
+    verifiers = {}
+    for i in range(n):
+        eng = VerificationEngine(cfg, tparams, max_slots=max_slots,
+                                 max_len=64, page_size=page_size)
+        verifiers[f"v{i}"] = WISPServer(eng, COEFFS, network=NetworkModel())
+    return FleetRouter(verifiers)
+
+
+# -- routing -----------------------------------------------------------------
+
+def test_route_least_loaded_fallback(dense_pair):
+    cfg, tparams, _ = dense_pair
+    router = _mini_router(cfg, tparams)
+    a = router.open_session(0, [5, 6, 7, 8], now=0.0)
+    b = router.open_session(1, [9, 10, 11, 12], now=0.0)
+    assert {a, b} == {"v0", "v1"}        # no coverage: spread by load
+    assert router.owner == {0: a, 1: b}
+
+
+def test_route_prefers_prefix_locality_over_load(dense_pair):
+    cfg, tparams, _ = dense_pair
+    router = _mini_router(cfg, tparams)
+    warm = [3, 4, 5, 6, 7, 8, 9, 10]      # two full 4-token pages
+    host = router.open_session(0, warm, now=0.0)
+    router.close_session(0, now=0.0)      # publishes the prefix pages
+    other = "v1" if host == "v0" else "v0"
+    # load the warm verifier heavier than the cold one...
+    for sid in (101, 102):
+        router.owner[sid] = host
+        router.verifiers[host].open_session(
+            sid, [30 + sid, 31 + sid], queue_on_full=True, now=0.0)
+    assert router._load(host) > router._load(other)
+    # ...and locality still wins over least-loaded
+    assert router.route(warm) == host
+    # a cold prompt falls back to the less loaded verifier
+    assert router.route([40, 41, 42, 43]) == other
+
+
+def test_routing_probe_is_read_only(dense_pair):
+    cfg, tparams, _ = dense_pair
+    router = _mini_router(cfg, tparams)
+    warm = [3, 4, 5, 6, 7, 8, 9, 10]
+    host = router.open_session(0, warm, now=0.0)
+    router.close_session(0, now=0.0)
+    alloc = router.verifiers[host].engine.kv.allocator
+    hits0, refs0 = alloc.hits, alloc.refcount.copy()
+    for _ in range(3):
+        assert router.route(warm) == host
+    assert alloc.hits == hits0            # probe never counted as a hit
+    assert (alloc.refcount == refs0).all()  # ...and never retained a page
+
+
+# -- owner-gated, idempotent verdict delivery --------------------------------
+
+def test_deliver_verdict_owner_and_dedup_gates(dense_pair):
+    cfg, tparams, _ = dense_pair
+    router = _mini_router(cfg, tparams)
+    vid = router.open_session(0, [5, 6, 7, 8], now=0.0)
+    other = "v1" if vid == "v0" else "v0"
+    router.dispatcher.track((0, 0), vid, eta=0.01, now=0.0)
+    v = types.SimpleNamespace(session_id=0, round_index=0)
+    assert not router.deliver_verdict(other, v)   # not the owner
+    assert router.deliver_verdict(vid, v)         # first wins
+    assert not router.deliver_verdict(vid, v)     # duplicate dropped
+    assert router.stats["dropped_verdicts"] == 2
+
+
+# -- lossless restore --------------------------------------------------------
+
+def test_restore_session_rebuilds_engine_state(dense_pair):
+    cfg, tparams, _ = dense_pair
+    eng = VerificationEngine(cfg, tparams, max_slots=2, max_len=64)
+    srv = WISPServer(eng, COEFFS, network=NetworkModel())
+    committed = [5, 6, 7, 8, 11, 12, 13]
+    replayed = srv.restore_session(3, committed, rounds=2)
+    s = srv.sessions[3]
+    assert replayed == len(committed) - 1
+    assert s.committed_len == len(committed)
+    assert s.rounds == 2                  # (sid, round) keying resumes here
+    # the engine slot invariant the verify hot path depends on:
+    # fed = committed_len - 1, last_token = the final committed token
+    assert int(eng.fed[s.slot]) == len(committed) - 1
+    assert int(eng.last_token[s.slot]) == committed[-1]
+    with pytest.raises(ValueError):
+        srv.restore_session(3, committed)          # already live
+    with pytest.raises(ValueError):
+        srv.restore_session(4, [9])                # nothing to replay
+
+
+def test_migrate_session_moves_ownership(dense_pair):
+    cfg, tparams, _ = dense_pair
+    router = _mini_router(cfg, tparams)
+    sid = 0
+    src = router.open_session(sid, [5, 6, 7, 8], now=0.0)
+    committed = [5, 6, 7, 8, 21, 22, 23]
+    dst, replayed = router.migrate_session(sid, committed, rounds=1, now=0.1)
+    assert dst != src and router.owner[sid] == dst
+    assert replayed == len(committed) - 1
+    assert sid in router.verifiers[dst].sessions
+    assert sid not in router.verifiers[src].sessions
+    migrated = [ev for _, ev in router.pop_events() if ev.kind == "MIGRATED"]
+    assert len(migrated) == 1 and migrated[0].src == src \
+        and migrated[0].dst == dst
+
+
+# -- chaos: kill a verifier mid-stream ---------------------------------------
+
+CHAOS_CCFG = dict(devices=4, rounds=3, k_max=4, max_len=256, seed=0,
+                  prefill_mode="chunked", prefill_chunk_tokens=16)
+
+
+def _edges(cfg, dparams, ccfg, fleet):
+    return [
+        EdgeDevice(cfg, dparams, k_max=ccfg.k_max, max_len=ccfg.max_len,
+                   seed=100 + sp.idx, draft_speed=sp.draft_speed)
+        for sp in fleet
+    ]
+
+
+def _golden_run(cfg, tparams, dparams):
+    """Single-verifier reference: streams are policy-invariant, so one
+    golden run serves every chaos variant."""
+    ccfg = ClusterConfig(**CHAOS_CCFG)
+    engine = VerificationEngine(cfg, tparams, max_slots=ccfg.devices,
+                                max_len=ccfg.max_len)
+    server = WISPServer(engine, COEFFS, network=NetworkModel(),
+                        prefill="chunked",
+                        prefill_chunk_tokens=ccfg.prefill_chunk_tokens)
+    fleet = build_fleet(ccfg, cfg.vocab)
+    edges = _edges(cfg, dparams, ccfg, fleet)
+    ClusterRuntime(server, edges, fleet, ccfg, vocab=cfg.vocab).run()
+    return [list(d.response_tokens) for d in edges]
+
+
+def _fleet_run(cfg, tparams, dparams, *, policy, fail_at, verifiers=2,
+               **extra):
+    ccfg = ClusterConfig(**CHAOS_CCFG, verifiers=verifiers, fail_at=fail_at,
+                         **extra)
+    router = build_verifier_fleet(
+        cfg, tparams, ccfg.verifiers, COEFFS, max_slots=ccfg.devices,
+        max_len=ccfg.max_len, policy=policy, network=NetworkModel(),
+        prefill="chunked", prefill_chunk_tokens=ccfg.prefill_chunk_tokens,
+        heartbeat_timeout=ccfg.heartbeat_timeout,
+        hedge_factor=ccfg.hedge_factor, hedge_guard=ccfg.hedge_guard,
+    )
+    fleet = build_fleet(ccfg, cfg.vocab)
+    edges = _edges(cfg, dparams, ccfg, fleet)
+    result = FleetRuntime(router, edges, fleet, ccfg, vocab=cfg.vocab).run()
+    return [list(d.response_tokens) for d in edges], router, result
+
+
+@pytest.fixture(scope="module")
+def golden_streams(dense_pair):
+    cfg, tparams, dparams = dense_pair
+    return _golden_run(cfg, tparams, dparams)
+
+
+@pytest.mark.parametrize("policy", ["wisp", "fcfs"])
+def test_chaos_kill_one_verifier_streams_unchanged(dense_pair, golden_streams,
+                                                   policy):
+    """Kill one of three verifiers mid-run (the acceptance scenario):
+    every admitted session completes (migrated ones included) and every
+    stream — the failure-touched ones too — is byte-identical to the
+    single-verifier golden run."""
+    cfg, tparams, dparams = dense_pair
+    streams, router, result = _fleet_run(
+        cfg, tparams, dparams, policy=policy, fail_at=((0, 0.15, None),),
+        verifiers=3,
+    )
+    assert router.stats["verifier_downs"] == 1
+    assert router.stats["migrations"] + router.stats["reopens"] >= 1
+    assert all(len(s) > 0 for s in streams)          # everyone finished
+    assert streams == golden_streams                 # byte-identical
+    assert len(result.metrics.sessions) == CHAOS_CCFG["devices"]
+    assert router.dispatcher.degraded is False       # survivor still serves
+
+
+def test_chaos_fleet_without_failures_matches_golden(dense_pair,
+                                                     golden_streams):
+    cfg, tparams, dparams = dense_pair
+    streams, router, _ = _fleet_run(cfg, tparams, dparams, policy="wisp",
+                                    fail_at=())
+    assert router.stats["verifier_downs"] == 0
+    assert streams == golden_streams
+
+
+def test_chaos_straggler_hedged_away(dense_pair, golden_streams):
+    """A wedged-but-alive verifier (400x straggle) blows the hedge ETA:
+    its sessions migrate and their in-flight rounds re-dispatch; the
+    straggler's late verdicts are dropped at the owner gate.  Streams
+    stay byte-identical."""
+    cfg, tparams, dparams = dense_pair
+    streams, router, _ = _fleet_run(
+        cfg, tparams, dparams, policy="wisp", fail_at=(),
+        straggle=((0, 0.05, 1.0, 400.0),), hedge_factor=2.0,
+    )
+    assert router.dispatcher.stats["hedged"] >= 1
+    assert router.stats["redispatches"] >= 1
+    assert router.stats["verifier_downs"] == 0   # alive, just slow
+    assert streams == golden_streams
+
+
+def test_chaos_verifier_rejoins(dense_pair, golden_streams):
+    """A verifier that dies and recovers re-enters the rotation (rejoin
+    hook) without perturbing any stream."""
+    cfg, tparams, dparams = dense_pair
+    streams, router, _ = _fleet_run(cfg, tparams, dparams, policy="wisp",
+                                    fail_at=((0, 0.12, 0.5),))
+    assert router.stats["verifier_downs"] == 1
+    assert router.stats["rejoins"] == 1
+    assert streams == golden_streams

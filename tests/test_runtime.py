@@ -2,7 +2,7 @@
 import pytest
 
 from repro.runtime.failure import FailurePlan, HeartbeatMonitor
-from repro.runtime.straggler import HedgedDispatcher
+from repro.runtime.straggler import HedgedDispatcher, NoReplicasError
 
 
 def test_heartbeat_declares_death_and_rejoin():
@@ -72,3 +72,84 @@ def test_add_replica_elastic_scaleup():
     hd.add_replica("r1")
     seen = {hd.dispatch((i, 0), 0.1, 0.0) for i in range(4)}
     assert seen == {"r0", "r1"}
+
+
+def test_pick_replica_all_excluded_returns_none():
+    # ISSUE-6 satellite: the old code fell through to replicas[0] — the
+    # excluded (wedged) primary — doubling the stuck work instead of
+    # skipping the hedge
+    hd = HedgedDispatcher(["r0"])
+    assert hd.pick_replica(exclude="r0") is None
+    assert hd.pick_replica() == "r0"        # no exclusion still round-robins
+
+
+def test_single_replica_sweep_skips_hedge():
+    hd = HedgedDispatcher(["r0"], hedge_factor=1.0, guard=0.0)
+    hd.dispatch((1, 0), eta=0.01, now=0.0)
+    assert hd.sweep(5.0) == []              # nowhere to hedge: skip, not self
+    assert hd.stats["hedges_skipped"] == 1
+    # the entry stays in flight and is re-checked: a rejoin can rescue it
+    hd.add_replica("r1")
+    assert hd.sweep(5.1) == [((1, 0), "r1")]
+
+
+def test_remove_last_replica_enters_degraded_mode():
+    # ISSUE-6 satellite: removing the last replica used to leave it in
+    # rotation, silently "re-dispatching" work back to the dead replica
+    hd = HedgedDispatcher(["r0"])
+    hd.dispatch((3, 2), eta=0.1, now=0.0)
+    plan = hd.remove_replica("r0")
+    assert hd.replicas == []
+    assert plan == [((3, 2), None)]         # explicit orphan signal
+    assert hd.degraded
+    assert (3, 2) in hd.orphaned and not hd.inflight
+    with pytest.raises(NoReplicasError):
+        hd.dispatch((4, 0), eta=0.1, now=1.0)
+
+
+def test_add_replica_reclaims_orphans():
+    hd = HedgedDispatcher(["r0"])
+    hd.dispatch((3, 2), eta=0.1, now=0.0)
+    hd.remove_replica("r0")
+    plan = hd.add_replica("r1")
+    assert plan == [((3, 2), "r1")]
+    assert not hd.degraded and not hd.orphaned
+    assert hd.inflight[(3, 2)].replica == "r1"
+    assert hd.inflight[(3, 2)].hedged       # never re-hedged by the sweep
+    # an orphan whose verdict somehow still lands commits (and clears) fine
+    hd.dispatch((5, 0), eta=0.1, now=0.0)
+    hd.remove_replica("r1")
+    assert hd.commit((5, 0)) is True
+    assert (5, 0) not in hd.orphaned
+
+
+def test_heartbeat_on_rejoin_hook():
+    # ISSUE-6 satellite: beat() on a dead peer flipped alive silently —
+    # the dispatcher rotation never learned about the rejoin
+    deaths, rejoins = [], []
+    mon = HeartbeatMonitor(
+        timeout=1.0,
+        on_death=lambda p, t: deaths.append((p, t)),
+        on_rejoin=lambda p, t: rejoins.append((p, t)),
+    )
+    mon.register("a", 0.0)
+    assert mon.sweep(2.0) == ["a"]
+    mon.beat("a", 3.0)
+    assert rejoins == [("a", 3.0)]
+    assert mon.rejoins == [("a", 3.0)]
+    # a beat on an alive peer is not a rejoin
+    mon.beat("a", 3.5)
+    assert len(rejoins) == 1
+
+
+def test_track_then_commit_dedups_hedge_race():
+    # the fleet router routes by ownership (track), not round-robin
+    # (dispatch); the race where primary and hedge both answer resolves
+    # first-wins on the shared (session_id, round_index) key
+    hd = HedgedDispatcher(["r0", "r1"], hedge_factor=1.0, guard=0.0)
+    hd.track((9, 4), "r0", eta=0.01, now=0.0)
+    [(key, backup)] = hd.sweep(1.0)
+    assert key == (9, 4) and backup == "r1"
+    assert hd.commit((9, 4)) is True        # whichever replica answers first
+    assert hd.commit((9, 4)) is False       # the straggler's late answer
+    assert hd.stats["dup_commits_dropped"] == 1
