@@ -37,6 +37,7 @@ TABLES = {
     "paged_serving": "§4.5 (dense vs paged engine: throughput + prefix hits)",
     "ttft": "long-prompt interference: monolithic vs chunked prefill (§8)",
     "hotpath": "verification hot-path budgets: dispatches + bytes (§9)",
+    "adaptive_k": "§4.1 (static vs adaptive per-session draft length)",
 }
 
 

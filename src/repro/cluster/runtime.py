@@ -73,6 +73,9 @@ class _DeviceProc:
     profile: DeviceSpec
     workload: DeviceWorkload
     tau: float                        # seconds per drafted token
+    #: this device's edge<->server link (heterogeneous-link fleets price
+    #: each device's uplink/downlink on its own NetworkModel)
+    net: object = None
     state: str = "idle"               # idle|admission|prefill|draft|wait|think|done
     gen: int = 0                      # event generation; stale steps dropped
     drafter: object = None            # live BlockDrafter while drafting
@@ -137,6 +140,7 @@ class ClusterRuntime:
                 idx=i, device=ed, profile=sp,
                 workload=DeviceWorkload(cfg, vocab, i),
                 tau=1.0 / sp.draft_speed,
+                net=self._device_net(i),
             )
             for i, (ed, sp) in enumerate(zip(edge_devices, fleet))
         ]
@@ -152,6 +156,17 @@ class ClusterRuntime:
         self._prefill_fifo: list[tuple] = []
         self._noise_rng = np.random.default_rng(cfg.seed + 90_001)
         self._done_devices = 0
+
+    def _device_net(self, idx: int):
+        """Device ``idx``'s link model: the shared server NetworkModel, or
+        — under ``cfg.link_rtts`` — a per-device variant with its cycled
+        base RTT (mixed link heterogeneity, like draft_speeds)."""
+        rtts = self.cfg.link_rtts
+        if not rtts:
+            return self.net
+        return dataclasses.replace(
+            self.net, base_rtt=float(rtts[idx % len(rtts)])
+        )
 
     # -- server timing ------------------------------------------------------
     def _verify_time(self, served) -> float:
@@ -350,8 +365,9 @@ class ClusterRuntime:
         dev.last_t_draft = t - dev.round_start
         # price the q representation that actually rides this request
         # (CompactQ table / modelled dense top-k / ids only, DESIGN.md §9)
-        t_up = self.net.uplink_time(res.n_sent, res.q_payload())
-        dev.last_t_net = t_up + self.net.downlink_time()
+        # on the DEVICE's link (heterogeneous links under cfg.link_rtts)
+        t_up = dev.net.uplink_time(res.n_sent, res.q_payload())
+        dev.last_t_net = t_up + dev.net.downlink_time()
         self.events.push(t + t_up, EventKind.REQUEST, dev.idx)
         dev.state = "wait"
         dev.gen += 1
@@ -462,6 +478,14 @@ class ClusterRuntime:
             v.accept_len, v.token, res,
             guess=dev.spec_guess, speculated=dev.spec_active,
         )
+        # close the adaptive-speculation loop (DESIGN.md §11): measured
+        # acceptance + this round's RTT + the verifier queue depth the
+        # verdict piggybacked feed the device's next-K choice
+        dev.device.observe_verdict(
+            v.accept_len, res.k_used, rtt=dev.last_t_net,
+            queue_depth=getattr(v, "queue_depth", None),
+            features=res.features,
+        )
         done = (
             dev.rounds_done + 1 >= self.cfg.rounds
             if self.cfg.rounds is not None
@@ -493,6 +517,7 @@ class ClusterRuntime:
                 deadline=v.deadline,
                 slo_class=dev.profile.slo_class,
                 violated=v.violated,
+                k_used=res.k_used,
             ),
             tau_d=dev.tau,
         )

@@ -40,6 +40,15 @@ class ClusterConfig:
     seed: int = 0
     #: overlap drafting with in-flight verification (commit-or-rollback)
     speculate: bool = True
+    #: per-session draft-length policy from the speculation-controller
+    #: registry (core/speculation.py): "static" (every block gets k_max,
+    #: the legacy behavior) or "adaptive" (per-block K from predicted
+    #: acceptance, measured RTT and verifier load, DESIGN.md §11)
+    spec_policy: str = "static"
+    #: heterogeneous edge links: per-device base RTTs (seconds), cycled
+    #: round-robin like draft_speeds (device i gets link_rtts[i % len]);
+    #: empty = every device shares the server NetworkModel's base_rtt
+    link_rtts: tuple = ()
     # -- churn ------------------------------------------------------------
     think_time_mean: float = 0.25    # Exp pause between sessions per device
     response_len_mean: float = 24.0  # geometric response-token target

@@ -60,6 +60,11 @@ class DraftResult:
     #: exact per-token log-probs for the accept test + top-C/tail table
     #: for residual reconstruction.  None under "dense"/"none".
     q_compact: CompactQ | None = None
+    #: the draft-length cap this block ran under (the speculation
+    #: controller's per-block K choice, DESIGN.md §11); with no predictor
+    #: ``n_drafted == k_used``, so per-round logs of it reconstruct the
+    #: K schedule the committed-prefix oracle replays
+    k_used: int = 0
 
     def q_payload(self):
         """The q argument for `NetworkModel.uplink_bytes`/`uplink_time` —
@@ -128,11 +133,14 @@ class DraftingController:
             )[0])
         return nxt, lg, cache
 
-    def begin_block(self, rng, last_token: int, cache, pos: int) -> "BlockDrafter":
+    def begin_block(self, rng, last_token: int, cache, pos: int,
+                    k: int | None = None) -> "BlockDrafter":
         """Start drafting one block after ``last_token`` (stream index
         ``pos``); step the returned drafter to completion (``draft`` does)
-        or one token at a time (cluster runtime)."""
-        return BlockDrafter(self, rng, last_token, cache, pos)
+        or one token at a time (cluster runtime).  ``k`` caps this block's
+        draft length below ``k_max`` (the per-session speculation
+        controller's choice, `core/speculation.py`); None = full budget."""
+        return BlockDrafter(self, rng, last_token, cache, pos, k=k)
 
     def draft(self, rng, last_token, cache, pos):
         """Draft a block starting after ``last_token`` at position ``pos``.
@@ -160,12 +168,16 @@ class BlockDrafter:
     """
 
     def __init__(self, controller: DraftingController, rng, last_token: int,
-                 cache, pos: int):
+                 cache, pos: int, k: int | None = None):
         self.ctl = controller
         self.rng = rng
         self.cache = cache
         self.pos = int(pos)           # cache index the next feed lands on
         self._next_feed = int(last_token)
+        #: this block's draft-length cap: the speculation controller's
+        #: per-block K, clamped into [1, k_max]
+        self.k_cap = controller.k_max if k is None \
+            else max(1, min(int(k), controller.k_max))
         self.toks: list = []
         self.qls: list = []
         self.qcs: list = []           # per-token compact stats (q_mode=compact)
@@ -205,7 +217,7 @@ class BlockDrafter:
         if not pred_accept:
             self.stopped_by = "predictor"
             self.done = True
-        elif self.n_drafted >= ctl.k_max:
+        elif self.n_drafted >= self.k_cap:
             self.done = True
         else:
             self._next_feed = nxt
@@ -245,6 +257,7 @@ class BlockDrafter:
             stopped_by=self.stopped_by,
             draft_time=self.n_drafted / self.ctl.draft_speed,
             last_drafted=self.last_drafted,
+            k_used=self.k_cap,
         )
 
 

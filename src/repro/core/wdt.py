@@ -21,6 +21,11 @@ class IterationLog:
     deadline: float = 0.0
     slo_class: int = 0
     violated: bool = False
+    #: the speculation controller's draft-length cap for this block
+    #: (DESIGN.md §11); with no predictor n_drafted == k_used, so the
+    #: per-round sequence of these IS the committed-prefix oracle's
+    #: replay schedule (serving/oracle.py).  0 on legacy paths.
+    k_used: int = 0
 
     @property
     def wasted(self) -> int:

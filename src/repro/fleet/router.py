@@ -47,11 +47,20 @@ class FleetCapacityError(RuntimeError):
 
 @dataclasses.dataclass
 class SessionMeta:
-    """Router-side soft state per session (survives verifier death)."""
+    """Router-side soft state per session (survives verifier death).
+
+    ``alpha`` / ``spec_k`` replicate the owner's live adaptive-speculation
+    context (EWMA acceptance, last draft-length cap) — refreshed on every
+    submit, when the owner is by construction alive — so a migrated
+    session's restore does NOT reset them to cold-start defaults (the
+    adaptive-K controller would otherwise re-converge from scratch after
+    every failover)."""
 
     slo_class: int
     draft_speed: float
     extras: object = None
+    alpha: float = 0.6
+    spec_k: int = 0
 
 
 class FleetRouter:
@@ -234,6 +243,12 @@ class FleetRouter:
         eta = srv.coeffs.predict([BatchShape(
             new_tokens=n_draft + 1, cached_tokens=s.committed_len - 1,
         )])
+        # replicate the session's adaptive-speculation context into the
+        # router's soft state while the owner is alive: a later migration
+        # restores alpha/spec_k instead of cold-start defaults
+        m = self.meta.get(session_id)
+        if m is not None:
+            m.alpha, m.spec_k = s.alpha, s.spec_k
         key = (session_id, s.rounds)
         self.dispatcher.track(key, vid, float(eta), now)
         if hedged:
@@ -304,6 +319,7 @@ class FleetRouter:
                 replayed = self.verifiers[dst].restore_session(
                     session_id, committed, slo_class=m.slo_class,
                     draft_speed=m.draft_speed, rounds=rounds,
+                    alpha=m.alpha, spec_k=m.spec_k,
                     extras=m.extras, now=now,
                 )
             except Exception as e:          # OutOfPages / NoFreeSlots

@@ -34,6 +34,7 @@ from repro.cluster import ClusterConfig, ClusterRuntime, build_fleet
 from repro.configs import get_config
 from repro.core.estimator import EstimatorCoeffs, analytic_tpu_coeffs
 from repro.core.scheduler import available_policies
+from repro.core.speculation import available_spec_policies
 from repro.core.predictor import RejectionPredictor
 from repro.core.wdt import IterationLog, WDTStats
 from repro.models import build
@@ -64,6 +65,8 @@ def run_serving(
     churn: bool = False,
     horizon: float | None = None,
     draft_speeds: tuple = (30.0, 50.0, 80.0),
+    spec_policy: str = "static",
+    link_rtts: tuple = (),
     coeffs: EstimatorCoeffs | None = None,
     dispatch_interval: float = 0.004,
     slo_speeds: dict | None = None,
@@ -92,7 +95,12 @@ def run_serving(
     ``policy`` selects the server's batch-selection rule from the
     scheduling-policy registry (``repro.core.scheduler``): ``"wisp"``
     (Algorithm 1; legacy alias ``"slo"``), ``"fcfs"``, ``"edf"``,
-    ``"priority"``."""
+    ``"priority"``.  ``spec_policy`` selects each edge device's
+    draft-length controller from the speculation registry
+    (``repro.core.speculation``): ``"static"`` (fixed K = k_max) or
+    ``"adaptive"`` (per-block K from acceptance, RTT and verifier load,
+    DESIGN.md §11).  ``link_rtts`` gives devices heterogeneous link base
+    RTTs (cycled round-robin, like ``draft_speeds``)."""
     if scheduler is not None:
         if policy != "wisp" and policy != scheduler:
             raise ValueError(
@@ -144,6 +152,8 @@ def run_serving(
         max_len=max_len,
         seed=seed,
         speculate=speculate,
+        spec_policy=spec_policy,
+        link_rtts=tuple(link_rtts),
         dispatch_interval=dispatch_interval,
         prefill_mode=prefill_mode,
         prefill_chunk_tokens=prefill_chunk_tokens,
@@ -196,6 +206,7 @@ def run_serving(
             max_len=max_len, seed=seed + 10 + sp.idx,
             draft_speed=sp.draft_speed, greedy=greedy,
             q_mode=q_mode, q_top_c=q_top_c,
+            spec_policy=spec_policy,
         )
         for sp in fleet
     ]
@@ -225,8 +236,8 @@ def run_serving(
     if verbose:
         print(f"[serve] mode=event devices={devices} "
               f"{'horizon=%.1fs' % result.horizon if churn else 'rounds=%d' % rounds} "
-              f"policy={server.policy} speculate={speculate} "
-              f"prefill={prefill_mode}")
+              f"policy={server.policy} spec_policy={spec_policy} "
+              f"speculate={speculate} prefill={prefill_mode}")
         if prefill_mode != "zero" and m.sessions:
             # chunked mode logs TTFT-deadline outcomes per prefill; the
             # monolithic path has no prefill_log, so judge its sessions'
@@ -316,6 +327,11 @@ def _run_lockstep(server, edges, fleet, rounds, net, verbose):
                 edges[v.session_id].apply_verdict(
                     v.accept_len, v.token, res.tokens
                 )
+                edges[v.session_id].observe_verdict(
+                    v.accept_len, res.k_used, rtt=t_net,
+                    queue_depth=getattr(v, "queue_depth", None),
+                    features=res.features,
+                )
                 stats[v.session_id].add(
                     IterationLog(
                         session_id=v.session_id,
@@ -329,6 +345,7 @@ def _run_lockstep(server, edges, fleet, rounds, net, verbose):
                         t_queue=v.t_queue,
                         t_verify=v.t_verify,
                         violated=v.violated,
+                        k_used=res.k_used,
                     ),
                     tau_d=1.0 / edges[v.session_id].controller.draft_speed,
                 )
@@ -370,6 +387,12 @@ def main():
                     help="batch-selection policy from the scheduling "
                          "registry ('slo' is a legacy alias of 'wisp')")
     ap.add_argument("--scheduler", dest="policy", help=argparse.SUPPRESS)
+    ap.add_argument("--spec-policy", default="static",
+                    choices=tuple(available_spec_policies()),
+                    help="per-session draft-length policy from the "
+                         "speculation-controller registry (DESIGN.md §11): "
+                         "static (K = k_max every block) or adaptive "
+                         "(per-block K from acceptance/RTT/verifier load)")
     ap.add_argument("--predictor-path", default=None)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--sync", action="store_true",
@@ -424,6 +447,7 @@ def main():
     run_serving(
         args.target, args.draft, devices=args.devices, rounds=args.rounds,
         k_max=args.k_max, policy=args.policy, predictor=pred,
+        spec_policy=args.spec_policy,
         seed=args.seed, sync=args.sync, speculate=not args.no_speculate,
         churn=args.churn, horizon=args.horizon if args.churn else None,
         prompt_len=args.prompt_len, prefill_mode=args.prefill,

@@ -35,6 +35,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.controller import BlockDrafter, DraftingController, DraftResult
+from repro.core.speculation import make_spec_controller
 from repro.models import build
 
 
@@ -65,6 +66,8 @@ class EdgeDevice:
         seed: int = 0,
         q_mode: str = "dense",
         q_top_c: int = 64,
+        spec_policy="static",
+        spec_cfg: dict | None = None,
     ):
         self.cfg = draft_cfg
         self.bundle = build(draft_cfg)
@@ -78,6 +81,13 @@ class EdgeDevice:
             draft_speed=draft_speed,
             q_mode=q_mode,
             q_top_c=q_top_c,
+        )
+        #: per-session draft-length control (core/speculation.py): chooses
+        #: each block's K cap from predicted acceptance, measured RTT and
+        #: verifier load; "static" reproduces the fixed-K behavior exactly
+        self.spec = make_spec_controller(
+            spec_policy, k_max=k_max, draft_speed=draft_speed,
+            predictor=predictor, **(spec_cfg or {}),
         )
         self.max_len = max_len
         self.cache = None
@@ -101,6 +111,7 @@ class EdgeDevice:
             prompt_len=len(toks),
             fed=len(toks),
         )
+        self.spec.start_session()
 
     def begin_round(self) -> BlockDrafter:
         """Catch the local cache up to the committed stream and return a
@@ -117,7 +128,8 @@ class EdgeDevice:
             )
             s.fed += len(catch) - 1
         return self.controller.begin_block(
-            self.rng, int(catch[-1]), self.cache, s.fed
+            self.rng, int(catch[-1]), self.cache, s.fed,
+            k=self.spec.next_k(),
         )
 
     def finish_round(self, drafter: BlockDrafter) -> DraftResult:
@@ -188,7 +200,8 @@ class EdgeDevice:
             valid += 1
             cost = 1
         s.drafted += cost
-        drafter = self.controller.begin_block(self.rng, guess, self.cache, valid)
+        drafter = self.controller.begin_block(self.rng, guess, self.cache,
+                                              valid, k=self.spec.next_k())
         return guess, drafter, cost
 
     def resolve_verdict(self, accept_len: int, token: int, res,
@@ -214,6 +227,25 @@ class EdgeDevice:
             return True
         self.apply_verdict(accept_len, token, res.tokens)
         return False
+
+    # -- adaptive-speculation feedback (core/speculation.py) ---------------
+    def observe_verdict(self, accept_len: int, k_used: int, *,
+                        rtt: float | None = None,
+                        queue_depth: float | None = None,
+                        features=None) -> None:
+        """Feed one verified round back into the speculation controller:
+        measured acceptance (or the predictor's calibrated probability
+        over the block's logit features, when both ride along), the
+        round's network RTT, and the verifier's queue depth piggybacked
+        on the verdict."""
+        p = None
+        if self.controller.predictor is not None and features is not None:
+            feats = np.asarray(features, np.float32)
+            if feats.size:
+                p = float(np.mean(np.asarray(
+                    self.controller.predictor.proba(feats))))
+        self.spec.observe(accept_len=int(accept_len), k_used=int(k_used),
+                          p_accept=p, rtt=rtt, queue_depth=queue_depth)
 
     @property
     def response_tokens(self):

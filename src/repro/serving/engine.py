@@ -254,6 +254,11 @@ class VerificationEngine:
             "h2d_bytes": 0,           # host->device staged bytes (verify)
             "h2d_q_bytes": 0,         # ...of which draft-q payload
             "d2h_bytes": 0,           # device->host result bytes (verify)
+            #: batches whose rows carried heterogeneous draft lengths
+            #: (adaptive per-session K, DESIGN.md §11): ragged rows ride
+            #: the existing bucket/pad machinery — per-row ``dlen`` masks
+            #: the pad tail, so mixed-K costs no extra dispatch
+            "mixed_k_batches": 0,
         }
 
         if self.paged:
@@ -902,8 +907,10 @@ class VerificationEngine:
             return []
         t0 = time.perf_counter()
         n = len(items)
-        K = max(len(it.draft_tokens) for it in items)
-        K = _bucket(max(K, 1), 2)
+        dlens = {len(it.draft_tokens) for it in items}
+        if len(dlens) > 1:
+            self.stats["mixed_k_batches"] += 1
+        K = _bucket(max(max(dlens), 1), 2)
         nb = _bucket(n, 1)
 
         if self.method == "greedy":

@@ -1,0 +1,92 @@
+"""Committed-prefix oracle: solo lock-step replay of a per-round K schedule.
+
+Under adaptive speculation (DESIGN.md §11) a session's block boundaries
+depend on *timing signals* (RTT, verifier load), and block boundaries
+feed the verification rng keys ``(session_id, committed_len)`` — so an
+adaptive run's streams lawfully differ from a static-K run's and are not
+invariant to fleet composition.  What the determinism model DOES
+guarantee, and what this module checks, is sharper:
+
+    Given the per-round draft-length schedule a session actually ran
+    (``IterationLog.k_used`` — equal to ``n_drafted`` when no predictor
+    rides), replaying that session ALONE, lock-step, against a
+    fresh same-seed engine commits the byte-identical token stream.
+
+i.e. the committed stream is a pure function of (engine seed, device
+seed, params, prompt, K schedule) — batching, queueing, speculation
+overlap, scheduling policy and fleet interference contribute exactly
+nothing.  `benchmarks/adaptive_k.py` gates the adaptive controller on
+this oracle: goodput may move, bytes may not.
+"""
+from __future__ import annotations
+
+from repro.core.estimator import EstimatorCoeffs
+from repro.serving.client import EdgeDevice
+from repro.serving.engine import VerificationEngine
+from repro.serving.server import WISPServer
+from repro.serving.transport import NetworkModel
+
+
+def replay_session(
+    target_cfg,
+    target_params,
+    draft_cfg,
+    draft_params,
+    *,
+    prompt,
+    k_schedule,
+    session_id: int = 0,
+    device_seed: int = 0,
+    engine_seed: int = 0,
+    draft_speed: float = 50.0,
+    slo_class: int = 3,
+    k_max: int | None = None,
+    greedy: bool = False,
+    q_mode: str = "dense",
+    q_top_c: int = 64,
+    method: str = "residual",
+    max_len: int = 512,
+    coeffs: EstimatorCoeffs | None = None,
+    predictor=None,
+) -> list[int]:
+    """Replay ONE session solo under a scripted per-block K schedule;
+    returns its committed response tokens.
+
+    ``session_id`` and the seeds must match the original run: draft
+    sampling keys are position-folded off ``PRNGKey(device_seed)`` and
+    verification draws are keyed ``(session_id, committed_len)`` against
+    the engine's seed — same keys, same draws, same stream."""
+    k_schedule = [int(k) for k in k_schedule]
+    if not k_schedule:
+        return []
+    engine = VerificationEngine(
+        target_cfg, target_params, max_slots=1, max_len=max_len,
+        method=method, seed=engine_seed,
+    )
+    server = WISPServer(
+        engine,
+        coeffs or EstimatorCoeffs(a=1e-4, b_compute=1e-8, b_read=1e-6, c=1e-3),
+        policy="fcfs", network=NetworkModel(),
+    )
+    dev = EdgeDevice(
+        draft_cfg, draft_params, predictor=predictor,
+        k_max=k_max or max(k_schedule), max_len=max_len, seed=device_seed,
+        draft_speed=draft_speed, greedy=greedy, q_mode=q_mode,
+        q_top_c=q_top_c, spec_policy="scripted",
+        spec_cfg={"schedule": k_schedule},
+    )
+    handle = server.open_session(session_id, prompt, slo_class=slo_class,
+                                 queue_on_full=False)
+    dev.start_session(session_id, prompt, handle.first_token)
+    now = 0.0
+    for _ in k_schedule:
+        res = dev.draft_round()
+        server.submit(session_id, res.tokens, res.q_logits,
+                      q_compact=res.q_compact, now=now,
+                      t_draft=res.draft_time, t_network=0.0)
+        while server.queue_depth:
+            for v in server.step(now):
+                dev.apply_verdict(v.accept_len, v.token, res.tokens)
+            now += 0.005
+        server.pop_events()
+    return [int(t) for t in dev.response_tokens]

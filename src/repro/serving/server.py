@@ -83,6 +83,11 @@ class ServerSession:
     draft_speed: float = 50.0
     t_draft_last: float = 0.0
     t_net_last: float = 0.0
+    #: the edge speculation controller's last-submitted draft-length cap
+    #: (DESIGN.md §11) — server-side observability, and carried through
+    #: fleet migration so a restored session's adaptive-K context (like
+    #: its ``alpha``) survives verifier death
+    spec_k: int = 0
 
 
 @dataclasses.dataclass
@@ -131,6 +136,10 @@ class Verdict:
     #: second half of the fleet's idempotency key (session_id, round_index)
     #: for hedged re-dispatch (repro.fleet); -1 on legacy paths
     round_index: int = -1
+    #: the verifier's pending-pool depth when this verdict committed —
+    #: piggybacked load feedback the edge speculation controller's
+    #: congestion brake consumes (DESIGN.md §11); no extra round trip
+    queue_depth: int = 0
 
 
 class AdmissionQueue:
@@ -500,6 +509,7 @@ class WISPServer:
         draft_speed: float = 50.0,
         rounds: int = 0,
         alpha: float = 0.6,
+        spec_k: int = 0,
         first_token: int | None = None,
         extras=None,
         now: float = 0.0,
@@ -549,6 +559,7 @@ class WISPServer:
             alpha=alpha,
             rounds=rounds,
             draft_speed=draft_speed,
+            spec_k=spec_k,
         )
         if first_token is not None:
             self.first_tokens[session_id] = int(first_token)
@@ -576,6 +587,7 @@ class WISPServer:
         s.t_net_last = t_network
         target_speed = self.slo_classes[s.slo_class]
         nd = len(draft_tokens)
+        s.spec_k = max(nd, 1)
         expected_tokens = s.alpha * nd + 1.0
         budget = expected_tokens / target_speed - t_draft - t_network
         budget = max(budget, 1e-3)
@@ -743,6 +755,7 @@ class WISPServer:
             deadline=r.deadline,
             violated=complete > r.deadline,
             round_index=r.round_index,
+            queue_depth=len(self.pending),
         )
         self.log.append(v)
         self._emit(VerdictEvent(r.session_id, now, v))

@@ -46,6 +46,9 @@ POLICIES = ("wisp", "fcfs")
 PREFILL_MODES = ("monolithic", "chunked")
 
 PROMPTS = {0: [1, 2, 3, 4, 5, 6], 1: [7, 8, 9, 3, 2, 1]}
+#: third session for the mixed-K and fleet cells (three streams make the
+#: ragged batches / routing assignments less degenerate than two)
+EXTRA_PROMPT = [4, 4, 2, 6, 9, 5]
 ROUNDS = 4
 K = 3
 
@@ -66,6 +69,22 @@ def _draft_for(vocab: int, sid: int, rnd: int):
     rng = np.random.default_rng(10_000 + 997 * sid + rnd)
     toks = rng.integers(0, vocab, size=K).astype(np.int32)
     qlog = (rng.normal(size=(K, vocab)) * 1.5).astype(np.float32)
+    return toks, qlog
+
+
+def mixed_k_for(sid: int, rnd: int) -> int:
+    """Deterministic ragged draft length for the mixed-K cells: every
+    round batches sessions at DIFFERENT K (adaptive speculation makes
+    this the normal shape of a dispatch epoch, DESIGN.md §11)."""
+    return 1 + (sid + rnd) % 4
+
+
+def _draft_ragged(vocab: int, sid: int, rnd: int):
+    """Synthetic draft block with per-(session, round) draft length."""
+    k = mixed_k_for(sid, rnd)
+    rng = np.random.default_rng(20_000 + 997 * sid + rnd)
+    toks = rng.integers(0, vocab, size=k).astype(np.int32)
+    qlog = (rng.normal(size=(k, vocab)) * 1.5).astype(np.float32)
     return toks, qlog
 
 
@@ -117,6 +136,109 @@ def run_scenario(backend: str, policy: str, prefill: str,
     return {str(sid): s for sid, s in streams.items()}
 
 
+def run_mixed_k_scenario(backend: str, *, rounds: int = ROUNDS):
+    """Ragged-K variant (adaptive speculation, DESIGN.md §11): three
+    sessions submit blocks of DIFFERENT length every round, so each
+    dispatch epoch verifies a mixed-K padded batch.  Chunked prefill
+    keeps prefill work interleaving with the ragged verify batches."""
+    name, ekw = BACKENDS[backend]
+    cfg, params = _model_for(name)
+    kw = dict(ekw)
+    if cfg.family in ("ssm", "hybrid"):
+        kw["cache_dtype"] = jnp.float32
+    engine = VerificationEngine(
+        cfg, params, max_slots=4, max_len=128, method="residual", seed=7, **kw
+    )
+    server = WISPServer(
+        engine, COEFFS, policy="wisp", prefill="chunked",
+        prefill_chunk_tokens=4,
+    )
+    prompts = {**PROMPTS, 2: EXTRA_PROMPT}
+    now = 0.0
+    streams: dict[int, list[int]] = {}
+    for sid, prompt in prompts.items():
+        server.open_session(sid, prompt, slo_class=2, now=now)
+    while len(server.sessions) < len(prompts):
+        server.step(now)
+        now += 0.005
+    for ev in server.pop_events():
+        if ev.kind == "FIRST_TOKEN":
+            streams[ev.session_id] = [int(ev.token)]
+    assert set(streams) == set(prompts)
+
+    for rnd in range(rounds):
+        drafts = {}
+        for sid in prompts:
+            toks, qlog = _draft_ragged(cfg.vocab, sid, rnd)
+            drafts[sid] = toks
+            server.submit(sid, toks, qlog, now=now, t_draft=0.02,
+                          t_network=0.01)
+        while server.queue_depth:
+            verdicts = server.step(now)
+            now += 0.005
+            for v in verdicts:
+                toks = drafts[v.session_id]
+                streams[v.session_id].extend(
+                    int(t) for t in toks[: v.accept_len]
+                )
+                streams[v.session_id].append(int(v.token))
+        server.pop_events()
+    assert engine.stats["mixed_k_batches"] > 0, \
+        "the mixed-K cell never actually batched ragged draft lengths"
+    return {str(sid): s for sid, s in streams.items()}
+
+
+def run_fleet_scenario(*, verifiers: int = 3, rounds: int = ROUNDS,
+                       migrate_round: int = 1):
+    """Three sessions over a 3-verifier prefix-locality fleet (dense
+    backend), with session 0 force-migrated off its healthy owner after
+    ``migrate_round`` — pinning the ``restore_session`` committed-stream
+    replay path (incl. the replicated alpha/spec_k speculation context)
+    byte-for-byte, without depending on failure-detection timing."""
+    from repro.fleet import build_verifier_fleet
+
+    cfg, params = _model_for(BACKENDS["dense"][0])
+    router = build_verifier_fleet(
+        cfg, params, verifiers, COEFFS, max_slots=4, max_len=128,
+        method="residual", policy="wisp", engine_seed=7,
+    )
+    prompts = {**PROMPTS, 2: EXTRA_PROMPT}
+    now = 0.0
+    streams: dict[int, list[int]] = {}
+    for sid, prompt in prompts.items():
+        router.open_session(sid, prompt, slo_class=2, now=now)
+    for _, ev in router.pop_events():
+        if ev.kind == "FIRST_TOKEN":
+            streams[ev.session_id] = [int(ev.token)]
+    assert set(streams) == set(prompts)
+
+    for rnd in range(rounds):
+        drafts = {}
+        for sid in prompts:
+            toks, qlog = _draft_for(cfg.vocab, sid, rnd)
+            drafts[sid] = toks
+            router.submit(sid, toks, qlog, now=now, t_draft=0.02,
+                          t_network=0.01)
+        while any(router.queue_depth(v) for v in router.verifiers):
+            for vid in list(router.verifiers):
+                for v in router.step(vid, now):
+                    toks = drafts[v.session_id]
+                    streams[v.session_id].extend(
+                        int(t) for t in toks[: v.accept_len]
+                    )
+                    streams[v.session_id].append(int(v.token))
+            now += 0.005
+        router.pop_events()
+        if rnd == migrate_round:
+            committed = list(prompts[0]) + streams[0]
+            src = router.owner[0]
+            dst, _ = router.migrate_session(0, committed, rounds=rnd + 1,
+                                            now=now)
+            assert dst != src
+    assert router.stats["migrations"] >= 1
+    return {str(sid): s for sid, s in streams.items()}
+
+
 def all_cells():
     for backend in BACKENDS:
         for policy in POLICIES:
@@ -131,12 +253,29 @@ def generate() -> dict:
         out[key] = run_scenario(backend, policy, prefill)
         print(f"{key}: "
               + ", ".join(f"s{sid}:{len(s)} tok" for sid, s in out[key].items()))
+    for backend in BACKENDS:
+        key = f"mixed-k/{backend}"
+        out[key] = run_mixed_k_scenario(backend)
+        print(f"{key}: "
+              + ", ".join(f"s{sid}:{len(s)} tok" for sid, s in out[key].items()))
+    key = "fleet/3-verifier"
+    out[key] = run_fleet_scenario()
+    print(f"{key}: "
+          + ", ".join(f"s{sid}:{len(s)} tok" for sid, s in out[key].items()))
     return out
 
 
 if __name__ == "__main__":
     os.makedirs(os.path.dirname(GOLDEN_PATH), exist_ok=True)
     streams = generate()
+    # additive-only guard: cells captured at earlier seeds must never be
+    # silently regenerated — drift there is exactly what the suite exists
+    # to catch
+    if os.path.exists(GOLDEN_PATH):
+        with open(GOLDEN_PATH) as f:
+            old = json.load(f)
+        drifted = sorted(k for k in old if streams.get(k) != old[k])
+        assert not drifted, f"existing golden cells drifted: {drifted}"
     with open(GOLDEN_PATH, "w") as f:
         json.dump(streams, f, indent=1, sort_keys=True)
     print(f"wrote {GOLDEN_PATH}")

@@ -137,6 +137,69 @@ def test_migrate_session_moves_ownership(dense_pair):
         and migrated[0].dst == dst
 
 
+def test_restore_session_preserves_spec_context(dense_pair):
+    """A restored session must resume with the dead owner's adaptive-
+    speculation context (DESIGN.md §11), not cold-start defaults: alpha
+    feeds Algorithm 1's accept-length forecast and spec_k is the edge
+    controller's last draft-length cap."""
+    cfg, tparams, _ = dense_pair
+    eng = VerificationEngine(cfg, tparams, max_slots=2, max_len=64)
+    srv = WISPServer(eng, COEFFS, network=NetworkModel())
+    srv.restore_session(3, [5, 6, 7, 8, 11], rounds=2, alpha=0.85, spec_k=3)
+    s = srv.sessions[3]
+    assert s.alpha == pytest.approx(0.85)
+    assert s.spec_k == 3
+    # defaults stay the legacy cold-start values for old callers
+    srv2 = WISPServer(
+        VerificationEngine(cfg, tparams, max_slots=2, max_len=64),
+        COEFFS, network=NetworkModel())
+    srv2.restore_session(3, [5, 6, 7, 8, 11], rounds=2)
+    assert srv2.sessions[3].alpha == pytest.approx(0.6)
+    assert srv2.sessions[3].spec_k == 0
+
+
+def test_migration_carries_adaptive_spec_context(dense_pair):
+    """The router's soft-state replica of (alpha, spec_k) refreshes on
+    every submit while the owner is alive, so migrating a session off a
+    dead verifier restores the context as of the LAST submitted round —
+    not the 0.6/0 cold-start a fresh session would get."""
+    import numpy as np
+
+    cfg, tparams, _ = dense_pair
+    router = _mini_router(cfg, tparams)
+    sid, now = 0, 0.0
+    src = router.open_session(sid, [5, 6, 7, 8], now=now)
+    stream = [ev.token for _, ev in router.pop_events()
+              if ev.kind == "FIRST_TOKEN"]
+    g = np.random.default_rng(0)
+
+    def one_round(k):
+        nonlocal now
+        toks = g.integers(0, cfg.vocab, size=k).astype(np.int32)
+        qlog = (g.normal(size=(k, cfg.vocab)) * 1.5).astype(np.float32)
+        router.submit(sid, toks, qlog, now=now, t_draft=0.01,
+                      t_network=0.005)
+        while router.queue_depth(src):
+            for v in router.step(src, now):
+                stream.extend(int(t) for t in toks[: v.accept_len])
+                stream.append(int(v.token))
+            now += 0.005
+        router.pop_events()
+
+    one_round(3)
+    s_src = router.verifiers[src].sessions[sid]
+    alpha_snap = s_src.alpha              # post-round-1 EWMA estimate
+    one_round(2)                          # submit refreshes the replica
+    committed = [5, 6, 7, 8] + stream
+    dst, _ = router.migrate_session(sid, committed, rounds=2, now=now)
+    s_dst = router.verifiers[dst].sessions[sid]
+    # the replica was snapshotted at the round-2 submit: alpha as of the
+    # round-1 verdict, spec_k = the round-2 draft-length cap
+    assert s_dst.alpha == pytest.approx(alpha_snap)
+    assert s_dst.alpha != pytest.approx(0.6)
+    assert s_dst.spec_k == 2
+
+
 # -- chaos: kill a verifier mid-stream ---------------------------------------
 
 CHAOS_CCFG = dict(devices=4, rounds=3, k_max=4, max_len=256, seed=0,

@@ -61,6 +61,28 @@ def test_golden_stream_unchanged(golden_streams, backend, policy, prefill):
     )
 
 
+@pytest.mark.parametrize("backend", list(golden.BACKENDS))
+def test_golden_mixed_k_stream_unchanged(golden_streams, backend):
+    """Ragged-K cells (adaptive speculation, DESIGN.md §11): sessions
+    batch at different draft lengths every round — the padded mixed-K
+    dispatch must keep replaying the captured streams byte-for-byte."""
+    key = f"mixed-k/{backend}"
+    got = golden.run_mixed_k_scenario(backend)
+    assert got == golden_streams[key], (
+        f"committed stream drifted from the seed fixture for {key}"
+    )
+
+
+def test_golden_fleet_stream_unchanged(golden_streams):
+    """3-verifier fleet cell with a forced healthy-owner migration: the
+    prefix-locality routing, restore_session committed-stream replay and
+    post-migration round keying must replay byte-identically."""
+    got = golden.run_fleet_scenario()
+    assert got == golden_streams["fleet/3-verifier"], (
+        "committed stream drifted from the seed fixture for fleet/3-verifier"
+    )
+
+
 # ---------------------------------------------------------------------------
 # dispatch / staging budgets (the CI budget gate's counter fixture)
 # ---------------------------------------------------------------------------
@@ -195,6 +217,51 @@ def test_padded_batch_matches_solo(tiny_models, backend):
             slot, _ = eng.new_session(p)
             (o,) = eng.verify([VerifyItem(slot=slot, draft_tokens=d,
                                           rng_tag=(slot, 0))])
+            out.append((o.accept_len, o.token))
+        return out
+
+    assert outcomes(batched=True) == outcomes(batched=False)
+
+
+@pytest.mark.parametrize("backend", ["dense", "paged", "recurrent"])
+@pytest.mark.parametrize("method", ["greedy", "residual"])
+def test_mixed_k_batch_matches_solo(tiny_models, backend, method):
+    """Ragged draft lengths in ONE fused batch (adaptive speculation,
+    DESIGN.md §11): per-session controllers make every dispatch epoch a
+    potential mixed-K batch.  Rows are padded to the bucketed max draft
+    length with per-row ``dlen`` masks — each item must commit exactly
+    what it would alone at its own K (where the pad bucket differs)."""
+    cfg, _ = _engine(tiny_models, backend)
+    ks = [1, 3, 5, 2]
+    prompts = [[2, 3, 4], [9, 8, 7], [5, 5, 6], [4, 2, 9]]
+    drafts, qlogs = [], []
+    for i, k in enumerate(ks):
+        g = np.random.default_rng(100 + i)
+        drafts.append(g.integers(0, cfg.vocab, size=k).astype(np.int32))
+        qlogs.append((g.normal(size=(k, cfg.vocab)) * 1.5)
+                     .astype(np.float32))
+
+    def _item(i, slot):
+        it = VerifyItem(slot=slot, draft_tokens=drafts[i],
+                        rng_tag=(slot, 0))
+        if method == "residual":
+            it.q_logits = qlogs[i]
+        return it
+
+    def outcomes(batched: bool):
+        _, eng = _engine(tiny_models, backend, method=method)
+        if batched:
+            items = []
+            for i, p in enumerate(prompts):
+                slot, _ = eng.new_session(p)
+                items.append(_item(i, slot))
+            res = [(o.accept_len, o.token) for o in eng.verify(items)]
+            assert eng.stats["mixed_k_batches"] == 1
+            return res
+        out = []
+        for i, p in enumerate(prompts):
+            slot, _ = eng.new_session(p)
+            (o,) = eng.verify([_item(i, slot)])
             out.append((o.accept_len, o.token))
         return out
 

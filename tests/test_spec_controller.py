@@ -1,0 +1,272 @@
+"""Property tests for the adaptive-speculation loop (DESIGN.md §11).
+
+Four invariants pin the per-session dynamic-K machinery:
+
+  * a block never drafts past its chosen cap: ``n_drafted <= K`` for any
+    K request and any predictor verdict sequence (and exactly K with no
+    predictor);
+  * the adaptive controller's K stays in ``[1, k_max]`` and moves at
+    most one step per observation (the hysteresis contract), under
+    ARBITRARY feedback — including NaN/inf/negative signals;
+  * the server-side committed prefix never shrinks under any K
+    schedule (streams only ever extend, whatever the controller does);
+  * within-block early stop is monotone in the predictor threshold: a
+    stricter predictor never drafts MORE tokens.
+
+Property tests run under ``hypothesis`` when installed (CI tier-1
+installs it — see `test_hypothesis_available.py`) and collect as
+skipped via `_hypothesis_stub` otherwise.
+"""
+from __future__ import annotations
+
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_stub import given, settings, st
+
+from repro.core.controller import BlockDrafter
+from repro.core.speculation import (
+    SpeculationController,
+    available_spec_policies,
+    make_spec_controller,
+)
+
+
+# ---------------------------------------------------------------------------
+# registry surface (example-based)
+# ---------------------------------------------------------------------------
+
+
+def test_registry_names_and_aliases():
+    assert available_spec_policies() == ["adaptive", "scripted", "static"]
+    for name in ("static", "fixed", "adaptive", "dynamic", "scripted"):
+        c = make_spec_controller(name, k_max=5)
+        assert isinstance(c, SpeculationController)
+        assert 1 <= c.next_k() <= 5
+    with pytest.raises(ValueError, match="available"):
+        make_spec_controller("nope")
+
+
+def test_scripted_schedule_replays_then_holds():
+    c = make_spec_controller("scripted", k_max=6, schedule=[3, 1, 9, 2])
+    assert [c.next_k() for _ in range(6)] == [3, 1, 6, 2, 2, 2]
+    c.start_session()
+    assert c.next_k() == 3
+
+
+def test_static_matches_legacy_k_max():
+    c = make_spec_controller("static", k_max=4)
+    for _ in range(3):
+        assert c.next_k() == 4
+        c.observe(accept_len=0, k_used=4, rtt=9.9, queue_depth=50)
+
+
+def test_adaptive_state_roundtrip_survives_migration():
+    a = make_spec_controller("adaptive", k_max=8)
+    for _ in range(6):
+        a.observe(accept_len=1, k_used=8, rtt=0.002, queue_depth=12)
+    b = make_spec_controller("adaptive", k_max=8)
+    b.load_state(a.state())
+    assert b.next_k() == a.next_k()
+    assert b.state() == a.state()
+
+
+# ---------------------------------------------------------------------------
+# property 1: a block never drafts past its chosen K
+# ---------------------------------------------------------------------------
+
+
+class _FakeCtl:
+    """Duck-typed stand-in for `DraftingController`: deterministic
+    synthetic logits, no model, no jit — `BlockDrafter` only reads the
+    attributes below plus ``sample_next``."""
+
+    def __init__(self, k_max: int, predictor=None, vocab: int = 16):
+        self.k_max = k_max
+        self.predictor = predictor
+        self.include_flagged = False
+        self.q_mode = "dense"
+        self.q_top_c = 8
+        self.draft_speed = 50.0
+        self.vocab = vocab
+
+    def sample_next(self, rng, last_token, cache, pos):
+        g = np.random.default_rng(1000 + 7 * int(last_token) + int(pos))
+        lg = jnp.asarray(g.normal(size=(1, self.vocab)), jnp.float32)
+        return int(g.integers(0, self.vocab)), lg, cache
+
+
+class _BoolSeqPredictor:
+    """Scripted per-position accept verdicts (True past the end)."""
+
+    def __init__(self, accepts):
+        self.accepts = list(accepts)
+        self._i = 0
+
+    def predict_accept(self, feats):
+        ok = self.accepts[self._i] if self._i < len(self.accepts) else True
+        self._i += 1
+        return np.asarray([bool(ok)])
+
+
+def _run_drafter(ctl, k):
+    d = BlockDrafter(ctl, jax.random.PRNGKey(0), 3, None, 0, k=k)
+    while d.step():
+        pass
+    return d.result()
+
+
+@given(k=st.integers(min_value=-3, max_value=24),
+       k_max=st.integers(min_value=1, max_value=12),
+       accepts=st.lists(st.booleans(), max_size=24))
+@settings(max_examples=60, deadline=None)
+def test_draft_len_never_exceeds_chosen_k(k, k_max, accepts):
+    pred = _BoolSeqPredictor(accepts) if accepts else None
+    res = _run_drafter(_FakeCtl(k_max, predictor=pred), k)
+    cap = max(1, min(k, k_max))
+    assert res.k_used == cap
+    assert 0 < res.n_drafted <= cap
+    assert res.n_sent <= res.n_drafted
+    assert len(res.tokens) == res.n_sent
+    if res.stopped_by == "max":
+        assert res.n_drafted == cap
+    if pred is None:
+        # no predictor: the cap is exhausted exactly
+        assert res.n_drafted == res.n_sent == cap
+
+
+# ---------------------------------------------------------------------------
+# property 2: adaptive K bounded + slew-limited under arbitrary feedback
+# ---------------------------------------------------------------------------
+
+_signal = st.one_of(st.none(),
+                    st.floats(allow_nan=True, allow_infinity=True))
+_observation = st.tuples(
+    st.integers(min_value=-4, max_value=64),     # accept_len
+    st.integers(min_value=-4, max_value=64),     # k_used
+    _signal,                                     # p_accept
+    _signal,                                     # rtt
+    _signal,                                     # queue_depth
+)
+
+
+@given(k_max=st.integers(min_value=1, max_value=16),
+       seq=st.lists(_observation, max_size=40))
+@settings(max_examples=120, deadline=None)
+def test_adaptive_k_bounded_and_slew_limited(k_max, seq):
+    c = make_spec_controller("adaptive", k_max=k_max, draft_speed=50.0)
+    c.start_session()
+    prev = c.next_k()
+    assert 1 <= prev <= k_max
+    for accept_len, k_used, p_accept, rtt, queue_depth in seq:
+        c.observe(accept_len=accept_len, k_used=k_used, p_accept=p_accept,
+                  rtt=rtt, queue_depth=queue_depth)
+        k = c.next_k()
+        assert 1 <= k <= k_max, (k, k_max)
+        assert abs(k - prev) <= 1, "hysteresis: one step per observation"
+        prev = k
+
+
+# ---------------------------------------------------------------------------
+# property 3: the committed prefix never shrinks under ANY K schedule
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def shared_server():
+    from repro.core.estimator import EstimatorCoeffs
+    from repro.serving.engine import VerificationEngine
+    from repro.serving.server import WISPServer
+
+    from repro.configs import get_config
+    from repro.models import build
+
+    cfg = get_config("qwen2-7b").reduced()
+    params = build(cfg).init(jax.random.PRNGKey(0))
+    engine = VerificationEngine(cfg, params, max_slots=2, max_len=256,
+                                method="residual", seed=7)
+    server = WISPServer(
+        engine, EstimatorCoeffs(a=1e-4, b_compute=1e-8, b_read=1e-6, c=1e-3),
+        policy="fcfs",
+    )
+    return cfg, engine, server
+
+
+_sid_counter = itertools.count(100)
+
+
+@given(schedule=st.lists(st.integers(min_value=1, max_value=6),
+                         min_size=1, max_size=4))
+@settings(max_examples=8, deadline=None)
+def test_committed_prefix_never_shrinks(shared_server, schedule):
+    """Drive real verification rounds under an arbitrary K schedule and
+    read the ENGINE's committed token buffer back after every round: it
+    must only ever extend (the adaptive loop may change where blocks are
+    cut, never un-commit)."""
+    cfg, engine, server = shared_server
+    sid = next(_sid_counter)
+    server.open_session(sid, [1 + sid % 5, 2, 3, 4], slo_class=2, now=0.0)
+    slot = server.sessions[sid].slot
+    prev = list(engine.tokens[slot])
+    now = 0.0
+    for rnd, k in enumerate(schedule):
+        g = np.random.default_rng(31 * sid + rnd)
+        toks = g.integers(0, cfg.vocab, size=k).astype(np.int32)
+        qlog = (g.normal(size=(k, cfg.vocab)) * 1.5).astype(np.float32)
+        server.submit(sid, toks, qlog, now=now, t_draft=0.01,
+                      t_network=0.005)
+        while server.queue_depth:
+            server.step(now)
+            now += 0.005
+        server.pop_events()
+        cur = list(engine.tokens[slot])
+        assert len(cur) > len(prev), "every round must commit >= 1 token"
+        assert cur[: len(prev)] == prev, "committed prefix shrank"
+        prev = cur
+    server.close_session(sid)
+
+
+# ---------------------------------------------------------------------------
+# property 4: early stop is monotone in the predictor threshold
+# ---------------------------------------------------------------------------
+
+
+class _ThresholdPredictor:
+    """Accept while the scripted per-position proba clears ``threshold``
+    — raising the threshold can only turn accepts into rejections."""
+
+    def __init__(self, probas, threshold):
+        self.probas = list(probas)
+        self.threshold = float(threshold)
+        self._i = 0
+
+    def predict_accept(self, feats):
+        p = self.probas[self._i] if self._i < len(self.probas) else 1.0
+        self._i += 1
+        return np.asarray([p >= self.threshold])
+
+
+@given(probas=st.lists(st.floats(min_value=0.0, max_value=1.0),
+                       min_size=1, max_size=12),
+       t_lo=st.floats(min_value=0.0, max_value=1.0),
+       t_hi=st.floats(min_value=0.0, max_value=1.0),
+       k=st.integers(min_value=1, max_value=12))
+@settings(max_examples=60, deadline=None)
+def test_early_stop_monotone_in_threshold(probas, t_lo, t_hi, k):
+    if t_lo > t_hi:
+        t_lo, t_hi = t_hi, t_lo
+    lo = _run_drafter(
+        _FakeCtl(12, predictor=_ThresholdPredictor(probas, t_lo)), k)
+    hi = _run_drafter(
+        _FakeCtl(12, predictor=_ThresholdPredictor(probas, t_hi)), k)
+    assert hi.n_drafted <= lo.n_drafted
+    assert hi.n_sent <= lo.n_sent
+    # and the stricter run's block is a prefix of the looser run's
+    assert list(hi.tokens) == list(lo.tokens)[: hi.n_sent]
