@@ -38,6 +38,7 @@ TABLES = {
     "ttft": "long-prompt interference: monolithic vs chunked prefill (§8)",
     "hotpath": "verification hot-path budgets: dispatches + bytes (§9)",
     "adaptive_k": "§4.1 (static vs adaptive per-session draft length)",
+    "tiered_kv": "§12 (tiered KV admission capacity at 25% device pool)",
 }
 
 

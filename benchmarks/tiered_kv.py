@@ -1,0 +1,192 @@
+"""Tiered KV admission-capacity benchmark (DESIGN.md §12).
+
+Sizes the device page pool at 25% of the session working set and measures
+how many sessions each configuration can ADMIT (prefill + one verify
+round) before the pool walls:
+
+  * ``untiered`` — the single-tier baseline: ``OutOfPages`` is a hard
+    admission failure once the device pool is referenced end-to-end;
+  * ``tiered``   — a host-DRAM spill pool under the device pool: cold
+    sessions' private pages spill on demand (prefix-refcount-aware, LRU),
+    so admission continues until slots or host+device capacity run out.
+
+TTFT is wall-clock ``new_session`` latency (prefill samples the first
+token).  The capacity claim is honest only at equal TTFT, so the gate
+compares p99 over the COMMON admission prefix — the sessions both
+configurations actually admitted, i.e. the baseline's own operating
+point — where the tier must be latency-neutral.  Later tiered admissions
+pay their spill cost inside their own TTFT and are reported separately.
+
+Asserted budgets (the CI smoke gate):
+
+  * tiered admission capacity STRICTLY exceeds the untiered baseline and
+    is >= 2x at the 25% pool (the acceptance criterion);
+  * common-prefix p99 TTFT stays within noise of the baseline;
+  * the tiered run actually spilled (the capacity did not come for free
+    from slack in the pool sizing).
+
+Rows are written to ``BENCH_tiered_kv.json`` at the repo root (the CI
+artifact alongside ``BENCH_hotpath.json``).
+
+Usage: PYTHONPATH=src:. python benchmarks/tiered_kv.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build
+from repro.serving.engine import NoFreeSlots, VerificationEngine, VerifyItem
+from repro.serving.kv_cache import OutOfPages
+
+from benchmarks.common import print_rows
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_tiered_kv.json")
+
+PAGE_SIZE = 4
+PROMPT_LEN = 8          # 2 full pages
+K = 3                   # one verify round grows a session to <= 3 pages
+PAGES_PER_SESSION = 3   # prompt (2) + decode tail (1): the working set unit
+POOL_FRACTION = 0.25    # device pool = 25% of the working set
+
+
+def _make_engine(n_sessions: int, *, tiered: bool):
+    cfg = get_config("qwen2-7b").reduced()
+    bundle = build(cfg)
+    params = bundle.init(jax.random.PRNGKey(0))
+    working_set = n_sessions * PAGES_PER_SESSION
+    device_pages = max(int(working_set * POOL_FRACTION), PAGES_PER_SESSION)
+    eng = VerificationEngine(
+        cfg, params, max_slots=n_sessions + 1, max_len=32, method="greedy",
+        seed=0, paged=True, page_size=PAGE_SIZE,
+        n_pages=device_pages + 1,                     # + reserved scratch
+        kv_tier_pages=working_set * 2 if tiered else 0,
+    )
+    return cfg, eng, device_pages, working_set
+
+
+def _admit(cfg, eng, n_sessions: int) -> tuple[int, list[float]]:
+    """Admit sessions one at a time (distinct prompts, so no prefix
+    sharing hides the footprint); each runs one greedy verify round then
+    goes idle.  Returns (admitted, per-session TTFT seconds)."""
+    rng = np.random.default_rng(0)
+
+    def one_session(i):
+        prompt = rng.integers(2, cfg.vocab, size=PROMPT_LEN).astype(np.int32)
+        t0 = time.perf_counter()
+        slot, _first = eng.new_session(prompt)
+        ttft = time.perf_counter() - t0
+        draft = rng.integers(0, cfg.vocab, size=K).astype(np.int32)
+        eng.verify([VerifyItem(slot=slot, draft_tokens=draft,
+                               rng_tag=(i, 0))])
+        return slot, ttft
+
+    # warmup: compile the prefill + B=1 verify buckets off the clock,
+    # plus the spill/page-in dispatch pair (no-op on the untiered engine)
+    slot, _ = one_session(-1)
+    eng.spill_session(slot)
+    eng.prefetch_session(slot)
+    eng.close_session(slot)
+
+    ttfts = []
+    for i in range(n_sessions):
+        try:
+            _, ttft = one_session(i)
+        except (OutOfPages, NoFreeSlots):
+            break
+        ttfts.append(ttft)
+    return len(ttfts), ttfts
+
+
+def _p99_ms(xs) -> float:
+    return round(float(np.percentile(np.asarray(xs), 99)) * 1e3, 3)
+
+
+def run(quick: bool = True) -> list[dict]:
+    n_sessions = 12 if quick else 24
+    rows, ttfts = [], {}
+    for config in ("untiered", "tiered"):
+        cfg, eng, device_pages, working_set = _make_engine(
+            n_sessions, tiered=config == "tiered")
+        admitted, tt = _admit(cfg, eng, n_sessions)
+        ttfts[config] = tt
+        rows.append({
+            "table": "tiered_kv", "config": config,
+            "device_pages": device_pages,
+            "host_pages": eng.kv.tier.cfg.host_pages
+            if eng.tiered else 0,
+            "working_set_pages": working_set,
+            "pool_fraction": POOL_FRACTION,
+            "offered_sessions": n_sessions,
+            "admitted_sessions": admitted,
+            "p99_ttft_ms": _p99_ms(tt),
+            "pages_spilled": eng.stats["pages_spilled"],
+            "pages_paged_in": eng.stats["pages_paged_in"],
+            "spill_bytes": eng.stats["spill_bytes"],
+            "pagein_bytes": eng.stats["pagein_bytes"],
+        })
+
+    by = {r["config"]: r for r in rows}
+    cap_u = by["untiered"]["admitted_sessions"]
+    cap_t = by["tiered"]["admitted_sessions"]
+    # -- budget assertions (CI gate) --------------------------------------
+    assert cap_t > cap_u, (
+        f"tiered admission capacity {cap_t} does not exceed the untiered "
+        f"baseline {cap_u} at a {POOL_FRACTION:.0%} device pool"
+    )
+    assert cap_t >= 2 * cap_u, (
+        f"acceptance: tiered capacity {cap_t} is not >= 2x the untiered "
+        f"baseline {cap_u} at a {POOL_FRACTION:.0%} device pool"
+    )
+    assert by["tiered"]["pages_spilled"] > 0, (
+        "the tiered run never spilled — the pool sizing is not actually "
+        "constraining admission and the capacity comparison is vacuous"
+    )
+    # equal-TTFT gate at the baseline's operating point: p99 over the
+    # common admission prefix (4x + 50ms absorbs CPU timer noise on the
+    # tiny reduced model; the claim is latency-NEUTRALITY, these sessions
+    # never touch the tier)
+    common = min(cap_u, cap_t)
+    p99_u = _p99_ms(ttfts["untiered"][:common])
+    p99_t = _p99_ms(ttfts["tiered"][:common])
+    assert p99_t <= 4 * p99_u + 50.0, (
+        f"tiered p99 TTFT {p99_t}ms not comparable to untiered {p99_u}ms "
+        f"over the common {common}-session admission prefix"
+    )
+    by["tiered"]["p99_ttft_common_prefix_ms"] = p99_t
+    by["untiered"]["p99_ttft_common_prefix_ms"] = p99_u
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small session count (CI)")
+    args = ap.parse_args()
+    rows = run(quick=args.smoke)
+    with open(OUT_PATH, "w") as f:
+        json.dump(rows, f, indent=1)
+    print_rows(rows)
+    by = {r["config"]: r for r in rows}
+    print(
+        f"[tiered_kv] admission capacity at "
+        f"{by['tiered']['pool_fraction']:.0%} pool: "
+        f"{by['untiered']['admitted_sessions']} -> "
+        f"{by['tiered']['admitted_sessions']} sessions "
+        f"({by['tiered']['admitted_sessions'] / by['untiered']['admitted_sessions']:.1f}x), "
+        f"common-prefix p99 TTFT "
+        f"{by['untiered']['p99_ttft_common_prefix_ms']}ms -> "
+        f"{by['tiered']['p99_ttft_common_prefix_ms']}ms"
+    )
+    print(f"[tiered_kv] budgets OK; wrote {os.path.abspath(OUT_PATH)}")
+
+
+if __name__ == "__main__":
+    main()

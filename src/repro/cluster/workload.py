@@ -98,6 +98,15 @@ class ClusterConfig:
     #: hedge an in-flight round past hedge_factor x (eta + hedge_guard)
     hedge_factor: float = 8.0
     hedge_guard: float = 0.01
+    # -- host KV spill tier (DESIGN.md §12) --------------------------------
+    #: host-DRAM spill pool size in pages under each verifier's device page
+    #: pool; 0 = no tier (OutOfPages stays a hard admission wall)
+    kv_tier_pages: int = 0
+    #: int8-quantize pages on spill (per-page scales; bit-exact-or-raw)
+    spill_quantize: bool = False
+    #: engine dispatches a session must sit idle before its private pages
+    #: become spill candidates
+    spill_idle_epochs: int = 2
 
 
 @dataclasses.dataclass

@@ -69,6 +69,13 @@ class WorkItem:
     #: cached (cold start / cache eviction / SLED's no-cache baseline);
     #: prefill: the chunk length
     prefill_tokens: int = 0
+    #: tokens whose KV currently sits in the host spill tier (DESIGN.md
+    #: §12): part of ``cached_len`` for *memory* accounting (their pages
+    #: re-enter the device pool on page-in), but an extra *time* cost —
+    #: ``batch_shape()`` prices them like new tokens so a spilled
+    #: session's verify is dearer than a resident one's and the
+    #: utility-density fill prefers resident work under pressure
+    pagein_tokens: int = 0
     # bookkeeping
     enqueued_at: float = 0.0
     round_index: int = 0
@@ -88,7 +95,15 @@ class WorkItem:
         raise NotImplementedError
 
     def batch_shape(self) -> BatchShape:
-        return BatchShape(new_tokens=self.new_tokens, cached_tokens=self.cached_len)
+        # pagein_tokens ride the new_tokens axis for TIME pricing only
+        # (page-in moves whole pages across the host boundary, the same
+        # bandwidth class as writing fresh KV); memory accounting keeps
+        # using ``cached_len + new_tokens`` — the reloaded pages are the
+        # cached tokens, already counted there
+        return BatchShape(
+            new_tokens=self.new_tokens + self.pagein_tokens,
+            cached_tokens=self.cached_len,
+        )
 
     # -- engine hooks (the serving coordinator protocol) ------------------
     def make_engine_item(self, server):

@@ -34,6 +34,9 @@ def build_verifier_fleet(
     heartbeat_timeout: float = 0.15,
     hedge_factor: float = 8.0,
     hedge_guard: float = 0.01,
+    kv_tier_pages: int = 0,
+    spill_quantize: bool = False,
+    spill_idle_epochs: int = 2,
 ) -> FleetRouter:
     """N same-seed verifiers (each its own engine + page pool + scheduler
     instance) behind a prefix-locality router.  ``max_slots`` is PER
@@ -48,6 +51,8 @@ def build_verifier_fleet(
         engine = VerificationEngine(
             model_cfg, tparams, max_slots=max_slots, max_len=max_len,
             method=method, seed=engine_seed,
+            kv_tier_pages=kv_tier_pages, spill_quantize=spill_quantize,
+            spill_idle_epochs=spill_idle_epochs,
         )
         verifiers[f"v{i}"] = WISPServer(
             engine, coeffs, policy=policy, sched_cfg=sched_cfg,

@@ -87,6 +87,9 @@ def run_serving(
     heartbeat_timeout: float = 0.15,
     hedge_factor: float = 8.0,
     hedge_guard: float = 0.01,
+    kv_tier_pages: int = 0,
+    spill_quantize: bool = False,
+    spill_idle_epochs: int = 2,
 ):
     """Run the WISP serving stack; returns a dict with per-device ``stats``,
     aggregate ``total``, the ``edges`` / ``server`` objects and — in
@@ -168,6 +171,9 @@ def run_serving(
         heartbeat_timeout=heartbeat_timeout,
         hedge_factor=hedge_factor,
         hedge_guard=hedge_guard,
+        kv_tier_pages=kv_tier_pages,
+        spill_quantize=spill_quantize,
+        spill_idle_epochs=spill_idle_epochs,
     )
     fleet = build_fleet(ccfg, tcfg.vocab)
 
@@ -187,12 +193,17 @@ def run_serving(
             slo_classes=slo_speeds, ttft_slo=ttft_slo,
             heartbeat_timeout=heartbeat_timeout,
             hedge_factor=hedge_factor, hedge_guard=hedge_guard,
+            kv_tier_pages=kv_tier_pages, spill_quantize=spill_quantize,
+            spill_idle_epochs=spill_idle_epochs,
         )
         engine = next(iter(router.verifiers.values())).engine
         server = router
     else:
         engine = VerificationEngine(tcfg, tparams, max_slots=devices,
-                                    max_len=max_len, method=method)
+                                    max_len=max_len, method=method,
+                                    kv_tier_pages=kv_tier_pages,
+                                    spill_quantize=spill_quantize,
+                                    spill_idle_epochs=spill_idle_epochs)
         server = WISPServer(
             engine, coeffs, policy=policy, network=net,
             slo_classes=slo_speeds, sched_cfg=sched_cfg,
@@ -265,6 +276,15 @@ def run_serving(
               f"violations={m.violations()} "
               f"deadline_misses={m.deadline_violations()} "
               f"engine batches={n_batches} wall={wall:.1f}s")
+        if kv_tier_pages > 0:
+            sp_pages = sum(e.stats["pages_spilled"] for e in engines)
+            pi_pages = sum(e.stats["pages_paged_in"] for e in engines)
+            sp_mb = sum(e.stats["spill_bytes"] for e in engines) / 2**20
+            pi_mb = sum(e.stats["pagein_bytes"] for e in engines) / 2**20
+            print(f"[serve] kv-tier: host_pages={kv_tier_pages} "
+                  f"quantize={spill_quantize} spilled={sp_pages} "
+                  f"({sp_mb:.2f} MiB) paged_in={pi_pages} "
+                  f"({pi_mb:.2f} MiB)")
         if verifiers > 1:
             fs = server.stats
             print(f"[serve] fleet: verifiers={verifiers} "
@@ -427,6 +447,18 @@ def main():
                     metavar="IDX:T0:T1:FACTOR",
                     help="slow verifier IDX's epochs by FACTOR in [T0,T1); "
                          "repeatable")
+    ap.add_argument("--kv-tier", type=int, default=0, metavar="PAGES",
+                    help="host-DRAM KV spill pool size in pages under each "
+                         "verifier's device page pool (DESIGN.md §12); "
+                         "0 = no tier")
+    ap.add_argument("--spill-quantize", action="store_true",
+                    help="int8-quantize KV pages on spill (per-page scales; "
+                         "stored only when the dequantization round-trips "
+                         "bit-exactly, raw fallback otherwise)")
+    ap.add_argument("--spill-idle", type=int, default=2,
+                    metavar="EPOCHS",
+                    help="engine dispatches a session must sit idle before "
+                         "its pages become spill candidates")
     args = ap.parse_args()
 
     def _parse_fail(spec: str) -> tuple:
@@ -456,6 +488,9 @@ def main():
         verifiers=args.verifiers,
         fail_at=tuple(_parse_fail(s) for s in args.fail_at),
         straggle=tuple(_parse_straggle(s) for s in args.straggle),
+        kv_tier_pages=args.kv_tier,
+        spill_quantize=args.spill_quantize,
+        spill_idle_epochs=args.spill_idle,
     )
 
 

@@ -71,7 +71,12 @@ from repro.core.speculative import (
     verify_epoch_rule,
 )
 from repro.models import build, encdec, transformer
-from repro.serving.kv_cache import PAGE_SIZE, OutOfPages, PagedKV
+from repro.serving.kv_cache import (
+    PAGE_SIZE,
+    OutOfPages,
+    PagedKV,
+    TierConfig,
+)
 
 #: families whose self-attn KV can be paged; recurrent state cannot.
 ATTENTION_FAMILIES = ("dense", "moe", "vlm", "audio")
@@ -207,6 +212,9 @@ class VerificationEngine:
         paged: bool | None = None,
         page_size: int = PAGE_SIZE,
         n_pages: int | None = None,
+        kv_tier_pages: int = 0,
+        spill_quantize: bool = False,
+        spill_idle_epochs: int = 2,
     ):
         self.cfg = cfg
         self.bundle = build(cfg)
@@ -259,7 +267,28 @@ class VerificationEngine:
             #: the existing bucket/pad machinery — per-row ``dlen`` masks
             #: the pad tail, so mixed-K costs no extra dispatch
             "mixed_k_batches": 0,
+            #: host spill tier (DESIGN.md §12): bytes moved across the
+            #: device<->host boundary by spill / page-in, plus format
+            #: counters — structurally zero when no tier is configured
+            "spill_bytes": 0,
+            "pagein_bytes": 0,
+            "pages_spilled": 0,
+            "pages_paged_in": 0,
+            "spills_quantized": 0,
+            "spills_raw": 0,
+            "host_evictions": 0,
         }
+        if kv_tier_pages > 0 and not self.paged:
+            raise ValueError(
+                "kv_tier_pages requires the paged backend "
+                f"(family={cfg.family}, window={cfg.sliding_window})"
+            )
+        self._tier_cfg = (
+            TierConfig(host_pages=int(kv_tier_pages),
+                       quantize=bool(spill_quantize),
+                       idle_epochs=int(spill_idle_epochs))
+            if kv_tier_pages > 0 else None
+        )
 
         if self.paged:
             self._init_paged(cache_dtype, page_size, n_pages)
@@ -287,6 +316,7 @@ class VerificationEngine:
         self.kv = PagedKV(
             cfg.n_layers, n_pages, hkv, hd,
             page_size=page_size, dtype=cache_dtype,
+            tier=self._tier_cfg, counters=self.stats,
         )
         #: prefix sharing is sound only when KV is a pure function of the
         #: token ids — cross-attention families condition on extras.
@@ -604,10 +634,52 @@ class VerificationEngine:
         fits (single-slot engines hit this immediately).  The budget
         tightens as rejected-draft garbage accumulates and widens when
         sessions close or tail pages are trimmed.  The dense backend's
-        capacity is static."""
+        capacity is static.
+
+        With a spill tier (DESIGN.md §12) the budget additionally counts
+        tokens the tier could move to host DRAM on demand (cold private
+        pages of idle sessions, capped by host headroom) — admission sees
+        through the tier, which is what multiplies resident-session
+        capacity past the device pool."""
         if self.paged:
-            return self.kv.free_tokens + self.kv.resident_tokens()
+            return (self.kv.free_tokens + self.kv.resident_tokens()
+                    + self.kv.spillable_tokens())
         return self.max_slots * self.max_len
+
+    # -- spill tier (DESIGN.md §12) -------------------------------------------
+    @property
+    def tiered(self) -> bool:
+        return self.paged and self.kv.tiered
+
+    def spill_session(self, slot: int) -> int:
+        """Force-spill a session's private pages to the host tier (tests,
+        golden-stream battery, and explicit cold-session demotion).
+        Returns device pages freed; 0 without a tier."""
+        if not self.tiered:
+            return 0
+        return self.kv.spill_seq(slot)
+
+    def prefetch_session(self, slot: int) -> int:
+        """Best-effort page-in of a session's spilled pages ahead of its
+        next verify epoch (the server calls this at submit time so the
+        fused hot path never blocks on a fault).  Returns pages loaded; a
+        device pool too full to cover the prefetch leaves the session
+        spilled — verify's own ``ensure_resident`` retries under the
+        OutOfPages degradation path."""
+        if not self.tiered or slot not in self.kv.tables:
+            return 0
+        try:
+            return self.kv.ensure_resident(slot)
+        except OutOfPages:
+            return 0
+
+    def spilled_tokens(self, slot: int) -> int:
+        """Token capacity of ``slot``'s host-resident pages — the page-in
+        debt a verify of this session must pay (the scheduler prices it
+        via ``WorkItem.pagein_tokens``)."""
+        if not self.tiered or slot not in self.kv.tables:
+            return 0
+        return self.kv.spilled_tokens(slot)
 
     def prefix_cache_stats(self) -> dict:
         """Prefix-cache / page-pool counters, tagged with the backend that
@@ -722,12 +794,23 @@ class VerificationEngine:
         state is untouched and resumable."""
         live: list = []
         oom = [False] * len(chunks)
+        if self.tiered:
+            # co-scheduled chunks must not spill each other mid-staging
+            self.kv.tick()
+            for c in chunks:
+                if c.state.slot in self.kv.tables:
+                    self.kv.touch_seq(c.state.slot)
         for i, c in enumerate(chunks):
             st = c.state
             n = min(int(c.n_tokens), st.remaining)
             if n <= 0:
                 continue
             try:
+                if self.tiered:
+                    # a partially-prefilled session parked behind the
+                    # admission queue may have been spilled by reclaim;
+                    # restore before reserving the chunk's pages
+                    self.kv.ensure_resident(st.slot)
                 self.kv.ensure_capacity(st.slot, st.done + n)
             except OutOfPages:
                 if raise_oom:
@@ -953,7 +1036,17 @@ class VerificationEngine:
             # reserve pages FIRST: OutOfPages must propagate before any
             # engine side effect (rng split, byte counters) so an
             # OOM-requeued batch replays identically and is not
-            # double-counted (staging pools alone are reset-on-reuse)
+            # double-counted (staging pools alone are reset-on-reuse).
+            # With a spill tier, first mark every batch row live (so one
+            # row's page-in cannot spill a co-scheduled row), then page
+            # spilled rows back in — page-ins that land stay resident
+            # across an OOM requeue, so the replay is a no-op for them.
+            if self.tiered:
+                self.kv.tick()
+                for it in items:
+                    self.kv.touch_seq(it.slot)
+                for it in items:
+                    self.kv.ensure_resident(it.slot)
             for it in items:
                 self.kv.ensure_capacity(
                     it.slot,

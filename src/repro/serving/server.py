@@ -588,6 +588,11 @@ class WISPServer:
         target_speed = self.slo_classes[s.slo_class]
         nd = len(draft_tokens)
         s.spec_k = max(nd, 1)
+        # spill tier (DESIGN.md §12): a draft block announces the session's
+        # next verify epoch — page its spilled KV back in NOW (best effort)
+        # so the fused verify dispatch never blocks on a fault; whatever
+        # could not be prefetched is priced into the work item below
+        self.engine.prefetch_session(s.slot)
         expected_tokens = s.alpha * nd + 1.0
         budget = expected_tokens / target_speed - t_draft - t_network
         budget = max(budget, 1e-3)
@@ -608,6 +613,7 @@ class WISPServer:
             ),
             enqueued_at=now,
             round_index=s.rounds,
+            pagein_tokens=self.engine.spilled_tokens(s.slot),
         )
         self.pending.append(req)
         return self._rid

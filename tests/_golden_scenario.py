@@ -89,13 +89,22 @@ def _draft_ragged(vocab: int, sid: int, rnd: int):
 
 
 def run_scenario(backend: str, policy: str, prefill: str,
-                 *, rounds: int = ROUNDS):
-    """Returns {session_id: committed token stream (list[int])}."""
+                 *, rounds: int = ROUNDS, engine_overrides: dict | None = None,
+                 spill_between_rounds: bool = False):
+    """Returns {session_id: committed token stream (list[int])}.
+
+    ``engine_overrides`` adds/overrides engine kwargs (the tiered cells
+    attach a host spill pool this way); ``spill_between_rounds``
+    force-spills every session's pages to the host tier after each round
+    drains, so the next round's verify must page them back in mid-stream
+    — the spill/reload battery's byte-identity requirement (DESIGN.md
+    §12) is that this changes NOTHING about the committed streams."""
     name, ekw = BACKENDS[backend]
     cfg, params = _model_for(name)
     kw = dict(ekw)
     if cfg.family in ("ssm", "hybrid"):
         kw["cache_dtype"] = jnp.float32
+    kw.update(engine_overrides or {})
     engine = VerificationEngine(
         cfg, params, max_slots=4, max_len=128, method="residual", seed=7, **kw
     )
@@ -133,7 +142,30 @@ def run_scenario(backend: str, policy: str, prefill: str,
                 )
                 streams[v.session_id].append(int(v.token))
         server.pop_events()
+        if spill_between_rounds:
+            for sid in PROMPTS:
+                engine.spill_session(server.sessions[sid].slot)
+    if spill_between_rounds:
+        # the cell must actually exercise a mid-stream spill + reload —
+        # a no-op spill would make the byte-identity assertion vacuous
+        assert engine.stats["pages_spilled"] > 0, "nothing spilled"
+        assert engine.stats["pages_paged_in"] > 0, "nothing paged back in"
     return {str(sid): s for sid, s in streams.items()}
+
+
+def run_tiered_scenario(quantize: bool, *, rounds: int = ROUNDS):
+    """Forced-spill-then-reload mid-stream on the paged backend with a
+    host tier attached ({raw, int8-quantize-on} spill formats).  Must
+    replay byte-identical to the untiered ``paged/wisp/monolithic``
+    baseline cell: spill encodings page back in bit-exactly (int8 is
+    stored only when its dequantization round-trips, DESIGN.md §12), so
+    tiering can never perturb the accept rule or the correction draws."""
+    return run_scenario(
+        "paged", "wisp", "monolithic", rounds=rounds,
+        engine_overrides={"kv_tier_pages": 64, "spill_quantize": quantize,
+                          "spill_idle_epochs": 2},
+        spill_between_rounds=True,
+    )
 
 
 def run_mixed_k_scenario(backend: str, *, rounds: int = ROUNDS):
@@ -262,6 +294,11 @@ def generate() -> dict:
     out[key] = run_fleet_scenario()
     print(f"{key}: "
           + ", ".join(f"s{sid}:{len(s)} tok" for sid, s in out[key].items()))
+    for fmt, quantize in (("raw", False), ("int8", True)):
+        key = f"tiered/{fmt}"
+        out[key] = run_tiered_scenario(quantize)
+        print(f"{key}: "
+              + ", ".join(f"s{sid}:{len(s)} tok" for sid, s in out[key].items()))
     return out
 
 

@@ -297,6 +297,71 @@ def test_chaos_straggler_hedged_away(dense_pair, golden_streams):
     assert streams == golden_streams
 
 
+def test_chaos_migrate_session_with_spilled_pages(dense_pair):
+    """Chaos x tiering (DESIGN.md §12): migrate a session whose KV pages
+    sit in the SOURCE verifier's host spill tier.  The destination's
+    ``restore_session`` replays the committed stream as a fresh prefill
+    (never touching the source's tier) without deadlocking against its
+    own tier hooks, the source teardown releases the spilled refs, and
+    the stream continues byte-identical to a run that never spilled."""
+    import numpy as np
+
+    cfg, tparams, _ = dense_pair
+
+    def _tiered_router(n=2):
+        verifiers = {}
+        for i in range(n):
+            eng = VerificationEngine(
+                cfg, tparams, max_slots=4, max_len=64, page_size=4,
+                kv_tier_pages=32, spill_idle_epochs=2,
+            )
+            verifiers[f"v{i}"] = WISPServer(eng, COEFFS,
+                                            network=NetworkModel())
+        return FleetRouter(verifiers)
+
+    def run(spill: bool):
+        router = _tiered_router()
+        sid, now = 0, 0.0
+        src = router.open_session(sid, [5, 6, 7, 8], now=now)
+        stream = [ev.token for _, ev in router.pop_events()
+                  if ev.kind == "FIRST_TOKEN"]
+        g = np.random.default_rng(0)
+
+        def one_round(owner, k):
+            nonlocal now
+            toks = g.integers(0, cfg.vocab, size=k).astype(np.int32)
+            qlog = (g.normal(size=(k, cfg.vocab)) * 1.5).astype(np.float32)
+            router.submit(sid, toks, qlog, now=now, t_draft=0.01,
+                          t_network=0.005)
+            while router.queue_depth(owner):
+                for v in router.step(owner, now):
+                    stream.extend(int(t) for t in toks[: v.accept_len])
+                    stream.append(int(v.token))
+                now += 0.005
+            router.pop_events()
+
+        one_round(src, 3)
+        src_eng = router.verifiers[src].engine
+        if spill:
+            slot = router.verifiers[src].sessions[sid].slot
+            assert src_eng.spill_session(slot) > 0
+            assert src_eng.kv.spilled_pages(slot) > 0
+        committed = [5, 6, 7, 8] + stream
+        dst, replayed = router.migrate_session(sid, committed, rounds=1,
+                                               now=now)
+        assert dst != src and replayed == len(committed) - 1
+        if spill:
+            # the source teardown left no host entry owned by a live
+            # sequence — entries were dropped or orphaned to prefix-only
+            assert all(e.owner is None
+                       for e in src_eng.kv.tier.entries.values())
+        one_round(dst, 2)
+        one_round(dst, 3)
+        return stream
+
+    assert run(spill=True) == run(spill=False)
+
+
 def test_chaos_verifier_rejoins(dense_pair, golden_streams):
     """A verifier that dies and recovers re-enters the rotation (rejoin
     hook) without perturbing any stream."""

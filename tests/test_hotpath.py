@@ -83,6 +83,41 @@ def test_golden_fleet_stream_unchanged(golden_streams):
     )
 
 
+@pytest.mark.parametrize("fmt,quantize", [("raw", False), ("int8", True)])
+def test_golden_tiered_stream_unchanged(golden_streams, fmt, quantize):
+    """Tiered cells (DESIGN.md §12): every session's pages are force-spilled
+    to the host tier after each round and paged back in mid-stream by the
+    next verify.  Both spill formats ({raw, int8-quantize-on}) must replay
+    byte-identically to the stored cell AND to the untiered
+    paged/wisp/monolithic baseline — the tier is invisible to the accept
+    rule and the correction draws."""
+    got = golden.run_tiered_scenario(quantize)
+    assert got == golden_streams[f"tiered/{fmt}"], (
+        f"committed stream drifted from the seed fixture for tiered/{fmt}"
+    )
+    assert got == golden_streams["paged/wisp/monolithic"], (
+        "spill/reload perturbed the stream vs the untiered paged baseline"
+    )
+
+
+@pytest.mark.parametrize("policy", list(golden.POLICIES))
+@pytest.mark.parametrize("prefill", list(golden.PREFILL_MODES))
+def test_paged_golden_cells_replay_with_tier_enabled(golden_streams, policy,
+                                                     prefill):
+    """Acceptance: the EXISTING paged golden cells replay byte-identical
+    with a host tier merely attached (no forced spill) — enabling tiering
+    on a workload that fits in the device pool is a strict no-op."""
+    key = f"paged/{policy}/{prefill}"
+    got = golden.run_scenario(
+        "paged", policy, prefill,
+        engine_overrides={"kv_tier_pages": 64, "spill_quantize": True,
+                          "spill_idle_epochs": 2},
+    )
+    assert got == golden_streams[key], (
+        f"attaching an (idle) host tier changed the stream for {key}"
+    )
+
+
 # ---------------------------------------------------------------------------
 # dispatch / staging budgets (the CI budget gate's counter fixture)
 # ---------------------------------------------------------------------------

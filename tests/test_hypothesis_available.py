@@ -26,6 +26,7 @@ PROPERTY_MODULES = (
     "test_sharding",
     "test_spec_controller",
     "test_speculative",
+    "test_tiered_kv",
     "test_wdt",
 )
 

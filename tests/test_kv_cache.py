@@ -112,6 +112,48 @@ def test_cached_pages_evicted_lazily_on_exhaustion():
     assert not a.prefix_index                    # index entry dropped
 
 
+def test_eviction_is_lru_by_last_touch_not_dict_order():
+    """Regression: ``_evict_unreferenced`` used to walk ``page_hash`` in
+    dict-insertion order, so eviction (and tier-spill victim selection)
+    depended on publication history rather than recency.  It must evict
+    strictly by last-touch epoch (page id as the tie-break), one page per
+    ``need`` — a hot prefix entry survives pressure longer than a cold one."""
+    a = PageAllocator(4, page_size=4)
+    pids = [a.alloc() for _ in range(4)]
+    for i, pid in enumerate(pids[:3]):
+        a.publish_prefix([10 + i] * 4, [pid])
+        a.release(pid)                           # resident, refcount 0
+    # touch in NON-insertion order: recency is now 0 < 2 < 1
+    a.tick()
+    a.touch(pids[0])
+    a.tick()
+    a.touch(pids[2])
+    a.tick()
+    a.touch(pids[1])
+    # each exhausted alloc evicts exactly the least-recently-touched page
+    got = [a.alloc() for _ in range(3)]
+    assert got == [pids[0], pids[2], pids[1]], (
+        "eviction followed insertion order, not last-touch LRU"
+    )
+    assert not a.prefix_index and not a.page_hash
+
+
+def test_eviction_never_takes_referenced_pages():
+    """A prefix-reachable page with refcount >= 1 (shared or live) is
+    pinned: exhaustion evicts only unreferenced cached pages, and raises
+    once none remain."""
+    a = PageAllocator(2, page_size=4)
+    hot = a.alloc()
+    a.publish_prefix([1, 2, 3, 4], [hot])        # published AND referenced
+    cold = a.alloc()
+    a.publish_prefix([5, 6, 7, 8], [cold])
+    a.release(cold)                              # only eviction candidate
+    assert a.alloc() == cold
+    with pytest.raises(OutOfPages):
+        a.alloc()                                # hot page stays pinned
+    assert a.page_hash.get(hot) is not None
+
+
 @settings(max_examples=50, deadline=None)
 @given(ops=st.lists(st.integers(0, 2), min_size=1, max_size=200),
        n_pages=st.integers(1, 6))

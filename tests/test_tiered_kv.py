@@ -1,0 +1,369 @@
+"""Tiered KV spill/reload battery (DESIGN.md §12): state-machine
+invariants of the HBM -> host-DRAM page tier — property-based where
+hypothesis is available, example-based otherwise.
+
+The four invariants the tier must hold under ANY schedule of
+open/grow/publish/spill/reload/close operations:
+
+  1. no page is ever simultaneously resident and spilled (a block-table
+     ref is a device id >= 0 XOR a ``~handle`` < 0 with a live host
+     entry — and each host entry has at most one table owner);
+  2. refcounts never go negative (and free pages are refcount 0);
+  3. prefix-reachable pages with refcount > 1 are pinned: they are never
+     spilled or evicted while an unreferenced page is available;
+  4. conservation — every non-free device page is reachable (scratch, a
+     block table, or the prefix index) and every host entry is reachable
+     (a block table or the prefix index): nothing leaks, nothing is
+     double-owned, and device ``in_use + free == n_pages`` throughout.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dep: degrade property tests to skips
+    from _hypothesis_stub import given, settings, st
+
+from repro.serving.kv_cache import (
+    OutOfPages,
+    PageFault,
+    PagedKV,
+    TierConfig,
+    is_spilled,
+)
+
+
+def _mk_kv(n_pages=8, page_size=4, host_pages=8, quantize=False,
+           idle_epochs=1):
+    counters: dict = {}
+    kv = PagedKV(
+        2, n_pages, 2, 4, page_size=page_size, dtype=jnp.float32,
+        tier=TierConfig(host_pages=host_pages, quantize=quantize,
+                        idle_epochs=idle_epochs),
+        counters=counters,
+    )
+    return kv, counters
+
+
+def _check_invariants(kv: PagedKV):
+    """The four DESIGN.md §12 invariants, checked structurally."""
+    alloc = kv.allocator
+    n = alloc.n_pages
+    # (2) refcounts never negative; free list is duplicate-free refcount-0
+    assert (alloc.refcount >= 0).all()
+    assert len(set(alloc.free)) == len(alloc.free)
+    for pid in alloc.free:
+        assert alloc.refcount[pid] == 0
+    # (1) every table ref is a live device page XOR a live host handle,
+    # and no handle is referenced by two tables (spill is refcount-1 only)
+    handles_referenced = []
+    for t in kv.tables.values():
+        for ref in t.pages:
+            if is_spilled(ref):
+                assert (~ref) in kv.tier.entries, "dangling spilled ref"
+                handles_referenced.append(~ref)
+            else:
+                assert 0 <= ref < n and ref not in alloc.free, (
+                    "resident ref points at a freed page"
+                )
+    assert len(handles_referenced) == len(set(handles_referenced)), (
+        "one host entry referenced by two block tables"
+    )
+    # host entry ownership matches the tables that reference it
+    for h, e in kv.tier.entries.items():
+        if e.owner is not None:
+            assert e.owner in kv.tables
+            assert any(r == ~h for r in kv.tables[e.owner].pages), (
+                "owned host entry not referenced by its owner's table"
+            )
+    # prefix index <-> page_hash stay a consistent bidirectional map,
+    # and every index ref is live (resident or spilled)
+    for hsh, ref in alloc.prefix_index.items():
+        assert alloc.page_hash.get(ref) == hsh
+        if is_spilled(ref):
+            assert (~ref) in kv.tier.entries
+        else:
+            assert ref not in alloc.free
+    for ref, hsh in alloc.page_hash.items():
+        assert alloc.prefix_index.get(hsh) == ref
+    # (4) conservation: device pool partitions exactly into free + reachable
+    assert alloc.in_use + len(alloc.free) == n
+    reachable = {kv.scratch_page}
+    for t in kv.tables.values():
+        reachable |= {r for r in t.pages if not is_spilled(r)}
+    reachable |= {r for r in alloc.page_hash if r >= 0}
+    assert reachable == set(range(n)) - set(alloc.free), (
+        "leaked or phantom device pages"
+    )
+    host_reachable = set(handles_referenced) | {
+        ~r for r in alloc.page_hash if is_spilled(r)
+    }
+    assert host_reachable == set(kv.tier.entries), "leaked host entries"
+    assert 0 <= kv.tier.in_use <= kv.tier.cfg.host_pages
+    # (3) shared prefix pages are pinned on device
+    for t in kv.tables.values():
+        for ref in t.pages:
+            if not is_spilled(ref):
+                continue
+            # a spilled ref can never ALSO be shared: its device refcount
+            # was 1 at spill time and the handle has a single table owner
+    for pid in range(n):
+        if alloc.refcount[pid] > 1:
+            assert pid not in alloc.free
+
+
+@settings(max_examples=40, deadline=None)
+@given(ops=st.lists(st.integers(0, 6), min_size=1, max_size=120),
+       n_pages=st.integers(3, 7), host_pages=st.integers(1, 5),
+       quantize=st.booleans())
+def test_tier_state_machine_invariants(ops, n_pages, host_pages, quantize):
+    """Any alloc/grow/publish/spill/reload/close schedule holds all four
+    invariants after every step — including schedules where the device
+    pool, the host pool, or both run out mid-operation."""
+    rng = np.random.default_rng(0)
+    kv, _ = _mk_kv(n_pages=n_pages, host_pages=host_pages,
+                   quantize=quantize)
+    toks: dict[int, list[int]] = {}
+    next_sid = 0
+    for op in ops:
+        sids = list(kv.tables)
+        sid = sids[int(rng.integers(len(sids)))] if sids else None
+        try:
+            if op == 0:  # open a new sequence (prefix lookup may page in)
+                prompt = [int(x) for x in
+                          rng.integers(1, 9, size=int(rng.integers(1, 10)))]
+                n_cached = kv.open_seq(next_sid, prompt)
+                toks[next_sid] = prompt
+                kv.set_len(next_sid, n_cached)
+                next_sid += 1
+            elif op == 1 and sid is not None:  # grow by a few tokens
+                grow = int(rng.integers(1, 6))
+                toks[sid] = toks[sid] + [int(x) for x in
+                                         rng.integers(1, 9, size=grow)]
+                want = kv.seq_len(sid) + grow
+                kv.ensure_capacity(sid, want)
+                kv.set_len(sid, want)
+            elif op == 2 and sid is not None:  # publish committed prefix
+                kv.publish_seq_prefix(sid, toks[sid][: kv.seq_len(sid)])
+            elif op == 3 and sid is not None:  # force-spill
+                kv.spill_seq(sid)
+            elif op == 4 and sid is not None:  # page back in
+                kv.ensure_resident(sid)
+            elif op == 5 and sid is not None:  # close (publish half the time)
+                commit = toks[sid][: kv.seq_len(sid)] \
+                    if rng.random() < 0.5 else None
+                kv.close_seq(sid, commit)
+                toks.pop(sid)
+            elif op == 6:
+                kv.tick()
+        except OutOfPages:
+            pass  # exhaustion must leave consistent, resumable state
+        _check_invariants(kv)
+
+
+# ---------------------------------------------------------------------------
+# spill encodings: int8-when-bit-exact, raw fallback
+# ---------------------------------------------------------------------------
+
+
+def _grid_kv(rng):
+    """K/V whose values are exact int multiples of ``amax/127`` (amax
+    pinned to 127 per (k/v, layer) => scale exactly 1.0): the int8
+    round-trip is bit-exact, so the quantized format is actually stored."""
+    k = rng.integers(-127, 128, size=(2, 4, 2, 4)).astype(np.float32)
+    v = rng.integers(-127, 128, size=(2, 4, 2, 4)).astype(np.float32)
+    for layer in range(2):
+        k[layer, 0, 0, 0] = 127.0
+        v[layer, 0, 0, 0] = 127.0
+    return k, v
+
+
+def test_int8_spill_stored_when_roundtrip_exact():
+    kv, counters = _mk_kv(quantize=True)
+    k, v = _grid_kv(np.random.default_rng(3))
+    kv.open_seq(1, [5])
+    kv.write_tokens(1, 0, jnp.asarray(k), jnp.asarray(v))
+    kv.set_len(1, 4)
+    assert kv.spill_seq(1) == 1
+    assert (counters["spills_quantized"], counters["spills_raw"]) == (1, 0)
+    (entry,) = kv.tier.entries.values()
+    assert entry.fmt == "int8"
+    assert entry.nbytes < k.nbytes + v.nbytes      # ~4x smaller + scales
+    assert kv.ensure_resident(1) == 1
+    assert counters["pages_paged_in"] == 1
+    kd, vd = kv.gather_dense(1, 4)
+    np.testing.assert_array_equal(np.asarray(kd), k)
+    np.testing.assert_array_equal(np.asarray(vd), v)
+
+
+def test_lossy_int8_falls_back_to_raw():
+    """Real float K/V does not round-trip int8 — the encoder must refuse
+    the quantized format (storing it would perturb target logits and flip
+    accept decisions at the margin) and keep exact raw bytes instead."""
+    kv, counters = _mk_kv(quantize=True)
+    rng = np.random.default_rng(0)
+    k = rng.normal(size=(2, 4, 2, 4)).astype(np.float32)
+    v = rng.normal(size=(2, 4, 2, 4)).astype(np.float32)
+    kv.open_seq(1, [5])
+    kv.write_tokens(1, 0, jnp.asarray(k), jnp.asarray(v))
+    kv.set_len(1, 4)
+    assert kv.spill_seq(1) == 1
+    assert (counters["spills_quantized"], counters["spills_raw"]) == (0, 1)
+    kv.ensure_resident(1)
+    kd, vd = kv.gather_dense(1, 4)
+    np.testing.assert_array_equal(np.asarray(kd), k)
+    np.testing.assert_array_equal(np.asarray(vd), v)
+
+
+def test_spill_reload_cycles_preserve_bytes_exactly():
+    """Many spill/reload cycles (both formats) never drift a single byte
+    — the byte-identity contract the golden battery rides on."""
+    for quantize in (False, True):
+        kv, _ = _mk_kv(quantize=quantize)
+        rng = np.random.default_rng(7)
+        k = rng.normal(size=(2, 8, 2, 4)).astype(np.float32)
+        v = rng.normal(size=(2, 8, 2, 4)).astype(np.float32)
+        kv.open_seq(1, [5])
+        kv.write_tokens(1, 0, jnp.asarray(k), jnp.asarray(v))
+        kv.set_len(1, 8)
+        for _ in range(4):
+            assert kv.spill_seq(1) == 2
+            assert kv.ensure_resident(1) == 2
+        kd, vd = kv.gather_dense(1, 8)
+        np.testing.assert_array_equal(np.asarray(kd), k)
+        np.testing.assert_array_equal(np.asarray(vd), v)
+
+
+# ---------------------------------------------------------------------------
+# eviction policy: pinned shared pages, LRU prefix-only host entries
+# ---------------------------------------------------------------------------
+
+
+def test_shared_prefix_pages_never_spill():
+    """Refcount > 1 prefix pages (a hot shared system prompt) are pinned:
+    force-spilling both sharers leaves the shared page resident."""
+    kv, _ = _mk_kv(n_pages=10)
+    prompt = list(range(8))                        # 2 full pages
+    kv.open_seq(1, prompt)
+    kv.ensure_capacity(1, 8)
+    kv.set_len(1, 8)
+    kv.publish_seq_prefix(1, prompt)
+    kv.open_seq(2, prompt)                         # shares page 0
+    kv.ensure_capacity(2, 8)
+    kv.set_len(2, 8)
+    shared = kv.tables[1].pages[0]
+    assert kv.allocator.refcount[shared] == 2
+    for sid in (1, 2):
+        kv.spill_seq(sid)
+    assert kv.tables[1].pages[0] == shared         # still resident
+    assert kv.tables[2].pages[0] == shared
+    assert not is_spilled(shared)
+    # the private (refcount-1) pages DID spill
+    assert kv.spilled_pages(1) >= 1
+
+
+def test_host_pool_owned_entries_never_dropped():
+    """A host entry holding a live sequence's only copy is unrecoverable
+    state: when the host pool is full of owned entries, further spills
+    are refused rather than destroying it."""
+    kv, counters = _mk_kv(n_pages=10, host_pages=1)
+    kv.open_seq(1, [1])
+    kv.ensure_capacity(1, 4)
+    kv.set_len(1, 4)
+    assert kv.spill_seq(1) == 1                    # host slot now owned
+    kv.open_seq(2, [2])
+    kv.ensure_capacity(2, 4)
+    kv.set_len(2, 4)
+    assert kv.spill_seq(2) == 0                    # refused, not dropped
+    assert counters["host_evictions"] == 0
+    assert kv.spilled_pages(1) == 1                # seq 1 untouched
+
+
+def test_host_pool_prefix_only_entries_evicted_lru():
+    """Closing a session orphans its spilled pages to prefix-only
+    ownership; those entries ARE droppable (they can be recomputed from
+    tokens) and go LRU-first when the host pool needs room."""
+    kv, counters = _mk_kv(n_pages=10, host_pages=1)
+    kv.open_seq(1, [9])
+    kv.ensure_capacity(1, 4)
+    kv.set_len(1, 4)
+    assert kv.spill_seq(1) == 1
+    kv.close_seq(1, [1, 2, 3, 4])                  # spilled page -> prefix-only
+    assert all(e.owner is None for e in kv.tier.entries.values())
+    kv.open_seq(2, [8])
+    kv.ensure_capacity(2, 4)
+    kv.set_len(2, 4)
+    assert kv.spill_seq(2) == 1                    # room made by dropping it
+    assert counters["host_evictions"] == 1
+    # the dropped entry's prefix-index entries went with it
+    assert all(not is_spilled(r)
+               for r in kv.allocator.prefix_index.values())
+
+
+def test_lookup_pages_spilled_prefix_back_in():
+    """A prefix-index entry pointing at a spilled page is still a cache
+    HIT: open_seq pages it back onto the device transparently."""
+    kv, counters = _mk_kv(n_pages=10)
+    prompt = list(range(8))
+    kv.open_seq(1, prompt)
+    kv.ensure_capacity(1, 8)
+    kv.set_len(1, 8)
+    assert kv.spill_seq(1) == 2
+    kv.close_seq(1, prompt)                        # publishes the ~handles
+    assert any(is_spilled(r) for r in kv.allocator.prefix_index.values())
+    n_cached = kv.open_seq(2, prompt)
+    assert n_cached == 4                           # page-aligned: last given back
+    assert counters["pages_paged_in"] >= 1
+    assert all(not is_spilled(r) for r in kv.tables[2].pages)
+
+
+def test_block_table_faults_on_spilled_ref():
+    """The device hot path must never consume a spilled reference — the
+    block-table staging raises PageFault instead of shipping a negative
+    id to the kernel; ensure_resident clears it."""
+    kv, _ = _mk_kv()
+    kv.open_seq(1, [1])
+    kv.ensure_capacity(1, 4)
+    kv.set_len(1, 4)
+    assert kv.spill_seq(1) == 1
+    with pytest.raises(PageFault):
+        kv.block_table([1], 2)
+    kv.ensure_resident(1)
+    bt = kv.block_table([1], 2)
+    assert bt.shape == (1, 2) and bt[0, 0] > 0
+
+
+def test_reclaim_spills_coldest_idle_sequence_first():
+    """Device-pool exhaustion reclaims through the tier: the coldest
+    sequence past ``idle_epochs`` spills (LRU by last-use epoch), while
+    sequences touched this epoch are protected."""
+    kv, counters = _mk_kv(n_pages=6, host_pages=8, idle_epochs=1)
+    # 5 usable pages after scratch: two 2-page seqs + 1 free
+    for sid in (1, 2):
+        kv.open_seq(sid, [sid])
+        kv.ensure_capacity(sid, 8)
+        kv.set_len(sid, 8)
+    kv.tick()
+    kv.touch_seq(2)                                # seq 2 is hot
+    kv.tick()
+    # a third sequence needs 2 pages; only 1 is free -> reclaim spills
+    # from seq 1 (idle 2 epochs), never from the just-touched seq 2
+    kv.open_seq(3, [3])
+    kv.ensure_capacity(3, 8)
+    assert kv.spilled_pages(1) >= 1
+    assert kv.spilled_pages(2) == 0
+    assert counters["pages_spilled"] >= 1
+
+
+def test_spillable_tokens_tracks_cold_pages_and_host_headroom():
+    """The scheduler's widened memory budget only counts pages the tier
+    could actually absorb: cold refcount-1 pages, capped by host room."""
+    kv, _ = _mk_kv(n_pages=10, host_pages=1, idle_epochs=1)
+    kv.open_seq(1, [1])
+    kv.ensure_capacity(1, 8)                       # 2 private pages
+    kv.set_len(1, 8)
+    assert kv.spillable_tokens() == 0              # not idle yet
+    kv.tick()
+    # idle now, but the host pool only has room for ONE of the two pages
+    assert kv.spillable_tokens() == 1 * kv.page_size
