@@ -39,6 +39,8 @@ TABLES = {
     "hotpath": "verification hot-path budgets: dispatches + bytes (§9)",
     "adaptive_k": "§4.1 (static vs adaptive per-session draft length)",
     "tiered_kv": "§12 (tiered KV admission capacity at 25% device pool)",
+    "fleet": "§10 (fleet goodput under verifier churn)",
+    "tenancy": "§13 (multi-tenant isolation under adversarial flood)",
 }
 
 

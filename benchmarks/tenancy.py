@@ -1,0 +1,106 @@
+"""Multi-tenant isolation under an adversarial flood (DESIGN.md §13, ISSUE 9).
+
+Two measured rows on the same seed and device workload (the
+``adversarial-flood`` tenant mix: a modest interactive *victim* next to a
+zero-think *flood* hammering the verifier):
+
+  * ``plain-wisp`` — the tenant-agnostic stack: policy "wisp", no
+    admission contract (the flood's rate limit and queue bound stripped);
+  * ``wfq``        — the tenancy subsystem on: the mix's token-bucket
+    contract at admission plus the "wfq" weighted-fair policy at batch
+    selection.
+
+Contention is deliberate: full-size epoch pricing, a 2-request batch cap
+and fast (250 tok/s) drafting make verifier queueing — not the edge —
+the victim's bottleneck, which is the regime where batch-selection
+policy matters at all.
+
+The acceptance bars this table pins:
+
+  * victim goodput under wfq >= 1.3x plain-wisp (isolation);
+  * Jain's weighted fairness strictly higher (fair share);
+  * aggregate goodput within 10% of plain-wisp (isolation is suppression
+    of interference, not of throughput).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+from repro.cluster.workload import TENANT_MIXES
+from repro.core.estimator import EstimatorCoeffs
+from repro.core.scheduler import SchedulerConfig
+from repro.launch.serve import run_serving
+
+#: full-size epoch pricing (same rationale as benchmarks/fleet.py): the
+#: reduced model's analytic coefficients price epochs so cheap that the
+#: verifier never saturates and every policy trivially serves everyone
+COEFFS = EstimatorCoeffs(a=2e-3, b_compute=1e-7, b_read=2e-5, c=8e-3)
+
+MIX = TENANT_MIXES["adversarial-flood"]
+#: the same device workload with the admission contract stripped — what
+#: the flood looks like to a serving stack that has no tenancy subsystem
+PLAIN_MIX = tuple(
+    dataclasses.replace(tw, rate_tokens_per_s=None, max_queued=None)
+    for tw in MIX
+)
+WEIGHTS = {tw.name: tw.weight for tw in MIX}
+
+
+def _measure(*, horizon, seed, policy, mix):
+    r = run_serving(
+        policy=policy, tenant_mix=mix, verbose=False, seed=seed,
+        churn=True, horizon=horizon, k_max=4, coeffs=COEFFS,
+        draft_speeds=(250.0,),
+        sched_cfg=SchedulerConfig(max_batch_requests=2),
+    )
+    m = r["metrics"]
+    h = r["result"].horizon
+    pt = m.per_tenant(h)
+    return {
+        "goodput_tok_s": round(m.goodput(h), 2),
+        "victim_tok_s": round(pt["victim"]["goodput_tok_s"], 2),
+        "flood_tok_s": round(pt["flood"]["goodput_tok_s"], 2),
+        "jain_fairness": round(m.jain_fairness(h, WEIGHTS), 3),
+        "victim_sessions": pt["victim"]["sessions"],
+        "rejections": sum(v["rejections"] for v in pt.values()),
+        "violations": m.violations(),
+    }
+
+
+def run(quick: bool = True) -> list[dict]:
+    horizon = 2.0 if quick else 6.0
+    seed = 0
+    plain = _measure(horizon=horizon, seed=seed, policy="wisp",
+                     mix=PLAIN_MIX)
+    wfq = _measure(horizon=horizon, seed=seed, policy="wfq", mix=MIX)
+    rows = [
+        {"table": "tenancy(flood)", "system": system,
+         "horizon_s": horizon, **row}
+        for system, row in (("plain-wisp", plain), ("wfq", wfq))
+    ]
+    # the acceptance bars (module docstring)
+    assert wfq["victim_tok_s"] >= 1.3 * plain["victim_tok_s"], (
+        f"wfq must hold victim goodput >= 1.3x plain-wisp "
+        f"({wfq['victim_tok_s']} vs {plain['victim_tok_s']})"
+    )
+    assert wfq["jain_fairness"] > plain["jain_fairness"], (
+        f"wfq must raise Jain's weighted fairness "
+        f"({wfq['jain_fairness']} vs {plain['jain_fairness']})"
+    )
+    assert wfq["goodput_tok_s"] >= 0.9 * plain["goodput_tok_s"], (
+        f"wfq aggregate goodput must stay within 10% of plain-wisp "
+        f"({wfq['goodput_tok_s']} vs {plain['goodput_tok_s']})"
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import print_rows, save_rows
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    rows = run(quick=not args.full)
+    save_rows("tenancy", rows)
+    print_rows(rows)

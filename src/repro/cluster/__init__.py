@@ -18,10 +18,13 @@ from repro.cluster.metrics import (
 )
 from repro.cluster.runtime import ClusterResult, ClusterRuntime
 from repro.cluster.workload import (
+    TENANT_MIXES,
     ClusterConfig,
     DeviceSpec,
     DeviceWorkload,
+    TenantWorkload,
     build_fleet,
+    build_tenant_registry,
 )
 
 __all__ = [
@@ -36,5 +39,8 @@ __all__ = [
     "ClusterConfig",
     "DeviceSpec",
     "DeviceWorkload",
+    "TENANT_MIXES",
+    "TenantWorkload",
     "build_fleet",
+    "build_tenant_registry",
 ]

@@ -62,6 +62,7 @@ class SessionRecord:
     #: token reaching the device (prefill + queueing + downlink).  0.0
     #: under prefill_mode="zero", where prefill costs no virtual time.
     ttft: float = 0.0
+    tenant: str = "default"
 
     @property
     def speed(self) -> float:
@@ -83,6 +84,8 @@ class ClusterMetrics:
         self.per_session: dict[int, WDTStats] = {}
         self.spec = SpecStats()
         self.queue_samples: list[tuple[float, int]] = []
+        #: admission-control sheds per tenant (REJECTED events)
+        self.rejections: dict[str, int] = {}
         #: measured WDT seconds (tau-weighted; see module docstring)
         self.t_wdt = 0.0
         #: device-busy drafting seconds (every real decode step costs tau)
@@ -131,6 +134,9 @@ class ClusterMetrics:
 
     def close_session(self, rec: SessionRecord):
         self.sessions.append(rec)
+
+    def add_rejection(self, tenant: str):
+        self.rejections[tenant] = self.rejections.get(tenant, 0) + 1
 
     def sample_queue(self, t: float, depth: int):
         self.queue_samples.append((t, depth))
@@ -185,6 +191,43 @@ class ClusterMetrics:
                 if ses else 0.0,
             }
         return out
+
+    def per_tenant(self, horizon: float) -> dict:
+        """Per-tenant measured aggregates from the session records:
+        goodput (committed response tokens / horizon), session counts,
+        SLO violations, mean TTFT and admission rejections."""
+        out = {}
+        tenants = sorted({s.tenant for s in self.sessions}
+                         | set(self.rejections))
+        for tn in tenants:
+            ses = [s for s in self.sessions if s.tenant == tn]
+            out[tn] = {
+                "sessions": len(ses),
+                "committed": sum(s.committed for s in ses),
+                "goodput_tok_s": sum(s.committed for s in ses)
+                / max(horizon, 1e-9),
+                "session_violations": sum(s.violated for s in ses),
+                "mean_ttft_s": (sum(s.ttft for s in ses) / len(ses))
+                if ses else 0.0,
+                "rejections": self.rejections.get(tn, 0),
+            }
+        return out
+
+    def jain_fairness(self, horizon: float,
+                      weights: dict[str, float] | None = None) -> float:
+        """Jain's index over weight-normalized per-tenant goodput:
+        J = (Σ x)² / (n · Σ x²) with x_i = goodput_i / weight_i.  1.0 is
+        a perfectly weighted-fair allocation; 1/n is maximally unfair.
+        Returns 1.0 with fewer than two tenants."""
+        pt = self.per_tenant(horizon)
+        xs = [v["goodput_tok_s"] / max((weights or {}).get(tn, 1.0), 1e-9)
+              for tn, v in pt.items()]
+        if len(xs) < 2:
+            return 1.0
+        denom = len(xs) * sum(x * x for x in xs)
+        if denom <= 0.0:
+            return 1.0
+        return sum(xs) ** 2 / denom
 
     def violations(self) -> int:
         """Session-level SLO violations (the paper's unit)."""

@@ -138,7 +138,7 @@ class ClusterRuntime:
         self.devs = [
             _DeviceProc(
                 idx=i, device=ed, profile=sp,
-                workload=DeviceWorkload(cfg, vocab, i),
+                workload=DeviceWorkload(cfg, vocab, i, spec=sp),
                 tau=1.0 / sp.draft_speed,
                 net=self._device_net(i),
             )
@@ -242,11 +242,13 @@ class ClusterRuntime:
         self.server.open_session(
             sid, prompt, slo_class=dev.profile.slo_class,
             draft_speed=dev.profile.draft_speed, queue_on_full=True, now=t,
+            tenant=dev.profile.tenant,
         )
         self._drain_server_events(t)
         if (self.cfg.prefill_mode == "chunked"
                 and dev.state == "admission"
-                and not self.verifier_busy and self.server.queue_depth):
+                and not self.verifier_busy
+                and (self.server.queue_depth or self.server.throttle_backlog)):
             self._schedule_dispatch(t)
 
     def _start_session(self, dev: _DeviceProc, sid: int, prompt: list,
@@ -284,6 +286,7 @@ class ClusterRuntime:
             committed=len(dev.device.response_tokens),
             rounds=dev.rounds_done,
             ttft=dev.ttft,
+            tenant=dev.profile.tenant,
         )
         self.metrics.close_session(rec)
         self._server_close(sid, t)
@@ -306,7 +309,8 @@ class ClusterRuntime:
         self._drain_server_events(t)
         # chunked mode: a capacity-queued session admitted by this close
         # just enqueued its first prefill chunk — make sure an epoch fires
-        if self.server.queue_depth and not self.verifier_busy:
+        if ((self.server.queue_depth or self.server.throttle_backlog)
+                and not self.verifier_busy):
             self._schedule_dispatch(t)
 
     def _drain_server_events(self, t: float, t_deliver: float | None = None):
@@ -323,11 +327,15 @@ class ClusterRuntime:
           * ``chunked``    — the final chunk's epoch just completed; the
             token is delivered with that epoch's outputs at ``t_deliver``.
 
-        ``ADMITTED`` / ``PREEMPTED`` / ``TTFT_RECORD`` / ``CLOSED`` need
-        no runtime action (device timing is measured runtime-side)."""
+        ``REJECTED`` (tenant admission shed) aborts the open and puts the
+        device into a retry backoff.  ``ADMITTED`` / ``THROTTLED`` /
+        ``PREEMPTED`` / ``TTFT_RECORD`` / ``CLOSED`` need no runtime
+        action (device timing is measured runtime-side)."""
         for ev in self.server.pop_events():
             if ev.kind == "VERDICT":
                 self.events.push(t_deliver, EventKind.VERDICT, ev.verdict)
+            elif ev.kind == "REJECTED":
+                self._on_rejected(ev.session_id, t)
             elif ev.kind == "FIRST_TOKEN":
                 sid = ev.session_id
                 if self.cfg.prefill_mode == "monolithic":
@@ -355,6 +363,22 @@ class ClusterRuntime:
             return                      # session closed under us
         prompt = self._pending_open.pop(sid)
         self._start_session(dev, sid, prompt, first, t)
+
+    def _on_rejected(self, sid: int, t: float):
+        """Tenant admission control shed this open (REJECTED event): the
+        device backs off and retries — after its usual think pause in
+        churn mode, after ``cfg.reject_retry`` in fixed-work mode (where
+        every device must eventually complete its rounds)."""
+        dev = self._by_session.pop(sid, None)
+        self._pending_open.pop(sid, None)
+        if dev is None:
+            return                      # closed under us
+        self.metrics.add_rejection(dev.profile.tenant)
+        dev.session_id = -1
+        dev.state = "think"
+        backoff = (dev.workload.think_time() if self.cfg.rounds is None
+                   else self.cfg.reject_retry)
+        self.events.push(t + backoff, EventKind.SESSION_OPEN, dev.idx)
 
     # -- block submission + speculation -------------------------------------
     def _submit(self, dev: _DeviceProc, t: float):
@@ -431,7 +455,7 @@ class ClusterRuntime:
         self._disp_t = None
         if self.verifier_busy:
             return
-        if not self.server.queue_depth:
+        if not (self.server.queue_depth or self.server.throttle_backlog):
             return
         self.server.step(t, verify_time=self._verify_time)
         self.metrics.sample_queue(t, self.server.queue_depth)
@@ -451,9 +475,10 @@ class ClusterRuntime:
             # (zero/monolithic: their FIRST_TOKEN fired) even though
             # nothing was schedulable
             self._drain_server_events(t)
-            if self.server.queue_depth:
+            if self.server.queue_depth or self.server.throttle_backlog:
                 # nothing schedulable yet (criticality windows still
-                # closed): the server's own timer retries next epoch
+                # closed, or work held by the tenant rate limiter): the
+                # server's own timer retries next epoch
                 self._schedule_dispatch(t + self.cfg.dispatch_interval)
 
     def _on_gpu_done(self, t: float, payload=None):
@@ -463,7 +488,7 @@ class ClusterRuntime:
         self._maybe_start_prefill(t)
         if self.verifier_busy:
             return
-        if self.server.queue_depth:
+        if self.server.queue_depth or self.server.throttle_backlog:
             self._schedule_dispatch(t)
 
     def _on_verdict(self, v, t: float):
@@ -619,6 +644,7 @@ class ClusterRuntime:
                     committed=len(dev.device.response_tokens),
                     rounds=dev.rounds_done,
                     ttft=dev.ttft,
+                    tenant=dev.profile.tenant,
                 ))
         return ClusterResult(
             cfg=cfg,

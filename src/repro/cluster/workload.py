@@ -107,25 +107,137 @@ class ClusterConfig:
     #: engine dispatches a session must sit idle before its private pages
     #: become spill candidates
     spill_idle_epochs: int = 2
+    # -- multi-tenant serving (DESIGN.md §13) ------------------------------
+    #: per-tenant device groups (`TenantWorkload` tuples).  Empty = the
+    #: legacy single-tenant fleet: every device belongs to the implicit
+    #: unlimited "default" tenant and all the draws below are untouched —
+    #: which is what keeps the golden streams byte-identical.  Non-empty:
+    #: the fleet is the concatenation of the groups (``cfg.devices`` is
+    #: ignored) and each group's think/response overrides shape its load.
+    tenant_workloads: tuple = ()
+    #: fixed-work mode backoff before a REJECTED open retries (churn mode
+    #: retries after the device's usual Exp(think_time_mean) pause)
+    reject_retry: float = 0.25
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantWorkload:
+    """One tenant's device group + workload shape + admission contract.
+
+    The workload half (``devices``, think/response overrides) shapes the
+    offered load; the contract half (weight / rate / burst / budgets) is
+    compiled into a `TenantSpec` by ``build_tenant_registry``.  ``None``
+    overrides inherit the fleet-wide `ClusterConfig` values."""
+
+    name: str
+    devices: int = 1
+    weight: float = 1.0
+    slo_class: int | None = None
+    think_time_mean: float | None = None
+    response_len_mean: float | None = None
+    rate_tokens_per_s: float | None = None
+    burst_tokens: float = 512.0
+    max_tokens_in_flight: int | None = None
+    max_concurrency: int | None = None
+    max_queued: int | None = None
+
+
+#: named tenant mixes for `launch/serve.py --tenant-mix` and the tenancy
+#: benchmark.  "victim" is always the well-behaved interactive tenant the
+#: fairness assertions protect.
+TENANT_MIXES: dict[str, tuple] = {
+    # interactive chat arriving in bursts next to a steady batch consumer
+    "bursty-chat": (
+        TenantWorkload("chat", devices=2, weight=2.0, slo_class=2,
+                       think_time_mean=0.05, response_len_mean=12.0),
+        TenantWorkload("batch", devices=2, weight=1.0, slo_class=4,
+                       think_time_mean=0.5, response_len_mean=48.0),
+    ),
+    # one relentless batch tenant, one light interactive tenant
+    "steady-batch": (
+        TenantWorkload("batch", devices=3, weight=1.0, slo_class=4,
+                       think_time_mean=0.01, response_len_mean=64.0),
+        TenantWorkload("interactive", devices=1, weight=2.0, slo_class=2,
+                       think_time_mean=0.2, response_len_mean=16.0),
+    ),
+    # adversarial flood: many zero-think devices hammering the verifier
+    # against a modest victim; the flood is rate-limited and the victim
+    # is not — the configuration the tenancy benchmark asserts on
+    "adversarial-flood": (
+        TenantWorkload("victim", devices=2, weight=2.0, slo_class=2,
+                       think_time_mean=0.05, response_len_mean=16.0),
+        TenantWorkload("flood", devices=6, weight=1.0, slo_class=4,
+                       think_time_mean=0.0005, response_len_mean=64.0,
+                       rate_tokens_per_s=150.0, burst_tokens=48.0,
+                       max_queued=4),
+    ),
+}
+
+
+def build_tenant_registry(cfg: "ClusterConfig"):
+    """Compile ``cfg.tenant_workloads`` into a `TenantRegistry` (one per
+    run — share it across a verifier fleet for fleet-global budgets)."""
+    from repro.tenancy import TenantRegistry, TenantSpec
+
+    return TenantRegistry([
+        TenantSpec(
+            tenant=tw.name,
+            weight=tw.weight,
+            slo_class=tw.slo_class,
+            rate_tokens_per_s=tw.rate_tokens_per_s,
+            burst_tokens=tw.burst_tokens,
+            max_tokens_in_flight=tw.max_tokens_in_flight,
+            max_concurrency=tw.max_concurrency,
+            max_queued=tw.max_queued,
+        )
+        for tw in cfg.tenant_workloads
+    ])
 
 
 @dataclasses.dataclass
 class DeviceSpec:
-    """One edge device's static draw: speed, SLO class, first prompt."""
+    """One edge device's static draw: speed, SLO class, first prompt.
+
+    ``tenant`` + the ``None``-able overrides come from the device's
+    `TenantWorkload` group (defaults for the legacy single-tenant fleet)."""
 
     idx: int
     draft_speed: float
     slo_class: int
     prompt: list
+    tenant: str = "default"
+    think_time_mean: float | None = None
+    response_len_mean: float | None = None
 
 
 def build_fleet(cfg: ClusterConfig, vocab: int) -> list[DeviceSpec]:
     """Deterministic heterogeneous fleet: draft speeds and SLO classes are
     cycled round-robin (like `sim.DevicePopulation` — every class is
     populated at any fleet size, so per-class comparisons never divide by
-    zero), prompts drawn from one generator seeded with cfg.seed."""
+    zero), prompts drawn from one generator seeded with cfg.seed.
+
+    With ``cfg.tenant_workloads`` set, the fleet is the concatenation of
+    the tenant groups: each group contributes ``tw.devices`` devices that
+    inherit the group's tenant / SLO class / think-response overrides,
+    while speeds keep cycling round-robin over the global index (so the
+    speed mix stays comparable across tenant splits)."""
     rng = np.random.default_rng(cfg.seed)
     fleet = []
+    if cfg.tenant_workloads:
+        i = 0
+        for tw in cfg.tenant_workloads:
+            for _ in range(tw.devices):
+                speed = float(cfg.draft_speeds[i % len(cfg.draft_speeds)])
+                prompt = rng.integers(2, vocab, size=cfg.prompt_len).tolist()
+                slo = tw.slo_class if tw.slo_class is not None else int(
+                    cfg.slo_class_choices[i % len(cfg.slo_class_choices)])
+                fleet.append(DeviceSpec(
+                    idx=i, draft_speed=speed, slo_class=int(slo),
+                    prompt=prompt, tenant=tw.name,
+                    think_time_mean=tw.think_time_mean,
+                    response_len_mean=tw.response_len_mean))
+                i += 1
+        return fleet
     for i in range(cfg.devices):
         speed = float(cfg.draft_speeds[i % len(cfg.draft_speeds)])
         prompt = rng.integers(2, vocab, size=cfg.prompt_len).tolist()
@@ -143,16 +255,24 @@ class DeviceWorkload:
     fleet does — a prerequisite for the event-ordering determinism test.
     """
 
-    def __init__(self, cfg: ClusterConfig, vocab: int, device_idx: int):
+    def __init__(self, cfg: ClusterConfig, vocab: int, device_idx: int,
+                 spec: DeviceSpec | None = None):
         self.cfg = cfg
         self.vocab = vocab
         self.rng = np.random.default_rng(cfg.seed * 7919 + 613 * device_idx + 1)
+        self._think_mean = cfg.think_time_mean
+        self._resp_mean = cfg.response_len_mean
+        if spec is not None:
+            if spec.think_time_mean is not None:
+                self._think_mean = spec.think_time_mean
+            if spec.response_len_mean is not None:
+                self._resp_mean = spec.response_len_mean
 
     def think_time(self) -> float:
-        return float(self.rng.exponential(self.cfg.think_time_mean))
+        return float(self.rng.exponential(self._think_mean))
 
     def next_prompt(self) -> list:
         return self.rng.integers(2, self.vocab, size=self.cfg.prompt_len).tolist()
 
     def response_target(self) -> int:
-        return int(self.rng.geometric(1.0 / self.cfg.response_len_mean))
+        return int(self.rng.geometric(1.0 / self._resp_mean))

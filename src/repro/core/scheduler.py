@@ -27,7 +27,10 @@ registry.  Per dispatch epoch t_k a policy selects a batch B_k under
   * ``"fcfs"`` — SLED-style arrival order, fill to limits;
   * ``"edf"``  — earliest-deadline-first fill (deadline awareness
     without the estimator-driven criticality split);
-  * ``"priority"`` — strict SLO-class priority, EDF within a class.
+  * ``"priority"`` — strict SLO-class priority, EDF within a class;
+  * ``"wfq"`` (alias ``"fair"``) — weighted fair queueing over per-tenant
+    virtual finish times with an SRPT bias and aging (no tenant starves;
+    DESIGN.md §13).
 
 This is host-side control logic (pure Python, no jax) — it runs on the
 serving coordinator between device steps.  Both the functional server
@@ -79,6 +82,17 @@ class WorkItem:
     # bookkeeping
     enqueued_at: float = 0.0
     round_index: int = 0
+    # -- multi-tenant fields (DESIGN.md §13) ------------------------------
+    #: owning tenant (the ``"wfq"`` policy buckets virtual time by this;
+    #: every other policy ignores it)
+    tenant: str = "default"
+    #: the tenant's fair-share weight, stamped from the `TenantRegistry`
+    #: at submit time (policies take a fixed (cfg, coeffs) constructor,
+    #: so weights ride the items, not the policy)
+    tenant_weight: float = 1.0
+    #: the rate limiter borrowed from the tenant's debt band for this
+    #: item — WFQ serves it at a fraction of the tenant's weight
+    deprioritized: bool = False
 
     #: kind tag (class attribute, kept for observability and the legacy
     #: ``VerifyRequest(kind=...)`` constructor shim)
@@ -209,7 +223,13 @@ def VerifyRequest(*args, kind: str = "verify", **kwargs) -> WorkItem:
     ``VerifyRequest(kind=...)`` now dispatches to the `WorkItem` class
     hierarchy (``VerifyWork`` / ``PrefillChunkWork``).  Field names and
     order are unchanged; new code should construct the classes directly."""
-    return WORK_KINDS[kind](*args, **kwargs)
+    try:
+        cls = WORK_KINDS[kind]
+    except KeyError:
+        raise ValueError(
+            f"unknown work kind {kind!r}; registered: {sorted(WORK_KINDS)}"
+        ) from None
+    return cls(*args, **kwargs)
 
 
 @dataclasses.dataclass
@@ -506,3 +526,91 @@ class PriorityScheduler(SchedulingPolicy):
             pending, t_k, self._budget(memory_budget_tokens),
             key=lambda x: (x.slo_class, x.deadline, x.arrival, x.req_id),
         )
+
+
+@register_policy("wfq", "fair")
+class WFQScheduler(SchedulingPolicy):
+    """Weighted fair queueing over per-tenant virtual finish times, with
+    an SRPT bias and aging (DESIGN.md §13).
+
+    Each item's cost is its token footprint; its virtual finish time is
+
+        vfinish = max(V, vt[tenant]) + cost / w_eff
+
+    where ``V`` is the global virtual clock, ``vt[tenant]`` the tenant's
+    last virtual finish, and ``w_eff`` the tenant's weight (cut to
+    ``deprio_factor`` of itself for items the rate limiter borrowed from
+    the debt band).  Items are admitted in order of
+
+        vfinish + srpt_bias * cost - aging_rate * wait
+
+    so short items edge ahead within a fair share (SRPT) and long-waiting
+    items climb monotonically (aging: an item backlogged ``t`` seconds
+    gains ``aging_rate * t`` of virtual-time credit, which bounds any
+    backlogged tenant's wait — no tenant starves).  Kind-agnostic like
+    every policy: verify and prefill work compete in one order.
+
+    Virtual-time state lives on the policy instance and persists across
+    epochs; after each selection the tenant clocks advance by the served
+    cost over weight and the global clock jumps to the smallest
+    backlogged tenant clock (standard virtual-time tracking — an idle
+    tenant does not bank credit forever).
+    """
+
+    #: cost multiplier favoring short items within a fair share
+    srpt_bias = 0.5
+    #: virtual-time credit per real second of queueing wait
+    aging_rate = 1.0
+    #: weight multiplier for debt-band (deprioritized) items
+    deprio_factor = 0.25
+
+    def __init__(self, cfg: SchedulerConfig, coeffs: EstimatorCoeffs):
+        super().__init__(cfg, coeffs)
+        self.vtime = 0.0
+        self.tenant_vt: dict[str, float] = {}
+
+    @staticmethod
+    def _cost(r: WorkItem) -> float:
+        # token footprint (same axis the memory budget is charged in);
+        # normalized so typical blocks are O(1e-2) virtual seconds and the
+        # aging credit (1 vt/s real) can actually overtake them
+        return (r.cached_len + r.new_tokens) / 1024.0
+
+    def _weight(self, r: WorkItem) -> float:
+        w = r.tenant_weight * (self.deprio_factor if r.deprioritized else 1.0)
+        return max(w, 1e-6)
+
+    def schedule(
+        self, pending: list, t_k: float, *,
+        memory_budget_tokens: int | None = None,
+    ) -> ScheduleDecision:
+        budget = self._budget(memory_budget_tokens)
+
+        def vfinish(r: WorkItem) -> float:
+            start = max(self.vtime, self.tenant_vt.get(r.tenant, 0.0))
+            return start + self._cost(r) / self._weight(r)
+
+        def key(r: WorkItem):
+            wait = max(t_k - r.enqueued_at, 0.0)
+            return (
+                vfinish(r) + self.srpt_bias * self._cost(r)
+                - self.aging_rate * wait,
+                r.deadline,
+                r.req_id,
+            )
+
+        decision = self._fill_in_order(pending, t_k, budget, key=key)
+        # advance virtual time for the work actually served
+        for r in decision.batch:
+            start = max(self.vtime, self.tenant_vt.get(r.tenant, 0.0))
+            self.tenant_vt[r.tenant] = start + self._cost(r) / self._weight(r)
+        served = {r.req_id for r in decision.batch}
+        backlog_vt = [
+            self.tenant_vt.get(r.tenant, 0.0)
+            for r in pending if r.req_id not in served
+        ]
+        if backlog_vt:
+            self.vtime = max(self.vtime, min(backlog_vt))
+        elif self.tenant_vt:
+            self.vtime = max(self.vtime, max(self.tenant_vt.values()))
+        return decision

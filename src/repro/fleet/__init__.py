@@ -37,14 +37,25 @@ def build_verifier_fleet(
     kv_tier_pages: int = 0,
     spill_quantize: bool = False,
     spill_idle_epochs: int = 2,
+    tenants=None,
 ) -> FleetRouter:
     """N same-seed verifiers (each its own engine + page pool + scheduler
     instance) behind a prefix-locality router.  ``max_slots`` is PER
     VERIFIER — the fleet's aggregate capacity is ``n_verifiers x
     max_slots`` — and every verifier shares ``tparams`` (one trained
-    target model, replicated), which is what makes migration lossless."""
+    target model, replicated), which is what makes migration lossless.
+
+    ``tenants`` (a `TenantRegistry`, or an iterable of `TenantSpec` /
+    CLI spec strings) is instantiated ONCE and shared by every verifier:
+    tenant budgets and fair-share accounting are fleet-global, which is
+    what a fleet-wide SLO means (DESIGN.md §13)."""
     from repro.serving.engine import VerificationEngine
     from repro.serving.server import WISPServer
+    from repro.tenancy import TenantRegistry
+
+    if tenants is not None and not isinstance(tenants, TenantRegistry):
+        tenants = TenantRegistry(tenants)
+    registry = tenants if tenants is not None else TenantRegistry()
 
     verifiers = {}
     for i in range(int(n_verifiers)):
@@ -59,6 +70,7 @@ def build_verifier_fleet(
             network=network, prefill=prefill,
             prefill_chunk_tokens=prefill_chunk_tokens,
             slo_classes=slo_classes, ttft_slo=ttft_slo,
+            tenants=registry,
         )
     return FleetRouter(verifiers, heartbeat_timeout=heartbeat_timeout,
                        hedge_factor=hedge_factor, hedge_guard=hedge_guard)

@@ -38,6 +38,7 @@ from repro.core.estimator import BatchShape
 from repro.runtime.failure import HeartbeatMonitor
 from repro.runtime.straggler import HedgedDispatcher
 from repro.serving.events import Migrated, VerifierDown
+from repro.tenancy import DEFAULT_TENANT
 
 
 class FleetCapacityError(RuntimeError):
@@ -61,6 +62,9 @@ class SessionMeta:
     extras: object = None
     alpha: float = 0.6
     spec_k: int = 0
+    #: owning tenant (DESIGN.md §13) — must survive migration so the
+    #: restored session keeps its fair-share weight and budget accounting
+    tenant: str = DEFAULT_TENANT
 
 
 class FleetRouter:
@@ -205,15 +209,24 @@ class FleetRouter:
 
     # -- session lifecycle ---------------------------------------------------
     def open_session(self, session_id: int, prompt_tokens, *,
-                     slo_class: int = 3, draft_speed: float = 50.0,
-                     extras=None, now: float = 0.0) -> str:
+                     slo_class: int | None = None, draft_speed: float = 50.0,
+                     extras=None, now: float = 0.0,
+                     tenant: str = DEFAULT_TENANT) -> str:
         vid = self.route(prompt_tokens)
         self.owner[session_id] = vid
-        self.meta[session_id] = SessionMeta(slo_class, draft_speed, extras)
-        self.verifiers[vid].open_session(
+        srv = self.verifiers[vid]
+        srv.open_session(
             session_id, prompt_tokens, slo_class=slo_class,
             draft_speed=draft_speed, extras=extras, queue_on_full=True,
-            now=now,
+            now=now, tenant=tenant,
+        )
+        # record the RESOLVED class (tenant default applied server-side)
+        # so a migration restores the same contract
+        spec = srv.tenants.get(tenant).spec
+        if slo_class is None:
+            slo_class = spec.slo_class if spec.slo_class is not None else 3
+        self.meta[session_id] = SessionMeta(
+            slo_class, draft_speed, extras, tenant=tenant,
         )
         self.stats["opened"] += 1
         self._drain(vid)
@@ -320,7 +333,7 @@ class FleetRouter:
                     session_id, committed, slo_class=m.slo_class,
                     draft_speed=m.draft_speed, rounds=rounds,
                     alpha=m.alpha, spec_k=m.spec_k,
-                    extras=m.extras, now=now,
+                    extras=m.extras, now=now, tenant=m.tenant,
                 )
             except Exception as e:          # OutOfPages / NoFreeSlots
                 last_err = e
@@ -355,7 +368,7 @@ class FleetRouter:
         self.verifiers[dst].open_session(
             session_id, prompt_tokens, slo_class=m.slo_class,
             draft_speed=m.draft_speed, extras=m.extras, queue_on_full=True,
-            now=now,
+            now=now, tenant=m.tenant,
         )
         self.stats["reopens"] += 1
         self._drain(dst)
@@ -368,7 +381,8 @@ class FleetRouter:
         events are filtered) and empty its pending pool."""
         srv = self.verifiers[vid]
         for sid in (set(srv.sessions) | set(srv.prefilling)
-                    | {e[0] for e in srv.admission_queue}):
+                    | {e[0] for e in srv.admission_queue}
+                    | srv.throttled_session_ids()):
             srv.close_session(sid, now=srv.now)
         srv.pending = []
         self._drain(vid)
@@ -397,7 +411,8 @@ class FleetRouter:
     def _has_session(self, vid: str, sid: int) -> bool:
         srv = self.verifiers[vid]
         return (sid in srv.sessions or sid in srv.prefilling
-                or sid in srv.admission_queue)
+                or sid in srv.admission_queue
+                or sid in srv.throttled_session_ids())
 
     def _drain(self, vid: str) -> None:
         for ev in self.verifiers[vid].pop_events():
@@ -405,6 +420,11 @@ class FleetRouter:
                 self.stats["stale_events_dropped"] += 1
                 continue
             self._events.append((vid, ev))
+            if ev.kind == "REJECTED":
+                # terminal for the session: release router ownership so a
+                # retry under the same id routes (and counts) fresh
+                self.owner.pop(ev.session_id, None)
+                self.meta.pop(ev.session_id, None)
 
     def pop_events(self) -> list[tuple]:
         """Drain the merged fleet stream as (verifier_id, ServerEvent)

@@ -89,8 +89,9 @@ class FleetRuntime(ClusterRuntime):
         self.events.push(t, EventKind.DISPATCH, vid)
 
     def _kick(self, vid: str, t: float) -> None:
-        if (self.router.queue_depth(vid) and not self._busy(vid, t)
-                and self.plan.is_up(vid, t)):
+        backlog = (self.router.queue_depth(vid)
+                   or self.router.verifiers[vid].throttle_backlog)
+        if backlog and not self._busy(vid, t) and self.plan.is_up(vid, t):
             self._sched_dispatch(vid, t)
 
     def _verify_time_v(self, vid: str, served, t: float) -> float:
@@ -186,6 +187,7 @@ class FleetRuntime(ClusterRuntime):
         vid = self.router.open_session(
             sid, prompt, slo_class=dev.profile.slo_class,
             draft_speed=dev.profile.draft_speed, now=t,
+            tenant=dev.profile.tenant,
         )
         self._drain_fleet(t)
         if self.cfg.prefill_mode == "chunked" and dev.state == "admission":
@@ -219,7 +221,7 @@ class FleetRuntime(ClusterRuntime):
         if self._busy(vid, t):
             return
         srv = self.router.verifiers[vid]
-        if not srv.queue_depth:
+        if not (srv.queue_depth or srv.throttle_backlog):
             return
         self.router.step(
             vid, t, verify_time=lambda served: self._verify_time_v(
@@ -237,7 +239,7 @@ class FleetRuntime(ClusterRuntime):
             )
         else:
             self._drain_fleet(t)
-            if srv.queue_depth:
+            if srv.queue_depth or srv.throttle_backlog:
                 self._sched_dispatch(vid, t + self.cfg.dispatch_interval)
 
     def _on_gpu_done(self, t: float, payload=None) -> None:
@@ -286,9 +288,12 @@ class FleetRuntime(ClusterRuntime):
                                      (vid, ev.session_id, ev.token))
                 else:
                     self._on_first_token((vid, ev.session_id, ev.token), t)
+            elif ev.kind == "REJECTED":
+                self._on_rejected(ev.session_id, t)
             elif ev.kind in ("MIGRATED", "VERIFIER_DOWN"):
                 self.fleet_log.append(ev)
-            # ADMITTED / PREEMPTED / TTFT_RECORD / CLOSED: no runtime action
+            # ADMITTED / THROTTLED / PREEMPTED / TTFT_RECORD / CLOSED:
+            # no runtime action
 
     def _drain_server_events(self, t, t_deliver=None):  # pragma: no cover
         raise NotImplementedError(

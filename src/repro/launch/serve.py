@@ -31,6 +31,7 @@ import warnings
 import jax
 
 from repro.cluster import ClusterConfig, ClusterRuntime, build_fleet
+from repro.cluster.workload import TENANT_MIXES, build_tenant_registry
 from repro.configs import get_config
 from repro.core.estimator import EstimatorCoeffs, analytic_tpu_coeffs
 from repro.core.scheduler import available_policies
@@ -90,6 +91,8 @@ def run_serving(
     kv_tier_pages: int = 0,
     spill_quantize: bool = False,
     spill_idle_epochs: int = 2,
+    tenants=None,
+    tenant_mix=None,
 ):
     """Run the WISP serving stack; returns a dict with per-device ``stats``,
     aggregate ``total``, the ``edges`` / ``server`` objects and — in
@@ -103,7 +106,15 @@ def run_serving(
     (``repro.core.speculation``): ``"static"`` (fixed K = k_max) or
     ``"adaptive"`` (per-block K from acceptance, RTT and verifier load,
     DESIGN.md §11).  ``link_rtts`` gives devices heterogeneous link base
-    RTTs (cycled round-robin, like ``draft_speeds``)."""
+    RTTs (cycled round-robin, like ``draft_speeds``).
+
+    Multi-tenant serving (DESIGN.md §13): ``tenant_mix`` is a named
+    workload mix from ``repro.cluster.workload.TENANT_MIXES`` (or an
+    explicit tuple of `TenantWorkload`) that splits the device fleet
+    into per-tenant groups and compiles their admission contracts into
+    a shared `TenantRegistry`; ``tenants`` adds/overrides registry
+    entries (`TenantSpec` objects or ``name[:key=value]*`` CLI spec
+    strings).  Both empty = the legacy single-tenant stack."""
     if scheduler is not None:
         if policy != "wisp" and policy != scheduler:
             raise ValueError(
@@ -145,6 +156,17 @@ def run_serving(
         # the lock-step reference has no clock to charge prefill against;
         # it always opens sessions through the blocking monolithic path
         raise ValueError("--sync supports prefill_mode='zero' only")
+    if isinstance(tenant_mix, str):
+        if tenant_mix not in TENANT_MIXES:
+            raise ValueError(
+                f"unknown tenant mix {tenant_mix!r}; "
+                f"known: {sorted(TENANT_MIXES)}"
+            )
+        tenant_workloads = TENANT_MIXES[tenant_mix]
+    else:
+        tenant_workloads = tuple(tenant_mix or ())
+    if tenant_workloads and sync:
+        raise ValueError("--sync is single-tenant only")
     ccfg = ClusterConfig(
         devices=devices,
         rounds=None if churn else rounds,
@@ -174,8 +196,23 @@ def run_serving(
         kv_tier_pages=kv_tier_pages,
         spill_quantize=spill_quantize,
         spill_idle_epochs=spill_idle_epochs,
+        tenant_workloads=tenant_workloads,
     )
     fleet = build_fleet(ccfg, tcfg.vocab)
+    devices = len(fleet)                 # tenant mixes resize the fleet
+
+    # one registry per run: shared across every verifier so tenant
+    # budgets and fair-share accounting are fleet-global
+    from repro.tenancy import TenantRegistry, TenantSpec
+
+    if isinstance(tenants, TenantRegistry):
+        registry = tenants
+    else:
+        registry = build_tenant_registry(ccfg)
+        for spec in tenants or ():
+            if isinstance(spec, str):
+                spec = TenantSpec.parse(spec)
+            registry.register(spec)
 
     coeffs = coeffs or analytic_tpu_coeffs(tcfg)
     net = NetworkModel()
@@ -195,6 +232,7 @@ def run_serving(
             hedge_factor=hedge_factor, hedge_guard=hedge_guard,
             kv_tier_pages=kv_tier_pages, spill_quantize=spill_quantize,
             spill_idle_epochs=spill_idle_epochs,
+            tenants=registry,
         )
         engine = next(iter(router.verifiers.values())).engine
         server = router
@@ -209,6 +247,7 @@ def run_serving(
             slo_classes=slo_speeds, sched_cfg=sched_cfg,
             prefill="chunked" if prefill_mode == "chunked" else "monolithic",
             prefill_chunk_tokens=prefill_chunk_tokens, ttft_slo=ttft_slo,
+            tenants=registry,
         )
 
     edges = [
@@ -276,6 +315,16 @@ def run_serving(
               f"violations={m.violations()} "
               f"deadline_misses={m.deadline_violations()} "
               f"engine batches={n_batches} wall={wall:.1f}s")
+        if tenant_workloads:
+            weights = {tw.name: tw.weight for tw in tenant_workloads}
+            print(f"[serve] tenants: "
+                  f"jain_fairness={m.jain_fairness(result.horizon, weights):.3f}")
+            for tn, row in m.per_tenant(result.horizon).items():
+                print(f"[serve]   {tn}: "
+                      f"goodput={row['goodput_tok_s']:.1f} tok/s "
+                      f"sessions={row['sessions']} "
+                      f"violations={row['session_violations']} "
+                      f"rejections={row['rejections']}")
         if kv_tier_pages > 0:
             sp_pages = sum(e.stats["pages_spilled"] for e in engines)
             pi_pages = sum(e.stats["pages_paged_in"] for e in engines)
@@ -459,6 +508,17 @@ def main():
                     metavar="EPOCHS",
                     help="engine dispatches a session must sit idle before "
                          "its pages become spill candidates")
+    ap.add_argument("--tenant-mix", default=None,
+                    choices=tuple(sorted(TENANT_MIXES)),
+                    help="named multi-tenant workload mix (DESIGN.md §13): "
+                         "splits the fleet into per-tenant device groups "
+                         "and applies their admission contracts")
+    ap.add_argument("--tenants", action="append", default=[],
+                    metavar="NAME[:KEY=VAL]*",
+                    help="add/override a tenant registry entry, e.g. "
+                         "flood:weight=1:rate=600:burst=128:queued=2; "
+                         "keys: weight, slo, rate, burst, inflight, conc, "
+                         "queued; repeatable")
     args = ap.parse_args()
 
     def _parse_fail(spec: str) -> tuple:
@@ -491,6 +551,8 @@ def main():
         kv_tier_pages=args.kv_tier,
         spill_quantize=args.spill_quantize,
         spill_idle_epochs=args.spill_idle,
+        tenant_mix=args.tenant_mix,
+        tenants=tuple(args.tenants),
     )
 
 

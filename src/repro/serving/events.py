@@ -120,11 +120,42 @@ class VerifierDown(ServerEvent):
     kind = "VERIFIER_DOWN"
 
 
+@dataclasses.dataclass(frozen=True)
+class Throttled(ServerEvent):
+    """Tenancy tier (DESIGN.md §13): the tenant's rate limiter held this
+    work.  ``stage`` names the throttle rung (``"deprioritize"`` — it ran
+    at reduced WFQ weight; ``"queue"`` — held in the tenant's throttle
+    buffer until the bucket recovers) and ``scope`` what was priced
+    (``"open"`` | ``"submit"``).  May precede a session's ``ADMITTED``
+    (a held open throttles before it admits)."""
+
+    tenant: str = "default"
+    stage: str = "queue"
+    scope: str = "open"
+
+    kind = "THROTTLED"
+
+
+@dataclasses.dataclass(frozen=True)
+class Rejected(ServerEvent):
+    """Tenancy tier: an ``open_session`` was shed outright — the tenant's
+    throttle backlog already exceeded its ``max_queued`` budget.  Final
+    for the session (no ``ADMITTED``/``CLOSED`` follows); applies only to
+    opens, never to a streaming session's submitted block."""
+
+    tenant: str = "default"
+
+    kind = "REJECTED"
+
+
 #: event-kind tags in lifecycle order (documentation + test helper);
 #: MIGRATED / VERIFIER_DOWN are fleet-tier events and can interleave
-#: anywhere between a session's FIRST_TOKEN and CLOSED
-EVENT_KINDS = ("ADMITTED", "FIRST_TOKEN", "VERDICT", "PREEMPTED",
-               "TTFT_RECORD", "MIGRATED", "VERIFIER_DOWN", "CLOSED")
+#: anywhere between a session's FIRST_TOKEN and CLOSED; THROTTLED may
+#: precede ADMITTED (a throttle-held open) and REJECTED replaces the
+#: whole lifecycle for a shed open
+EVENT_KINDS = ("THROTTLED", "REJECTED", "ADMITTED", "FIRST_TOKEN",
+               "VERDICT", "PREEMPTED", "TTFT_RECORD", "MIGRATED",
+               "VERIFIER_DOWN", "CLOSED")
 
 
 class SessionHandle:
@@ -143,8 +174,10 @@ class SessionHandle:
 
     @property
     def state(self) -> str:
-        """``"queued"`` (admission queue) | ``"prefilling"`` (chunked
-        prefill in flight) | ``"active"`` (streaming) | ``"closed"``."""
+        """``"queued"`` (admission or throttle queue) | ``"prefilling"``
+        (chunked prefill in flight) | ``"active"`` (streaming) |
+        ``"rejected"`` (shed by the tenant rate limiter, terminal) |
+        ``"closed"``."""
         return self._server.session_state(self.session_id)
 
     @property

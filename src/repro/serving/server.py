@@ -54,13 +54,16 @@ from repro.serving.events import (
     Closed,
     FirstToken,
     Preempted,
+    Rejected,
     ServerEvent,
     SessionHandle,
+    Throttled,
     TTFTRecord,
     VerdictEvent,
 )
 from repro.serving.kv_cache import OutOfPages
 from repro.serving.transport import NetworkModel
+from repro.tenancy import DEFAULT_TENANT, Stage, TenantRegistry
 
 #: paper §5.1: four token-speed SLO classes (tokens/s)
 DEFAULT_SLO_CLASSES = {1: 8.0, 2: 6.0, 3: 4.0, 4: 2.0}
@@ -88,6 +91,9 @@ class ServerSession:
     #: fleet migration so a restored session's adaptive-K context (like
     #: its ``alpha``) survives verifier death
     spec_k: int = 0
+    #: owning tenant (DESIGN.md §13) — stamped onto every work item the
+    #: session submits so the ``"wfq"`` policy can bucket virtual time
+    tenant: str = DEFAULT_TENANT
 
 
 @dataclasses.dataclass
@@ -103,6 +109,10 @@ class PrefillingSession:
     draft_speed: float
     t_request: float             # when the client asked (TTFT clock start)
     deadline: float              # TTFT deadline = t_request + ttft_slo[class]
+    tenant: str = DEFAULT_TENANT
+    #: the tenant's rate limiter borrowed from the debt band for this
+    #: open — the session's prefill chunks run at reduced WFQ weight
+    deprioritized: bool = False
 
 
 @dataclasses.dataclass
@@ -236,6 +246,7 @@ class WISPServer:
         prefill: str = "monolithic",    # "monolithic" | "chunked"
         prefill_chunk_tokens: int = 256,
         ttft_slo: dict | None = None,
+        tenants=None,   # TenantRegistry | iterable of TenantSpec / spec str
     ):
         self.engine = engine
         self.coeffs = coeffs
@@ -260,6 +271,26 @@ class WISPServer:
         self.prefill_mode = prefill
         self.prefill_chunk_tokens = int(prefill_chunk_tokens)
         self.ttft_slo = ttft_slo or dict(DEFAULT_TTFT_SLO)
+        #: multi-tenant admission + fair-share source of truth (DESIGN.md
+        #: §13).  The default registry is all-unlimited, so a server built
+        #: without tenants behaves exactly as before (golden ``tenant/*``
+        #: cells pin this).  One registry may be SHARED across a fleet's
+        #: servers — budgets are then tenant-global.
+        if tenants is None:
+            tenants = TenantRegistry()
+        elif not isinstance(tenants, TenantRegistry):
+            tenants = TenantRegistry(tenants)   # specs / spec strings
+        self.tenants = tenants
+        #: per-tenant throttle buffers: FIFO of held work, released each
+        #: dispatch epoch as the tenant's bucket recovers.  Entries:
+        #: ("open", sid, prompt, slo_class, draft_speed, extras,
+        #:  t_request, queue_on_full) | ("work", VerifyWork).  Per-tenant
+        #: deques so a flooding tenant's backlog head-blocks only itself.
+        self._throttled: dict[str, deque] = {}
+        #: sid -> tenant for throttle-held opens (state/close lookups)
+        self._throttle_held: dict[int, str] = {}
+        #: sids shed by the rate limiter (terminal ``"rejected"`` state)
+        self._rejected: set[int] = set()
         #: refresh the scheduler's memory budget from the engine's live
         #: free-page capacity every dispatch epoch (paper Eq. 13's M(t_k));
         #: passed to schedule() as an override — the caller's SchedulerConfig
@@ -346,27 +377,54 @@ class WISPServer:
             return "active"
         if session_id in self.prefilling:
             return "prefilling"
-        if session_id in self.admission_queue:
+        if (session_id in self.admission_queue
+                or session_id in self._throttle_held):
             return "queued"
+        if session_id in self._rejected:
+            return "rejected"
         return "closed"
+
+    def throttled_session_ids(self) -> set[int]:
+        """Sids of opens currently held by the tenant rate limiter."""
+        return set(self._throttle_held)
 
     # -- sessions -----------------------------------------------------------
     def _register(self, session_id, slot, first, prompt_len, slo_class,
-                  draft_speed) -> int:
+                  draft_speed, tenant=DEFAULT_TENANT) -> int:
         self.sessions[session_id] = ServerSession(
             session_id=session_id,
             slot=slot,
             slo_class=slo_class,
             committed_len=prompt_len + 1,
             draft_speed=draft_speed,
+            tenant=tenant,
         )
         self.first_tokens[session_id] = first
         return first
 
+    def _resolve_slo(self, slo_class, spec) -> int:
+        """Resolve + validate a session's SLO class: an explicit argument
+        wins, else the tenant's default, else class 3.  Unknown classes
+        raise a `ValueError` listing the known ones (not a bare KeyError
+        deep in ``submit``/``_begin_chunked``)."""
+        if slo_class is None:
+            slo_class = spec.slo_class if spec.slo_class is not None else 3
+        if slo_class not in self.slo_classes:
+            raise ValueError(
+                f"unknown SLO class {slo_class!r}; known classes: "
+                f"{sorted(self.slo_classes)}"
+            )
+        if self.prefill_mode == "chunked" and slo_class not in self.ttft_slo:
+            raise ValueError(
+                f"SLO class {slo_class!r} has no TTFT budget; known: "
+                f"{sorted(self.ttft_slo)}"
+            )
+        return slo_class
+
     def open_session(
-        self, session_id: int, prompt_tokens, slo_class: int = 3,
+        self, session_id: int, prompt_tokens, slo_class: int | None = None,
         draft_speed: float = 50.0, extras=None, queue_on_full: bool = True,
-        now: float = 0.0,
+        now: float = 0.0, tenant: str = DEFAULT_TENANT,
     ) -> SessionHandle:
         """Open a session; returns its `SessionHandle`.
 
@@ -380,31 +438,74 @@ class WISPServer:
         Chunked prefill: the handle is ``prefilling`` — admission only
         reserves the slot and enqueues the first prefill chunk (``now``
         starts the TTFT clock); the first token arrives as a
-        ``FIRST_TOKEN`` event when the final chunk completes."""
+        ``FIRST_TOKEN`` event when the final chunk completes.
+
+        Tenancy (DESIGN.md §13): the ``tenant``'s rate limiter prices the
+        open at its prompt length.  A DEPRIORITIZE decision admits but
+        serves the prefill at reduced WFQ weight; QUEUE holds the open in
+        the tenant's throttle buffer (``queued`` handle; released as the
+        bucket recovers); REJECT sheds it outright (``rejected`` handle,
+        terminal).  Both emit typed ``THROTTLED``/``REJECTED`` events.
+        ``slo_class=None`` resolves to the tenant's default class."""
         self.now = max(self.now, now)
+        spec = self.tenants.get(tenant).spec
+        slo_class = self._resolve_slo(slo_class, spec)
+        self._rejected.discard(session_id)
         handle = SessionHandle(session_id, self)
+        stage = self.tenants.admit_session(
+            tenant, len(prompt_tokens), now,
+            queued=len(self._throttled.get(tenant, ())),
+        )
+        if stage == Stage.REJECT:
+            self._rejected.add(session_id)
+            self._emit(Rejected(session_id, now, tenant))
+            return handle
+        if stage == Stage.QUEUE:
+            self._emit(Throttled(session_id, now, tenant, "queue", "open"))
+            self._throttled.setdefault(tenant, deque()).append(
+                ("open", session_id, list(prompt_tokens), slo_class,
+                 draft_speed, extras, now, queue_on_full)
+            )
+            self._throttle_held[session_id] = tenant
+            return handle
+        deprio = stage == Stage.DEPRIORITIZE
+        if deprio:
+            self._emit(Throttled(session_id, now, tenant,
+                                 "deprioritize", "open"))
+        self._admit_open(session_id, prompt_tokens, slo_class, draft_speed,
+                         extras, now, queue_on_full, tenant, deprio)
+        return handle
+
+    def _admit_open(self, session_id, prompt_tokens, slo_class, draft_speed,
+                    extras, now, queue_on_full, tenant, deprio):
+        """The post-throttle half of ``open_session``: engine admission or
+        the capacity queue.  Counts the session live for its tenant."""
+        st = self.tenants.get(tenant)
         try:
             if self.prefill_mode == "chunked":
                 self._begin_chunked(session_id, prompt_tokens, slo_class,
-                                    draft_speed, extras, now)
-                return handle
+                                    draft_speed, extras, now, tenant, deprio)
+                st.live_sessions += 1
+                return
             slot, first = self.engine.new_session(prompt_tokens, extras=extras)
         except (OutOfPages, NoFreeSlots):
             if not queue_on_full:
                 raise
             self.admission_queue.push(
                 (session_id, list(prompt_tokens), slo_class, draft_speed,
-                 extras, now)
+                 extras, now, tenant)
             )
-            return handle
+            st.live_sessions += 1
+            return
         self._register(session_id, slot, first, len(prompt_tokens),
-                       slo_class, draft_speed)
+                       slo_class, draft_speed, tenant)
+        st.live_sessions += 1
         self._emit(Admitted(session_id, now))
         self._emit(FirstToken(session_id, now, first))
-        return handle
 
     def _begin_chunked(self, sid, prompt_tokens, slo_class, draft_speed,
-                       extras, t_request):
+                       extras, t_request, tenant=DEFAULT_TENANT,
+                       deprio=False):
         """Reserve engine state for a session and enqueue its first prefill
         chunk.  Raises OutOfPages/NoFreeSlots with nothing leaked."""
         state = self.engine.begin_prefill(prompt_tokens, extras=extras)
@@ -415,6 +516,8 @@ class WISPServer:
             draft_speed=draft_speed,
             t_request=t_request,
             deadline=t_request + self.ttft_slo[slo_class],
+            tenant=tenant,
+            deprioritized=deprio,
         )
         self.prefilling[sid] = ps
         self._emit(Admitted(sid, self.now))
@@ -440,6 +543,9 @@ class WISPServer:
             payload=ps,
             prefill_tokens=min(self.prefill_chunk_tokens, st.remaining),
             enqueued_at=now,
+            tenant=ps.tenant,
+            tenant_weight=self.tenants.weight(ps.tenant),
+            deprioritized=ps.deprioritized,
         ))
 
     def _try_admit(self):
@@ -449,13 +555,14 @@ class WISPServer:
             entry = self.admission_queue.peek()
             if entry is None:
                 return
-            sid, prompt, slo_class, draft_speed, extras, t_request = entry
+            (sid, prompt, slo_class, draft_speed, extras, t_request,
+             tenant) = entry
             try:
                 if self.prefill_mode == "chunked":
                     # TTFT clock started at the original request — a long
                     # wait in the admission queue is TTFT the client saw
                     self._begin_chunked(sid, prompt, slo_class, draft_speed,
-                                        extras, t_request)
+                                        extras, t_request, tenant)
                     self.admission_queue.popleft()
                     continue
                 slot, first = self.engine.new_session(prompt, extras=extras)
@@ -463,14 +570,51 @@ class WISPServer:
                 return
             self.admission_queue.popleft()
             self._register(sid, slot, first, len(prompt), slo_class,
-                           draft_speed)
+                           draft_speed, tenant)
             self.admitted.append((sid, first))
             self._emit(Admitted(sid, self.now))
             self._emit(FirstToken(sid, self.now, first))
 
+    def _purge_session_work(self, session_id: int, tenant: str) -> None:
+        """Drop a closing session's pending + throttle-held verify work and
+        refund the tenant's tokens-in-flight accounting."""
+        st = self.tenants.get(tenant)
+        dropped = 0
+        keep = []
+        for r in self.pending:
+            if r.session_id == session_id:
+                if r.kind == "verify":
+                    dropped += r.draft_len
+            else:
+                keep.append(r)
+        self.pending = keep
+        dq = self._throttled.get(tenant)
+        if dq:
+            # held blocks were never counted in flight — drop, no refund
+            self._throttled[tenant] = deque(
+                e for e in dq
+                if not (e[0] == "work" and e[1].session_id == session_id)
+            )
+        st.tokens_in_flight = max(0, st.tokens_in_flight - dropped)
+
     def close_session(self, session_id: int, now: float | None = None):
         t = self.now if now is None else now
         self.now = max(self.now, t)
+        if session_id in self._rejected:
+            # shed open: nothing was ever admitted or counted
+            self._rejected.discard(session_id)
+            self._emit(Closed(session_id, t))
+            return
+        held = self._throttle_held.pop(session_id, None)
+        if held is not None:
+            # open still in the tenant's throttle buffer: drop it there
+            # (it was never counted live — no decrement)
+            self._throttled[held] = deque(
+                e for e in self._throttled.get(held, ())
+                if not (e[0] == "open" and e[1] == session_id)
+            )
+            self._emit(Closed(session_id, t))
+            return
         s = self.sessions.pop(session_id, None)
         if s is None:
             ps = self.prefilling.pop(session_id, None)
@@ -481,12 +625,19 @@ class WISPServer:
                     r for r in self.pending if r.session_id != session_id
                 ]
                 self.engine.abort_prefill(ps.state)
+                self._tenant_session_closed(ps.tenant)
                 self._emit(Closed(session_id, t))
                 self._try_admit()
                 return
             # session may still be waiting in the admission queue: cancel it
+            tenant = next(
+                (e[6] for e in self.admission_queue if e[0] == session_id),
+                None,
+            )
             if not self.admission_queue.cancel(session_id):
                 raise KeyError(session_id)
+            if tenant is not None:
+                self._tenant_session_closed(tenant)
             self._emit(Closed(session_id, t))
             return
         # Lifecycle rule (docs/ARCHITECTURE.md §"Session lifecycle"): close
@@ -494,11 +645,16 @@ class WISPServer:
         # them behind would make a later step() dispatch a request whose
         # session — and engine slot — no longer exist (KeyError at best,
         # verification against a recycled slot at worst).
-        self.pending = [r for r in self.pending if r.session_id != session_id]
+        self._purge_session_work(session_id, s.tenant)
         self.engine.close_session(s.slot)
         self.first_tokens.pop(session_id, None)
+        self._tenant_session_closed(s.tenant)
         self._emit(Closed(session_id, t))
         self._try_admit()
+
+    def _tenant_session_closed(self, tenant: str) -> None:
+        st = self.tenants.get(tenant)
+        st.live_sessions = max(0, st.live_sessions - 1)
 
     def restore_session(
         self,
@@ -513,6 +669,7 @@ class WISPServer:
         first_token: int | None = None,
         extras=None,
         now: float = 0.0,
+        tenant: str = DEFAULT_TENANT,
     ) -> int:
         """Rebuild a migrated session from its committed token stream
         (the fleet failover path, docs/ARCHITECTURE.md §7).
@@ -536,7 +693,8 @@ class WISPServer:
         free)."""
         self.now = max(self.now, now)
         if (session_id in self.sessions or session_id in self.prefilling
-                or session_id in self.admission_queue):
+                or session_id in self.admission_queue
+                or session_id in self._throttle_held):
             raise ValueError(f"session {session_id} already live here")
         committed = [int(t) for t in committed_tokens]
         if len(committed) < 2:
@@ -560,7 +718,12 @@ class WISPServer:
             rounds=rounds,
             draft_speed=draft_speed,
             spec_k=spec_k,
+            tenant=tenant,
         )
+        # migration preserves tenant accounting: the session is live here
+        # now (the dead verifier's registry entry — when the registry is
+        # fleet-shared, the scrub already decremented it)
+        self.tenants.get(tenant).live_sessions += 1
         if first_token is not None:
             self.first_tokens[session_id] = int(first_token)
         return st.total - st.n_cached
@@ -580,7 +743,13 @@ class WISPServer:
         """Queue a drafted block for verification.  The draft distribution
         arrives as dense ``q_logits`` (exact residual), a `CompactQ` via
         ``q_compact`` (O(K·C) wire payload, DESIGN.md §9), or neither
-        (greedy verification reads no q)."""
+        (greedy verification reads no q).
+
+        The session's tenant bucket prices the block at its draft length
+        (DESIGN.md §13): DEPRIORITIZE queues it flagged for reduced WFQ
+        weight; QUEUE holds it in the tenant's throttle buffer until the
+        bucket recovers (released each dispatch epoch).  A streaming
+        block is never rejected."""
         self.now = max(self.now, now)
         s = self.sessions[session_id]
         s.t_draft_last = t_draft
@@ -588,6 +757,13 @@ class WISPServer:
         target_speed = self.slo_classes[s.slo_class]
         nd = len(draft_tokens)
         s.spec_k = max(nd, 1)
+        stage = self.tenants.admit_block(s.tenant, nd, now)
+        tstate = self.tenants.get(s.tenant)
+        tstate.submitted_tokens += nd
+        if stage != Stage.QUEUE:
+            # held blocks do not count in flight (else their own release
+            # recheck against max_tokens_in_flight would self-block)
+            tstate.tokens_in_flight += nd
         # spill tier (DESIGN.md §12): a draft block announces the session's
         # next verify epoch — page its spilled KV back in NOW (best effort)
         # so the fused verify dispatch never blocks on a fault; whatever
@@ -614,9 +790,68 @@ class WISPServer:
             enqueued_at=now,
             round_index=s.rounds,
             pagein_tokens=self.engine.spilled_tokens(s.slot),
+            tenant=s.tenant,
+            tenant_weight=self.tenants.weight(s.tenant),
+            deprioritized=stage == Stage.DEPRIORITIZE,
         )
+        if stage == Stage.QUEUE:
+            # held until the bucket recovers; the prebuilt item keeps its
+            # original arrival/enqueued_at so WFQ aging credits the hold
+            self._emit(Throttled(session_id, now, s.tenant,
+                                 "queue", "submit"))
+            self._throttled.setdefault(s.tenant, deque()).append(
+                ("work", req)
+            )
+            return self._rid
+        if stage == Stage.DEPRIORITIZE:
+            self._emit(Throttled(session_id, now, s.tenant,
+                                 "deprioritize", "submit"))
         self.pending.append(req)
         return self._rid
+
+    # -- throttle release ----------------------------------------------------
+    def _release_throttled(self, now: float) -> None:
+        """Re-price each tenant's throttle buffer head against its (lazily
+        refilled) bucket and release what it now covers.  FIFO *within* a
+        tenant only — one flooding tenant's backlog never head-blocks
+        another's.  Held opens re-price with ``queued=0``: the backlog
+        bound sheds new arrivals, not work already accepted for holding."""
+        for tenant, dq in self._throttled.items():
+            while dq:
+                entry = dq[0]
+                if entry[0] == "open":
+                    (_, sid, prompt, slo_class, draft_speed, extras,
+                     t_request, queue_on_full) = entry
+                    stage = self.tenants.admit_session(
+                        tenant, len(prompt), now, queued=0)
+                    if stage == Stage.QUEUE:
+                        break
+                    dq.popleft()
+                    self._throttle_held.pop(sid, None)
+                    if stage == Stage.REJECT:    # max_queued == 0 edge
+                        self._rejected.add(sid)
+                        self._emit(Rejected(sid, now, tenant))
+                        continue
+                    deprio = stage == Stage.DEPRIORITIZE
+                    if deprio:
+                        self._emit(Throttled(sid, now, tenant,
+                                             "deprioritize", "open"))
+                    self._admit_open(sid, prompt, slo_class, draft_speed,
+                                     extras, t_request, queue_on_full,
+                                     tenant, deprio)
+                else:
+                    req = entry[1]
+                    stage = self.tenants.admit_block(
+                        tenant, req.draft_len, now)
+                    if stage == Stage.QUEUE:
+                        break
+                    dq.popleft()
+                    self.tenants.get(tenant).tokens_in_flight += req.draft_len
+                    req.deprioritized = stage == Stage.DEPRIORITIZE
+                    if req.deprioritized:
+                        self._emit(Throttled(req.session_id, now, tenant,
+                                             "deprioritize", "submit"))
+                    self.pending.append(req)
 
     # -- dispatch epoch -------------------------------------------------------
     def step(self, now: float, *, verify_time=None) -> list[Verdict]:
@@ -634,6 +869,7 @@ class WISPServer:
         runs on the virtual clock; by default each verdict carries the
         engine's measured wall time (synchronous CPU drivers)."""
         self.now = max(self.now, now)
+        self._release_throttled(now)
         self._try_admit()
         # M(t_k): live free-page capacity, not a static config number
         self.memory_budget_tokens = (
@@ -706,7 +942,7 @@ class WISPServer:
             self.admission_queue.push(
                 (ps.session_id, [int(x) for x in ps.state.tokens],
                  ps.slo_class, ps.draft_speed, ps.state.extras,
-                 ps.t_request)
+                 ps.t_request, ps.tenant)
             )
             # keep the retry queue in request order (FIFO fairness)
             self.admission_queue.resort(key=lambda q: q[5])
@@ -748,6 +984,10 @@ class WISPServer:
             s.alpha = 0.8 * s.alpha + 0.2 * (outcome.accept_len / r.draft_len)
         s.rounds += 1
         s.committed_len += outcome.emitted
+        tstate = self.tenants.get(s.tenant)
+        tstate.tokens_in_flight = max(
+            0, tstate.tokens_in_flight - r.draft_len)
+        tstate.committed_tokens += outcome.emitted
         t_queue = max(0.0, now - r.enqueued_at)
         tv = outcome.t_verify if self._dt_virtual is None else self._dt_virtual
         complete = now + tv
@@ -778,7 +1018,8 @@ class WISPServer:
             return
         del self.prefilling[ps.session_id]
         self._register(ps.session_id, st.slot, outcome.first_token,
-                       st.total, ps.slo_class, ps.draft_speed)
+                       st.total, ps.slo_class, ps.draft_speed,
+                       tenant=ps.tenant)
         self.admitted.append((ps.session_id, outcome.first_token))
         self._emit(FirstToken(ps.session_id, now, outcome.first_token))
         t_first = now + tv_epoch
@@ -797,3 +1038,11 @@ class WISPServer:
     @property
     def queue_depth(self) -> int:
         return len(self.pending)
+
+    @property
+    def throttle_backlog(self) -> int:
+        """Opens + verify blocks currently held by the tenant rate limiter.
+        Dispatch gating must treat this as queued work: releases happen
+        only inside ``step()``, so a throttled-only backlog still needs an
+        epoch scheduled to drain."""
+        return sum(len(dq) for dq in self._throttled.values())

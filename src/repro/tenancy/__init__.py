@@ -1,0 +1,27 @@
+"""Multi-tenant serving subsystem (DESIGN.md §13).
+
+Layered over the policy registry and the typed event API: a
+`TenantRegistry` of per-tenant weights / SLO classes / budgets, a
+two-stage token-bucket rate limiter (deprioritize -> queue -> reject)
+applied at ``open_session`` / ``submit``, and — in
+`repro.core.scheduler` — the ``"wfq"`` weighted-fair-queueing policy
+that consumes the tenant weights these specs define.
+"""
+from __future__ import annotations
+
+from repro.tenancy.ratelimit import Stage, TokenBucket
+from repro.tenancy.registry import (
+    DEFAULT_TENANT,
+    TenantRegistry,
+    TenantSpec,
+    TenantState,
+)
+
+__all__ = [
+    "DEFAULT_TENANT",
+    "Stage",
+    "TenantRegistry",
+    "TenantSpec",
+    "TenantState",
+    "TokenBucket",
+]

@@ -1,0 +1,101 @@
+"""Two-stage token-bucket rate limiting (DESIGN.md §13).
+
+One `TokenBucket` per tenant meters admitted work in *tokens* (prompt
+tokens at ``open_session``, draft-block tokens at ``submit``).  The
+bucket refills lazily at ``rate`` tokens per virtual second up to
+``burst``; a charge may push the level *negative* down to
+``-deprioritize_debt`` — that borrow band is the first throttle stage.
+The decision a charge gets is a pure function of the (refilled) level,
+so severity is monotone as the level drops:
+
+  * ``ADMIT``        — the bucket covers the cost (post-charge level
+                       >= 0): full-weight service;
+  * ``DEPRIORITIZE`` — the cost is borrowed from the debt band: the work
+                       runs, but flagged ``deprioritized`` so the WFQ
+                       policy serves it at a fraction of the tenant's
+                       weight;
+  * ``QUEUE``        — even the debt band cannot cover it: the bucket is
+                       NOT charged and the caller must hold the work
+                       until a later ``decide`` admits it (the server's
+                       per-tenant throttle buffer, released each epoch).
+
+The fourth stage, ``REJECT``, is a *backlog* decision, not a level
+decision: `TenantRegistry.admit_session` escalates ``QUEUE`` to
+``REJECT`` when the tenant's held-session backlog already exceeds its
+``max_queued`` budget.  Backlog grows monotonically with arrival rate,
+so the full deprioritize -> queue -> reject ladder is monotone in
+offered load (tests/test_tenancy.py pins this property).  Rejection
+applies only to session opens — a streaming session's submitted block is
+never dropped, only deprioritized or held.
+
+``rate=None`` means unlimited: every decision is ``ADMIT`` and the
+bucket never charges — attaching a default `TenantRegistry` to a server
+is therefore behavior-neutral (the golden ``tenant/*`` cells pin this).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+
+
+class Stage(enum.IntEnum):
+    """Rate-limiter decision, ordered by severity (monotone in load)."""
+
+    ADMIT = 0
+    DEPRIORITIZE = 1
+    QUEUE = 2
+    REJECT = 3
+
+
+@dataclasses.dataclass
+class TokenBucket:
+    """Lazily-refilled token bucket with a borrow (deprioritize) band.
+
+    Level invariant: ``-deprioritize_debt <= level <= burst`` — QUEUE
+    decisions never charge, so debt is bounded and tokens admitted at
+    full weight over any window ``T`` are bounded by
+    ``burst + rate * T`` (the classic bucket bound; property-tested)."""
+
+    #: sustained refill rate, tokens per (virtual) second; None = unlimited
+    rate: float | None
+    #: bucket capacity — the burst admitted at full weight from idle
+    burst: float = 512.0
+    #: how far below zero a charge may borrow (the DEPRIORITIZE band);
+    #: None defaults to ``burst``
+    deprioritize_debt: float | None = None
+    level: float = dataclasses.field(init=False, default=0.0)
+    _t: float = dataclasses.field(init=False, default=0.0)
+
+    def __post_init__(self):
+        if self.deprioritize_debt is None:
+            self.deprioritize_debt = float(self.burst)
+        self.level = float(self.burst)
+
+    def refill(self, now: float) -> None:
+        """Lazy refill: credit ``rate`` tokens/s since the last touch
+        (time never runs backwards — out-of-order probes are clamped)."""
+        if self.rate is None:
+            return
+        if now > self._t:
+            self.level = min(float(self.burst),
+                             self.level + (now - self._t) * self.rate)
+        self._t = max(self._t, now)
+
+    def peek(self, now: float) -> float:
+        self.refill(now)
+        return float("inf") if self.rate is None else self.level
+
+    def decide(self, cost: float, now: float) -> Stage:
+        """Charge ``cost`` tokens if any band covers it and return the
+        stage; QUEUE leaves the bucket untouched (the caller retries)."""
+        self.refill(now)
+        if self.rate is None:
+            return Stage.ADMIT
+        cost = max(float(cost), 0.0)
+        if self.level - cost >= 0.0:
+            self.level -= cost
+            return Stage.ADMIT
+        if self.level - cost >= -self.deprioritize_debt:
+            self.level -= cost
+            return Stage.DEPRIORITIZE
+        return Stage.QUEUE

@@ -1,0 +1,203 @@
+"""Tenant registry: per-tenant weight, SLO class and budgets (DESIGN.md §13).
+
+A `TenantRegistry` is the server-side source of truth for the multi-
+tenant subsystem: each `TenantSpec` carries the tenant's WFQ **weight**,
+an optional default **SLO class** for its sessions, and three budgets —
+
+  * a two-stage token bucket (``rate_tokens_per_s`` / ``burst_tokens``,
+    `repro.tenancy.ratelimit`) metering admitted tokens;
+  * ``max_concurrency`` — live sessions (active + prefilling + capacity-
+    queued) the tenant may hold at once;
+  * ``max_tokens_in_flight`` — drafted tokens submitted but not yet
+    committed;
+  * ``max_queued`` — throttle-held session opens before new opens are
+    rejected outright (the REJECT stage; None = queue unboundedly).
+
+The registry is mechanism, not policy: `WISPServer` asks it to price an
+``open_session`` / ``submit`` (`admit_session` / `admit_block`) and owns
+the throttle buffers and event emission; the ``"wfq"`` scheduling policy
+reads only the per-item ``tenant_weight`` stamped from here.  One
+registry instance may be shared across a verifier fleet — budgets are
+then tenant-global, which is what a fleet-wide SLO means.
+
+The ``"default"`` tenant always exists and is unlimited (weight 1.0, no
+bucket, no budgets), so a server constructed without tenants behaves
+exactly as before the subsystem existed.  Unknown tenant names raise a
+`ValueError` listing the registered names (never a bare KeyError).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.tenancy.ratelimit import Stage, TokenBucket
+
+#: the implicit tenant every untagged session belongs to
+DEFAULT_TENANT = "default"
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantSpec:
+    """One tenant's static contract: fair-share weight, SLO default and
+    admission budgets.  ``None`` budgets are unlimited."""
+
+    tenant: str
+    weight: float = 1.0
+    #: default SLO class for sessions opened without an explicit one
+    slo_class: int | None = None
+    #: sustained token-bucket refill (tokens/virtual-second); None = no limit
+    rate_tokens_per_s: float | None = None
+    burst_tokens: float = 512.0
+    max_tokens_in_flight: int | None = None
+    max_concurrency: int | None = None
+    #: throttle-held session opens before REJECT; None = queue unboundedly
+    max_queued: int | None = None
+
+    def __post_init__(self):
+        if self.weight <= 0:
+            raise ValueError(
+                f"tenant {self.tenant!r}: weight must be > 0, "
+                f"got {self.weight}"
+            )
+
+    @classmethod
+    def parse(cls, text: str) -> "TenantSpec":
+        """Parse a CLI spec: ``name[:key=value]*`` with keys ``weight``,
+        ``slo``, ``rate``, ``burst``, ``inflight``, ``conc``, ``queued``
+        (e.g. ``flood:weight=1:rate=600:burst=128:conc=4:queued=2``)."""
+        parts = text.split(":")
+        name, kvs = parts[0], parts[1:]
+        if not name:
+            raise ValueError(f"tenant spec needs a name: {text!r}")
+        keys = {
+            "weight": ("weight", float),
+            "slo": ("slo_class", int),
+            "rate": ("rate_tokens_per_s", float),
+            "burst": ("burst_tokens", float),
+            "inflight": ("max_tokens_in_flight", int),
+            "conc": ("max_concurrency", int),
+            "queued": ("max_queued", int),
+        }
+        kwargs: dict = {}
+        for kv in kvs:
+            k, _, v = kv.partition("=")
+            if k not in keys or not v:
+                raise ValueError(
+                    f"bad tenant spec field {kv!r} in {text!r}; known "
+                    f"fields: {sorted(keys)}"
+                )
+            field, cast = keys[k]
+            kwargs[field] = cast(v)
+        return cls(tenant=name, **kwargs)
+
+
+@dataclasses.dataclass
+class TenantState:
+    """Live accounting for one tenant (registry-owned, server-updated)."""
+
+    spec: TenantSpec
+    bucket: TokenBucket
+    #: sessions currently admitted or capacity-queued on the server(s)
+    live_sessions: int = 0
+    #: drafted tokens submitted but not yet committed/purged
+    tokens_in_flight: int = 0
+    # observability counters
+    throttled: int = 0                 # DEPRIORITIZE + QUEUE decisions
+    rejected: int = 0
+    submitted_tokens: int = 0
+    committed_tokens: int = 0
+
+
+class TenantRegistry:
+    """Tenant name -> `TenantState`; see module docstring."""
+
+    def __init__(self, specs=()):
+        self._tenants: dict[str, TenantState] = {}
+        self.register(TenantSpec(DEFAULT_TENANT))
+        for spec in specs:
+            if isinstance(spec, str):
+                spec = TenantSpec.parse(spec)
+            self.register(spec)
+
+    def register(self, spec: TenantSpec) -> TenantState:
+        st = TenantState(
+            spec=spec,
+            bucket=TokenBucket(rate=spec.rate_tokens_per_s,
+                               burst=spec.burst_tokens),
+        )
+        self._tenants[spec.tenant] = st
+        return st
+
+    def names(self) -> list[str]:
+        return sorted(self._tenants)
+
+    def get(self, tenant: str) -> TenantState:
+        try:
+            return self._tenants[tenant]
+        except KeyError:
+            raise ValueError(
+                f"unknown tenant {tenant!r}; registered: {self.names()}"
+            ) from None
+
+    def weight(self, tenant: str) -> float:
+        return self.get(tenant).spec.weight
+
+    def __contains__(self, tenant: str) -> bool:
+        return tenant in self._tenants
+
+    def __iter__(self):
+        return iter(sorted(self._tenants))
+
+    # -- admission pricing (the server calls these) -------------------------
+    def admit_session(self, tenant: str, cost: float, now: float, *,
+                      queued: int = 0) -> Stage:
+        """Price an ``open_session`` of ``cost`` prompt tokens.  Budget
+        checks run BEFORE the bucket so an escalated decision never
+        leaves a spurious charge behind (the throttle-release retry would
+        otherwise double-charge).  ``queued`` is the tenant's current
+        throttle-held open backlog — past ``max_queued`` the open is
+        rejected outright (shedding bounds both the backlog and the
+        bucket's debt)."""
+        st = self.get(tenant)
+        spec = st.spec
+        if spec.max_queued is not None and queued >= spec.max_queued:
+            st.rejected += 1
+            return Stage.REJECT
+        if (spec.max_concurrency is not None
+                and st.live_sessions >= spec.max_concurrency):
+            st.throttled += 1
+            return Stage.QUEUE
+        stage = st.bucket.decide(cost, now)
+        if stage != Stage.ADMIT:
+            st.throttled += 1
+        return stage
+
+    def admit_block(self, tenant: str, cost: float, now: float) -> Stage:
+        """Price a ``submit`` of ``cost`` draft-block tokens.  Clamped to
+        QUEUE — a streaming session's block is never dropped, only
+        deprioritized or held until the bucket recovers."""
+        st = self.get(tenant)
+        spec = st.spec
+        if (spec.max_tokens_in_flight is not None
+                and st.tokens_in_flight + cost > spec.max_tokens_in_flight):
+            st.throttled += 1
+            return Stage.QUEUE
+        stage = st.bucket.decide(cost, now)
+        if stage != Stage.ADMIT:
+            st.throttled += 1
+        return min(stage, Stage.QUEUE)
+
+    # -- observability ------------------------------------------------------
+    def snapshot(self) -> dict:
+        """Per-tenant counter snapshot (weights + live accounting)."""
+        return {
+            name: {
+                "weight": st.spec.weight,
+                "live_sessions": st.live_sessions,
+                "tokens_in_flight": st.tokens_in_flight,
+                "throttled": st.throttled,
+                "rejected": st.rejected,
+                "submitted_tokens": st.submitted_tokens,
+                "committed_tokens": st.committed_tokens,
+            }
+            for name, st in sorted(self._tenants.items())
+        }

@@ -271,6 +271,58 @@ def run_fleet_scenario(*, verifiers: int = 3, rounds: int = ROUNDS,
     return {str(sid): s for sid, s in streams.items()}
 
 
+def run_tenant_scenario(*, rounds: int = ROUNDS):
+    """Tenant-tagged twin of the ``dense/wisp/monolithic`` baseline cell:
+    the same two sessions open tagged with two tenants (weights 2 / 1,
+    unlimited default buckets) under the ``"wfq"`` policy.  With no
+    contention the tenancy subsystem must be inert: admission is all
+    ADMIT (no throttle events) and rng-tagged verification keys draws by
+    (session, committed-prefix) only, so the committed streams must stay
+    BYTE-IDENTICAL to the untagged baseline (DESIGN.md §13)."""
+    from repro.tenancy import TenantSpec
+
+    cfg, params = _model_for(BACKENDS["dense"][0])
+    engine = VerificationEngine(
+        cfg, params, max_slots=4, max_len=128, method="residual", seed=7
+    )
+    server = WISPServer(
+        engine, COEFFS, policy="wfq", prefill="monolithic",
+        prefill_chunk_tokens=4,
+        tenants=[TenantSpec("alpha", weight=2.0), TenantSpec("beta")],
+    )
+    tenant_of = {0: "alpha", 1: "beta"}
+    now = 0.0
+    streams: dict[int, list[int]] = {}
+    for sid, prompt in PROMPTS.items():
+        server.open_session(sid, prompt, slo_class=2, now=now,
+                            tenant=tenant_of[sid])
+    for ev in server.pop_events():
+        if ev.kind == "FIRST_TOKEN":
+            streams[ev.session_id] = [int(ev.token)]
+        assert ev.kind not in ("THROTTLED", "REJECTED"), \
+            "unlimited tenants must never throttle"
+    assert set(streams) == set(PROMPTS)
+
+    for rnd in range(rounds):
+        drafts = {}
+        for sid in PROMPTS:
+            toks, qlog = _draft_for(cfg.vocab, sid, rnd)
+            drafts[sid] = toks
+            server.submit(sid, toks, qlog, now=now, t_draft=0.02,
+                          t_network=0.01)
+        while server.queue_depth:
+            verdicts = server.step(now)
+            now += 0.005
+            for v in verdicts:
+                toks = drafts[v.session_id]
+                streams[v.session_id].extend(
+                    int(t) for t in toks[: v.accept_len]
+                )
+                streams[v.session_id].append(int(v.token))
+        server.pop_events()
+    return {str(sid): s for sid, s in streams.items()}
+
+
 def all_cells():
     for backend in BACKENDS:
         for policy in POLICIES:
@@ -299,6 +351,10 @@ def generate() -> dict:
         out[key] = run_tiered_scenario(quantize)
         print(f"{key}: "
               + ", ".join(f"s{sid}:{len(s)} tok" for sid, s in out[key].items()))
+    key = "tenant/wfq"
+    out[key] = run_tenant_scenario()
+    print(f"{key}: "
+          + ", ".join(f"s{sid}:{len(s)} tok" for sid, s in out[key].items()))
     return out
 
 

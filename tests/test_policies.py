@@ -55,8 +55,9 @@ def dense_model():
 # registry
 # ---------------------------------------------------------------------------
 def test_registry_contents_and_aliases():
-    assert available_policies() == ["edf", "fcfs", "priority", "wisp"]
+    assert available_policies() == ["edf", "fcfs", "priority", "wfq", "wisp"]
     assert POLICIES["slo"] is POLICIES["wisp"] is SLOScheduler
+    assert POLICIES["fair"] is POLICIES["wfq"]
     p = make_policy("slo", SchedulerConfig(), COEFFS)
     assert p.name == "wisp"                 # alias resolves to canonical
     # instances and classes pass through
@@ -171,7 +172,10 @@ def _assert_stream_ordered(events):
         verdicts = [i for i, k in enumerate(kinds) if k == "VERDICT"]
         if firsts or verdicts:
             assert admitted_at is not None, f"session {sid}: no ADMITTED"
-            assert admitted_at == 0, f"session {sid}: ADMITTED not first"
+            # only tenancy THROTTLED may precede ADMITTED (a held open
+            # throttles first); REJECTED sessions never admit at all
+            assert all(k == "THROTTLED" for k in kinds[:admitted_at]), \
+                f"session {sid}: ADMITTED not first"
         assert len(firsts) <= 1, f"session {sid}: multiple FIRST_TOKEN"
         if verdicts:
             assert firsts and firsts[0] < verdicts[0], \
@@ -181,7 +185,7 @@ def _assert_stream_ordered(events):
                 f"session {sid}: events after CLOSED"
 
 
-@pytest.mark.parametrize("policy", ["wisp", "fcfs", "edf", "priority"])
+@pytest.mark.parametrize("policy", ["wisp", "fcfs", "edf", "priority", "wfq"])
 def test_event_stream_ordered_chunked_flow(dense_model, policy):
     """Chunked prefill + verification + close under every policy emits an
     ordered stream: one ADMITTED first, exactly one FIRST_TOKEN, no
@@ -217,7 +221,7 @@ def test_event_stream_ordered_chunked_flow(dense_model, policy):
 # channel equivalence: legacy shims vs pop_events()
 # ---------------------------------------------------------------------------
 @pytest.mark.parametrize("prefill", ["monolithic", "chunked"])
-@pytest.mark.parametrize("policy", ["wisp", "fcfs", "edf", "priority"])
+@pytest.mark.parametrize("policy", ["wisp", "fcfs", "edf", "priority", "wfq"])
 def test_functional_server_channels_agree(dense_model, policy, prefill):
     """One server, two observers: the committed token stream read off the
     legacy channels (handle first_token + step() verdict list) must be
@@ -264,7 +268,7 @@ def test_functional_server_channels_agree(dense_model, policy, prefill):
 
 
 @pytest.mark.slow
-@pytest.mark.parametrize("policy", ["wisp", "fcfs", "edf", "priority"])
+@pytest.mark.parametrize("policy", ["wisp", "fcfs", "edf", "priority", "wfq"])
 def test_cluster_streams_match_lockstep_per_policy(dense_model, policy):
     """The event-driven cluster runtime (a pop_events() consumer) and the
     lock-step reference (a legacy-shim consumer) commit byte-identical

@@ -1,0 +1,451 @@
+"""Multi-tenant serving subsystem (DESIGN.md §13): two-stage token-bucket
+admission, per-tenant budgets, the "wfq" weighted-fair policy, and the
+end-to-end guarantees —
+
+  * the bucket never admits above sustained rate + burst (+ the bounded
+    deprioritization debt), under ANY decision sequence;
+  * a single decision's stage is monotone in its cost;
+  * WFQ splits a saturated verifier by tenant weight, and aging bounds
+    how long any item can starve;
+  * throttled opens/blocks release deterministically once the bucket
+    refills; sheds surface as typed REJECTED events;
+  * with unlimited default buckets the subsystem is inert: the golden
+    ``tenant/*`` cells replay byte-identical to the untagged wisp
+    baseline;
+  * killing a verifier mid-run with tenants attached preserves both the
+    per-tenant accounting and every committed stream byte.
+
+Property tests run under ``hypothesis`` when installed and collect as
+skipped via `_hypothesis_stub` otherwise.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dep: degrade property tests to skips
+    from _hypothesis_stub import given, settings, st
+
+from repro.cluster import (
+    ClusterConfig,
+    ClusterRuntime,
+    TenantWorkload,
+    build_fleet,
+    build_tenant_registry,
+)
+from repro.configs import get_config
+from repro.core.estimator import EstimatorCoeffs
+from repro.core.scheduler import (
+    SchedulerConfig,
+    VerifyRequest,
+    make_policy,
+)
+from repro.fleet import FleetRuntime, build_verifier_fleet
+from repro.models import build
+from repro.serving.client import EdgeDevice
+from repro.serving.engine import VerificationEngine
+from repro.serving.server import WISPServer
+from repro.serving.transport import NetworkModel
+from repro.tenancy import (
+    Stage,
+    TenantRegistry,
+    TenantSpec,
+    TokenBucket,
+)
+
+COEFFS = EstimatorCoeffs(a=1e-4, b_compute=1e-8, b_read=1e-6, c=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# token bucket (pure)
+# ---------------------------------------------------------------------------
+
+
+def test_token_bucket_two_stage_ladder():
+    b = TokenBucket(rate=10.0, burst=8.0)          # debt defaults to burst
+    assert b.decide(4.0, now=0.0) == Stage.ADMIT   # level 8 -> 4
+    assert b.decide(6.0, now=0.0) == Stage.DEPRIORITIZE  # 4 -> -2 (debt band)
+    lvl = b.level
+    assert b.decide(10.0, now=0.0) == Stage.QUEUE  # would bust the debt
+    assert b.level == lvl                          # QUEUE never charges
+    # refill at 10 tok/s: by t=2 the bucket is back at burst
+    assert b.decide(6.0, now=2.0) == Stage.ADMIT
+
+
+def test_unlimited_bucket_always_admits_without_charge():
+    b = TokenBucket(rate=None)
+    for cost in (1.0, 1e6):
+        assert b.decide(cost, now=0.0) == Stage.ADMIT
+    assert b.level == b.burst
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    rate=st.floats(0.5, 50.0),
+    burst=st.floats(1.0, 64.0),
+    ops=st.lists(
+        st.tuples(st.floats(0.0, 2.0), st.floats(0.1, 32.0)),
+        min_size=1, max_size=40,
+    ),
+)
+def test_bucket_never_admits_above_rate_plus_burst(rate, burst, ops):
+    """Sum of charged (ADMIT + DEPRIORITIZE) tokens over any window is
+    bounded by burst + debt + rate * elapsed: the contract that makes a
+    flood tenant's share enforceable at all."""
+    b = TokenBucket(rate=rate, burst=burst)
+    now, charged = 0.0, 0.0
+    for dt, cost in ops:
+        now += dt
+        stage = b.decide(cost, now=now)
+        if stage in (Stage.ADMIT, Stage.DEPRIORITIZE):
+            charged += cost
+        assert b.level >= -b.deprioritize_debt - 1e-9
+    assert charged <= 2 * burst + rate * now + 1e-6   # debt == burst here
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    warmup=st.lists(st.floats(0.1, 16.0), min_size=0, max_size=10),
+    c1=st.floats(0.1, 64.0),
+    extra=st.floats(0.0, 64.0),
+)
+def test_bucket_stage_monotone_in_cost(warmup, c1, extra):
+    """From any reachable bucket state, a costlier request never gets a
+    BETTER stage (the arrival-rate monotonicity of the two-stage design:
+    pushing harder can only move a tenant down the ladder)."""
+    b1 = TokenBucket(rate=5.0, burst=16.0)
+    b2 = TokenBucket(rate=5.0, burst=16.0)
+    for cost in warmup:                  # identical history -> same state
+        b1.decide(cost, now=0.0)
+        b2.decide(cost, now=0.0)
+    assert b1.decide(c1, now=0.0) <= b2.decide(c1 + extra, now=0.0)
+
+
+# ---------------------------------------------------------------------------
+# registry + budgets (pure)
+# ---------------------------------------------------------------------------
+
+
+def test_registry_unknown_tenant_lists_names():
+    reg = TenantRegistry([TenantSpec("alpha"), TenantSpec("beta")])
+    with pytest.raises(ValueError, match=r"alpha.*beta.*default"):
+        reg.get("nope")
+    assert reg.names() == ["alpha", "beta", "default"]
+    assert "alpha" in reg and "nope" not in reg
+
+
+def test_tenant_spec_parse_and_validation():
+    s = TenantSpec.parse("flood:weight=1.5:rate=600:burst=128:conc=4:queued=2")
+    assert (s.tenant, s.weight, s.rate_tokens_per_s) == ("flood", 1.5, 600.0)
+    assert (s.burst_tokens, s.max_concurrency, s.max_queued) == (128.0, 4, 2)
+    with pytest.raises(ValueError, match="known.*fields"):
+        TenantSpec.parse("flood:turbo=9")
+    with pytest.raises(ValueError, match="needs a name"):
+        TenantSpec.parse(":weight=2")
+    with pytest.raises(ValueError, match="weight"):
+        TenantSpec(tenant="bad", weight=0.0)
+
+
+def test_admit_session_reject_queue_and_budget_order():
+    reg = TenantRegistry([TenantSpec(
+        "t", rate_tokens_per_s=1.0, burst_tokens=4.0,
+        max_concurrency=1, max_queued=2,
+    )])
+    st_ = reg.get("t")
+    # backlog at max_queued sheds BEFORE any budget or bucket check
+    assert reg.admit_session("t", 2.0, 0.0, queued=2) == Stage.REJECT
+    assert st_.bucket.level == st_.bucket.burst      # REJECT never charges
+    # concurrency budget queues before the bucket is touched
+    st_.live_sessions = 1
+    assert reg.admit_session("t", 2.0, 0.0) == Stage.QUEUE
+    assert st_.bucket.level == st_.bucket.burst
+    st_.live_sessions = 0
+    assert reg.admit_session("t", 2.0, 0.0) == Stage.ADMIT
+
+
+def test_admit_block_clamps_to_queue_and_tracks_inflight():
+    reg = TenantRegistry([TenantSpec(
+        "t", rate_tokens_per_s=1.0, burst_tokens=8.0,
+        max_tokens_in_flight=10, max_queued=0,
+    )])
+    st_ = reg.get("t")
+    # tokens-in-flight budget holds the block (never REJECT for streams)
+    st_.tokens_in_flight = 9
+    assert reg.admit_block("t", 4.0, 0.0) == Stage.QUEUE
+    st_.tokens_in_flight = 0
+    assert reg.admit_block("t", 4.0, 0.0) == Stage.ADMIT
+    # drain the bucket past the debt band: still QUEUE, never REJECT
+    for _ in range(8):
+        stage = reg.admit_block("t", 4.0, 0.0)
+        assert stage <= Stage.QUEUE
+
+
+def test_unknown_work_kind_lists_registered():
+    with pytest.raises(ValueError, match=r"unknown work kind.*registered"):
+        VerifyRequest(req_id=0, session_id=0, slo_class=0, arrival=0.0,
+                      deadline=1.0, kind="nope")
+
+
+# ---------------------------------------------------------------------------
+# WFQ policy (pure)
+# ---------------------------------------------------------------------------
+
+
+def _witem(i, tenant, weight, *, draft=8, cached=64, enq=0.0, deprio=False):
+    return VerifyRequest(
+        req_id=i, session_id=i, slo_class=0, arrival=enq, deadline=1e9,
+        draft_len=draft, cached_len=cached, alpha=0.8, enqueued_at=enq,
+        tenant=tenant, tenant_weight=weight, deprioritized=deprio,
+    )
+
+
+def test_wfq_splits_saturated_service_by_weight():
+    """Both tenants permanently backlogged, batch cap 2: served items
+    track the 3:1 weight ratio, not the 1:1 arrival ratio."""
+    pol = make_policy("wfq", SchedulerConfig(max_batch_requests=2), COEFFS)
+    served = {"heavy": 0, "light": 0}
+    rid = 0
+    pending = []
+    t = 0.0
+    # epochs are densely spaced so aging credit stays negligible next to
+    # the vfinish gap — this isolates the weight term (aging is pinned by
+    # test_wfq_aging_bounds_starvation below)
+    for epoch in range(40):
+        while sum(r.tenant == "heavy" for r in pending) < 3:
+            pending.append(_witem(rid, "heavy", 3.0, cached=448, enq=t))
+            rid += 1
+        while sum(r.tenant == "light" for r in pending) < 3:
+            pending.append(_witem(rid, "light", 1.0, cached=448, enq=t))
+            rid += 1
+        d = pol.schedule(pending, t)
+        for r in d.batch:
+            served[r.tenant] += 1
+            pending.remove(r)
+        t += 0.0005
+    assert served["heavy"] > 0 and served["light"] > 0
+    assert served["heavy"] >= 2 * served["light"], served
+
+
+def test_wfq_aging_bounds_starvation():
+    """A tiny-weight victim item against a continuously replenished
+    heavy flood, batch cap 1: linear aging must get it served within a
+    bounded number of epochs anyway."""
+    pol = make_policy("wfq", SchedulerConfig(max_batch_requests=1), COEFFS)
+    victim = _witem(0, "victim", 0.05, enq=0.0)
+    pending = [victim]
+    rid, t, served_at = 1, 0.0, None
+    for epoch in range(200):
+        while len(pending) < 4:
+            pending.append(_witem(rid, "flood", 8.0, enq=t)); rid += 1
+        d = pol.schedule(pending, t)
+        assert len(d.batch) == 1
+        r = d.batch[0]
+        pending.remove(r)
+        if r.req_id == 0:
+            served_at = epoch
+            break
+        t += 0.05
+    assert served_at is not None, "aging failed to bound the victim's wait"
+
+
+def test_wfq_deprioritized_items_yield():
+    """Two same-weight tenants, one flagged deprioritized (rate-limiter
+    debt band): the clean tenant is served first."""
+    pol = make_policy("wfq", SchedulerConfig(max_batch_requests=1), COEFFS)
+    pending = [
+        _witem(0, "debtor", 1.0, deprio=True),
+        _witem(1, "clean", 1.0),
+    ]
+    d = pol.schedule(pending, 0.0)
+    assert [r.req_id for r in d.batch] == [1]
+
+
+# ---------------------------------------------------------------------------
+# server integration (reduced dense model)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def dense_pair():
+    cfg = get_config("qwen2-7b").reduced()
+    bundle = build(cfg)
+    tparams = bundle.init(jax.random.PRNGKey(0))
+    dparams = bundle.init(jax.random.PRNGKey(1))
+    return cfg, tparams, dparams
+
+
+def _server(cfg, tparams, tenants, *, policy="wfq", max_slots=4):
+    eng = VerificationEngine(cfg, tparams, max_slots=max_slots, max_len=128,
+                             method="residual", seed=7)
+    return WISPServer(eng, COEFFS, policy=policy, network=NetworkModel(),
+                      tenants=tenants)
+
+
+def test_throttled_open_queues_then_admits(dense_pair):
+    cfg, tparams, _ = dense_pair
+    srv = _server(cfg, tparams,
+                  [TenantSpec("slow", rate_tokens_per_s=1.0, burst_tokens=8.0)])
+    prompt = [1, 2, 3, 4, 5, 6]
+    srv.open_session(0, prompt, slo_class=2, now=0.0, tenant="slow")  # ADMIT
+    srv.open_session(1, prompt, slo_class=2, now=0.0, tenant="slow")  # DEPRIO
+    srv.open_session(2, prompt, slo_class=2, now=0.0, tenant="slow")  # QUEUE
+    kinds = [(ev.kind, ev.session_id) for ev in srv.pop_events()]
+    assert ("THROTTLED", 2) in kinds
+    assert srv.session_state(2) == "queued"
+    assert 2 in srv.throttled_session_ids()
+    assert srv.throttle_backlog == 1
+    assert srv.tenants.get("slow").live_sessions == 2   # held opens not live
+    # bucket refills at 1 tok/s: by t=20 the held open releases
+    srv.step(20.0)
+    admitted = [ev for ev in srv.pop_events()
+                if ev.kind == "ADMITTED" and ev.session_id == 2]
+    assert admitted and srv.session_state(2) == "active"
+    assert srv.throttle_backlog == 0
+    assert srv.tenants.get("slow").live_sessions == 3
+
+
+def test_rejected_open_sheds_with_typed_event(dense_pair):
+    cfg, tparams, _ = dense_pair
+    srv = _server(cfg, tparams,
+                  [TenantSpec("strict", rate_tokens_per_s=0.5,
+                              burst_tokens=2.0, max_queued=0)])
+    srv.open_session(7, [1, 2, 3, 4, 5, 6], slo_class=2, now=0.0,
+                     tenant="strict")
+    evs = srv.pop_events()
+    assert [ev.kind for ev in evs] == ["REJECTED"]
+    assert evs[0].tenant == "strict"
+    assert srv.session_state(7) == "rejected"
+    assert srv.tenants.get("strict").rejected == 1
+    srv.close_session(7)                    # rejected sids close cleanly
+    assert srv.session_state(7) == "closed"
+
+
+def test_throttled_block_holds_then_verifies(dense_pair):
+    cfg, tparams, _ = dense_pair
+    srv = _server(cfg, tparams,
+                  [TenantSpec("slow", rate_tokens_per_s=1.0, burst_tokens=8.0)])
+    srv.open_session(0, [1, 2, 3, 4, 5, 6], slo_class=2, now=0.0,
+                     tenant="slow")        # ADMIT: level 8 -> 2
+    srv.pop_events()
+    toks = list(range(2, 13))              # 11 tokens: 2-11 = -9 < -8 debt
+    qlog = (np.random.default_rng(0)
+            .normal(size=(len(toks), cfg.vocab)) * 1.5).astype(np.float32)
+    srv.submit(0, np.array(toks, dtype=np.int32), qlog, now=0.0,
+               t_draft=0.01, t_network=0.005)
+    st_ = srv.tenants.get("slow")
+    assert srv.throttle_backlog == 1 and srv.queue_depth == 0
+    assert st_.tokens_in_flight == 0       # held blocks are not in flight
+    held = [ev for ev in srv.pop_events() if ev.kind == "THROTTLED"]
+    assert held and held[0].scope == "submit"
+    verdicts = srv.step(20.0)              # refilled: releases + verifies
+    assert [v.session_id for v in verdicts] == [0]
+    assert st_.tokens_in_flight == 0       # charged on release, refunded
+    assert st_.submitted_tokens == len(toks)
+    assert st_.committed_tokens >= 1
+
+
+def test_server_unknown_tenant_and_slo_class_errors(dense_pair):
+    cfg, tparams, _ = dense_pair
+    srv = _server(cfg, tparams, [TenantSpec("alpha")])
+    with pytest.raises(ValueError, match=r"unknown tenant.*alpha"):
+        srv.open_session(0, [1, 2, 3], now=0.0, tenant="nope")
+    with pytest.raises(ValueError, match=r"unknown SLO class.*known"):
+        srv.open_session(0, [1, 2, 3], slo_class=99, now=0.0)
+
+
+def test_golden_tenant_cell_matches_untagged_baseline():
+    """The no-contention guarantee, end to end: the tenant-tagged wfq
+    scenario replays byte-identical to BOTH its stored golden cell and
+    the untagged dense/wisp/monolithic baseline cell."""
+    import json
+    import os
+
+    from _golden_scenario import GOLDEN_PATH, run_tenant_scenario
+
+    if not os.path.exists(GOLDEN_PATH):
+        pytest.skip("golden streams not generated")
+    with open(GOLDEN_PATH) as f:
+        golden = json.load(f)
+    streams = run_tenant_scenario()
+    assert streams == golden["tenant/wfq"]
+    assert streams == golden["dense/wisp/monolithic"]
+
+
+# ---------------------------------------------------------------------------
+# fleet chaos x tenancy
+# ---------------------------------------------------------------------------
+
+TENANT_CHAOS = dict(
+    rounds=3, k_max=4, max_len=256, seed=0,
+    prefill_mode="chunked", prefill_chunk_tokens=16,
+    tenant_workloads=(
+        TenantWorkload("victim", devices=2, weight=2.0),
+        TenantWorkload("flood", devices=2, weight=1.0),
+    ),
+)
+
+
+def _edges(cfg, dparams, ccfg, fleet):
+    return [
+        EdgeDevice(cfg, dparams, k_max=ccfg.k_max, max_len=ccfg.max_len,
+                   seed=100 + sp.idx, draft_speed=sp.draft_speed)
+        for sp in fleet
+    ]
+
+
+def test_chaos_verifier_kill_preserves_tenant_accounting(dense_pair):
+    """Kill one of three verifiers mid-run with tenants attached
+    (unlimited buckets, "wfq" policy): every committed stream — the
+    victim tenant's included — stays byte-identical to the
+    single-verifier run, and the SHARED tenant registry's accounting
+    survives the migrations (net-zero live sessions, per-tenant commits
+    intact)."""
+    cfg, tparams, dparams = dense_pair
+
+    # single-verifier reference
+    ccfg = ClusterConfig(**TENANT_CHAOS)
+    fleet = build_fleet(ccfg, cfg.vocab)
+    assert [sp.tenant for sp in fleet] == ["victim"] * 2 + ["flood"] * 2
+    reg1 = build_tenant_registry(ccfg)
+    eng = VerificationEngine(cfg, tparams, max_slots=len(fleet),
+                             max_len=ccfg.max_len)
+    server = WISPServer(eng, COEFFS, policy="wfq", network=NetworkModel(),
+                        prefill="chunked",
+                        prefill_chunk_tokens=ccfg.prefill_chunk_tokens,
+                        tenants=reg1)
+    edges = _edges(cfg, dparams, ccfg, fleet)
+    ClusterRuntime(server, edges, fleet, ccfg, vocab=cfg.vocab).run()
+    golden = [list(d.response_tokens) for d in edges]
+
+    # 3-verifier fleet, verifier 0 killed mid-run
+    ccfg = ClusterConfig(**TENANT_CHAOS, verifiers=3,
+                         fail_at=((0, 0.15, None),))
+    fleet = build_fleet(ccfg, cfg.vocab)
+    registry = build_tenant_registry(ccfg)
+    router = build_verifier_fleet(
+        cfg, tparams, ccfg.verifiers, COEFFS, max_slots=len(fleet),
+        max_len=ccfg.max_len, policy="wfq", network=NetworkModel(),
+        prefill="chunked", prefill_chunk_tokens=ccfg.prefill_chunk_tokens,
+        heartbeat_timeout=ccfg.heartbeat_timeout,
+        tenants=registry,
+    )
+    edges = _edges(cfg, dparams, ccfg, fleet)
+    result = FleetRuntime(router, edges, fleet, ccfg, vocab=cfg.vocab).run()
+    streams = [list(d.response_tokens) for d in edges]
+
+    assert router.stats["verifier_downs"] == 1
+    assert streams == golden                       # tenancy never perturbs
+    snap = registry.snapshot()
+    for name in ("victim", "flood"):
+        assert snap[name]["live_sessions"] == 0    # net-zero across kill
+        assert snap[name]["tokens_in_flight"] == 0
+        assert snap[name]["committed_tokens"] > 0
+        assert snap[name]["rejected"] == 0
+    per_tenant = result.metrics.per_tenant(result.horizon)
+    assert per_tenant["victim"]["sessions"] == 2
+    assert per_tenant["flood"]["sessions"] == 2
+    assert all(r.tenant in ("victim", "flood")
+               for r in result.metrics.sessions)
