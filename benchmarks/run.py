@@ -41,6 +41,7 @@ TABLES = {
     "tiered_kv": "§12 (tiered KV admission capacity at 25% device pool)",
     "fleet": "§10 (fleet goodput under verifier churn)",
     "tenancy": "§13 (multi-tenant isolation under adversarial flood)",
+    "chaos": "§14 (goodput under edge-link loss: hardened vs no-retry)",
 }
 
 

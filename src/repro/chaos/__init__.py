@@ -1,0 +1,29 @@
+"""Deterministic chaos injection for the edge-link fault domain.
+
+`repro.chaos` is the single source of fault truth for the serving stack
+(DESIGN.md §14): a seeded `FaultSchedule` describes *what goes wrong* —
+per-direction message drop / duplication / reordering / latency spikes,
+link-down windows, verifier kills and straggle windows — and a
+`FaultyTransport` samples each message's fate from a key-derived rng so
+the same schedule replayed against the same run produces byte-identical
+failures.  The legacy ad-hoc knobs (`ClusterConfig.fail_at` /
+``straggle``, ``--fail-at`` / ``--straggle``) compile onto it via
+`resolve_fault_schedule`.
+"""
+from repro.chaos.schedule import (
+    FAULT_PRESETS,
+    FaultSchedule,
+    LinkFaults,
+    parse_fault_schedule,
+    resolve_fault_schedule,
+)
+from repro.chaos.transport import FaultyTransport
+
+__all__ = [
+    "FAULT_PRESETS",
+    "FaultSchedule",
+    "FaultyTransport",
+    "LinkFaults",
+    "parse_fault_schedule",
+    "resolve_fault_schedule",
+]

@@ -1,0 +1,200 @@
+"""Seeded fault schedules: the declarative half of the chaos subsystem.
+
+A `FaultSchedule` is a frozen description of everything that goes wrong
+during a run — per-direction edge-link faults (`LinkFaults`) plus the
+verifier-side kill/straggle windows PR 6 introduced — and it is pure
+*data*: sampling happens in `repro.chaos.transport.FaultyTransport`,
+keyed by ``(schedule.seed, direction, session, round, attempt)`` so a
+message's fate is a function of its identity, not of event-loop order.
+
+Schedules come from three places, merged by `resolve_fault_schedule`:
+
+  * the DSL (``--fault-schedule``), a comma-separated spec::
+
+        drop=0.1,dup=0.05,reorder=0.05,linkdown@0.25+0.5,seed=7
+        up.drop=0.2,down.spike=0.1,spike_s=0.08
+        kill=0@0.12+0.38,straggle=1@0.05+0.95*400
+
+    Unprefixed link knobs apply to BOTH directions; ``up.`` / ``down.``
+    scope one.  ``linkdown@T0+DUR`` opens a hard outage window (every
+    message sent inside it is lost).  ``kill=IDX@T0[+DUR]`` and
+    ``straggle=IDX@T0+DUR*FACTOR`` are the verifier fault domain.
+  * named presets (`FAULT_PRESETS`) — canned schedules the CI smoke and
+    the acceptance gate use by name;
+  * the legacy knobs ``ClusterConfig.fail_at`` / ``straggle`` (and their
+    CLI flags), which are deprecation shims compiling onto the schedule.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkFaults:
+    """Fault law for ONE direction of the edge<->server link.
+
+    Probabilities are per message; delays are seconds.  ``reorder``
+    holds a message back by ``reorder_delay`` so traffic sent after it
+    can overtake it (deliveries are *not* FIFO under reordering);
+    ``spike`` models a transient latency spike of ``spike_s``.  A
+    message sent inside a ``windows`` interval is lost outright —
+    link-down is a property of the send instant, matching a radio
+    dropout (the bits already in flight are the ones that die)."""
+
+    drop: float = 0.0
+    dup: float = 0.0
+    reorder: float = 0.0
+    spike: float = 0.0
+    reorder_delay: float = 0.02
+    spike_s: float = 0.05
+    dup_gap: float = 0.002         # duplicate trails the original by this
+    windows: tuple = ()            # ((t0, t1), ...) link-down intervals
+
+    def is_down(self, t: float) -> bool:
+        return any(t0 <= t < t1 for (t0, t1) in self.windows)
+
+    def any(self) -> bool:
+        return bool(self.drop or self.dup or self.reorder or self.spike
+                    or self.windows)
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSchedule:
+    """One run's complete, seeded fault plan (see module docstring).
+
+    ``seed=None`` means "inherit the run seed" — `resolve_fault_schedule`
+    fills it from `ClusterConfig.seed` so chaos reproducibility rides the
+    same knob as everything else unless pinned explicitly."""
+
+    seed: int | None = None
+    up: LinkFaults = LinkFaults()
+    down: LinkFaults = LinkFaults()
+    #: (verifier_index, t_fail, t_recover_or_None) — FailurePlan rows
+    verifier_fail: tuple = ()
+    #: (verifier_index, t0, t1, factor) — epoch-slowdown windows
+    verifier_straggle: tuple = ()
+
+    def has_link_faults(self) -> bool:
+        return self.up.any() or self.down.any()
+
+    def has_verifier_faults(self) -> bool:
+        return bool(self.verifier_fail or self.verifier_straggle)
+
+
+#: named canned schedules (CI + acceptance gates).  "flap" is the
+#: acceptance-criteria schedule: 10% drop + duplication + reordering on
+#: both directions plus one 500 ms hard outage.
+FAULT_PRESETS: dict[str, str] = {
+    "lossy": "drop=0.1,dup=0.05,reorder=0.05,seed=7",
+    "flap": "drop=0.1,dup=0.05,reorder=0.05,linkdown@0.25+0.5,seed=7",
+    "storm": ("drop=0.25,dup=0.1,reorder=0.1,spike=0.15,spike_s=0.08,"
+              "linkdown@0.2+0.5,seed=7"),
+}
+
+_LINK_FIELDS = {
+    "drop", "dup", "reorder", "spike",
+    "reorder_delay", "spike_s", "dup_gap",
+}
+
+
+def _set_link(fields: dict, scope: str, key: str, value: float) -> None:
+    for d in (("up", "down") if scope == "both" else (scope,)):
+        fields[d][key] = value
+
+
+def _add_window(fields: dict, scope: str, t0: float, t1: float) -> None:
+    for d in (("up", "down") if scope == "both" else (scope,)):
+        fields[d]["windows"] = tuple(fields[d].get("windows", ())) \
+            + ((t0, t1),)
+
+
+def _parse_at(spec: str) -> tuple[float, float | None]:
+    """``T0`` or ``T0+DUR`` -> (t0, t1_or_None)."""
+    if "+" in spec:
+        t0, dur = spec.split("+", 1)
+        return float(t0), float(t0) + float(dur)
+    return float(spec), None
+
+
+def parse_fault_schedule(spec) -> FaultSchedule:
+    """Resolve ``spec`` — None, a ready `FaultSchedule`, a preset name,
+    or a DSL string — into a `FaultSchedule`."""
+    if spec is None:
+        return FaultSchedule()
+    if isinstance(spec, FaultSchedule):
+        return spec
+    if not isinstance(spec, str):
+        raise TypeError(
+            f"fault schedule must be None, a FaultSchedule, a preset name "
+            f"or a DSL string; got {type(spec).__name__}"
+        )
+    spec = FAULT_PRESETS.get(spec.strip(), spec)
+    seed: int | None = None
+    fields: dict[str, dict] = {"up": {}, "down": {}}
+    kills: list[tuple] = []
+    straggles: list[tuple] = []
+    for raw in spec.split(","):
+        tok = raw.strip()
+        if not tok:
+            continue
+        scope = "both"
+        if tok.startswith(("up.", "down.")):
+            scope, tok = tok.split(".", 1)
+        try:
+            if tok.startswith("linkdown@"):
+                t0, t1 = _parse_at(tok[len("linkdown@"):])
+                if t1 is None:
+                    raise ValueError("linkdown needs a duration: T0+DUR")
+                _add_window(fields, scope, t0, t1)
+            elif tok.startswith("kill="):
+                idx, at = tok[len("kill="):].split("@", 1)
+                t0, t1 = _parse_at(at)
+                kills.append((int(idx), t0, t1))
+            elif tok.startswith("straggle="):
+                idx, rest = tok[len("straggle="):].split("@", 1)
+                at, factor = rest.split("*", 1)
+                t0, t1 = _parse_at(at)
+                if t1 is None:
+                    raise ValueError("straggle needs a duration: T0+DUR")
+                straggles.append((int(idx), t0, t1, float(factor)))
+            elif tok.startswith("seed="):
+                seed = int(tok[len("seed="):])
+            elif "=" in tok:
+                key, val = tok.split("=", 1)
+                if key not in _LINK_FIELDS:
+                    raise ValueError(f"unknown fault knob {key!r}")
+                _set_link(fields, scope, key, float(val))
+            else:
+                raise ValueError(f"unparseable token {tok!r}")
+        except ValueError as e:
+            raise ValueError(
+                f"bad fault-schedule token {raw.strip()!r}: {e}"
+            ) from None
+    return FaultSchedule(
+        seed=seed,
+        up=LinkFaults(**fields["up"]),
+        down=LinkFaults(**fields["down"]),
+        verifier_fail=tuple(kills),
+        verifier_straggle=tuple(straggles),
+    )
+
+
+def resolve_fault_schedule(cfg) -> FaultSchedule:
+    """The one place a runtime turns config into a fault plan: parse
+    ``cfg.fault_schedule``, fold in the legacy ``cfg.fail_at`` /
+    ``cfg.straggle`` verifier knobs (deprecation shims — they compile
+    onto the schedule, so old configs keep working unchanged), and
+    default the schedule seed from the run seed."""
+    sched = parse_fault_schedule(getattr(cfg, "fault_schedule", None))
+    vf = tuple(sched.verifier_fail) + tuple(
+        (int(i), float(t0), None if t1 is None else float(t1))
+        for (i, t0, t1) in getattr(cfg, "fail_at", ())
+    )
+    vs = tuple(sched.verifier_straggle) + tuple(
+        (int(i), float(t0), float(t1), float(f))
+        for (i, t0, t1, f) in getattr(cfg, "straggle", ())
+    )
+    seed = sched.seed if sched.seed is not None else int(getattr(cfg, "seed", 0))
+    return dataclasses.replace(
+        sched, seed=seed, verifier_fail=vf, verifier_straggle=vs,
+    )

@@ -1,0 +1,97 @@
+"""`FaultyTransport`: a `NetworkModel` wrapped in a `FaultSchedule`.
+
+Where `NetworkModel` answers "how long does this message take", the
+faulty transport answers "when does each *copy* of this message arrive,
+if at all": a message keyed ``(session_id, round, attempt)`` is dropped,
+duplicated, held back (reordered past later traffic), spiked, or lost to
+a link-down window, per the schedule's per-direction `LinkFaults`.
+
+Determinism is the whole point (DESIGN.md §14): each message's fate is
+drawn from ``np.random.default_rng((seed, dircode, *key))`` — a fresh
+generator seeded by the message's identity — so fates are independent of
+event-loop order, retries of the same round draw *fresh* fates (the
+attempt index is in the key, which is what makes retry-until-delivered
+terminate: P[all attempts drop] -> 0), and the same schedule replayed
+over the same run fails identically, byte for byte.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.chaos.schedule import FaultSchedule
+
+#: direction -> rng stream code (distinct odd constants so up/down fates
+#: of the same (sid, round, attempt) never collide)
+_DIRCODE = {"up": 11, "down": 13}
+
+
+class FaultyTransport:
+    """Per-link fault sampler over a wrapped `NetworkModel`.
+
+    ``net`` prices latency (including its own seeded jitter);
+    ``schedule`` supplies the fault law.  ``stats`` counts injected
+    fates for observability/tests."""
+
+    def __init__(self, net, schedule: FaultSchedule):
+        self.net = net
+        self.schedule = schedule
+        if schedule.seed is None:
+            raise ValueError("FaultyTransport needs a resolved schedule "
+                             "(seed set; see resolve_fault_schedule)")
+        self.stats = {
+            "up_sent": 0, "up_dropped": 0, "up_dup": 0, "up_delayed": 0,
+            "up_window_drops": 0,
+            "down_sent": 0, "down_dropped": 0, "down_dup": 0,
+            "down_delayed": 0, "down_window_drops": 0,
+        }
+
+    # -- core fate sampler --------------------------------------------------
+    def deliveries(self, direction: str, key: tuple, t_send: float,
+                   latency: float) -> list[float]:
+        """Arrival times for every surviving copy of one message.
+
+        ``direction`` is ``"up"`` | ``"down"``; ``key`` is the message
+        identity ``(session_id, round, attempt)`` (non-negative ints);
+        ``latency`` is the fault-free transit time the caller priced on
+        its `NetworkModel`.  Returns ``[]`` (dropped), one time, or two
+        times (duplicated); times are ``>= t_send + latency``."""
+        f = self.schedule.up if direction == "up" else self.schedule.down
+        st = self.stats
+        st[f"{direction}_sent"] += 1
+        if f.is_down(t_send):
+            st[f"{direction}_window_drops"] += 1
+            st[f"{direction}_dropped"] += 1
+            return []
+        g = np.random.default_rng(
+            (int(self.schedule.seed), _DIRCODE[direction],
+             *(int(k) for k in key))
+        )
+        if f.drop and g.random() < f.drop:
+            st[f"{direction}_dropped"] += 1
+            return []
+        delay = 0.0
+        if f.spike and g.random() < f.spike:
+            delay += f.spike_s
+        if f.reorder and g.random() < f.reorder:
+            delay += f.reorder_delay
+        if delay:
+            st[f"{direction}_delayed"] += 1
+        out = [t_send + latency + delay]
+        if f.dup and g.random() < f.dup:
+            st[f"{direction}_dup"] += 1
+            out.append(out[0] + f.dup_gap)
+        return out
+
+    # -- NetworkModel-shaped conveniences -----------------------------------
+    def uplink_deliveries(self, t_send: float, n_draft_tokens: int,
+                          q="modelled", *, key: tuple,
+                          net_key=None) -> list[float]:
+        """Fates + latency for one drafted block on the wrapped net."""
+        lat = self.net.uplink_time(n_draft_tokens, q, key=net_key)
+        return self.deliveries("up", key, t_send, lat)
+
+    def downlink_deliveries(self, t_send: float, *, key: tuple,
+                            net_key=None) -> list[float]:
+        """Fates + latency for one verdict on the wrapped net."""
+        lat = self.net.downlink_time(key=net_key)
+        return self.deliveries("down", key, t_send, lat)

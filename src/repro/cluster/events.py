@@ -38,6 +38,7 @@ class EventKind(enum.IntEnum):
     # them.  New kinds take values 7+ and route through the runtime's
     # ``_handle_event`` fallback.
     HEARTBEAT = 7       # fleet: one verifier's liveness beat + failover sweep
+    RETRY_TIMER = 8     # chaos: a device's per-round re-submission timeout
 
 
 @dataclasses.dataclass

@@ -47,6 +47,34 @@ class SpecStats:
 
 
 @dataclasses.dataclass
+class ChaosStats:
+    """Edge-link fault-domain counters (DESIGN.md §14).
+
+    Transport counters (``uplink_*`` / ``downlink_*``) are what the
+    `FaultyTransport` actually did to messages; recovery counters
+    (``retries`` .. ``degraded_rounds``) are how the edge reacted; the
+    dedup counters prove idempotency did its job (every duplicate or
+    stale message was absorbed without touching the committed stream)."""
+
+    retries: int = 0                  # re-submissions fired by RETRY_TIMER
+    timeouts: int = 0                 # round timeouts observed
+    link_down_events: int = 0         # DOWN latches (consecutive timeouts)
+    link_up_events: int = 0           # hysteretic recoveries
+    degraded_rounds: int = 0          # rounds whose K was shrunk by health
+    uplink_drops: int = 0             # draft requests lost in flight
+    uplink_dups: int = 0              # draft requests duplicated in flight
+    downlink_drops: int = 0           # verdicts lost in flight
+    downlink_dups: int = 0            # verdicts duplicated in flight
+    dup_verdicts_dropped: int = 0     # device-side stale/dup verdict drops
+    stale_requests_dropped: int = 0   # runtime-side stale request drops
+    dup_submits_dropped: int = 0      # server-side in-flight dup drops
+    verdicts_replayed: int = 0        # server re-sent a cached verdict
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
 class SessionRecord:
     """One completed (or horizon-truncated) session: the SLO unit."""
 
@@ -83,6 +111,8 @@ class ClusterMetrics:
         self.sessions: list[SessionRecord] = []
         self.per_session: dict[int, WDTStats] = {}
         self.spec = SpecStats()
+        #: edge-link fault-domain counters (all zero on a reliable link)
+        self.chaos = ChaosStats()
         self.queue_samples: list[tuple[float, int]] = []
         #: admission-control sheds per tenant (REJECTED events)
         self.rejections: dict[str, int] = {}

@@ -57,11 +57,13 @@ import dataclasses
 
 import numpy as np
 
+from repro.chaos import FaultyTransport, resolve_fault_schedule
 from repro.cluster.events import EventKind, EventQueue
 from repro.cluster.metrics import ClusterMetrics, SessionRecord
 from repro.cluster.workload import ClusterConfig, DeviceSpec, DeviceWorkload
 from repro.core.estimator import BatchShape
 from repro.core.wdt import IterationLog
+from repro.serving.events import LinkDown, LinkUp, RetryEvent
 
 
 @dataclasses.dataclass
@@ -76,6 +78,18 @@ class _DeviceProc:
     #: this device's edge<->server link (heterogeneous-link fleets price
     #: each device's uplink/downlink on its own NetworkModel)
     net: object = None
+    #: `FaultyTransport` over ``net`` when the fault schedule has link
+    #: faults; None = perfectly reliable link (legacy fast path)
+    chaos: object = None
+    #: uplink attempts for the in-flight round (0 = first send; part of
+    #: the fate/jitter key so every retry draws fresh network luck)
+    attempt: int = 0
+    #: verdict sends for the in-flight round (replays redraw fates too)
+    down_attempts: int = 0
+    #: consecutive round timeouts — reaches cfg.link_down_after => DOWN
+    timeouts_in_row: int = 0
+    link_down: bool = False           # runtime's mirror of the spec latch
+    down_since: float = 0.0
     state: str = "idle"               # idle|admission|prefill|draft|wait|think|done
     gen: int = 0                      # event generation; stale steps dropped
     drafter: object = None            # live BlockDrafter while drafting
@@ -132,6 +146,18 @@ class ClusterRuntime:
         self.server = server
         self.cfg = cfg
         self.net = server.network
+        if cfg.jitter_sigma:
+            # jittered copy, not a mutation: the server's own NetworkModel
+            # (used by legacy call sites without message keys) stays nominal
+            self.net = dataclasses.replace(
+                self.net, jitter_sigma=float(cfg.jitter_sigma),
+                jitter_seed=int(cfg.seed),
+            )
+        #: resolved fault plan (always a FaultSchedule; empty = reliable)
+        self.fault_schedule = resolve_fault_schedule(cfg)
+        #: runtime-emitted chaos events (RETRY / LINK_DOWN / LINK_UP), in
+        #: virtual-clock order — the fleet_log of the edge-link domain
+        self.chaos_log: list = []
         self.events = EventQueue()
         self.metrics = ClusterMetrics(server.slo_classes)
         self.fleet = fleet
@@ -144,6 +170,9 @@ class ClusterRuntime:
             )
             for i, (ed, sp) in enumerate(zip(edge_devices, fleet))
         ]
+        if self.fault_schedule.has_link_faults():
+            for d in self.devs:
+                d.chaos = FaultyTransport(d.net, self.fault_schedule)
         self.verifier_busy = False
         self.now = 0.0
         self._disp_t: float | None = None
@@ -167,6 +196,101 @@ class ClusterRuntime:
         return dataclasses.replace(
             self.net, base_rtt=float(rtts[idx % len(rtts)])
         )
+
+    # -- edge-link fault domain (DESIGN.md §14) ------------------------------
+    def _net_key(self, dircode: int, sid: int, rnd: int, n: int):
+        """Per-message jitter key (None when jitter is off, so the
+        NetworkModel's zero-jitter fast path stays byte-identical)."""
+        if not self.cfg.jitter_sigma:
+            return None
+        return (dircode, sid, rnd + 1, n)
+
+    def _retry_timeout(self, sid: int, rnd: int, att: int) -> float:
+        """Timeout armed for attempt ``att`` of one round: exponential
+        backoff plus a seeded uniform jitter fraction (decorrelates retry
+        storms across devices; keyed by message identity like fates)."""
+        cfg = self.cfg
+        u = np.random.default_rng(
+            (int(cfg.seed), 77, int(sid), int(rnd) + 1, int(att))
+        ).random()
+        return float(cfg.link_timeout) * (cfg.link_backoff ** att) \
+            * (1.0 + cfg.link_retry_jitter * u)
+
+    def _emit_chaos(self, ev) -> None:
+        self.chaos_log.append(ev)
+
+    def _send_request(self, dev: _DeviceProc, t: float) -> float:
+        """Put the in-flight block on the uplink (first send and every
+        retry): price the uplink, sample fates when the link is faulty,
+        and arm the per-round retry timer.  Returns the priced uplink
+        time (the nominal transit the metrics charge)."""
+        res = dev.inflight
+        sid, rnd, att = dev.session_id, dev.rounds_done, dev.attempt
+        t_up = dev.net.uplink_time(
+            res.n_sent, res.q_payload(),
+            key=self._net_key(0, sid, rnd, att),
+        )
+        payload = (dev.idx, sid, rnd)
+        if dev.chaos is not None:
+            times = dev.chaos.deliveries("up", (sid, rnd, att), t, t_up)
+            ch = self.metrics.chaos
+            if not times:
+                ch.uplink_drops += 1
+            elif len(times) > 1:
+                ch.uplink_dups += len(times) - 1
+            for ts in times:
+                self.events.push(ts, EventKind.REQUEST, payload)
+        else:
+            self.events.push(t + t_up, EventKind.REQUEST, payload)
+        if self.cfg.link_timeout is not None:
+            self.events.push(t + self._retry_timeout(sid, rnd, att),
+                             EventKind.RETRY_TIMER, (dev.idx, sid, rnd, att))
+        return t_up
+
+    def _on_retry_timer(self, payload, t: float) -> None:
+        """A per-round timeout fired.  Stale timers (the round resolved,
+        the session moved on, or a later attempt superseded this one) are
+        dropped; a live timer means the request or its verdict is lost —
+        re-submit idempotently under the same (session, round) key with a
+        fresh attempt index (fresh fate draws) and a longer next timeout."""
+        idx, sid, rnd, att = payload
+        dev = self.devs[idx]
+        if (dev.session_id != sid or dev.inflight is None
+                or dev.rounds_done != rnd or dev.attempt != att):
+            return
+        ch = self.metrics.chaos
+        ch.timeouts += 1
+        dev.timeouts_in_row += 1
+        down = dev.timeouts_in_row >= self.cfg.link_down_after
+        dev.device.observe_link(False, down=down)
+        if down and not dev.link_down:
+            dev.link_down = True
+            dev.down_since = t
+            ch.link_down_events += 1
+            self._emit_chaos(LinkDown(sid, t, device=dev.idx))
+        ch.retries += 1
+        dev.attempt += 1
+        self._emit_chaos(RetryEvent(
+            sid, t, round_index=rnd, attempt=dev.attempt,
+            backoff=self._retry_timeout(sid, rnd, dev.attempt),
+        ))
+        self._send_request(dev, t)
+
+    def _note_link_ok(self, dev: _DeviceProc, t: float) -> None:
+        """A verdict applied: feed the health EWMA one success and clear
+        the DOWN latch once the controller's hysteresis lets go."""
+        dev.timeouts_in_row = 0
+        dev.device.observe_link(True)
+        if dev.link_down and not dev.device.spec.link_down:
+            dev.link_down = False
+            self.metrics.chaos.link_up_events += 1
+            self._emit_chaos(LinkUp(dev.session_id, t, device=dev.idx,
+                                    outage=t - dev.down_since))
+
+    def _serving_nodes(self) -> list:
+        """Server objects whose chaos_stats fold into the run's metrics
+        (the fleet runtime returns every verifier replica)."""
+        return [self.server]
 
     # -- server timing ------------------------------------------------------
     def _verify_time(self, served) -> float:
@@ -267,6 +391,8 @@ class ClusterRuntime:
 
     def _begin_block(self, dev: _DeviceProc, t: float):
         dev.drafter = dev.device.begin_round()
+        if getattr(dev.device.spec, "degraded_last", False):
+            self.metrics.chaos.degraded_rounds += 1
         dev.state = "draft"
         dev.round_start = t
         dev.gen += 1
@@ -313,11 +439,13 @@ class ClusterRuntime:
                 and not self.verifier_busy):
             self._schedule_dispatch(t)
 
-    def _drain_server_events(self, t: float, t_deliver: float | None = None):
+    def _drain_server_events(self, t: float, t_sent: float | None = None):
         """Route the server's typed event stream (docs/API.md) onto the
-        cluster's virtual clock.  ``VERDICT`` events (dispatch epochs
-        only) are delivered at ``t_deliver`` = epoch end + downlink.
-        ``FIRST_TOKEN`` events depend on how the mode charges prefill:
+        cluster's virtual clock.  ``VERDICT`` events leave the server at
+        ``t_sent`` (epoch end for dispatch epochs, now for replays) and
+        ride the downlink through `_push_verdict` — which is where
+        per-message jitter and chaos fates apply.  ``FIRST_TOKEN`` events
+        depend on how the mode charges prefill:
 
           * ``zero``       — prefill is free and instant; the session
             starts right now;
@@ -325,15 +453,17 @@ class ClusterRuntime:
             estimator-priced prefill span still has to run (FIFO on the
             verifier) before it rides the downlink;
           * ``chunked``    — the final chunk's epoch just completed; the
-            token is delivered with that epoch's outputs at ``t_deliver``.
+            token rides the downlink from ``t_sent`` (session control
+            plane: framed/reliable, no chaos fates — DESIGN.md §14).
 
         ``REJECTED`` (tenant admission shed) aborts the open and puts the
         device into a retry backoff.  ``ADMITTED`` / ``THROTTLED`` /
         ``PREEMPTED`` / ``TTFT_RECORD`` / ``CLOSED`` need no runtime
         action (device timing is measured runtime-side)."""
+        t_out = t if t_sent is None else t_sent
         for ev in self.server.pop_events():
             if ev.kind == "VERDICT":
-                self.events.push(t_deliver, EventKind.VERDICT, ev.verdict)
+                self._push_verdict(ev.verdict, t_out)
             elif ev.kind == "REJECTED":
                 self._on_rejected(ev.session_id, t)
             elif ev.kind == "FIRST_TOKEN":
@@ -348,10 +478,38 @@ class ClusterRuntime:
                         sid, ev.token, len(self._pending_open[sid]), t
                     )
                 elif self.cfg.prefill_mode == "chunked":
-                    self.events.push(t_deliver, EventKind.FIRST_TOKEN,
+                    self.events.push(t_out + self.net.downlink_time(),
+                                     EventKind.FIRST_TOKEN,
                                      (sid, ev.token))
                 else:
                     self._on_first_token((sid, ev.token), t)
+
+    def _push_verdict(self, v, t_sent: float) -> None:
+        """One verdict leaves the server at ``t_sent`` and rides the
+        downlink: per-message jitter prices its latency and — on a faulty
+        link — the schedule decides whether this copy arrives at all,
+        twice, or late.  The downlink send index ``n`` joins the fate key
+        so replays of the same round draw fresh fates."""
+        dev = self._by_session.get(v.session_id)
+        rnd = int(getattr(v, "round_index", -1))
+        n = 0
+        if dev is not None:
+            n = dev.down_attempts
+            dev.down_attempts += 1
+        lat = self.net.downlink_time(
+            key=self._net_key(1, v.session_id, rnd, n))
+        if dev is not None and dev.chaos is not None:
+            times = dev.chaos.deliveries(
+                "down", (v.session_id, rnd + 1, n), t_sent, lat)
+            ch = self.metrics.chaos
+            if not times:
+                ch.downlink_drops += 1
+            elif len(times) > 1:
+                ch.downlink_dups += len(times) - 1
+            for ts in times:
+                self.events.push(ts, EventKind.VERDICT, v)
+        else:
+            self.events.push(t_sent + lat, EventKind.VERDICT, v)
 
     def _on_first_token(self, payload, t: float):
         """A completed prefill's first token reaches its device: the
@@ -386,13 +544,14 @@ class ClusterRuntime:
         dev.drafter = None
         dev.inflight = res
         dev.request_arrived = False
+        dev.attempt = 0
+        dev.down_attempts = 0
         dev.last_t_draft = t - dev.round_start
         # price the q representation that actually rides this request
         # (CompactQ table / modelled dense top-k / ids only, DESIGN.md §9)
         # on the DEVICE's link (heterogeneous links under cfg.link_rtts)
-        t_up = dev.net.uplink_time(res.n_sent, res.q_payload())
+        t_up = self._send_request(dev, t)
         dev.last_t_net = t_up + dev.net.downlink_time()
-        self.events.push(t + t_up, EventKind.REQUEST, dev.idx)
         dev.state = "wait"
         dev.gen += 1
         # a device knows its own quota: never speculate past a known-final
@@ -440,15 +599,25 @@ class ClusterRuntime:
                                  (dev.idx, dev.gen))
             # else: speculative block complete; idle until the verdict
 
-    def _on_request(self, dev: _DeviceProc, t: float):
+    def _on_request(self, dev: _DeviceProc, t: float, rnd: int | None = None):
         res = dev.inflight
+        if res is None or (rnd is not None and dev.rounds_done != rnd):
+            # a late duplicate of an already-resolved round (the verdict
+            # raced a duplicated/retried request copy): nothing to verify
+            self.metrics.chaos.stale_requests_dropped += 1
+            return
         dev.request_arrived = True
-        self.server.submit(
+        rid = self.server.submit(
             dev.session_id, res.tokens, res.q_logits,
             q_compact=res.q_compact,
             now=t, t_draft=dev.last_t_draft, t_network=dev.last_t_net,
+            round_index=dev.rounds_done,
         )
-        if not self.verifier_busy:
+        # a replayed verdict (the server already resolved this round; our
+        # verdict copy died on the downlink) is emitted during submit —
+        # put it back on the downlink right away
+        self._drain_server_events(t, t_sent=t)
+        if rid is not None and not self.verifier_busy:
             self._schedule_dispatch(t)
 
     def _on_dispatch(self, t: float, payload=None):
@@ -467,9 +636,7 @@ class ClusterRuntime:
             dt = self.server.last_verify_time
             self.verifier_busy = True
             self.events.push(t + dt, EventKind.GPU_DONE)
-            self._drain_server_events(
-                t, t_deliver=t + dt + self.net.downlink_time()
-            )
+            self._drain_server_events(t, t_sent=t + dt)
         else:
             # the epoch may still have admitted capacity-queued sessions
             # (zero/monolithic: their FIRST_TOKEN fired) even though
@@ -493,8 +660,16 @@ class ClusterRuntime:
 
     def _on_verdict(self, v, t: float):
         dev = self._by_session.get(v.session_id)
-        if dev is None or dev.inflight is None:
+        if dev is None:
             return                      # session closed under us
+        rnd = int(getattr(v, "round_index", -1))
+        if dev.inflight is None or (rnd >= 0 and rnd != dev.rounds_done):
+            # duplicated / reordered / already-superseded verdict copy:
+            # the (session, round) idempotency key says it must never
+            # touch the stream twice (DESIGN.md §14)
+            self.metrics.chaos.dup_verdicts_dropped += 1
+            return
+        self._note_link_ok(dev, t)
         res, dev.inflight = dev.inflight, None
         dev.request_arrived = False
         dev.gen += 1                    # halt speculation events
@@ -502,6 +677,7 @@ class ClusterRuntime:
         committed = dev.device.resolve_verdict(
             v.accept_len, v.token, res,
             guess=dev.spec_guess, speculated=dev.spec_active,
+            round_index=dev.rounds_done,
         )
         # close the adaptive-speculation loop (DESIGN.md §11): measured
         # acceptance + this round's RTT + the verifier queue depth the
@@ -580,6 +756,9 @@ class ClusterRuntime:
         """Fallback for event kinds the base loop does not know (values
         ≥ 7, e.g. HEARTBEAT — the 0–6 kinds double as same-instant
         priorities and are handled inline)."""
+        if ev.kind == EventKind.RETRY_TIMER:
+            self._on_retry_timer(ev.payload, ev.time)
+            return
         raise RuntimeError(f"unhandled event kind {ev.kind!r}")
 
     # -- main loop -----------------------------------------------------------
@@ -609,7 +788,12 @@ class ClusterRuntime:
                 idx, gen = ev.payload
                 self._on_dev_step(self.devs[idx], gen, ev.time)
             elif k == EventKind.REQUEST:
-                self._on_request(self.devs[ev.payload], ev.time)
+                idx, sid, rnd = ev.payload
+                dev = self.devs[idx]
+                if dev.session_id == sid:
+                    self._on_request(dev, ev.time, rnd)
+                else:                   # the session ended while in flight
+                    self.metrics.chaos.stale_requests_dropped += 1
             elif k == EventKind.DISPATCH:
                 self._on_dispatch(ev.time, ev.payload)
             elif k == EventKind.GPU_DONE:
@@ -646,6 +830,12 @@ class ClusterRuntime:
                     ttft=dev.ttft,
                     tenant=dev.profile.tenant,
                 ))
+        # fold server-side idempotency counters into the run's chaos stats
+        for node in self._serving_nodes():
+            st = getattr(node, "chaos_stats", None)
+            if st:
+                self.metrics.chaos.dup_submits_dropped += st["dup_submits"]
+                self.metrics.chaos.verdicts_replayed += st["verdict_replays"]
         return ClusterResult(
             cfg=cfg,
             metrics=self.metrics,

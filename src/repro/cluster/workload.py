@@ -90,6 +90,34 @@ class ClusterConfig:
     #: deterministic straggler injection: (verifier_index, t0, t1, factor)
     #: tuples — the verifier's epochs run ``factor``x slower in [t0, t1)
     straggle: tuple = ()
+    # -- edge-link fault domain (DESIGN.md §14) ----------------------------
+    #: fault schedule for the edge<->server link + verifier fleet: a
+    #: `repro.chaos.FaultSchedule`, a preset name ("lossy"/"flap"/"storm")
+    #: or a DSL string ("drop=0.1,dup=0.05,linkdown@0.25+0.5,seed=7");
+    #: None = perfectly reliable link (legacy).  Legacy ``fail_at`` /
+    #: ``straggle`` rows are merged in by `resolve_fault_schedule`.
+    fault_schedule: object = None
+    #: per-round edge timeout (seconds) before an idempotent re-submission;
+    #: None disables retries (a dropped message stalls its session — the
+    #: ablation the chaos benchmark measures against)
+    link_timeout: float | None = None
+    #: exponential backoff factor between successive retries of one round
+    link_backoff: float = 2.0
+    #: uniform jitter fraction on each armed timeout (decorrelates retry
+    #: storms; drawn from the (seed, session, round, attempt) key)
+    link_retry_jitter: float = 0.1
+    #: consecutive round-timeouts after which the link is declared DOWN
+    #: (latches the speculation controller into K=1 until hysteretic
+    #: recovery — only acted on when ``link_degrade`` is set)
+    link_down_after: int = 3
+    #: let link health degrade speculation depth (K shrinks under flap,
+    #: K=1 while down).  Off by default: degradation lawfully changes the
+    #: committed streams (like adaptive-K), so byte-identity holds only
+    #: when this is off.
+    link_degrade: bool = False
+    #: per-message log-normal latency jitter sigma on the modelled network
+    #: (seeded from cfg.seed; 0 = byte-identical to the fixed-RTT model)
+    jitter_sigma: float = 0.0
     #: seconds between per-verifier liveness beats (also the failover
     #: sweep cadence floor; sweeps additionally run every dispatch epoch)
     heartbeat_interval: float = 0.05

@@ -95,23 +95,91 @@ def make_spec_controller(policy="static", *, k_max: int = 8,
 
 
 class SpeculationController:
-    """Chooses each block's draft-length cap for ONE session stream."""
+    """Chooses each block's draft-length cap for ONE session stream.
+
+    Besides the per-policy ``next_k`` law, every controller carries the
+    **link-health half of graceful degradation** (DESIGN.md §14): the
+    driver reports each round's link outcome via ``observe_link`` (ok =
+    a verdict landed; not-ok = a retry timeout; ``down`` = the runtime
+    declared the link down after ``link_down_after`` consecutive
+    timeouts), the controller EWMA-smooths it into ``link_health`` and,
+    when ``degrade`` is enabled, ``choose_k`` shrinks the policy's K
+    under flap and falls back to K=1 (one draft token per round — the
+    server-side-decode floor) while the link is down.  Recovery is
+    hysteretic: the down latch clears only after ``recover_streak``
+    consecutive ok rounds AND health back above ``recover_above``, so K
+    never thrashes across a flapping boundary.  With ``degrade`` off
+    (the default) ``choose_k`` is exactly ``next_k`` — static-policy
+    streams stay byte-identical to the fault-free run."""
 
     name = "base"
 
     def __init__(self, *, k_max: int = 8, draft_speed: float = 50.0,
-                 predictor=None, **_):
+                 predictor=None, degrade: bool = False,
+                 link_ema: float = 0.35, degrade_below: float = 0.7,
+                 recover_above: float = 0.9, recover_streak: int = 2, **_):
         self.k_max = max(1, int(k_max))
         self.draft_speed = float(draft_speed)
         self.predictor = predictor
+        # -- link-health degradation law (DESIGN.md §14) -------------------
+        self.degrade = bool(degrade)
+        self.link_ema = float(link_ema)
+        self.degrade_below = float(degrade_below)
+        self.recover_above = float(recover_above)
+        self.recover_streak = max(1, int(recover_streak))
+        self.link_health = 1.0
+        self.link_down = False
+        self._ok_streak = 0
+        #: the most recent ``choose_k`` shrank K below the policy's pick
+        #: (or pinned the K=1 down-mode floor) — the runtime's
+        #: degraded-round counter reads this
+        self.degraded_last = False
 
     def start_session(self) -> None:
         """Reset any per-stream state (a device reuses its controller
-        across churned sessions)."""
+        across churned sessions).  Link health deliberately survives —
+        it is a property of the device's LINK, not of one session."""
 
     def next_k(self) -> int:
         """Draft-length cap for the next block, in ``[1, k_max]``."""
         raise NotImplementedError
+
+    # -- link health + graceful degradation (DESIGN.md §14) ----------------
+    def observe_link(self, ok: bool, *, down: bool = False) -> None:
+        """Feed one link outcome: ``ok`` when a verdict reached the
+        device, not-ok when a round timed out.  ``down=True`` latches
+        hard-down mode (the runtime asserts it after
+        ``link_down_after`` consecutive timeouts)."""
+        self.link_health = ((1.0 - self.link_ema) * self.link_health
+                            + self.link_ema * (1.0 if ok else 0.0))
+        if ok:
+            self._ok_streak += 1
+            if (self.link_down and self._ok_streak >= self.recover_streak
+                    and self.link_health >= self.recover_above):
+                self.link_down = False
+        else:
+            self._ok_streak = 0
+            if down:
+                self.link_down = True
+
+    def choose_k(self) -> int:
+        """The policy's ``next_k``, degraded by link health when enabled:
+        K=1 while the link is down (server-side decode — one draft token
+        still carries the round, the verifier's bonus token does the
+        committing), K scaled by the health EWMA under flap.  Identical
+        to ``next_k`` when ``degrade`` is off."""
+        k = self.next_k()
+        self.degraded_last = False
+        if not self.degrade:
+            return k
+        if self.link_down:
+            self.degraded_last = True
+            return 1
+        if self.link_health < self.degrade_below:
+            shrunk = max(1, min(k, int(math.ceil(k * self.link_health))))
+            self.degraded_last = shrunk < k
+            return shrunk
+        return k
 
     def observe(self, *, accept_len: int = 0, k_used: int = 0,
                 p_accept: float | None = None, rtt: float | None = None,

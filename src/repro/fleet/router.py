@@ -108,6 +108,7 @@ class FleetRouter:
             "stale_events_dropped": 0,
             "dropped_verdicts": 0,
             "lost_verdicts": 0,
+            "replayed_verdicts": 0,
         }
 
     # -- uniform-fleet conveniences (the runtime reads these) ----------------
@@ -269,27 +270,37 @@ class FleetRouter:
 
     def submit(self, session_id: int, draft_tokens, q_logits=None, *,
                q_compact=None, now: float, t_draft: float,
-               t_network: float) -> str:
+               t_network: float, round_index: int | None = None) -> str:
         """Queue a drafted block on the session's owner; the round enters
-        the dispatcher's in-flight tracking under (session_id, rounds)."""
+        the dispatcher's in-flight tracking under (session_id, rounds).
+        A duplicate the owner absorbed (idempotent ``WISPServer.submit``
+        returned None) is NOT re-tracked: tracking an already-committed
+        round would leave a stale in-flight entry the straggler sweep
+        hedges forever."""
         vid = self.owner[session_id]
         srv = self.verifiers[vid]
-        srv.submit(session_id, draft_tokens, q_logits, q_compact=q_compact,
-                   now=now, t_draft=t_draft, t_network=t_network)
-        self._track(session_id, vid, len(draft_tokens), now, hedged=False)
+        rid = srv.submit(session_id, draft_tokens, q_logits,
+                         q_compact=q_compact, now=now, t_draft=t_draft,
+                         t_network=t_network, round_index=round_index)
+        if rid is not None:
+            self._track(session_id, vid, len(draft_tokens), now,
+                        hedged=False)
         self._drain(vid)
         return vid
 
     def resubmit(self, session_id: int, draft_tokens, q_logits=None, *,
                  q_compact=None, now: float, t_draft: float,
-                 t_network: float) -> str:
+                 t_network: float, round_index: int | None = None) -> str:
         """Re-dispatch an in-flight round to the session's (new) owner
         after a migration; marked hedged so the sweep never re-hedges it."""
         vid = self.owner[session_id]
         srv = self.verifiers[vid]
-        srv.submit(session_id, draft_tokens, q_logits, q_compact=q_compact,
-                   now=now, t_draft=t_draft, t_network=t_network)
-        self._track(session_id, vid, len(draft_tokens), now, hedged=True)
+        rid = srv.submit(session_id, draft_tokens, q_logits,
+                         q_compact=q_compact, now=now, t_draft=t_draft,
+                         t_network=t_network, round_index=round_index)
+        if rid is not None:
+            self._track(session_id, vid, len(draft_tokens), now,
+                        hedged=True)
         self.stats["redispatches"] += 1
         self._drain(vid)
         return vid
@@ -393,14 +404,16 @@ class FleetRouter:
         dropped — the re-dispatched round on the new owner advances the
         device instead, keeping device and owner state in lockstep.  The
         dispatcher's first-wins commit on (session_id, round_index)
-        additionally drops duplicates."""
+        dedupes the round; an owner-sent copy of an already-committed
+        round is a *replay* (the original verdict died on a flaky
+        downlink and the device re-submitted, DESIGN.md §14) and IS
+        delivered — the device's own round gate absorbs true duplicates."""
         sid = verdict.session_id
         if self.owner.get(sid) != vid:
             self.stats["dropped_verdicts"] += 1
             return False
         if not self.dispatcher.commit((sid, verdict.round_index)):
-            self.stats["dropped_verdicts"] += 1
-            return False
+            self.stats["replayed_verdicts"] += 1
         return True
 
     def note_lost_verdict(self) -> None:

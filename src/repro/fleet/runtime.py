@@ -55,13 +55,16 @@ class FleetRuntime(ClusterRuntime):
         super().__init__(router, edge_devices, fleet, cfg, vocab=vocab)
         self.router = router
         self.vids = list(router.verifiers)
+        # verifier fault domain from the unified schedule (the base class
+        # resolved it: DSL/preset rows + legacy cfg.fail_at / cfg.straggle
+        # shims, already merged by resolve_fault_schedule)
         self.plan = FailurePlan([
             (f"v{int(i)}", float(t0), None if t1 is None else float(t1))
-            for (i, t0, t1) in cfg.fail_at
+            for (i, t0, t1) in self.fault_schedule.verifier_fail
         ])
         self._straggle = [
             (f"v{int(i)}", float(t0), float(t1), float(f))
-            for (i, t0, t1, f) in cfg.straggle
+            for (i, t0, t1, f) in self.fault_schedule.verifier_straggle
         ]
         self._busy_until = {vid: 0.0 for vid in self.vids}
         self._disp_at: dict[str, float | None] = {v: None for v in self.vids}
@@ -179,6 +182,7 @@ class FleetRuntime(ClusterRuntime):
             self.router.resubmit(
                 sid, res.tokens, res.q_logits, q_compact=res.q_compact,
                 now=t, t_draft=dev.last_t_draft, t_network=dev.last_t_net,
+                round_index=dev.rounds_done,
             )
         self._kick(dst, t)
 
@@ -199,15 +203,21 @@ class FleetRuntime(ClusterRuntime):
         if vid is not None:
             self._kick(vid, t)
 
-    def _on_request(self, dev, t: float) -> None:
+    def _on_request(self, dev, t: float, rnd: int | None = None) -> None:
         res = dev.inflight
         if res is None or dev.session_id not in self.router.owner:
             return                          # closed/raced under us
+        if rnd is not None and dev.rounds_done != rnd:
+            # late duplicate of an already-resolved round (chaos uplink)
+            self.metrics.chaos.stale_requests_dropped += 1
+            return
         dev.request_arrived = True
         vid = self.router.submit(
             dev.session_id, res.tokens, res.q_logits, q_compact=res.q_compact,
             now=t, t_draft=dev.last_t_draft, t_network=dev.last_t_net,
+            round_index=dev.rounds_done,
         )
+        # replayed verdicts emitted during submit ride the downlink now
         self._drain_fleet(t)
         self._kick(vid, t)
 
@@ -233,10 +243,7 @@ class FleetRuntime(ClusterRuntime):
         if srv.last_served:
             dt = srv.last_verify_time
             self._occupy(vid, t, dt)
-            self._drain_fleet(
-                t, src=vid, t_sent=t + dt,
-                t_deliver=t + dt + self.net.downlink_time(),
-            )
+            self._drain_fleet(t, src=vid, t_sent=t + dt)
         else:
             self._drain_fleet(t)
             if srv.queue_depth or srv.throttle_backlog:
@@ -267,24 +274,23 @@ class FleetRuntime(ClusterRuntime):
 
     # -- event routing --------------------------------------------------------
     def _drain_fleet(self, t: float, src: str | None = None,
-                     t_sent: float | None = None,
-                     t_deliver: float | None = None) -> None:
+                     t_sent: float | None = None) -> None:
         """Route the merged fleet event stream onto the virtual clock.
-        Events from the epoch just executed on ``src`` are delivered at
-        ``t_deliver`` (epoch end + downlink) and stamped with ``t_sent``
-        (epoch end) for the died-before-sending check; everything else —
-        admission retries, instant zero-mode first tokens — lands now."""
+        Events from the epoch just executed on ``src`` leave the server
+        at ``t_sent`` (epoch end — also the died-before-sending stamp);
+        everything else — admission retries, instant zero-mode first
+        tokens, replayed verdicts surfaced during an idempotent submit —
+        leaves now.  Verdicts ride the downlink through
+        `_push_fleet_verdict` (per-message jitter + chaos fates)."""
         for vid, ev in self.router.pop_events():
+            from_epoch = vid == src and t_sent is not None
+            ts = t_sent if from_epoch else t
             if ev.kind == "VERDICT":
-                from_epoch = vid == src and t_deliver is not None
-                td = t_deliver if from_epoch else t
-                ts = t_sent if from_epoch else t
-                self.events.push(td, EventKind.VERDICT,
-                                 (vid, ts, ev.verdict))
+                self._push_fleet_verdict(vid, ev.verdict, ts)
             elif ev.kind == "FIRST_TOKEN":
-                from_epoch = vid == src and t_deliver is not None
                 if self.cfg.prefill_mode == "chunked" and from_epoch:
-                    self.events.push(t_deliver, EventKind.FIRST_TOKEN,
+                    self.events.push(ts + self.net.downlink_time(),
+                                     EventKind.FIRST_TOKEN,
                                      (vid, ev.session_id, ev.token))
                 else:
                     self._on_first_token((vid, ev.session_id, ev.token), t)
@@ -295,7 +301,37 @@ class FleetRuntime(ClusterRuntime):
             # ADMITTED / THROTTLED / PREEMPTED / TTFT_RECORD / CLOSED:
             # no runtime action
 
-    def _drain_server_events(self, t, t_deliver=None):  # pragma: no cover
+    def _push_fleet_verdict(self, vid: str, v, t_sent: float) -> None:
+        """Fleet twin of the base `_push_verdict`: same downlink pricing
+        and chaos fates, but the VERDICT payload carries the sending
+        verifier (owner gate) and the send stamp (died-before-sending
+        check)."""
+        dev = self._by_session.get(v.session_id)
+        rnd = int(getattr(v, "round_index", -1))
+        n = 0
+        if dev is not None:
+            n = dev.down_attempts
+            dev.down_attempts += 1
+        lat = self.net.downlink_time(
+            key=self._net_key(1, v.session_id, rnd, n))
+        payload = (vid, t_sent, v)
+        if dev is not None and dev.chaos is not None:
+            times = dev.chaos.deliveries(
+                "down", (v.session_id, rnd + 1, n), t_sent, lat)
+            ch = self.metrics.chaos
+            if not times:
+                ch.downlink_drops += 1
+            elif len(times) > 1:
+                ch.downlink_dups += len(times) - 1
+            for ts in times:
+                self.events.push(ts, EventKind.VERDICT, payload)
+        else:
+            self.events.push(t_sent + lat, EventKind.VERDICT, payload)
+
+    def _serving_nodes(self) -> list:
+        return list(self.router.verifiers.values())
+
+    def _drain_server_events(self, t, t_sent=None):  # pragma: no cover
         raise NotImplementedError(
             "fleet runtime drains through _drain_fleet"
         )

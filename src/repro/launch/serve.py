@@ -84,6 +84,11 @@ def run_serving(
     verifiers: int = 1,
     fail_at: tuple = (),
     straggle: tuple = (),
+    fault_schedule=None,
+    link_timeout: float | None = None,
+    link_backoff: float = 2.0,
+    link_degrade: bool = False,
+    link_jitter: float = 0.0,
     heartbeat_interval: float = 0.05,
     heartbeat_timeout: float = 0.15,
     hedge_factor: float = 8.0,
@@ -107,6 +112,14 @@ def run_serving(
     ``"adaptive"`` (per-block K from acceptance, RTT and verifier load,
     DESIGN.md §11).  ``link_rtts`` gives devices heterogeneous link base
     RTTs (cycled round-robin, like ``draft_speeds``).
+
+    Edge-link fault domain (DESIGN.md §14): ``fault_schedule`` injects a
+    seeded chaos plan (a `repro.chaos.FaultSchedule`, a preset name or a
+    DSL string) on every device's uplink/downlink; ``link_timeout``
+    arms the edge's per-round retry/backoff loop (idempotent under the
+    ``(session_id, round_index)`` key); ``link_degrade`` lets link
+    health shrink speculation depth (K=1 while the link is down);
+    ``link_jitter`` adds seeded per-message log-normal latency jitter.
 
     Multi-tenant serving (DESIGN.md §13): ``tenant_mix`` is a named
     workload mix from ``repro.cluster.workload.TENANT_MIXES`` (or an
@@ -156,6 +169,12 @@ def run_serving(
         # the lock-step reference has no clock to charge prefill against;
         # it always opens sessions through the blocking monolithic path
         raise ValueError("--sync supports prefill_mode='zero' only")
+    if sync and (fault_schedule is not None or link_timeout is not None
+                 or link_jitter):
+        # the lock-step loop has no virtual clock to lose messages or arm
+        # retry timers against
+        raise ValueError("--sync does not support the edge-link fault "
+                         "domain (fault_schedule/link_timeout/link_jitter)")
     if isinstance(tenant_mix, str):
         if tenant_mix not in TENANT_MIXES:
             raise ValueError(
@@ -189,6 +208,11 @@ def run_serving(
         verifiers=verifiers,
         fail_at=tuple(fail_at),
         straggle=tuple(straggle),
+        fault_schedule=fault_schedule,
+        link_timeout=link_timeout,
+        link_backoff=link_backoff,
+        link_degrade=link_degrade,
+        jitter_sigma=link_jitter,
         heartbeat_interval=heartbeat_interval,
         heartbeat_timeout=heartbeat_timeout,
         hedge_factor=hedge_factor,
@@ -257,6 +281,7 @@ def run_serving(
             draft_speed=sp.draft_speed, greedy=greedy,
             q_mode=q_mode, q_top_c=q_top_c,
             spec_policy=spec_policy,
+            spec_cfg={"degrade": True} if link_degrade else None,
         )
         for sp in fleet
     ]
@@ -334,6 +359,17 @@ def run_serving(
                   f"quantize={spill_quantize} spilled={sp_pages} "
                   f"({sp_mb:.2f} MiB) paged_in={pi_pages} "
                   f"({pi_mb:.2f} MiB)")
+        if (fault_schedule is not None or link_timeout is not None
+                or m.chaos.retries or m.chaos.uplink_drops
+                or m.chaos.downlink_drops):
+            c = m.chaos
+            print(f"[serve] chaos: retries={c.retries} timeouts={c.timeouts} "
+                  f"up_drop={c.uplink_drops} down_drop={c.downlink_drops} "
+                  f"dup_verdicts_dropped={c.dup_verdicts_dropped} "
+                  f"replays={c.verdicts_replayed} "
+                  f"link_down={c.link_down_events} "
+                  f"link_up={c.link_up_events} "
+                  f"degraded_rounds={c.degraded_rounds}")
         if verifiers > 1:
             fs = server.stats
             print(f"[serve] fleet: verifiers={verifiers} "
@@ -490,12 +526,32 @@ def main():
                          "router (repro.fleet); 1 = single-server runtime")
     ap.add_argument("--fail-at", action="append", default=[],
                     metavar="IDX:T0[:T1]",
-                    help="kill verifier IDX at virtual time T0 (recover at "
-                         "T1 if given); repeatable")
+                    help="DEPRECATED (compiles onto --fault-schedule): kill "
+                         "verifier IDX at virtual time T0 (recover at T1 if "
+                         "given); repeatable")
     ap.add_argument("--straggle", action="append", default=[],
                     metavar="IDX:T0:T1:FACTOR",
-                    help="slow verifier IDX's epochs by FACTOR in [T0,T1); "
+                    help="DEPRECATED (compiles onto --fault-schedule): slow "
+                         "verifier IDX's epochs by FACTOR in [T0,T1); "
                          "repeatable")
+    ap.add_argument("--fault-schedule", default=None, metavar="SPEC",
+                    help="seeded chaos plan (DESIGN.md §14): a preset "
+                         "('lossy', 'flap', 'storm') or a DSL string, e.g. "
+                         "'drop=0.1,dup=0.05,linkdown@0.25+0.5,seed=7,"
+                         "kill=0@0.5'")
+    ap.add_argument("--link-timeout", type=float, default=None,
+                    metavar="SECONDS",
+                    help="edge per-round timeout before an idempotent "
+                         "re-submission (exponential backoff + jitter); "
+                         "unset = no retries")
+    ap.add_argument("--link-degrade", action="store_true",
+                    help="let link health degrade speculation depth "
+                         "(K shrinks under flap, K=1 while the link is "
+                         "down; changes committed streams like adaptive-K)")
+    ap.add_argument("--link-jitter", type=float, default=0.0,
+                    metavar="SIGMA",
+                    help="per-message log-normal latency jitter sigma on "
+                         "the modelled network (seeded; 0 = fixed RTT)")
     ap.add_argument("--kv-tier", type=int, default=0, metavar="PAGES",
                     help="host-DRAM KV spill pool size in pages under each "
                          "verifier's device page pool (DESIGN.md §12); "
@@ -535,6 +591,13 @@ def main():
         return (int(parts[0]), float(parts[1]), float(parts[2]),
                 float(parts[3]))
 
+    if args.fail_at or args.straggle:
+        warnings.warn(
+            "--fail-at / --straggle are deprecated; use --fault-schedule "
+            "(e.g. 'kill=0@0.5' / 'straggle=1@0.05+0.95*400') — the legacy "
+            "flags compile onto the schedule for now",
+            DeprecationWarning, stacklevel=2,
+        )
     pred = RejectionPredictor.load(args.predictor_path) if args.predictor_path else None
     run_serving(
         args.target, args.draft, devices=args.devices, rounds=args.rounds,
@@ -548,6 +611,10 @@ def main():
         verifiers=args.verifiers,
         fail_at=tuple(_parse_fail(s) for s in args.fail_at),
         straggle=tuple(_parse_straggle(s) for s in args.straggle),
+        fault_schedule=args.fault_schedule,
+        link_timeout=args.link_timeout,
+        link_degrade=args.link_degrade,
+        link_jitter=args.link_jitter,
         kv_tier_pages=args.kv_tier,
         spill_quantize=args.spill_quantize,
         spill_idle_epochs=args.spill_idle,

@@ -48,6 +48,10 @@ class EdgeSession:
     rounds: int = 0
     drafted: int = 0
     accepted: int = 0
+    #: verdicts applied so far — the device half of the idempotency key
+    #: (session_id, round_index): a duplicated/reordered verdict whose
+    #: round does not equal ``resolved`` must never touch the stream
+    resolved: int = 0
 
 
 class EdgeDevice:
@@ -129,7 +133,7 @@ class EdgeDevice:
             s.fed += len(catch) - 1
         return self.controller.begin_block(
             self.rng, int(catch[-1]), self.cache, s.fed,
-            k=self.spec.next_k(),
+            k=self.spec.choose_k(),
         )
 
     def finish_round(self, drafter: BlockDrafter) -> DraftResult:
@@ -160,6 +164,7 @@ class EdgeDevice:
         s.committed.extend(int(t) for t in draft_tokens[:accept_len])
         s.committed.append(int(token))
         s.accepted += accept_len
+        s.resolved += 1
         # the draft loop fed [x_last, y_1 .. y_{n_drafted-1}]: the cache is
         # valid exactly up to the accepted prefix (or all fed tokens if the
         # whole block was accepted — the final draft token is caught up at
@@ -201,12 +206,13 @@ class EdgeDevice:
             cost = 1
         s.drafted += cost
         drafter = self.controller.begin_block(self.rng, guess, self.cache,
-                                              valid, k=self.spec.next_k())
+                                              valid, k=self.spec.choose_k())
         return guess, drafter, cost
 
     def resolve_verdict(self, accept_len: int, token: int, res,
                         guess: int | None = None,
-                        speculated: bool = False) -> bool:
+                        speculated: bool = False,
+                        round_index: int | None = None) -> bool:
         """Apply a verdict to a round that may have speculation in flight.
 
         Commit path (returns True): the block was fully accepted AND the
@@ -217,16 +223,36 @@ class EdgeDevice:
 
         Rollback path (returns False): plain ``apply_verdict`` — the cache
         position pointer snaps back over rejected drafts and every
-        speculative entry past it becomes stale-but-masked."""
+        speculative entry past it becomes stale-but-masked.
+
+        ``round_index`` is the verdict's half of the idempotency key
+        (DESIGN.md §14): callers that can see duplicated/reordered
+        verdicts (the chaos runtime) pass it, and a mismatch against the
+        session's ``resolved`` counter raises — the committed prefix only
+        ever advances by exactly-once verdict application.  Drivers on a
+        reliable channel may omit it."""
         s = self.session
+        if round_index is not None and int(round_index) != s.resolved:
+            raise ValueError(
+                f"session {s.session_id}: verdict for round {round_index} "
+                f"applied out of order (device at round {s.resolved})"
+            )
         if speculated and accept_len == res.n_sent and int(token) == int(guess):
             s.committed.extend(int(t) for t in res.tokens)
             s.committed.append(int(token))
             s.accepted += accept_len
             s.fed = len(s.committed) - 1
+            s.resolved += 1
             return True
         self.apply_verdict(accept_len, token, res.tokens)
         return False
+
+    # -- link-health feedback (edge-link fault domain, DESIGN.md §14) ------
+    def observe_link(self, ok: bool, *, down: bool = False) -> None:
+        """One link observation for the speculation controller's health
+        EWMA: ``ok`` on an applied verdict, not-ok on a round timeout
+        (``down=True`` latches the LINK_DOWN state)."""
+        self.spec.observe_link(ok, down=down)
 
     # -- adaptive-speculation feedback (core/speculation.py) ---------------
     def observe_verdict(self, accept_len: int, k_used: int, *,

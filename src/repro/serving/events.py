@@ -148,14 +148,56 @@ class Rejected(ServerEvent):
     kind = "REJECTED"
 
 
+@dataclasses.dataclass(frozen=True)
+class RetryEvent(ServerEvent):
+    """Edge-link fault domain (DESIGN.md §14): the device's per-round
+    timeout expired and it re-submitted the round (idempotent under the
+    ``(session_id, round_index)`` key).  ``attempt`` is the re-send's
+    attempt index (1 = first retry); ``backoff`` the exponential+jitter
+    delay armed for the NEXT timeout."""
+
+    round_index: int = -1
+    attempt: int = 0
+    backoff: float = 0.0
+
+    kind = "RETRY"
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkDown(ServerEvent):
+    """Edge-link fault domain: ``link_down_after`` consecutive round
+    timeouts on ``device``'s link — the device enters degraded mode
+    (K=1 server-side decode when ``link_degrade`` is on) until the
+    health EWMA recovers with hysteresis."""
+
+    device: int = -1
+
+    kind = "LINK_DOWN"
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkUp(ServerEvent):
+    """Edge-link fault domain: ``device``'s link recovered (health EWMA
+    back above the hysteresis threshold after an ok-streak).  ``outage``
+    is the LINK_DOWN -> LINK_UP span in virtual seconds."""
+
+    device: int = -1
+    outage: float = 0.0
+
+    kind = "LINK_UP"
+
+
 #: event-kind tags in lifecycle order (documentation + test helper);
 #: MIGRATED / VERIFIER_DOWN are fleet-tier events and can interleave
-#: anywhere between a session's FIRST_TOKEN and CLOSED; THROTTLED may
-#: precede ADMITTED (a throttle-held open) and REJECTED replaces the
-#: whole lifecycle for a shed open
+#: anywhere between a session's FIRST_TOKEN and CLOSED, as can the
+#: edge-link chaos events RETRY / LINK_DOWN / LINK_UP (runtime-emitted,
+#: collected in ``ClusterRuntime.chaos_log``); THROTTLED may precede
+#: ADMITTED (a throttle-held open) and REJECTED replaces the whole
+#: lifecycle for a shed open
 EVENT_KINDS = ("THROTTLED", "REJECTED", "ADMITTED", "FIRST_TOKEN",
                "VERDICT", "PREEMPTED", "TTFT_RECORD", "MIGRATED",
-               "VERIFIER_DOWN", "CLOSED")
+               "VERIFIER_DOWN", "RETRY", "LINK_DOWN", "LINK_UP",
+               "CLOSED")
 
 
 class SessionHandle:

@@ -340,6 +340,13 @@ class WISPServer:
         self._events: list[ServerEvent] = []
         self._rid = 0
         self.log: list[Verdict] = []
+        #: last committed verdict per live session — the replay cache the
+        #: idempotent ``submit`` answers stale re-submissions from (a
+        #: device can never be more than one round behind, so one verdict
+        #: is all the history a replay ever needs; DESIGN.md §14)
+        self._last_verdict: dict[int, Verdict] = {}
+        #: idempotency counters (folded into ClusterMetrics.chaos)
+        self.chaos_stats = {"dup_submits": 0, "verdict_replays": 0}
 
     # -- event stream -------------------------------------------------------
     def _emit(self, event: ServerEvent) -> None:
@@ -648,6 +655,7 @@ class WISPServer:
         self._purge_session_work(session_id, s.tenant)
         self.engine.close_session(s.slot)
         self.first_tokens.pop(session_id, None)
+        self._last_verdict.pop(session_id, None)
         self._tenant_session_closed(s.tenant)
         self._emit(Closed(session_id, t))
         self._try_admit()
@@ -739,11 +747,21 @@ class WISPServer:
         now: float,
         t_draft: float,
         t_network: float,
-    ) -> int:
+        round_index: int | None = None,
+    ) -> int | None:
         """Queue a drafted block for verification.  The draft distribution
         arrives as dense ``q_logits`` (exact residual), a `CompactQ` via
         ``q_compact`` (O(K·C) wire payload, DESIGN.md §9), or neither
         (greedy verification reads no q).
+
+        **Idempotent** under the ``(session_id, round_index)`` key
+        (DESIGN.md §14): a re-submission of the round currently in flight
+        is absorbed (``None``, counted), and a re-submission of an
+        already-verified round replays the cached verdict as a fresh
+        VERDICT event instead of verifying twice — the committed stream
+        advances exactly once per round no matter how many request copies
+        a flaky uplink delivers.  ``round_index=None`` (legacy callers on
+        a reliable channel) trusts the session's own round counter.
 
         The session's tenant bucket prices the block at its draft length
         (DESIGN.md §13): DEPRIORITIZE queues it flagged for reduced WFQ
@@ -752,6 +770,28 @@ class WISPServer:
         block is never rejected."""
         self.now = max(self.now, now)
         s = self.sessions[session_id]
+        rnd = s.rounds if round_index is None else int(round_index)
+        if rnd < s.rounds:
+            # stale duplicate of a verified round: its verdict died on the
+            # downlink — replay the cached one (new event, new delivery)
+            self.chaos_stats["verdict_replays"] += 1
+            last = self._last_verdict.get(session_id)
+            if last is not None and last.round_index == rnd:
+                self._emit(VerdictEvent(session_id, self.now, last))
+            return None
+        if rnd > s.rounds:
+            raise ValueError(
+                f"session {session_id}: submit for future round {rnd} "
+                f"(server at round {s.rounds})"
+            )
+        if any(r.kind == "verify" and r.session_id == session_id
+               and r.round_index == rnd for r in self.pending) or any(
+                e[0] == "work" and e[1].session_id == session_id
+                and e[1].round_index == rnd
+                for e in self._throttled.get(s.tenant, ())):
+            # duplicate of the in-flight round, still queued/held: absorb
+            self.chaos_stats["dup_submits"] += 1
+            return None
         s.t_draft_last = t_draft
         s.t_net_last = t_network
         target_speed = self.slo_classes[s.slo_class]
@@ -1004,6 +1044,7 @@ class WISPServer:
             queue_depth=len(self.pending),
         )
         self.log.append(v)
+        self._last_verdict[r.session_id] = v
         self._emit(VerdictEvent(r.session_id, now, v))
         return v
 

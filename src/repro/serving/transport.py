@@ -23,6 +23,8 @@ from __future__ import annotations
 
 import dataclasses
 
+import numpy as np
+
 
 @dataclasses.dataclass
 class NetworkModel:
@@ -30,6 +32,25 @@ class NetworkModel:
     uplink_bw: float = 12.5e6      # 100 Mbit/s in bytes/s
     downlink_bw: float = 25e6      # 200 Mbit/s
     q_topk: int = 32               # modelled sparsification of dense q
+    #: per-message RTT variance: the propagation term is scaled by a
+    #: seeded LogNormal(0, jitter_sigma) factor drawn from the message
+    #: key a caller passes to ``uplink_time``/``downlink_time`` — fates
+    #: are a function of message identity, not call order, so runs stay
+    #: deterministic.  0 (the default) is byte-identical to the fixed-RTT
+    #: model: no rng is ever constructed and no float op changes.
+    jitter_sigma: float = 0.0
+    jitter_seed: int = 0
+
+    def _jitter(self, key) -> float:
+        """LogNormal latency factor for one message (1.0 when jitter is
+        off or the caller passed no key — legacy call sites price the
+        nominal link)."""
+        if not self.jitter_sigma or key is None:
+            return 1.0
+        g = np.random.default_rng(
+            (int(self.jitter_seed), *(int(k) % (2 ** 31) for k in key))
+        )
+        return float(np.exp(g.normal(0.0, self.jitter_sigma)))
 
     def uplink_bytes(self, n_draft_tokens: int, q="modelled") -> int:
         """Uplink payload for one drafted block.  ``q`` selects the
@@ -49,12 +70,14 @@ class NetworkModel:
     def downlink_bytes(self) -> int:
         return 64 + 8
 
-    def uplink_time(self, n_draft_tokens: int, q="modelled") -> float:
-        return self.base_rtt / 2 + \
+    def uplink_time(self, n_draft_tokens: int, q="modelled", *,
+                    key=None) -> float:
+        return self.base_rtt / 2 * self._jitter(key) + \
             self.uplink_bytes(n_draft_tokens, q) / self.uplink_bw
 
-    def downlink_time(self) -> float:
-        return self.base_rtt / 2 + self.downlink_bytes() / self.downlink_bw
+    def downlink_time(self, *, key=None) -> float:
+        return self.base_rtt / 2 * self._jitter(key) + \
+            self.downlink_bytes() / self.downlink_bw
 
     def round_trip(self, n_draft_tokens: int, q="modelled") -> float:
         return self.uplink_time(n_draft_tokens, q) + self.downlink_time()

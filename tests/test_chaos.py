@@ -1,0 +1,285 @@
+"""Edge-link fault domain: deterministic chaos, retry/dedup, degradation.
+
+Pins the DESIGN.md §14 contract from both ends:
+
+  * **mechanism** — the `FaultSchedule` DSL parses/merges as documented;
+    `FaultyTransport` fates are a pure function of message identity
+    (never of event-loop order); `NetworkModel` jitter is seeded and its
+    ``sigma=0`` path is exactly the unjittered model; the speculation
+    controller's link-health degradation law is hysteretic.
+  * **end-to-end law** — under drop + duplication + reordering + a hard
+    link-down window, retry/backoff + idempotent re-submission + verdict
+    replay/dedup commit per-session streams BYTE-IDENTICAL to the
+    fault-free run (faults may only cost time, never change bytes), and
+    the property holds over randomly drawn schedules, not just the
+    canned ones.
+
+Property tests run under ``hypothesis`` when installed (CI tier-1
+installs it — see `test_hypothesis_available.py`) and collect as skipped
+via `_hypothesis_stub` otherwise.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_stub import given, settings, st
+
+from repro.chaos import (
+    FAULT_PRESETS,
+    FaultSchedule,
+    FaultyTransport,
+    LinkFaults,
+    parse_fault_schedule,
+    resolve_fault_schedule,
+)
+from repro.core.speculation import make_spec_controller
+from repro.serving.transport import NetworkModel
+
+
+# -- schedule DSL ------------------------------------------------------------
+
+def test_parse_dsl_scopes_and_windows():
+    s = parse_fault_schedule(
+        "drop=0.1,up.dup=0.2,down.spike=0.3,spike_s=0.08,"
+        "linkdown@0.25+0.5,up.linkdown@1.0+0.1,seed=7"
+    )
+    assert s.seed == 7
+    assert s.up.drop == s.down.drop == 0.1          # unscoped -> both
+    assert (s.up.dup, s.down.dup) == (0.2, 0.0)     # up.-scoped
+    assert (s.up.spike, s.down.spike) == (0.0, 0.3)
+    assert s.up.spike_s == s.down.spike_s == 0.08
+    assert s.down.windows == ((0.25, 0.75),)
+    assert s.up.windows == ((0.25, 0.75), (1.0, 1.1))
+    assert s.up.is_down(0.3) and not s.up.is_down(0.75)  # half-open
+
+
+def test_parse_dsl_verifier_faults():
+    s = parse_fault_schedule("kill=0@0.15,kill=2@0.1+0.4,"
+                             "straggle=1@0.05+0.95*400")
+    assert s.verifier_fail == ((0, 0.15, None), (2, 0.1, 0.5))
+    assert s.verifier_straggle == ((1, 0.05, 1.0, 400.0),)
+    assert s.has_verifier_faults() and not s.has_link_faults()
+
+
+def test_parse_presets_and_passthrough():
+    flap = parse_fault_schedule("flap")
+    assert flap == parse_fault_schedule(FAULT_PRESETS["flap"])
+    assert flap.seed == 7 and flap.up.windows == ((0.25, 0.75),)
+    assert parse_fault_schedule(None) == FaultSchedule()
+    assert parse_fault_schedule(flap) is flap       # ready schedules pass
+
+
+@pytest.mark.parametrize("bad", ["nope=1", "linkdown@0.5", "drop", "kill=x@1",
+                                 "straggle=0@0.1*4"])
+def test_parse_rejects_bad_tokens(bad):
+    with pytest.raises(ValueError):
+        parse_fault_schedule(bad)
+
+
+def test_resolve_merges_legacy_shims_and_defaults_seed():
+    @dataclasses.dataclass
+    class Cfg:
+        fault_schedule: object = "lossy"
+        fail_at: tuple = ((1, 0.2, None),)
+        straggle: tuple = ((0, 0.1, 0.9, 50.0),)
+        seed: int = 42
+
+    s = resolve_fault_schedule(Cfg())
+    assert s.seed == 7                              # DSL seed wins
+    assert s.verifier_fail == ((1, 0.2, None),)     # legacy rows folded in
+    assert s.verifier_straggle == ((0, 0.1, 0.9, 50.0),)
+    s2 = resolve_fault_schedule(Cfg(fault_schedule="drop=0.1"))
+    assert s2.seed == 42                            # inherits the run seed
+
+
+# -- transport: fates are pure functions of message identity -----------------
+
+def _transport(**link):
+    sched = FaultSchedule(seed=3, up=LinkFaults(**link),
+                          down=LinkFaults(**link))
+    return FaultyTransport(NetworkModel(), sched)
+
+
+def test_transport_requires_resolved_seed():
+    with pytest.raises(ValueError):
+        FaultyTransport(NetworkModel(), FaultSchedule())
+
+
+def test_zero_fault_schedule_is_single_on_time_delivery():
+    tr = _transport()
+    assert tr.deliveries("up", (0, 0, 0), 1.0, 0.01) == [1.01]
+    assert tr.stats["up_dropped"] == 0
+
+
+def test_window_drops_every_message_inside_it():
+    sched = FaultSchedule(seed=3, up=LinkFaults(windows=((0.2, 0.4),)))
+    tr = FaultyTransport(NetworkModel(), sched)
+    assert tr.deliveries("up", (0, 0, 0), 0.3, 0.01) == []
+    assert tr.deliveries("up", (0, 0, 1), 0.4, 0.01) \
+        == pytest.approx([0.41])            # half-open: t1 is back up
+    assert tr.stats["up_window_drops"] == 1
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    drop=st.floats(0.0, 1.0), dup=st.floats(0.0, 1.0),
+    reorder=st.floats(0.0, 1.0), spike=st.floats(0.0, 1.0),
+    key=st.tuples(st.integers(0, 99), st.integers(0, 99),
+                  st.integers(0, 9)),
+    direction=st.sampled_from(["up", "down"]),
+    t_send=st.floats(0.0, 10.0), latency=st.floats(1e-4, 0.5),
+)
+def test_transport_fates_deterministic_and_causal(drop, dup, reorder, spike,
+                                                  key, direction, t_send,
+                                                  latency):
+    """Same identity -> same fate, independent of call order; surviving
+    copies never arrive before ``t_send + latency``; at most one
+    duplicate."""
+    mk = lambda: _transport(drop=drop, dup=dup, reorder=reorder, spike=spike)
+    a = mk().deliveries(direction, key, t_send, latency)
+    tr = mk()
+    tr.deliveries(direction, (77, 77, 7), 0.0, latency)   # unrelated traffic
+    b = tr.deliveries(direction, key, t_send, latency)
+    assert a == b
+    assert len(a) <= 2
+    assert all(t >= t_send + latency for t in a)
+    if len(a) == 2:
+        assert a[1] > a[0]
+
+
+def test_up_down_fates_independent():
+    tr = _transport(drop=0.5, dup=0.3, reorder=0.3)
+    ups = [bool(tr.deliveries("up", (i, 0, 0), 0.0, 0.01)) for i in range(40)]
+    dns = [bool(tr.deliveries("down", (i, 0, 0), 0.0, 0.01))
+           for i in range(40)]
+    assert ups != dns          # distinct dircodes -> distinct rng streams
+
+
+# -- NetworkModel seeded jitter ----------------------------------------------
+
+def test_jitter_sigma_zero_is_exact_identity():
+    base = NetworkModel()
+    j0 = dataclasses.replace(base, jitter_sigma=0.0, jitter_seed=5)
+    assert j0.uplink_time(4, key=(0, 1, 2, 3)) == base.uplink_time(4)
+    assert j0.downlink_time(key=(1, 1, 2, 3)) == base.downlink_time()
+
+
+def test_jitter_deterministic_per_key_and_varies_across_keys():
+    net = dataclasses.replace(NetworkModel(), jitter_sigma=0.3,
+                              jitter_seed=5)
+    a = net.downlink_time(key=(1, 3, 2, 0))
+    assert a == net.downlink_time(key=(1, 3, 2, 0))
+    assert a != net.downlink_time(key=(1, 3, 2, 1))
+    assert a > 0
+    # no key -> base latency (control-plane messages stay unjittered)
+    assert net.downlink_time() == NetworkModel().downlink_time()
+
+
+# -- graceful-degradation law (speculation controller) -----------------------
+
+def test_degradation_is_opt_in():
+    c = make_spec_controller("static", k_max=6)
+    for _ in range(8):
+        c.observe_link(False, down=True)
+    assert c.choose_k() == 6 and not c.degraded_last
+
+
+def test_degradation_hysteresis():
+    c = make_spec_controller("static", k_max=6, degrade=True)
+    assert c.choose_k() == 6
+    c.observe_link(False)                    # one flap: health dips
+    assert c.link_health < 1.0
+    while c.link_health >= c.degrade_below:
+        c.observe_link(False)
+    k_flap = c.choose_k()
+    assert 1 <= k_flap < 6 and c.degraded_last
+    c.observe_link(False, down=True)         # runtime latches hard-down
+    assert c.choose_k() == 1 and c.degraded_last
+    c.observe_link(True)                     # one ok is NOT recovery...
+    assert c.link_down and c.choose_k() == 1
+    while c.link_down:                       # ...streak + health both needed
+        c.observe_link(True)
+    assert c.link_health >= c.recover_above
+    assert c.choose_k() == 6 and not c.degraded_last
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.tuples(st.booleans(), st.booleans()), max_size=60))
+def test_degraded_k_always_valid(outcomes):
+    c = make_spec_controller("static", k_max=5, degrade=True)
+    for ok, down in outcomes:
+        c.observe_link(ok, down=down and not ok)
+        assert 1 <= c.choose_k() <= 5
+        assert 0.0 <= c.link_health <= 1.0
+
+
+# -- end to end: faults cost time, never bytes -------------------------------
+
+#: rounds=3 so the virtual clock actually reaches the flap preset's
+#: 0.25 s outage window and the ~10% loss law has messages to bite on
+_E2E_KW = dict(devices=2, rounds=3, k_max=3, verbose=False, seed=0)
+
+
+@pytest.fixture(scope="module")
+def clean_streams():
+    from repro.launch.serve import run_serving
+    r = run_serving(**_E2E_KW)
+    return [list(d.response_tokens) for d in r["edges"]]
+
+
+def _chaos_run(schedule, **kw):
+    from repro.launch.serve import run_serving
+    r = run_serving(fault_schedule=schedule, **{**_E2E_KW, **kw})
+    return [list(d.response_tokens) for d in r["edges"]], r["metrics"].chaos
+
+
+def test_flap_streams_byte_identical_to_clean(clean_streams):
+    """The acceptance schedule (drop + dup + reorder + 500 ms outage):
+    every committed stream matches the fault-free golden byte for byte,
+    and the recovery machinery demonstrably ran."""
+    streams, c = _chaos_run("flap", link_timeout=0.08)
+    assert streams == clean_streams
+    assert c.retries > 0 and c.timeouts > 0
+    assert c.uplink_drops + c.downlink_drops > 0
+
+
+def test_downlink_loss_recovers_via_verdict_replay(clean_streams):
+    """Lost/duplicated VERDICTs: the retried request hits the server's
+    idempotency gate, which replays the cached verdict instead of
+    re-verifying; duplicate deliveries die at the device's round gate."""
+    streams, c = _chaos_run("down.drop=0.5,dup=0.2,seed=5",
+                            link_timeout=0.05)
+    assert streams == clean_streams
+    assert c.downlink_drops > 0
+    assert c.verdicts_replayed > 0          # lost-ack recovery path ran
+    assert c.dup_verdicts_dropped > 0       # dedup gate ran
+    assert c.link_down_events >= c.link_up_events
+
+
+def test_chaos_counters_clean_when_unfaulted(clean_streams):
+    streams, c = _chaos_run(None)
+    assert streams == clean_streams
+    assert all(v == 0 for v in c.as_dict().values())
+
+
+@settings(max_examples=4, deadline=None)
+@given(
+    drop=st.floats(0.0, 0.3), dup=st.floats(0.0, 0.2),
+    reorder=st.floats(0.0, 0.2), seed=st.integers(0, 99),
+    window=st.booleans(),
+)
+def test_random_schedules_preserve_streams(clean_streams, drop, dup, reorder,
+                                           seed, window):
+    """The byte-identity law is not a property of the canned presets:
+    ANY seeded loss/dup/reorder law (optionally with an outage window)
+    terminates and commits the golden streams."""
+    spec = f"drop={drop},dup={dup},reorder={reorder},seed={seed}"
+    if window:
+        spec += ",linkdown@0.1+0.3"
+    streams, _ = _chaos_run(spec, link_timeout=0.08)
+    assert streams == clean_streams

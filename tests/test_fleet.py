@@ -95,8 +95,12 @@ def test_deliver_verdict_owner_and_dedup_gates(dense_pair):
     v = types.SimpleNamespace(session_id=0, round_index=0)
     assert not router.deliver_verdict(other, v)   # not the owner
     assert router.deliver_verdict(vid, v)         # first wins
-    assert not router.deliver_verdict(vid, v)     # duplicate dropped
-    assert router.stats["dropped_verdicts"] == 2
+    # an owner-sent duplicate of a committed round is a REPLAY (lost-ack
+    # recovery, DESIGN.md §14): forwarded to the device's round gate,
+    # counted separately from the non-owner drop
+    assert router.deliver_verdict(vid, v)
+    assert router.stats["dropped_verdicts"] == 1
+    assert router.stats["replayed_verdicts"] == 1
 
 
 # -- lossless restore --------------------------------------------------------
@@ -229,10 +233,14 @@ def _golden_run(cfg, tparams, dparams):
     return [list(d.response_tokens) for d in edges]
 
 
-def _fleet_run(cfg, tparams, dparams, *, policy, fail_at, verifiers=2,
+def _fleet_run(cfg, tparams, dparams, *, policy, schedule=None, verifiers=2,
                **extra):
-    ccfg = ClusterConfig(**CHAOS_CCFG, verifiers=verifiers, fail_at=fail_at,
-                         **extra)
+    """Chaos variants declare verifier faults through the unified seeded
+    `FaultSchedule` DSL (``kill=IDX@T0[+DUR]`` / ``straggle=...``);
+    legacy ``fail_at``/``straggle`` tuples ride through ``extra`` to pin
+    the deprecation shim."""
+    ccfg = ClusterConfig(**CHAOS_CCFG, verifiers=verifiers,
+                         fault_schedule=schedule, **extra)
     router = build_verifier_fleet(
         cfg, tparams, ccfg.verifiers, COEFFS, max_slots=ccfg.devices,
         max_len=ccfg.max_len, policy=policy, network=NetworkModel(),
@@ -261,7 +269,7 @@ def test_chaos_kill_one_verifier_streams_unchanged(dense_pair, golden_streams,
     single-verifier golden run."""
     cfg, tparams, dparams = dense_pair
     streams, router, result = _fleet_run(
-        cfg, tparams, dparams, policy=policy, fail_at=((0, 0.15, None),),
+        cfg, tparams, dparams, policy=policy, schedule="kill=0@0.15",
         verifiers=3,
     )
     assert router.stats["verifier_downs"] == 1
@@ -275,8 +283,7 @@ def test_chaos_kill_one_verifier_streams_unchanged(dense_pair, golden_streams,
 def test_chaos_fleet_without_failures_matches_golden(dense_pair,
                                                      golden_streams):
     cfg, tparams, dparams = dense_pair
-    streams, router, _ = _fleet_run(cfg, tparams, dparams, policy="wisp",
-                                    fail_at=())
+    streams, router, _ = _fleet_run(cfg, tparams, dparams, policy="wisp")
     assert router.stats["verifier_downs"] == 0
     assert streams == golden_streams
 
@@ -288,8 +295,8 @@ def test_chaos_straggler_hedged_away(dense_pair, golden_streams):
     stay byte-identical."""
     cfg, tparams, dparams = dense_pair
     streams, router, _ = _fleet_run(
-        cfg, tparams, dparams, policy="wisp", fail_at=(),
-        straggle=((0, 0.05, 1.0, 400.0),), hedge_factor=2.0,
+        cfg, tparams, dparams, policy="wisp",
+        schedule="straggle=0@0.05+0.95*400", hedge_factor=2.0,
     )
     assert router.dispatcher.stats["hedged"] >= 1
     assert router.stats["redispatches"] >= 1
@@ -364,7 +371,10 @@ def test_chaos_migrate_session_with_spilled_pages(dense_pair):
 
 def test_chaos_verifier_rejoins(dense_pair, golden_streams):
     """A verifier that dies and recovers re-enters the rotation (rejoin
-    hook) without perturbing any stream."""
+    hook) without perturbing any stream.  Deliberately uses the legacy
+    ``ClusterConfig.fail_at`` tuples (not the DSL) to pin the
+    deprecation shim `resolve_fault_schedule` compiles onto the unified
+    schedule."""
     cfg, tparams, dparams = dense_pair
     streams, router, _ = _fleet_run(cfg, tparams, dparams, policy="wisp",
                                     fail_at=((0, 0.12, 0.5),))

@@ -19,6 +19,7 @@ import pytest
 
 #: every test module that guards its hypothesis import with the stub
 PROPERTY_MODULES = (
+    "test_chaos",
     "test_estimator",
     "test_kv_cache",
     "test_policies",
